@@ -1,0 +1,67 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. load the AOT artifacts (HLO text compiled by `make artifacts`);
+//! 2. run one chip-native 8x8x8 GEMM tile + requant on the PJRT runtime
+//!    and check it against the host oracle;
+//! 3. cycle-simulate the same tile on the chip model and print the
+//!    utilization / energy the chip would achieve.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use voltra::config::{ChipConfig, OperatingPoint};
+use voltra::power::{power_mw, tops_per_watt, Activity, EnergyParams};
+use voltra::runtime::{default_dir, ArtifactLib, MatI32};
+use voltra::sim::{simulate_tile, TileSpec};
+
+fn main() -> anyhow::Result<()> {
+    // ---------------------------------------------------------- runtime
+    let dir = default_dir();
+    let mut lib = ArtifactLib::load(&dir)?;
+    println!("loaded {} artifacts from {}", lib.names().len(), dir.display());
+
+    // One chip tile: x, w int8-range, psum int32, through `gemm8`.
+    let x = MatI32::from_fn(8, 8, |r, c| (r * 8 + c) as i32 % 17 - 8);
+    let w = MatI32::from_fn(8, 8, |r, c| (r as i32 - c as i32) * 3 % 11);
+    let p = MatI32::from_fn(8, 8, |r, c| (r + c) as i32 * 100);
+    let scale = xla::Literal::vec1(&[0.01f32]);
+    let outs = lib.run(
+        "gemm8",
+        &[
+            xla::Literal::vec1(&x.data).reshape(&[8, 8])?,
+            xla::Literal::vec1(&w.data).reshape(&[8, 8])?,
+            xla::Literal::vec1(&p.data).reshape(&[8, 8])?,
+            scale,
+        ],
+    )?;
+    let acc = outs[1].to_vec::<i32>()?;
+    let expect = voltra::runtime::gemm_ref(&x, &w, &p);
+    assert_eq!(acc, expect.data, "PJRT tile does not match the host oracle");
+    println!("gemm8 on PJRT matches the host int32 oracle ✓");
+    let q = outs[0].to_vec::<i32>()?;
+    assert!(q.iter().all(|&v| (-128..=127).contains(&v)));
+    println!("requant output stays in int8 range ✓  (first row: {:?})", &q[..8]);
+
+    // --------------------------------------------------------- simulator
+    let cfg = ChipConfig::voltra();
+    let tile = TileSpec::simple(64, 512, 64);
+    let m = simulate_tile(&cfg, &tile);
+    println!(
+        "\ncycle model, 64x512x64 tile: {} cycles, {:.1}% temporal, {:.1}% spatial",
+        m.total_cycles,
+        100.0 * m.temporal_utilization(),
+        100.0 * m.spatial_utilization()
+    );
+    let params = EnergyParams::default();
+    let act = Activity::default();
+    for op in [OperatingPoint::efficiency(), OperatingPoint::performance()] {
+        println!(
+            "  @{:.1}V/{:.0}MHz: {:>6.1} mW, {:.2} TOPS/W",
+            op.voltage,
+            op.freq_mhz,
+            power_mw(&params, &m, &act, op),
+            tops_per_watt(&params, &m, &act, op)
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the Rust coordinator loads the
+resulting ``artifacts/*.hlo.txt`` through the PJRT CPU client and Python is
+never on the request path again.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every entry is lowered with ``return_tuple=True`` so the Rust side always
+unwraps a tuple.  A ``manifest.json`` records the signature of every
+artifact so the Rust runtime can validate shapes/dtypes before execution.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _spec(shape, dtype=I32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _gemm_entry(m, k, n):
+    def fn(x, w, p, s):
+        q, acc = model.gemm_requant(x, w, p, s)
+        return (q, acc)
+
+    args = [
+        _spec((m, k)),
+        _spec((k, n)),
+        _spec((m, n)),
+        _spec((1,), F32),
+    ]
+    return fn, args
+
+
+def _gemm_acc_entry(m, k, n):
+    """Accumulate-only tile (interior K-rounds skip the requant SIMD)."""
+
+    def fn(x, w, p):
+        from .kernels.gemm import gemm_os_int8
+
+        return (gemm_os_int8(x, w, p, tm=model.DEF_TM, tn=model.DEF_TN),)
+
+    args = [_spec((m, k)), _spec((k, n)), _spec((m, n))]
+    return fn, args
+
+
+def _conv_entry(n, h, w, c, kh, kw, f, stride):
+    def fn(x, wt, s):
+        return (model.conv2d_im2col(x, wt, s, stride=stride, padding="SAME"),)
+
+    args = [_spec((n, h, w, c)), _spec((kh, kw, c, f)), _spec((1,), F32)]
+    return fn, args
+
+
+def _mha_entry(t, d, dh):
+    def fn(x, wq, wk, wv, s_qkv, s_attn):
+        return (model.mha_head(x, wq, wk, wv, s_qkv, s_attn),)
+
+    args = [
+        _spec((t, d)),
+        _spec((d, dh)),
+        _spec((d, dh)),
+        _spec((d, dh)),
+        _spec((1,), F32),
+        _spec((1,), F32),
+    ]
+    return fn, args
+
+
+def _lstm_entry(b, hidden):
+    def fn(x, h, c, wx, wh, bias, s):
+        hq, cn = model.lstm_cell(x, h, c, wx, wh, bias, s)
+        return (hq, cn)
+
+    args = [
+        _spec((b, hidden)),
+        _spec((b, hidden)),
+        _spec((b, hidden), F32),
+        _spec((hidden, 4 * hidden)),
+        _spec((hidden, 4 * hidden)),
+        _spec((4 * hidden,), F32),
+        _spec((1,), F32),
+    ]
+    return fn, args
+
+
+def _residual_entry(m, n):
+    def fn(a, b, s):
+        from .kernels.quant import add_requant_int8
+
+        return (add_requant_int8(a, b, s, relu=True),)
+
+    return fn, [_spec((m, n)), _spec((m, n)), _spec((1,), F32)]
+
+
+def _maxpool_entry(n, h, w, c, window, stride):
+    def fn(x):
+        return (model.maxpool2d(x, window=window, stride=stride),)
+
+    return fn, [_spec((n, h, w, c))]
+
+
+# name -> (builder fn, arg specs).  Shapes are the tile sizes the Rust
+# coordinator dispatches (see rust/src/runtime/artifacts.rs).
+ENTRIES = {
+    # One chip-native tile: the 8x8x8 array's natural unit.
+    "gemm8": _gemm_entry(8, 8, 8),
+    # The standard 64x64x64 working tile used by the tiled layer executor.
+    "gemm64": _gemm_entry(64, 64, 64),
+    # A 2x larger working tile: fewer PJRT dispatches per layer (§Perf).
+    "gemm128": _gemm_entry(128, 128, 128),
+    # Accumulate-only 64-tile: interior K-rounds of the tiled executor
+    # skip the requant epilogue (§Perf iteration 5).
+    "gemm64_acc": _gemm_acc_entry(64, 64, 64),
+    # The paper's peak-efficiency workload (Fig. 7b): M = N = K = 96.
+    "gemm96": _gemm_entry(96, 96, 96),
+    # A ragged tile (non-multiple of 8 in M) exercising the padding path.
+    "gemm_ragged": _gemm_entry(40, 64, 64),
+    # Conv2D 3x3 stride-1 SAME on a small feature map, implicit im2col.
+    "conv3x3": _conv_entry(1, 8, 8, 16, 3, 3, 16, 1),
+    # Strided conv (stride 2) — the downsampling layers of ResNet/MobileNet.
+    "conv3x3s2": _conv_entry(1, 16, 16, 8, 3, 3, 16, 2),
+    # One BERT-Base MHA head at token size 64 (Fig. 4's example).
+    "mha64": _mha_entry(64, 768, 64),
+    # LSTM cell, batch 8, hidden 64.
+    "lstm64": _lstm_entry(8, 64),
+    # Maxpool 2x2/2, the auxiliary unit.
+    "maxpool2x2": _maxpool_entry(1, 8, 8, 16, 2, 2),
+    # Fused residual add + ReLU + requant on the SIMD unit (64x64 tile).
+    "residual64": _residual_entry(64, 64),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {jnp.int32.dtype: "i32", jnp.float32.dtype: "f32"}[jnp.dtype(dt)]
+
+
+def lower_all(out_dir: str, only: list[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text/v1", "artifacts": {}}
+    names = only or list(ENTRIES)
+    for name in names:
+        fn, args = ENTRIES[name]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": _dtype_tag(a.dtype)} for a in args
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_tag(o.dtype)} for o in outs
+            ],
+        }
+        print(f"  lowered {name:12s} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of entries to lower")
+    ns = ap.parse_args()
+    lower_all(ns.out, ns.only)
+    print(f"wrote manifest to {ns.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Layer-1 Pallas kernel: Voltra's 8x8x8 output-stationary INT8 GEMM core.
+
+The Voltra GEMM core (paper Sec. II-A) is a 3D spatial array of 512 MACs:
+an 8x8 grid of dot-product units (Dot-ProdU), each combinationally reducing
+an 8-element INT8 x INT8 product into a single INT32 partial sum.  The
+dataflow is *output stationary*: an 8x8 tile of INT32 accumulators stays
+resident in the array while 8-wide slices of the input/weight operands
+stream through along K.
+
+Mapping onto Pallas (see DESIGN.md "Hardware adaptation"):
+
+  * the 8x8 spatial output tile  -> the Pallas grid over (M/TM, N/TN)
+    output blocks (TM, TN are multiples of 8 so blocks compose exactly
+    from chip-sized 8x8 tiles);
+  * the 8-deep combinational reduction inside a Dot-ProdU -> the KU=8
+    slice consumed per `fori_loop` step;
+  * output stationarity -> the accumulator is carried through the K loop
+    and written back exactly once, seeded from the partial-sum operand
+    (the chip's psum streamer re-injects prior partial results the same
+    way).
+
+The kernel MUST be lowered with ``interpret=True``: real-TPU Pallas emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Numerics are exact
+integer arithmetic, so interpret mode is bit-identical to the chip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chip constants (paper Sec. II-A): 8x8 Dot-ProdUs x 8-wide dot product.
+ARRAY_M = 8  # spatial unrolling of output rows
+ARRAY_N = 8  # spatial unrolling of output cols
+ARRAY_K = 8  # dot-product width inside one Dot-ProdU (KU)
+MACS = ARRAY_M * ARRAY_N * ARRAY_K  # 512
+
+
+def _gemm_os_kernel(x_ref, w_ref, p_ref, o_ref):
+    """One output-stationary (TM, TN) block: acc = p + sum_k x[:,k8] @ w[k8,:].
+
+    x_ref: (TM, K) int8, w_ref: (K, TN) int8, p_ref/o_ref: (TM, TN) int32.
+    """
+    k_total = x_ref.shape[1]
+
+    acc0 = p_ref[...]
+
+    def body(kb, acc):
+        # One temporal step of the chip: every Dot-ProdU consumes an
+        # 8-element input slice and an 8-element weight slice.
+        x8 = x_ref[:, pl.dslice(kb * ARRAY_K, ARRAY_K)].astype(jnp.int32)
+        w8 = w_ref[pl.dslice(kb * ARRAY_K, ARRAY_K), :].astype(jnp.int32)
+        prod = jax.lax.dot_general(
+            x8, w8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        return acc + prod
+
+    o_ref[...] = jax.lax.fori_loop(0, k_total // ARRAY_K, body, acc0)
+
+
+def _check_dims(m: int, k: int, n: int, tm: int, tn: int) -> None:
+    if m % tm or n % tn:
+        raise ValueError(f"M={m} / N={n} must tile by (TM={tm}, TN={tn})")
+    if tm % ARRAY_M or tn % ARRAY_N or k % ARRAY_K:
+        raise ValueError(
+            f"tile ({tm},{tn}) and K={k} must be multiples of the "
+            f"{ARRAY_M}x{ARRAY_N}x{ARRAY_K} array"
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def gemm_os_int8(x, w, psum, *, tm: int = ARRAY_M, tn: int = ARRAY_N):
+    """Output-stationary INT8 GEMM: ``psum + x @ w`` with INT32 accumulation.
+
+    Args:
+      x:    (M, K) int8 (or int32 holding int8-range values) inputs.
+      w:    (K, N) int8 weights.
+      psum: (M, N) int32 partial sums (the chip's psum stream).
+      tm, tn: Pallas block size; multiples of 8.  The chip computes the
+        block as (tm/8)x(tn/8) successive 8x8 output-stationary tiles.
+
+    Returns:
+      (M, N) int32 accumulator, exactly ``psum + x.int32 @ w.int32``.
+    """
+    x = x.astype(jnp.int8)
+    w = w.astype(jnp.int8)
+    psum = psum.astype(jnp.int32)
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or psum.shape != (m, n):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} p{psum.shape}")
+    _check_dims(m, k, n, tm, tn)
+
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        _gemm_os_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x, w, psum)
+
+
+def pad_to_multiple(a, mult_rows: int, mult_cols: int):
+    """Zero-pad a 2-D operand up to array-aligned dimensions.
+
+    The chip handles ragged workloads by under-filling the spatial array
+    (spatial utilization < 1, Fig. 6a); numerically that is identical to
+    zero padding, which is what we do here.
+    """
+    r, c = a.shape
+    pr = (-r) % mult_rows
+    pc = (-c) % mult_cols
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def gemm_os_int8_ragged(x, w, psum, *, tm: int = ARRAY_M, tn: int = ARRAY_N):
+    """GEMM for arbitrary (M, K, N): zero-pads to the 8x8x8 array and crops.
+
+    Mirrors the chip's behaviour on workloads whose dimensions do not match
+    the array (the source of the spatial-utilization loss in Fig. 6a).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    xp = pad_to_multiple(x.astype(jnp.int8), tm, ARRAY_K)
+    wp = pad_to_multiple(w.astype(jnp.int8), ARRAY_K, tn)
+    pp = pad_to_multiple(psum.astype(jnp.int32), tm, tn)
+    out = gemm_os_int8(xp, wp, pp, tm=tm, tn=tn)
+    return out[:m, :n]

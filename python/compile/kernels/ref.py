@@ -1,0 +1,138 @@
+"""Pure-jnp oracles for every Layer-1 kernel and Layer-2 graph.
+
+These are the correctness ground truth: no Pallas, no cleverness — the
+mathematically obvious implementation.  pytest asserts the Pallas kernels
+and the model layer against these (exact equality for integer paths,
+allclose for float paths).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMIN = -128
+QMAX = 127
+
+
+def gemm_ref(x, w, psum):
+    """psum + x @ w with int32 accumulation (exact)."""
+    return (
+        x.astype(jnp.int32) @ w.astype(jnp.int32) + psum.astype(jnp.int32)
+    ).astype(jnp.int32)
+
+
+def requant_ref(acc, scale, relu=False):
+    """Scale, round, (relu), saturate to [-128, 127]; int32 out."""
+    v = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32).reshape(())
+    q = jnp.round(v)
+    if relu:
+        q = jnp.maximum(q, 0.0)
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int32)
+
+
+def add_requant_ref(a, b, scale, relu=False):
+    """q8(scale * (a + b)) with optional ReLU; int32 out."""
+    v = (a.astype(jnp.float32) + b.astype(jnp.float32)) * jnp.asarray(
+        scale, jnp.float32
+    ).reshape(())
+    q = jnp.round(v)
+    if relu:
+        q = jnp.maximum(q, 0.0)
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int32)
+
+
+def maxpool2d_ref(x, window=2, stride=2):
+    """(C, H, W) max pooling, int32."""
+    x = x.astype(jnp.int32)
+    c, h, w = x.shape
+    ho = (h - window) // stride + 1
+    wo = (w - window) // stride + 1
+    out = jnp.full((c, ho, wo), jnp.iinfo(jnp.int32).min, jnp.int32)
+    for di in range(window):
+        for dj in range(window):
+            sl = x[:, di : di + stride * ho : stride, dj : dj + stride * wo : stride]
+            out = jnp.maximum(out, sl)
+    return out
+
+
+def conv2d_ref(x, w, stride=1, padding="SAME"):
+    """NHWC x HWIO -> NHWC conv with int32 accumulation via lax.conv."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    return out.astype(jnp.int32)
+
+
+def mha_head_ref(x, wq, wk, wv, s_qkv, s_attn):
+    """One MHA head as the chip computes it (Fig. 4): INT8 GEMM chain.
+
+    Q = q8(x @ wq), K = q8(x @ wk), V = q8(x @ wv)         (requant s_qkv)
+    S = Q @ K^T ;  A = softmax(S / sqrt(d)) in f32
+    A8 = round(A * s_attn)  -> O = A8 @ V  (int32 accumulators out)
+    """
+    d = wq.shape[1]
+    q = requant_ref(gemm_ref(x, wq, jnp.zeros((x.shape[0], d), jnp.int32)), s_qkv)
+    k = requant_ref(gemm_ref(x, wk, jnp.zeros((x.shape[0], d), jnp.int32)), s_qkv)
+    v = requant_ref(gemm_ref(x, wv, jnp.zeros((x.shape[0], d), jnp.int32)), s_qkv)
+    s = gemm_ref(q, k.T, jnp.zeros((q.shape[0], k.shape[0]), jnp.int32))
+    a = jax.nn.softmax(s.astype(jnp.float32) / jnp.sqrt(jnp.float32(d)), axis=-1)
+    a8 = jnp.clip(jnp.round(a * s_attn), QMIN, QMAX).astype(jnp.int32)
+    o = gemm_ref(a8, v, jnp.zeros((a8.shape[0], v.shape[1]), jnp.int32))
+    return o
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b, s_gate):
+    """One LSTM cell step with INT8 GEMMs for the two projections.
+
+    Gates = x@wx + h@wh + b (int32 acc -> f32 via s_gate), then standard
+    sigmoid/tanh recurrence in f32; new h is requantized to int8 range.
+    """
+    hidden = h.shape[1]
+    acc = gemm_ref(x, wx, jnp.zeros((x.shape[0], 4 * hidden), jnp.int32))
+    acc = gemm_ref(h, wh, acc)
+    gates = acc.astype(jnp.float32) * jnp.asarray(s_gate, jnp.float32) + b.astype(
+        jnp.float32
+    )
+    i, f, g, o = jnp.split(gates, 4, axis=1)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    h_q = jnp.clip(jnp.round(h_new * 127.0), QMIN, QMAX).astype(jnp.int32)
+    return h_q, c_new
+
+
+def im2col_ref(x, kh, kw, stride=1, padding="SAME"):
+    """NHWC -> (N*Ho*Wo, kh*kw*C) patch matrix (explicit im2col).
+
+    The chip's 6-D input-streamer AGU performs this *implicitly* by strided
+    addressing (Sec. II-B, [21]); the explicit matrix is the functional
+    equivalent.
+    """
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        ph = max((ho - 1) * stride + kh - h, 0)
+        pw = max((wo - 1) * stride + kw - w, 0)
+        x = jnp.pad(
+            x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0))
+        )
+    else:
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = x[:, di : di + stride * ho : stride, dj : dj + stride * wo : stride, :]
+            cols.append(sl.reshape(n * ho * wo, c))
+    # Patch layout must match the HWIO weight reshape (kh, kw, C) -> rows.
+    return jnp.concatenate(cols, axis=1), (n, ho, wo)

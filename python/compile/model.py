@@ -1,0 +1,193 @@
+"""Layer-2 JAX graphs: the workload building blocks Voltra executes.
+
+Every function here composes the Layer-1 Pallas kernels (`kernels.gemm`,
+`kernels.quant`) into the compute graphs the paper maps onto the chip:
+
+  * `gemm_requant`     — one tiled GEMM + quantization epilogue (the
+                         fundamental unit every layer lowers to);
+  * `conv2d_im2col`    — Conv2D lowered by implicit im2col to the GEMM
+                         core, exactly as the 6-D input streamer does;
+  * `mha_head`         — the BERT multi-head-attention sequence of Fig. 4;
+  * `lstm_cell`        — the recurrent cell used by the LSTM workload;
+  * `maxpool2d`        — the auxiliary maxpool unit.
+
+These are *build-time only*: `aot.py` lowers them once to HLO text and the
+Rust coordinator executes the artifacts through PJRT.  All artifact I/O is
+int32/float32 because the `xla` crate's literal API has no i8 — values on
+int8 paths stay within [-128, 127] and the kernels cast to int8 internally,
+so the numerics are bit-identical to an int8 datapath.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm import ARRAY_K, ARRAY_M, ARRAY_N, gemm_os_int8, pad_to_multiple
+from .kernels.quant import maxpool2d_int8, requant_int8
+
+# Default Pallas block: 4x4 chip tiles per grid step keeps the interpret
+# grid small while remaining 8-aligned (see DESIGN.md §Perf / L1).
+DEF_TM = 32
+DEF_TN = 32
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest multiple-of-8 block <= pref that divides `dim`."""
+    t = min(pref, dim)
+    t -= t % 8
+    while t > 8 and dim % t:
+        t -= 8
+    return max(t, 8)
+
+
+def gemm_requant(x, w, psum, scale):
+    """acc = psum + x@w ; q = requant(acc).  Returns (q, acc).
+
+    The chip streams psum in, holds acc output-stationary, and drains
+    through the 8-lane SIMD quantizer; `q` is what is written back to the
+    shared memory, `acc` is what the psum streamer would forward to a
+    following K-tile.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    tm = _pick_tile(m, DEF_TM)
+    tn = _pick_tile(n, DEF_TN)
+    acc = gemm_os_int8(x, w, psum, tm=tm, tn=tn)
+    q = requant_int8(acc, scale)
+    return q, acc
+
+
+def gemm_requant_ragged(x, w, psum, scale):
+    """gemm_requant for shapes that are not 8-aligned (pads, then crops)."""
+    m, k = x.shape
+    _, n = w.shape
+    xp = pad_to_multiple(x, ARRAY_M, ARRAY_K)
+    wp = pad_to_multiple(w, ARRAY_K, ARRAY_N)
+    pp = pad_to_multiple(psum, ARRAY_M, ARRAY_N)
+    q, acc = gemm_requant(xp, wp, pp, scale)
+    return q[:m, :n], acc[:m, :n]
+
+
+def im2col(x, kh: int, kw: int, stride: int = 1, padding: str = "SAME"):
+    """Implicit-im2col as data movement (NHWC -> patch matrix).
+
+    On the chip this is performed by the input streamer's 6-D affine AGU
+    (Sec. II-B): no patch matrix is materialized, addresses are simply
+    generated in this order.  In the AOT graph the gather is explicit but
+    fuses into the GEMM's operand load.
+    """
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        ph = max((ho - 1) * stride + kh - h, 0)
+        pw = max((wo - 1) * stride + kw - w, 0)
+        x = jnp.pad(
+            x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0))
+        )
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+    else:
+        raise ValueError(f"padding {padding!r}")
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = x[:, di : di + stride * ho : stride, dj : dj + stride * wo : stride, :]
+            cols.append(sl.reshape(n * ho * wo, c))
+    return jnp.concatenate(cols, axis=1), (n, ho, wo)
+
+
+def conv2d_im2col(x, w, scale, stride: int = 1, padding: str = "SAME"):
+    """Conv2D on the GEMM core: implicit im2col + 8x8x8 OS GEMM + requant.
+
+    x: (N, H, W, C) int8-range, w: (KH, KW, C, F) int8-range,
+    scale: (1,) f32.  Returns (N, Ho, Wo, F) int8-range int32.
+    """
+    kh, kw, c, f = w.shape
+    patches, (n, ho, wo) = im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * c, f)
+    m = n * ho * wo
+    psum = jnp.zeros((m, f), jnp.int32)
+    q, _ = gemm_requant_ragged(patches, wmat, psum, scale)
+    return q.reshape(n, ho, wo, f)
+
+
+def mha_head(x, wq, wk, wv, s_qkv, s_attn):
+    """One MHA head (Fig. 4): the exact GEMM sequence the chip schedules.
+
+    x: (T, D) int8-range; wq/wk/wv: (D, dh) int8-range; scales f32(1,).
+    Q/K/V projections requantize to int8; S = Q K^T runs on the GEMM core
+    with the weight streamer's on-the-fly transposer providing K^T
+    (Sec. II-C); softmax runs at f32 (host/SIMD precision); A requantizes
+    to int8 for the final A@V GEMM.  Returns (T, dh) int32 accumulators.
+    """
+    t, d = x.shape
+    dh = wq.shape[1]
+    zero_td = jnp.zeros((t, dh), jnp.int32)
+    q, _ = gemm_requant_ragged(x, wq, zero_td, s_qkv)
+    k, _ = gemm_requant_ragged(x, wk, zero_td, s_qkv)
+    v, _ = gemm_requant_ragged(x, wv, zero_td, s_qkv)
+    # K^T via the weight streamer's built-in transposer: free at runtime.
+    s = gemm_os_int8(
+        q.astype(jnp.int8),
+        k.T.astype(jnp.int8),
+        jnp.zeros((t, t), jnp.int32),
+        tm=_pick_tile(t, DEF_TM),
+        tn=_pick_tile(t, DEF_TN),
+    )
+    a = jax.nn.softmax(s.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh)), axis=-1)
+    a8 = jnp.clip(jnp.round(a * s_attn.reshape(())), -128, 127).astype(jnp.int32)
+    o = gemm_os_int8(
+        a8.astype(jnp.int8),
+        v.astype(jnp.int8),
+        zero_td,
+        tm=_pick_tile(t, DEF_TM),
+        tn=_pick_tile(dh, DEF_TN),
+    )
+    return o
+
+
+def lstm_cell(x, h, c, wx, wh, b, s_gate):
+    """One LSTM step: two INT8 GEMMs into shared accumulators + f32 gates.
+
+    x, h: (B, hidden) int8-range; wx, wh: (hidden, 4*hidden); b: (4*hidden,)
+    f32; s_gate: (1,) f32 dequant scale.  Returns (h_q int32, c_new f32).
+    """
+    b_sz, hidden = h.shape
+    acc = gemm_os_int8(
+        x.astype(jnp.int8),
+        wx.astype(jnp.int8),
+        jnp.zeros((b_sz, 4 * hidden), jnp.int32),
+        tm=_pick_tile(b_sz, DEF_TM),
+        tn=_pick_tile(4 * hidden, DEF_TN),
+    )
+    # Output-stationary chaining: the h-projection accumulates straight on
+    # top of the x-projection's partial sums (the chip's psum streamer).
+    acc = gemm_os_int8(
+        h.astype(jnp.int8),
+        wh.astype(jnp.int8),
+        acc,
+        tm=_pick_tile(b_sz, DEF_TM),
+        tn=_pick_tile(4 * hidden, DEF_TN),
+    )
+    gates = acc.astype(jnp.float32) * s_gate.reshape(()) + b.astype(jnp.float32)
+    i, f, g, o = jnp.split(gates, 4, axis=1)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    h_q = jnp.clip(jnp.round(h_new * 127.0), -128, 127).astype(jnp.int32)
+    return h_q, c_new
+
+
+def maxpool2d(x, window: int = 2, stride: int = 2):
+    """(N, H, W, C) -> pooled, through the 8-lane maxpool unit kernel."""
+    n, h, w, c = x.shape
+    xc = jnp.transpose(x, (0, 3, 1, 2)).reshape(n * c, h, w)
+    pooled = maxpool2d_int8(xc, window=window, stride=stride)
+    _, ho, wo = pooled.shape
+    return jnp.transpose(pooled.reshape(n, c, ho, wo), (0, 2, 3, 1))

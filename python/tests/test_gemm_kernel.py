@@ -1,0 +1,145 @@
+"""Pallas 8x8x8 output-stationary GEMM kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for Layer 1: the kernel must be
+*bit-exact* against int32 reference accumulation for every shape, tiling
+and operand distribution, including the saturating edges of int8.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm import (
+    ARRAY_K,
+    ARRAY_M,
+    ARRAY_N,
+    MACS,
+    gemm_os_int8,
+    gemm_os_int8_ragged,
+    pad_to_multiple,
+)
+from compile.kernels.ref import gemm_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_i8(shape, rng=RNG):
+    return rng.integers(-128, 128, shape, dtype=np.int32)
+
+
+def test_array_constants_match_paper():
+    # Paper Sec. II-A: 512 MACs organised 8x8x8.
+    assert (ARRAY_M, ARRAY_N, ARRAY_K) == (8, 8, 8)
+    assert MACS == 512
+
+
+def test_single_tile_exact():
+    x = rand_i8((8, 8))
+    w = rand_i8((8, 8))
+    p = RNG.integers(-(2**20), 2**20, (8, 8), dtype=np.int32)
+    out = gemm_os_int8(x, w, p)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gemm_ref(x, w, p)))
+
+
+def test_extreme_values_saturate_nowhere():
+    # All -128 x -128 over K=64: 64 * 16384 = 1048576, well inside int32.
+    x = np.full((8, 64), -128, np.int32)
+    w = np.full((64, 8), -128, np.int32)
+    p = np.zeros((8, 8), np.int32)
+    out = np.asarray(gemm_os_int8(x, w, p))
+    assert (out == 64 * 128 * 128).all()
+
+
+def test_psum_seeding_is_pure_addition():
+    x = rand_i8((16, 24))
+    w = rand_i8((24, 16))
+    p = RNG.integers(-(2**24), 2**24, (16, 16), dtype=np.int32)
+    z = np.zeros_like(p)
+    with_p = np.asarray(gemm_os_int8(x, w, p))
+    without = np.asarray(gemm_os_int8(x, w, z))
+    np.testing.assert_array_equal(with_p, without + p)
+
+
+def test_block_size_does_not_change_result():
+    x = rand_i8((64, 32))
+    w = rand_i8((32, 64))
+    p = np.zeros((64, 64), np.int32)
+    ref = np.asarray(gemm_os_int8(x, w, p, tm=8, tn=8))
+    for tm, tn in [(16, 16), (32, 32), (64, 64), (8, 64), (64, 8)]:
+        got = np.asarray(gemm_os_int8(x, w, p, tm=tm, tn=tn))
+        np.testing.assert_array_equal(got, ref, err_msg=f"tm={tm} tn={tn}")
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (8, 64, 8), (32, 16, 24), (96, 96, 96)])
+def test_aligned_shapes(m, k, n):
+    x = rand_i8((m, k))
+    w = rand_i8((k, n))
+    p = RNG.integers(-1000, 1000, (m, n), dtype=np.int32)
+    out = gemm_os_int8(x, w, p, tm=8, tn=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gemm_ref(x, w, p)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.integers(1, 6),
+    kb=st.integers(1, 6),
+    nb=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_aligned_sweep(mb, kb, nb, seed):
+    """Property: exact vs oracle for random 8-aligned shapes and data."""
+    rng = np.random.default_rng(seed)
+    m, k, n = 8 * mb, 8 * kb, 8 * nb
+    x = rand_i8((m, k), rng)
+    w = rand_i8((k, n), rng)
+    p = rng.integers(-(2**16), 2**16, (m, n), dtype=np.int32)
+    out = gemm_os_int8(x, w, p, tm=8, tn=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gemm_ref(x, w, p)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_ragged_sweep(m, k, n, seed):
+    """Property: the padded path matches the oracle for ARBITRARY shapes,
+    mirroring the chip's under-filled-array behaviour (Fig. 6a)."""
+    rng = np.random.default_rng(seed)
+    x = rand_i8((m, k), rng)
+    w = rand_i8((k, n), rng)
+    p = rng.integers(-(2**16), 2**16, (m, n), dtype=np.int32)
+    out = gemm_os_int8_ragged(x, w, p)
+    assert out.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gemm_ref(x, w, p)))
+
+
+def test_pad_to_multiple_identity_when_aligned():
+    a = jnp.ones((16, 24), jnp.int8)
+    assert pad_to_multiple(a, 8, 8) is a
+
+
+def test_pad_to_multiple_zero_fills():
+    a = jnp.ones((3, 5), jnp.int8)
+    p = pad_to_multiple(a, 8, 8)
+    assert p.shape == (8, 8)
+    assert int(p.sum()) == 15
+
+
+def test_rejects_misaligned_without_padding():
+    x = jnp.zeros((9, 8), jnp.int8)
+    w = jnp.zeros((8, 8), jnp.int8)
+    p = jnp.zeros((9, 8), jnp.int32)
+    with pytest.raises(ValueError):
+        gemm_os_int8(x, w, p)
+
+
+def test_rejects_shape_mismatch():
+    x = jnp.zeros((8, 16), jnp.int8)
+    w = jnp.zeros((8, 8), jnp.int8)
+    p = jnp.zeros((8, 8), jnp.int32)
+    with pytest.raises(ValueError):
+        gemm_os_int8(x, w, p)

@@ -1,0 +1,163 @@
+"""Layer-2 model graphs vs oracles: conv-as-im2col, MHA, LSTM, maxpool."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand_i8(shape, rng=RNG):
+    return rng.integers(-128, 128, shape, dtype=np.int32)
+
+
+# ---------------------------------------------------------------- im2col
+
+
+def test_im2col_matches_ref():
+    x = rand_i8((2, 7, 9, 3))
+    got, dims = model.im2col(x, 3, 3, stride=1, padding="SAME")
+    exp, dims2 = ref.im2col_ref(x, 3, 3, stride=1, padding="SAME")
+    assert dims == dims2
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"), (1, "VALID"), (2, "VALID")])
+def test_im2col_strided(stride, padding):
+    x = rand_i8((1, 8, 8, 4))
+    got, dims = model.im2col(x, 3, 3, stride=stride, padding=padding)
+    exp, dims2 = ref.im2col_ref(x, 3, 3, stride=stride, padding=padding)
+    assert dims == dims2
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@pytest.mark.parametrize(
+    "n,h,w,c,kh,kw,f,stride",
+    [
+        (1, 8, 8, 16, 3, 3, 16, 1),
+        (1, 16, 16, 8, 3, 3, 16, 2),
+        (2, 7, 7, 4, 1, 1, 8, 1),   # pointwise (MobileNet)
+        (1, 9, 9, 3, 5, 5, 8, 1),   # large kernel, ragged M
+        (1, 8, 8, 8, 3, 3, 8, 2),   # strided downsample
+    ],
+)
+def test_conv2d_im2col_matches_lax_conv(n, h, w, c, kh, kw, f, stride):
+    """Implicit-im2col GEMM == lax.conv (then requant), both int32-exact."""
+    x = rand_i8((n, h, w, c))
+    wt = rand_i8((kh, kw, c, f))
+    scale = np.array([0.01], np.float32)
+    got = model.conv2d_im2col(x, wt, scale, stride=stride, padding="SAME")
+    acc = ref.conv2d_ref(x, wt, stride=stride, padding="SAME")
+    exp = ref.requant_ref(acc, 0.01)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 10),
+    c=st.integers(1, 8),
+    f=st.integers(1, 12),
+    kh=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_conv_sweep(h, c, f, kh, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_i8((1, h, h, c), rng)
+    wt = rand_i8((kh, kh, c, f), rng)
+    scale = np.array([0.05], np.float32)
+    got = model.conv2d_im2col(x, wt, scale, stride=stride, padding="SAME")
+    exp = ref.requant_ref(ref.conv2d_ref(x, wt, stride=stride, padding="SAME"), 0.05)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ---------------------------------------------------------------- MHA
+
+
+def test_mha_head_matches_ref():
+    t, d, dh = 16, 32, 16
+    x = rand_i8((t, d))
+    wq, wk, wv = rand_i8((d, dh)), rand_i8((d, dh)), rand_i8((d, dh))
+    s_qkv = np.array([0.001], np.float32)
+    s_attn = np.array([127.0], np.float32)
+    got = model.mha_head(x, wq, wk, wv, s_qkv, s_attn)
+    exp = ref.mha_head_ref(x, wq, wk, wv, 0.001, 127.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_mha_head_bert_geometry():
+    """Fig. 4's exact shape: one BERT-Base head, token size 64."""
+    t, d, dh = 64, 768, 64
+    rng = np.random.default_rng(42)
+    x = rand_i8((t, d), rng)
+    wq, wk, wv = (rand_i8((d, dh), rng) for _ in range(3))
+    s_qkv = np.array([0.0005], np.float32)
+    s_attn = np.array([127.0], np.float32)
+    got = model.mha_head(x, wq, wk, wv, s_qkv, s_attn)
+    exp = ref.mha_head_ref(x, wq, wk, wv, 0.0005, 127.0)
+    assert got.shape == (t, dh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ---------------------------------------------------------------- LSTM
+
+
+def test_lstm_cell_matches_ref():
+    b, hidden = 8, 64
+    rng = np.random.default_rng(3)
+    x, h = rand_i8((b, hidden), rng), rand_i8((b, hidden), rng)
+    c = rng.standard_normal((b, hidden)).astype(np.float32)
+    wx, wh = rand_i8((hidden, 4 * hidden), rng), rand_i8((hidden, 4 * hidden), rng)
+    bias = rng.standard_normal(4 * hidden).astype(np.float32)
+    s = np.array([0.0002], np.float32)
+    hq, cn = model.lstm_cell(x, h, c, wx, wh, bias, s)
+    hq_ref, cn_ref = ref.lstm_cell_ref(x, h, c, wx, wh, bias, 0.0002)
+    np.testing.assert_array_equal(np.asarray(hq), np.asarray(hq_ref))
+    np.testing.assert_allclose(np.asarray(cn), np.asarray(cn_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_state_stays_bounded():
+    """Recurrence invariant: |c| can't blow up when f,i in (0,1)."""
+    b, hidden = 8, 16
+    rng = np.random.default_rng(5)
+    c = np.zeros((b, hidden), np.float32)
+    h = np.zeros((b, hidden), np.int32)
+    wx, wh = rand_i8((hidden, 4 * hidden), rng), rand_i8((hidden, 4 * hidden), rng)
+    bias = np.zeros(4 * hidden, np.float32)
+    s = np.array([0.001], np.float32)
+    for step in range(10):
+        x = rand_i8((b, hidden), rng)
+        h, c = model.lstm_cell(x, h, c, wx, wh, bias, s)
+        h = np.asarray(h)
+        c = np.asarray(c)
+        assert np.abs(c).max() <= step + 2  # |c_t| <= |c_{t-1}| + 1
+        assert np.abs(h).max() <= 127
+
+
+# ---------------------------------------------------------------- maxpool
+
+
+def test_maxpool_nhwc():
+    x = rand_i8((2, 8, 8, 4))
+    got = model.maxpool2d(x, window=2, stride=2)
+    xc = np.transpose(np.asarray(x), (0, 3, 1, 2)).reshape(8, 8, 8)
+    exp = np.asarray(ref.maxpool2d_ref(xc, 2, 2))  # (2*4, 4, 4)
+    exp_nhwc = np.transpose(exp.reshape(2, 4, 4, 4), (0, 2, 3, 1))
+    np.testing.assert_array_equal(np.asarray(got), exp_nhwc)
+
+
+# ---------------------------------------------------------------- tiles
+
+
+def test_pick_tile_divides_and_aligns():
+    for dim in [8, 16, 24, 40, 64, 96, 128, 256, 768]:
+        t = model._pick_tile(dim, 32)
+        assert t % 8 == 0
+        assert dim % t == 0 or t == 8

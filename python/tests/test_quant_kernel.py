@@ -1,0 +1,129 @@
+"""Quantization-SIMD and maxpool Pallas kernels vs the jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant import LANES, QMAX, QMIN, maxpool2d_int8, requant_int8
+from compile.kernels.ref import maxpool2d_ref, requant_ref
+
+RNG = np.random.default_rng(99)
+
+
+def test_lane_count_matches_paper():
+    # Sec. II-D: eight quantization PE lanes.
+    assert LANES == 8
+
+
+@pytest.mark.parametrize("scale", [1.0, 0.5, 0.01, 2.0, 1e-4])
+def test_requant_matches_ref(scale):
+    acc = RNG.integers(-(2**20), 2**20, (16, 16), dtype=np.int32)
+    got = requant_int8(acc, np.array([scale], np.float32))
+    exp = requant_ref(acc, scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_requant_saturates():
+    acc = np.array([[10**9, -(10**9), 0, 127, -128, 128, -129, 1] * 1], np.int32)
+    got = np.asarray(requant_int8(acc, np.array([1.0], np.float32)))
+    assert got.max() == QMAX and got.min() == QMIN
+    np.testing.assert_array_equal(got[0, :5], [127, -128, 0, 127, -128])
+
+
+def test_requant_relu():
+    acc = np.array([[-5, 5, -1, 0, 100, -100, 7, -7]], np.int32)
+    got = np.asarray(requant_int8(acc, np.array([1.0], np.float32), relu=True))
+    assert (got >= 0).all()
+    np.testing.assert_array_equal(got[0], [0, 5, 0, 0, 100, 0, 7, 0])
+
+
+def test_requant_rejects_non_lane_multiple():
+    with pytest.raises(ValueError):
+        requant_int8(np.zeros((4, 7), np.int32), np.array([1.0], np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 32),
+    cols=st.integers(1, 8),
+    scale=st.floats(1e-5, 4.0, allow_nan=False, allow_infinity=False),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_requant_sweep(rows, cols, scale, relu, seed):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-(2**24), 2**24, (rows, cols * LANES), dtype=np.int32)
+    got = requant_int8(acc, np.array([scale], np.float32), relu=relu)
+    exp = requant_ref(acc, scale, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("window,stride,h,w", [(2, 2, 8, 8), (3, 2, 9, 9), (3, 1, 6, 7), (2, 1, 5, 5)])
+def test_maxpool_matches_ref(window, stride, h, w):
+    x = RNG.integers(-128, 128, (4, h, w), dtype=np.int32)
+    got = maxpool2d_int8(x, window=window, stride=stride)
+    exp = maxpool2d_ref(x, window=window, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    window=st.integers(1, 3),
+    stride=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_maxpool_sweep(c, h, w, window, stride, seed):
+    if window > h or window > w:
+        return
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (c, h, w), dtype=np.int32)
+    got = maxpool2d_int8(x, window=window, stride=stride)
+    exp = maxpool2d_ref(x, window=window, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+# ------------------------------------------------------- residual fusion
+
+
+from compile.kernels.quant import add_requant_int8
+from compile.kernels.ref import add_requant_ref
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_add_requant_matches_ref(relu):
+    rng = np.random.default_rng(21)
+    a = rng.integers(-(2**20), 2**20, (16, 16), dtype=np.int32)
+    b = rng.integers(-128, 128, (16, 16), dtype=np.int32)
+    got = add_requant_int8(a, b, np.array([0.01], np.float32), relu=relu)
+    exp = add_requant_ref(a, b, 0.01, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_add_requant_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        add_requant_int8(
+            np.zeros((8, 8), np.int32),
+            np.zeros((8, 16), np.int32),
+            np.array([1.0], np.float32),
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 24),
+    cols=st.integers(1, 6),
+    scale=st.floats(1e-4, 2.0, allow_nan=False, allow_infinity=False),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_add_requant_sweep(rows, cols, scale, relu, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-(2**22), 2**22, (rows, cols * LANES), dtype=np.int32)
+    b = rng.integers(-128, 128, (rows, cols * LANES), dtype=np.int32)
+    got = add_requant_int8(a, b, np.array([scale], np.float32), relu=relu)
+    exp = add_requant_ref(a, b, scale, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))

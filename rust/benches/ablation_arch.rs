@@ -1,0 +1,75 @@
+//! Architecture ablations beyond the paper's own (DESIGN.md §5 extras):
+//! the design choices the paper fixes without sweeping.
+//!
+//!  * FIFO depth — why eight? sweep 1..16 and watch temporal utilization
+//!    saturate;
+//!  * bank count — why 32 x 64-bit? sweep 8..64;
+//!  * DMA bandwidth — where the Fig. 6c PDMA advantage grows/shrinks.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::run_workload;
+use voltra::sim::{simulate_tile, TileSpec};
+use voltra::workloads::resnet50::resnet50;
+
+fn main() {
+    common::header("Ablation A — streamer FIFO depth (64x512x64 tile)");
+    println!("{:>7} {:>10} {:>12}", "depth", "temporal", "conflicts");
+    common::rule();
+    let spec = TileSpec::simple(64, 512, 64);
+    let mut prev = 0.0;
+    for depth in [1usize, 2, 4, 6, 8, 12, 16] {
+        let mut cfg = ChipConfig::voltra();
+        cfg.stream_fifo_depth = depth;
+        let m = simulate_tile(&cfg, &spec);
+        let u = m.temporal_utilization();
+        println!("{depth:>7} {:>9.2}% {:>12}", 100.0 * u, m.bank_conflicts);
+        assert!(u >= prev - 0.02, "deeper FIFOs must not hurt");
+        prev = u;
+    }
+    println!("-> the chip's depth-8 choice sits at the knee of the curve.");
+
+    common::header("Ablation B — shared-memory bank count (64x512x64 tile)");
+    println!("{:>7} {:>10} {:>12}", "banks", "temporal", "conflicts");
+    common::rule();
+    for banks in [8usize, 16, 32, 64] {
+        let mut cfg = ChipConfig::voltra();
+        cfg.num_banks = banks;
+        let m = simulate_tile(&cfg, &spec);
+        println!(
+            "{banks:>7} {:>9.2}% {:>12}",
+            100.0 * m.temporal_utilization(),
+            m.bank_conflicts
+        );
+    }
+    println!("-> 32 banks already serve the 17 words/cycle demand; 64 buys ~nothing.");
+
+    common::header("Ablation C — DMA bandwidth vs the PDMA advantage (ResNet-50)");
+    println!(
+        "{:>10} {:>14} {:>14} {:>8}",
+        "bytes/cyc", "pdma latency", "sep latency", "ratio"
+    );
+    common::rule();
+    let net = resnet50();
+    for bw in [2.0, 4.0, 8.0, 16.0, 32.0] {
+        let mut v = ChipConfig::voltra();
+        v.dma_bytes_per_cycle = bw;
+        let mut s = ChipConfig::separated_memory();
+        s.dma_bytes_per_cycle = bw;
+        let lv = run_workload(&v, &net).metrics.total_latency_cycles();
+        let ls = run_workload(&s, &net).metrics.total_latency_cycles();
+        println!(
+            "{bw:>10.0} {lv:>14} {ls:>14} {:>7.2}x",
+            ls as f64 / lv as f64
+        );
+    }
+    println!("-> PDMA matters most when off-chip bandwidth is scarce (edge SoCs).");
+
+    common::report("ablation_arch sweeps", 3, || {
+        let mut cfg = ChipConfig::voltra();
+        cfg.stream_fifo_depth = 4;
+        let _ = simulate_tile(&cfg, &spec);
+    });
+}

@@ -1,0 +1,79 @@
+//! Sec. II-D ablations: the two time-multiplexing design choices.
+//!
+//! Paper:
+//!  * 8-lane SIMD (vs 64-lane): 0.7% performance loss on ResNet-50 for a
+//!    4.92x SIMD-area reduction;
+//!  * time-multiplexed psum/output crossbar port: 0.02% performance loss
+//!    on ResNet-50 for a 1.46x crossbar-area reduction.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::run_workload;
+use voltra::power::AreaModel;
+use voltra::workloads::resnet50::resnet50;
+
+fn main() {
+    common::header("Sec. II-D ablation — time-multiplexed SIMD & crossbar on ResNet-50");
+    let net = resnet50();
+    let area = AreaModel::default();
+
+    let base = run_workload(&ChipConfig::voltra(), &net).metrics;
+    let simd64 = run_workload(&ChipConfig::simd64(), &net).metrics;
+    let fullx = run_workload(&ChipConfig::full_crossbar(), &net).metrics;
+
+    let base_c = base.total_compute_cycles() as f64;
+    let simd_loss = (base_c - simd64.total_compute_cycles() as f64) / base_c;
+    let xbar_loss = (base_c - fullx.total_compute_cycles() as f64) / base_c;
+
+    println!(
+        "{:<34} {:>16} {:>12} {:>14}",
+        "configuration", "compute cycles", "perf loss", "module area"
+    );
+    common::rule();
+    println!(
+        "{:<34} {:>16} {:>12} {:>11.4} mm2",
+        "Voltra (8-lane SIMD, tmux xbar)",
+        base.total_compute_cycles(),
+        "-",
+        area.simd_area(8)
+    );
+    println!(
+        "{:<34} {:>16} {:>11.2}% {:>11.4} mm2",
+        "64-lane SIMD",
+        simd64.total_compute_cycles(),
+        100.0 * simd_loss,
+        area.simd_area(64)
+    );
+    println!(
+        "{:<34} {:>16} {:>11.2}% {:>11.4} mm2",
+        "full (non-tmux) crossbar",
+        fullx.total_compute_cycles(),
+        100.0 * xbar_loss,
+        area.crossbar_area(false)
+    );
+    common::rule();
+    println!(
+        "8-lane SIMD costs {:.2}% perf for a {:.2}x area cut   (paper: 0.7% / 4.92x)",
+        100.0 * simd_loss,
+        area.simd_area(64) / area.simd_area(8)
+    );
+    println!(
+        "tmux crossbar costs {:.3}% perf for a {:.2}x area cut (paper: 0.02% / 1.46x)",
+        100.0 * xbar_loss,
+        area.crossbar_area(false) / area.crossbar_area(true)
+    );
+
+    // Shape assertions (the paper's qualitative claims).
+    assert!(simd_loss.abs() < 0.03, "SIMD tmux loss should be ~1%");
+    assert!(xbar_loss.abs() < 0.01, "crossbar tmux loss should be ~0%");
+    assert!((area.simd_area(64) / area.simd_area(8) - 4.92).abs() < 0.01);
+    assert!((area.crossbar_area(false) / area.crossbar_area(true) - 1.46).abs() < 0.02);
+    println!("ablation shapes match Sec. II-D ✓");
+
+    common::report("ablation regeneration", 3, || {
+        let _ = run_workload(&ChipConfig::simd64(), &net);
+        let _ = run_workload(&ChipConfig::full_crossbar(), &net);
+    });
+}

@@ -1,0 +1,45 @@
+//! Shared mini-bench harness for the figure-regeneration benches.
+//!
+//! Substrate note (DESIGN.md): criterion is not vendored in the build
+//! image, so `cargo bench` targets use this harness: warmup + repeated
+//! timing with mean/min/max, plus table-printing helpers so every bench
+//! emits the rows/series of the paper figure it regenerates.
+
+use std::time::Instant;
+
+/// Time `f`, returning (mean_s, min_s, max_s) over `iters` runs.
+pub fn time<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64, f64) {
+    // Warmup.
+    f();
+    let mut total = 0.0;
+    let mut min = f64::INFINITY;
+    let mut max: f64 = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        min = min.min(dt);
+        max = max.max(dt);
+    }
+    (total / iters as f64, min, max)
+}
+
+/// Report one hot-path timing in a stable, grep-friendly format.
+pub fn report(name: &str, iters: usize, f: impl FnMut()) {
+    let (mean, min, max) = time(iters, f);
+    println!(
+        "bench {name:<40} mean {:>10.3} ms   min {:>10.3} ms   max {:>10.3} ms   ({iters} iters)",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+pub fn rule() {
+    println!("{}", "-".repeat(100));
+}

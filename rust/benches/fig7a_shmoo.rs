@@ -1,0 +1,46 @@
+//! Fig. 7a: the shmoo plot — pass/fail over the voltage x frequency grid.
+//!
+//! Paper anchors: the die operates 0.6-1.0 V, 300-800 MHz, with fmax
+//! rising near-linearly in VDD.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::OperatingPoint;
+use voltra::power::dvfs::{fmax_mhz, passes, shmoo_grid};
+
+fn main() {
+    common::header("Fig. 7a — shmoo plot (o = pass, . = fail)");
+    let volts: Vec<f64> = (0..=9).map(|i| 0.55 + 0.05 * i as f64).collect();
+    let mut freqs: Vec<f64> = (0..=12).map(|i| 250.0 + 50.0 * i as f64).collect();
+    freqs.reverse();
+    print!("{:>8} ", "MHz\\V");
+    for v in &volts {
+        print!("{v:>6.2}");
+    }
+    println!();
+    for f in &freqs {
+        print!("{f:>8} ");
+        for v in &volts {
+            let ok = passes(OperatingPoint {
+                voltage: (v * 100.0).round() / 100.0,
+                freq_mhz: *f,
+            });
+            print!("{:>6}", if ok { "o" } else { "." });
+        }
+        println!();
+    }
+    common::rule();
+    println!(
+        "fmax anchors: {} MHz @ 0.6 V, {} MHz @ 1.0 V  (paper: 300 / 800)",
+        fmax_mhz(0.6),
+        fmax_mhz(1.0)
+    );
+    let grid = shmoo_grid();
+    let pass = grid.iter().filter(|(_, _, p)| *p).count();
+    println!("grid: {} points, {} pass", grid.len(), pass);
+
+    common::report("fig7a grid evaluation", 50, || {
+        let _ = shmoo_grid();
+    });
+}

@@ -1,0 +1,75 @@
+//! Fig. 7b: system energy efficiency and area efficiency across the
+//! supply-voltage range, on the fully-dense GEMM with M = N = K = 96.
+//!
+//! Paper: 1.60 TOPS/W peak at 0.6 V / 300 MHz; 1.25 TOPS/mm^2 peak at
+//! 1.0 V / 800 MHz; power envelope 171-981 mW (Fig. 5).
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::{ChipConfig, OperatingPoint};
+use voltra::power::dvfs::fmax_mhz;
+use voltra::power::{power_mw, tops_per_watt, Activity, AreaModel, EnergyParams};
+use voltra::sim::{simulate_tile, TileSpec};
+
+fn main() {
+    common::header("Fig. 7b — efficiency vs supply voltage (dense GEMM, M=N=K=96)");
+    let cfg = ChipConfig::voltra();
+    let t = simulate_tile(&cfg, &TileSpec::simple(96, 96, 96));
+    let p = EnergyParams::default();
+    let act = Activity::default();
+    let area = AreaModel::default();
+    let die = area.total(8, true);
+
+    println!(
+        "{:>6} {:>8} {:>10} {:>10} {:>12} {:>14}",
+        "VDD", "fmax", "power", "TOPS/W", "eff. TOPS", "TOPS/mm^2"
+    );
+    common::rule();
+    let mut peak_eff: (f64, f64) = (0.0, 0.0);
+    let mut peak_ae: (f64, f64) = (0.0, 0.0);
+    for i in 0..=8 {
+        let v = 0.6 + 0.05 * i as f64;
+        let f = fmax_mhz(v);
+        let op = OperatingPoint {
+            voltage: v,
+            freq_mhz: f,
+        };
+        let mw = power_mw(&p, &t, &act, op);
+        let eff = tops_per_watt(&p, &t, &act, op);
+        let tops = 2.0 * t.useful_macs as f64 / (t.total_cycles as f64 / (f * 1e6)) / 1e12;
+        // Area efficiency uses *peak* throughput at this frequency, as
+        // Table I / Fig. 7b do.
+        let peak = 512.0 * 2.0 * f * 1e6 / 1e12;
+        let ae = peak / die;
+        println!(
+            "{v:>6.2} {f:>6.0}MHz {mw:>8.1}mW {eff:>10.3} {tops:>12.3} {ae:>14.3}"
+        );
+        if eff > peak_eff.1 {
+            peak_eff = (v, eff);
+        }
+        if ae > peak_ae.1 {
+            peak_ae = (v, ae);
+        }
+    }
+    common::rule();
+    println!(
+        "peak energy efficiency: {:.2} TOPS/W @ {:.1} V   (paper: 1.60 @ 0.6 V)",
+        peak_eff.1, peak_eff.0
+    );
+    println!(
+        "peak area efficiency:   {:.2} TOPS/mm^2 @ {:.1} V (paper: 1.25 @ 1.0 V)",
+        peak_ae.1, peak_ae.0
+    );
+
+    common::report("fig7b voltage sweep", 10, || {
+        for i in 0..=8 {
+            let v = 0.6 + 0.05 * i as f64;
+            let op = OperatingPoint {
+                voltage: v,
+                freq_mhz: fmax_mhz(v),
+            };
+            let _ = tops_per_watt(&p, &t, &act, op);
+        }
+    });
+}

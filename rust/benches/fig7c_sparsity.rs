@@ -1,0 +1,79 @@
+//! Fig. 7c: energy efficiency vs weight sparsity and input toggle rate.
+//!
+//! Paper: efficiency rises with weight sparsity (zero weights clock-gate
+//! the multipliers) and with lower input toggle rates, saturating as the
+//! non-datapath energy floor (memory, control, leakage) dominates.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::{ChipConfig, OperatingPoint};
+use voltra::power::{tops_per_watt, Activity, EnergyParams};
+use voltra::sim::{simulate_tile, TileSpec};
+
+fn main() {
+    common::header("Fig. 7c — effective TOPS/W vs weight sparsity x input toggle rate");
+    let cfg = ChipConfig::voltra();
+    let t = simulate_tile(&cfg, &TileSpec::simple(96, 96, 96));
+    let p = EnergyParams::default();
+    let op = OperatingPoint::efficiency();
+
+    let toggles = [1.0, 0.75, 0.5, 0.25];
+    let sparsities = [0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0];
+    print!("{:>10}", "sparsity");
+    for tr in toggles {
+        print!("   TR={tr:>4.2}");
+    }
+    println!();
+    common::rule();
+    let mut base = 0.0;
+    for s in sparsities {
+        print!("{:>9.1}%", 100.0 * s);
+        for tr in toggles {
+            let eff = tops_per_watt(
+                &p,
+                &t,
+                &Activity {
+                    weight_sparsity: s,
+                    input_toggle: tr,
+                },
+                op,
+            );
+            if s == 0.0 && tr == 1.0 {
+                base = eff;
+            }
+            print!(" {eff:>9.3}");
+        }
+        println!();
+    }
+    common::rule();
+    let top = tops_per_watt(
+        &p,
+        &t,
+        &Activity {
+            weight_sparsity: 1.0,
+            input_toggle: 0.25,
+        },
+        op,
+    );
+    println!(
+        "dense/TR=1.0 baseline {base:.2} TOPS/W -> fully sparse/quiet {top:.2} TOPS/W ({:.2}x, saturating)",
+        top / base
+    );
+
+    common::report("fig7c sweep", 20, || {
+        for s in sparsities {
+            for tr in toggles {
+                let _ = tops_per_watt(
+                    &p,
+                    &t,
+                    &Activity {
+                        weight_sparsity: s,
+                        input_toggle: tr,
+                    },
+                    op,
+                );
+            }
+        }
+    });
+}

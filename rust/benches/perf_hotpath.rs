@@ -1,0 +1,62 @@
+//! Hot-path performance tracking (the §Perf deliverable): timings of the
+//! simulator's inner loops and the full-workload pipeline, recorded
+//! before/after each optimization in EXPERIMENTS.md §Perf.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::run_workload;
+use voltra::sim::memory::{BankRequest, BankedMemory, Requester};
+use voltra::sim::{simulate_tile, TileSpec};
+use voltra::tiling::engine::choose_tiling;
+use voltra::workloads::{evaluation_suite, resnet50::resnet50};
+
+fn main() {
+    common::header("§Perf — simulator hot paths");
+    let cfg = ChipConfig::voltra();
+
+    // 1. Bank arbitration micro-benchmark (the per-cycle inner loop).
+    let mut mem = BankedMemory::new();
+    let reqs: Vec<BankRequest> = (0..12)
+        .map(|i| BankRequest {
+            word_addr: i * 3,
+            write: false,
+            requester: Requester::Input((i % 8) as u8),
+            super_bank: i == 11,
+        })
+        .collect();
+    common::report("bank arbitration x 100k cycles", 10, || {
+        for _ in 0..100_000 {
+            let r = mem.arbitrate(&reqs);
+            std::hint::black_box(&r);
+        }
+    });
+
+    // 2. One large tile, cycle by cycle.
+    common::report("simulate_tile 128x1024x128", 10, || {
+        let m = simulate_tile(&cfg, &TileSpec::simple(128, 1024, 128));
+        std::hint::black_box(&m);
+    });
+
+    // 3. Tiling search for a transformer-scale layer.
+    common::report("choose_tiling 4096x4096x4096", 10, || {
+        let t = choose_tiling(&cfg, 4096, 4096, 4096);
+        std::hint::black_box(&t);
+    });
+
+    // 4. Full ResNet-50 workload through the coordinator (memoized).
+    let net = resnet50();
+    common::report("run_workload(ResNet50)", 10, || {
+        let r = run_workload(&cfg, &net);
+        std::hint::black_box(&r);
+    });
+
+    // 5. The whole Fig. 6 suite on one configuration.
+    common::report("evaluation suite (8 workloads)", 3, || {
+        for w in evaluation_suite() {
+            let r = run_workload(&cfg, &w);
+            std::hint::black_box(&r);
+        }
+    });
+}

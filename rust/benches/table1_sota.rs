@@ -1,0 +1,160 @@
+//! Table I: chip summary and state-of-the-art comparison.
+//!
+//! The SotA rows are the published numbers of DIANA (ISSCC'22), RBE
+//! (JSSC'24), Ayaka (JSSC'24) and Cygnus (VLSI'25); the Voltra row is
+//! *derived from our model* (area model, DVFS, energy model, simulator)
+//! — matching it against the paper's own row is the regression.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::arch;
+use voltra::config::{ChipConfig, OperatingPoint};
+use voltra::power::{power_mw, tops_per_watt, Activity, AreaModel, EnergyParams};
+use voltra::sim::{simulate_tile, TileSpec};
+
+struct Row {
+    name: &'static str,
+    tech: &'static str,
+    ops: &'static str,
+    macs: &'static str,
+    mem_kb: &'static str,
+    area_mm2: &'static str,
+    volt: &'static str,
+    freq: &'static str,
+    tops: String,
+    power: String,
+    eff: String,
+    area_eff: String,
+}
+
+fn main() {
+    common::header("Table I — chip summary & SotA comparison");
+    // Published comparison rows (from the paper's Table I).
+    let sota = [
+        Row {
+            name: "DIANA ISSCC22",
+            tech: "22nm",
+            ops: "CONV2D",
+            macs: "1024/512/256",
+            mem_kb: "320",
+            area_mm2: "N/A",
+            volt: "0.6-0.9",
+            freq: "50-340",
+            tops: "0.22".into(),
+            power: "N/A".into(),
+            eff: "4.1".into(),
+            area_eff: "N/A".into(),
+        },
+        Row {
+            name: "RBE JSSC24",
+            tech: "22nm",
+            ops: "CONV2D",
+            macs: "Configurable",
+            mem_kb: "128",
+            area_mm2: "2.42",
+            volt: "0.5-0.8",
+            freq: "-420",
+            tops: "0.09".into(),
+            power: "N/A".into(),
+            eff: "0.74".into(),
+            area_eff: "0.037".into(),
+        },
+        Row {
+            name: "Ayaka JSSC24",
+            tech: "28nm",
+            ops: "MHA",
+            macs: "4096",
+            mem_kb: "544",
+            area_mm2: "10.76",
+            volt: "0.68-1.0",
+            freq: "85-430",
+            tops: "0.17-6.53".into(),
+            power: "38-396".into(),
+            eff: "2.22-49.7".into(),
+            area_eff: "0.016-0.61".into(),
+        },
+        Row {
+            name: "Cygnus VLSI25",
+            tech: "16nm",
+            ops: "GEMM/CONV2D",
+            macs: "160",
+            mem_kb: "768",
+            area_mm2: "16",
+            volt: "0.6-1.0",
+            freq: "100-1010",
+            tops: "0.32".into(),
+            power: "62-1542".into(),
+            eff: "0.41".into(),
+            area_eff: "0.02".into(),
+        },
+    ];
+
+    // Voltra row: everything derived from the model.
+    let cfg = ChipConfig::voltra();
+    let t = simulate_tile(&cfg, &TileSpec::simple(96, 96, 96));
+    let p = EnergyParams::default();
+    let act = Activity::default();
+    let area = AreaModel::default();
+    let die = area.total(8, true);
+    let eff06 = tops_per_watt(&p, &t, &act, OperatingPoint::efficiency());
+    let p06 = power_mw(&p, &t, &act, OperatingPoint::efficiency());
+    let p10 = power_mw(&p, &t, &act, OperatingPoint::performance());
+    let voltra = Row {
+        name: "Voltra (this work)",
+        tech: "16nm",
+        ops: "GEMM/CONV2D/MHA",
+        macs: "512",
+        mem_kb: "134",
+        area_mm2: "",
+        volt: "0.6-1.0",
+        freq: "300-800",
+        tops: format!("{:.2}", arch::PEAK_TOPS),
+        power: format!("{:.0}-{:.0}", p06, p10),
+        eff: format!("{:.2}", eff06),
+        area_eff: format!("{:.2}", arch::PEAK_TOPS / die),
+    };
+
+    println!(
+        "{:<20} {:>5} {:>16} {:>13} {:>7} {:>7} {:>9} {:>9} {:>10} {:>10} {:>11} {:>12}",
+        "chip", "tech", "ops", "MACs", "mem KB", "mm^2", "V", "MHz", "TOPS", "mW", "TOPS/W", "TOPS/mm^2"
+    );
+    common::rule();
+    for r in &sota {
+        println!(
+            "{:<20} {:>5} {:>16} {:>13} {:>7} {:>7} {:>9} {:>9} {:>10} {:>10} {:>11} {:>12}",
+            r.name, r.tech, r.ops, r.macs, r.mem_kb, r.area_mm2, r.volt, r.freq, r.tops, r.power, r.eff, r.area_eff
+        );
+    }
+    common::rule();
+    println!(
+        "{:<20} {:>5} {:>16} {:>13} {:>7} {:>7.3} {:>9} {:>9} {:>10} {:>10} {:>11} {:>12}",
+        voltra.name,
+        voltra.tech,
+        voltra.ops,
+        voltra.macs,
+        voltra.mem_kb,
+        die,
+        voltra.volt,
+        voltra.freq,
+        voltra.tops,
+        voltra.power,
+        voltra.eff,
+        voltra.area_eff
+    );
+    println!(
+        "\npaper's Voltra row: 0.654 mm^2, 0.82 TOPS, 171-981 mW, 1.60 TOPS/W, 1.25 TOPS/mm^2"
+    );
+
+    // Regression assertions: the derived row must match the silicon.
+    assert!((die - 0.654).abs() < 0.01);
+    assert!((arch::PEAK_TOPS - 0.82).abs() < 0.01);
+    assert!((eff06 - 1.60).abs() < 0.15);
+    assert!((arch::PEAK_TOPS / die - 1.25).abs() < 0.03);
+    println!("derived Voltra row matches the published Table I entries ✓");
+
+    common::report("table1 row derivation", 20, || {
+        let t = simulate_tile(&cfg, &TileSpec::simple(96, 96, 96));
+        let _ = tops_per_watt(&p, &t, &act, OperatingPoint::efficiency());
+    });
+}

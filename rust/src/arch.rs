@@ -1,0 +1,103 @@
+//! Architectural constants of the Voltra chip, straight from the paper.
+//!
+//! Everything here is a *published* number (Sec. II, Fig. 5, Table I);
+//! derived quantities carry the derivation in their doc comment.
+
+/// Spatial unrolling of output rows in the 3D array (Sec. II-A).
+pub const ARRAY_M: usize = 8;
+/// Spatial unrolling of output columns (the 8x8 Dot-ProdU grid).
+pub const ARRAY_N: usize = 8;
+/// Dot-product width inside one Dot-ProdU.
+pub const ARRAY_K: usize = 8;
+/// Total MAC units: 8 x 8 x 8 = 512 (Table I "MAC Counts").
+pub const MACS: usize = ARRAY_M * ARRAY_N * ARRAY_K;
+
+/// Shared data memory banks (Sec. II: "32 banks, 64-bit width each").
+pub const NUM_BANKS: usize = 32;
+/// Bank word width in bits.
+pub const BANK_WIDTH_BITS: usize = 64;
+/// Bank word width in bytes.
+pub const BANK_WIDTH_BYTES: usize = BANK_WIDTH_BITS / 8;
+/// Banks combined into one super bank for the weight streamer (Sec. II-B).
+pub const SUPER_BANK_BANKS: usize = 8;
+/// Super-bank width in bytes: 512 bit.
+pub const SUPER_BANK_BYTES: usize = SUPER_BANK_BANKS * BANK_WIDTH_BYTES;
+
+/// On-chip data memory (Fig. 5: "128(D)" KB).
+pub const DATA_MEM_BYTES: usize = 128 * 1024;
+/// On-chip instruction memory (Fig. 5: "6(I)" KB).
+pub const INSTR_MEM_BYTES: usize = 6 * 1024;
+/// Words per bank: 128 KiB / 32 banks / 8 B.
+pub const BANK_WORDS: usize = DATA_MEM_BYTES / NUM_BANKS / BANK_WIDTH_BYTES;
+
+/// Streamer FIFO depth for input and weight streams (Sec. II-B).
+pub const STREAM_FIFO_DEPTH: usize = 8;
+/// FIFO depth for the partial-sum and output streams (output stationarity
+/// makes deeper queues useless — Sec. II-B).
+pub const PSUM_FIFO_DEPTH: usize = 1;
+
+/// Quantization SIMD lanes (Sec. II-D: "only eight quantization PE lanes").
+pub const SIMD_LANES: usize = 8;
+/// Outputs produced by one 8x8 output-stationary tile.
+pub const TILE_OUTPUTS: usize = ARRAY_M * ARRAY_N;
+
+/// Number of flexible data streamers (Sec. II-B: "seven flexible data
+/// streamers"): GEMM input / weight / psum / output, SIMD in / out,
+/// reshuffler.
+pub const NUM_STREAMERS: usize = 7;
+
+/// Input-streamer AGU dimensionality (Sec. II-B: 6-D affine access).
+pub const INPUT_AGU_DIMS: usize = 6;
+/// Weight-streamer AGU dimensionality (Sec. II-B: 3-D).
+pub const WEIGHT_AGU_DIMS: usize = 3;
+
+/// Die area in mm^2 (Fig. 5).
+pub const CORE_AREA_MM2: f64 = 0.654;
+/// Operating voltage range (Fig. 5).
+pub const VMIN: f64 = 0.6;
+pub const VMAX: f64 = 1.0;
+/// Frequency range in MHz (Fig. 5).
+pub const FMIN_MHZ: f64 = 300.0;
+pub const FMAX_MHZ: f64 = 800.0;
+
+/// Peak throughput at INT8: 512 MACs x 2 ops x 800 MHz = 0.8192 TOPS
+/// (Table I reports 0.82).
+pub const PEAK_TOPS: f64 = (MACS as f64) * 2.0 * FMAX_MHZ * 1e6 / 1e12;
+
+/// Published efficiency headlines (Fig. 5 / Table I) used as calibration
+/// targets by `power::energy` — never read back as results.
+pub const PAPER_PEAK_TOPS_W: f64 = 1.60;
+pub const PAPER_PEAK_TOPS_MM2: f64 = 1.25;
+pub const PAPER_POWER_MIN_MW: f64 = 171.0;
+pub const PAPER_POWER_MAX_MW: f64 = 981.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_count_matches_table1() {
+        assert_eq!(MACS, 512);
+    }
+
+    #[test]
+    fn memory_geometry() {
+        assert_eq!(BANK_WORDS, 512);
+        assert_eq!(NUM_BANKS * BANK_WORDS * BANK_WIDTH_BYTES, 128 * 1024);
+        assert_eq!(SUPER_BANK_BYTES, 64);
+    }
+
+    #[test]
+    fn peak_throughput_matches_table1() {
+        // Table I: 0.82 TOPS at INT8.
+        assert!((PEAK_TOPS - 0.8192).abs() < 1e-9);
+        assert!((PEAK_TOPS - 0.82).abs() < 0.01);
+    }
+
+    #[test]
+    fn area_efficiency_is_consistent() {
+        // 0.8192 TOPS / 0.654 mm^2 = 1.2526 TOPS/mm^2 — Table I's 1.25.
+        let ae = PEAK_TOPS / CORE_AREA_MM2;
+        assert!((ae - PAPER_PEAK_TOPS_MM2).abs() < 0.01);
+    }
+}

@@ -1,0 +1,249 @@
+//! Chip / simulation configuration: the knobs the paper ablates.
+//!
+//! Presets correspond to the evaluation configurations of Fig. 6:
+//! * [`ChipConfig::voltra`] — the full chip (3D array + MGDP + PDMA).
+//! * [`ChipConfig::no_prefetch`] — MGDP disabled (Fig. 6b left bars):
+//!   demand-fetched operands, bank conflicts fully exposed.
+//! * [`ChipConfig::separated_memory`] — PDMA disabled (Fig. 6c left
+//!   bars): fixed per-operand buffers constrain the tiling.
+//! * [`ChipConfig::array2d`] — the conventional 2D spatial array
+//!   baseline (Fig. 6a left bars).
+
+use crate::arch;
+
+/// How the 512 MACs are arranged spatially.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrayGeometry {
+    /// Voltra's 3D array: 8x8 Dot-ProdUs x 8-wide dot product, with
+    /// flexible dimension mapping (incl. GEMV K-extension by spatial
+    /// accumulation, inherited from OpenGeMM).
+    Spatial3D { m: usize, n: usize, k: usize },
+    /// Conventional 2D output-stationary array (K temporal), the Fig. 6a
+    /// baseline. Same MAC budget arranged M x N.
+    Spatial2D { m: usize, n: usize },
+}
+
+impl ArrayGeometry {
+    pub fn macs(&self) -> usize {
+        match *self {
+            ArrayGeometry::Spatial3D { m, n, k } => m * n * k,
+            ArrayGeometry::Spatial2D { m, n } => m * n,
+        }
+    }
+}
+
+/// On-chip memory organisation (the PDMA ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryOrg {
+    /// One unified multi-bank space; streamers carve regions dynamically
+    /// via programmable base pointers (Sec. II-C).
+    Shared,
+    /// Fixed dedicated buffers per operand class (the Fig. 1a template).
+    /// Sizes in bytes; must sum to <= DATA_MEM_BYTES.
+    Separated {
+        input: usize,
+        weight: usize,
+        output: usize,
+        psum: usize,
+    },
+}
+
+impl MemoryOrg {
+    /// The conventional split used by the separated baseline: weights get
+    /// the largest dedicated buffer, as in most 2D-template accelerators.
+    pub fn separated_default() -> Self {
+        MemoryOrg::Separated {
+            input: 40 * 1024,
+            weight: 56 * 1024,
+            output: 24 * 1024,
+            psum: 8 * 1024,
+        }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        match *self {
+            MemoryOrg::Shared => arch::DATA_MEM_BYTES,
+            MemoryOrg::Separated {
+                input,
+                weight,
+                output,
+                psum,
+            } => input + weight + output + psum,
+        }
+    }
+}
+
+/// A legal (voltage, frequency) operating point from the shmoo (Fig. 7a).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    pub voltage: f64,
+    pub freq_mhz: f64,
+}
+
+impl OperatingPoint {
+    /// Peak-energy-efficiency point: 0.6 V / 300 MHz (Sec. III-B).
+    pub fn efficiency() -> Self {
+        OperatingPoint {
+            voltage: 0.6,
+            freq_mhz: 300.0,
+        }
+    }
+
+    /// Peak-performance point: 1.0 V / 800 MHz (Sec. III-B).
+    pub fn performance() -> Self {
+        OperatingPoint {
+            voltage: 1.0,
+            freq_mhz: 800.0,
+        }
+    }
+}
+
+/// Full chip + simulation configuration.
+#[derive(Clone, Debug)]
+pub struct ChipConfig {
+    pub array: ArrayGeometry,
+    pub memory: MemoryOrg,
+    /// Mixed-grained data prefetching (Sec. II-B). When false, streamers
+    /// demand-fetch with depth-1 buffering and every bank conflict or
+    /// access-latency cycle stalls the array.
+    pub prefetch: bool,
+    /// Input/weight stream FIFO depth (8 on the chip).
+    pub stream_fifo_depth: usize,
+    /// Psum/output FIFO depth (1 on the chip).
+    pub psum_fifo_depth: usize,
+    /// Quantization SIMD lanes (8 on the chip; 64 in the ablation).
+    pub simd_lanes: usize,
+    /// Time-multiplex the psum-read and output-write crossbar ports
+    /// (Sec. II-D). Psum reads have priority.
+    pub tmux_psum_output: bool,
+    /// Number of shared-memory banks (32 on the chip; ablation axis).
+    pub num_banks: usize,
+    /// Shared-memory access latency in cycles (bank + crossbar).
+    pub mem_latency: u64,
+    /// Off-chip DMA bandwidth, bytes per core cycle.
+    pub dma_bytes_per_cycle: f64,
+    /// Fixed DMA burst setup latency in cycles.
+    pub dma_burst_latency: u64,
+    /// Overlap DMA with compute via double buffering when the allocator
+    /// can hold two tiles (true for the chip).
+    pub double_buffer: bool,
+    pub operating_point: OperatingPoint,
+}
+
+impl ChipConfig {
+    /// The full Voltra chip as fabricated.
+    pub fn voltra() -> Self {
+        ChipConfig {
+            array: ArrayGeometry::Spatial3D {
+                m: arch::ARRAY_M,
+                n: arch::ARRAY_N,
+                k: arch::ARRAY_K,
+            },
+            memory: MemoryOrg::Shared,
+            prefetch: true,
+            stream_fifo_depth: arch::STREAM_FIFO_DEPTH,
+            psum_fifo_depth: arch::PSUM_FIFO_DEPTH,
+            simd_lanes: arch::SIMD_LANES,
+            tmux_psum_output: true,
+            num_banks: arch::NUM_BANKS,
+            mem_latency: 2,
+            dma_bytes_per_cycle: 8.0,
+            dma_burst_latency: 24,
+            double_buffer: true,
+            operating_point: OperatingPoint::performance(),
+        }
+    }
+
+    /// Fig. 6b baseline: plain shared memory without MGDP.
+    pub fn no_prefetch() -> Self {
+        ChipConfig {
+            prefetch: false,
+            ..Self::voltra()
+        }
+    }
+
+    /// Fig. 6c baseline: separated per-operand buffers (no PDMA). The
+    /// dedicated dispatchers do not contend across operand classes, so
+    /// bank conflicts vanish — but the tiling is capped by the smallest
+    /// buffer, activations round-trip through DRAM between layers, and
+    /// without dynamic re-partitioning the fixed buffers cannot
+    /// ping-pong, so DMA cannot overlap compute.
+    pub fn separated_memory() -> Self {
+        ChipConfig {
+            memory: MemoryOrg::separated_default(),
+            double_buffer: false,
+            ..Self::voltra()
+        }
+    }
+
+    /// Fig. 6a baseline: same 512 MACs as a conventional 2D array
+    /// (16 x 32 output-stationary, K temporal).
+    pub fn array2d() -> Self {
+        ChipConfig {
+            array: ArrayGeometry::Spatial2D { m: 16, n: 32 },
+            ..Self::voltra()
+        }
+    }
+
+    /// Ablation of Sec. II-D: a 64-lane SIMD unit (no time-multiplexing).
+    pub fn simd64() -> Self {
+        ChipConfig {
+            simd_lanes: 64,
+            ..Self::voltra()
+        }
+    }
+
+    /// Ablation of Sec. II-D: dedicated (non-multiplexed) psum/output
+    /// crossbar ports.
+    pub fn full_crossbar() -> Self {
+        ChipConfig {
+            tmux_psum_output: false,
+            ..Self::voltra()
+        }
+    }
+
+    pub fn with_operating_point(mut self, op: OperatingPoint) -> Self {
+        self.operating_point = op;
+        self
+    }
+
+    /// Peak INT8 TOPS at this configuration's operating point.
+    pub fn peak_tops(&self) -> f64 {
+        self.array.macs() as f64 * 2.0 * self.operating_point.freq_mhz * 1e6 / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_keep_mac_budget() {
+        assert_eq!(ChipConfig::voltra().array.macs(), 512);
+        assert_eq!(ChipConfig::array2d().array.macs(), 512);
+    }
+
+    #[test]
+    fn separated_split_fits_data_memory() {
+        let m = MemoryOrg::separated_default();
+        assert!(m.total_bytes() <= arch::DATA_MEM_BYTES);
+    }
+
+    #[test]
+    fn peak_tops_at_performance_point() {
+        let c = ChipConfig::voltra();
+        assert!((c.peak_tops() - 0.8192).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ablation_presets_flip_one_knob() {
+        let v = ChipConfig::voltra();
+        assert!(!ChipConfig::no_prefetch().prefetch && v.prefetch);
+        assert_eq!(ChipConfig::simd64().simd_lanes, 64);
+        assert!(!ChipConfig::full_crossbar().tmux_psum_output);
+        assert!(matches!(
+            ChipConfig::separated_memory().memory,
+            MemoryOrg::Separated { .. }
+        ));
+    }
+}

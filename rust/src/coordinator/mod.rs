@@ -1,0 +1,473 @@
+//! The coordinator: runs a workload through tiling, CSR programming and
+//! the cycle simulator, producing the paper's evaluation metrics.
+//!
+//! Per layer:
+//!   1. lower to GEMMs (implicit im2col for convs);
+//!   2. choose the layer-wise tiling that fits the memory organisation
+//!      (PDMA shared vs separated buffers) with minimum off-chip traffic;
+//!   3. enumerate the distinct tile shapes (interior/edge x first/mid/
+//!      last K-round), cycle-simulate each once and scale by its count —
+//!      tiles are memoized, so a ResNet-50 run simulates ~10^2 tiles,
+//!      not ~10^5;
+//!   4. charge auxiliary cycles (Snitch CSR programming per tile,
+//!      reshuffler passes for raw-layout feature maps);
+//!   5. combine compute with bandwidth-limited DMA (overlapped when the
+//!      allocator could double-buffer).
+
+pub mod server;
+
+use std::collections::HashMap;
+
+use crate::config::ChipConfig;
+use crate::metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};
+use crate::sim::dma::{overlap_latency, transfer_cost};
+use crate::sim::engine::{simulate_tile, TileSpec};
+use crate::sim::gemm_core::Mapping;
+use crate::sim::reshuffler::reshuffle_cycles;
+use crate::sim::snitch::{CsrProgram, StreamerId};
+use crate::sim::streamer::{Grain, StreamerProgram};
+use crate::sim::agu::LoopDim;
+use crate::tiling::engine::{choose_tiling, traffic_parts, Tiling};
+use crate::workloads::{Layer, LayerKind, Workload};
+
+/// Result of one workload run.
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    pub metrics: WorkloadMetrics,
+    /// Tiles simulated (after memoization) vs dispatched in total.
+    pub unique_tiles: usize,
+    pub dispatched_tiles: u64,
+}
+
+/// Per-run memoization: simulated tiles AND tiling decisions (repeated
+/// transformer blocks / ResNet stages share layer shapes — §Perf).
+pub struct TileCache {
+    map: HashMap<TileSpec, TileMetrics>,
+    tilings: HashMap<(u64, u64, u64), Option<Tiling>>,
+}
+
+impl TileCache {
+    pub fn new() -> Self {
+        TileCache {
+            map: HashMap::new(),
+            tilings: HashMap::new(),
+        }
+    }
+
+    /// Memoized tiling search (the config is fixed per cache lifetime).
+    pub fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
+        *self
+            .tilings
+            .entry((m, k, n))
+            .or_insert_with(|| choose_tiling(cfg, m, k, n))
+    }
+
+    pub fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+        if let Some(m) = self.map.get(spec) {
+            return *m;
+        }
+        let m = simulate_tile(cfg, spec);
+        self.map.insert(*spec, m);
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl Default for TileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The CSR programming cost of launching one tile (Snitch writes the
+/// GEMM dims + the four GEMM streamers).
+pub fn tile_csr_cycles(tk: u64) -> u64 {
+    let mut p = CsrProgram::default();
+    p.program_gemm_dims(0, tk as u32, 0, false);
+    let dims3 = vec![LoopDim { bound: 1, stride: 0 }; 3];
+    let s = StreamerProgram::new(0, dims3, Grain::Fine);
+    p.program_streamer(StreamerId::GemmInput, &s);
+    p.program_streamer(StreamerId::GemmWeight, &s);
+    p.program_streamer(StreamerId::GemmPsum, &s);
+    p.program_streamer(StreamerId::GemmOutput, &s);
+    p.cycles()
+}
+
+/// Bytes of feature map a conv layer must reshuffle (HWC -> C/8HWC8).
+fn reshuffle_bytes(layer: &Layer) -> u64 {
+    match layer.kind {
+        LayerKind::Conv2d {
+            h, w, cin, kh, kw, ..
+        } if kh * kw > 1 => h * w * cin.div_ceil(8) * 8,
+        _ => 0,
+    }
+}
+
+/// Dimension residues of round `i` over tiles of `t` covering `d`.
+fn edge(d: u64, t: u64) -> (u64, u64, u64) {
+    // (interior_count, edge_count, edge_size)
+    let full = d / t;
+    let rem = d % t;
+    if rem == 0 {
+        (full, 0, 0)
+    } else {
+        (full, 1, rem)
+    }
+}
+
+/// Run one layer's GEMMs through tiling + simulation.
+pub fn run_layer(cfg: &ChipConfig, layer: &Layer, cache: &mut TileCache) -> LayerMetrics {
+    run_layer_counted(cfg, layer, cache).0
+}
+
+/// Like [`run_layer`], also returning the number of dispatched tiles.
+pub fn run_layer_counted(
+    cfg: &ChipConfig,
+    layer: &Layer,
+    cache: &mut TileCache,
+) -> (LayerMetrics, u64) {
+    let mut lm = LayerMetrics {
+        name: layer.name.clone(),
+        ..Default::default()
+    };
+    let mut total_dispatched = 0u64;
+
+    for mut g in layer.gemms() {
+        // The hardware loop controller may map (M, N) either way onto the
+        // array; pick the better-filling orientation (free transpose).
+        if Mapping::choose(cfg.array, g.m, g.n).swapped {
+            std::mem::swap(&mut g.m, &mut g.n);
+        }
+        let tiling = match cache.tiling(cfg, g.m, g.k, g.n) {
+            Some(t) => t,
+            None => continue, // cannot fit: skipped (never happens: 8x8x8 always fits)
+        };
+        let (nm, nk, nn) = tiling.rounds(g.m, g.k, g.n);
+        let (m_int, m_edge, m_rem) = edge(g.m, tiling.tm);
+        let (k_int, k_edge, k_rem) = edge(g.k, tiling.tk);
+        let (n_int, n_edge, n_rem) = edge(g.n, tiling.tn);
+
+        let m_variants = [(tiling.tm, m_int), (m_rem, m_edge)];
+        let n_variants = [(tiling.tn, n_int), (n_rem, n_edge)];
+        // K-round variants: (size, count, psum_in, spill_out).
+        let mut k_variants: Vec<(u64, u64, bool, bool)> = Vec::new();
+        {
+            let k_sizes = [(tiling.tk, k_int), (k_rem, k_edge)];
+            let last_is_edge = k_edge == 1;
+            for (i, &(sz, cnt)) in k_sizes.iter().enumerate() {
+                if cnt == 0 {
+                    continue;
+                }
+                let is_edge_slot = i == 1;
+                if nk == 1 {
+                    k_variants.push((sz, cnt, false, false));
+                } else if is_edge_slot {
+                    // The edge K-round is always the last.
+                    k_variants.push((sz, cnt, true, false));
+                } else {
+                    // Interior rounds: the first has no psum-in; the last
+                    // interior one quantizes only if there is no edge.
+                    let mut first = 1u64.min(cnt);
+                    let mut last = if last_is_edge { 0 } else { 1u64.min(cnt.saturating_sub(first)) };
+                    if cnt == 1 && !last_is_edge {
+                        // Single interior round that is both first & last.
+                        first = 1;
+                        last = 0;
+                        k_variants.push((sz, 1, false, false));
+                        continue;
+                    }
+                    if first > 0 {
+                        k_variants.push((sz, first, false, true));
+                    }
+                    let mid = cnt - first - last;
+                    if mid > 0 {
+                        k_variants.push((sz, mid, true, true));
+                    }
+                    if last > 0 {
+                        k_variants.push((sz, last, true, false));
+                    }
+                }
+            }
+        }
+
+        let pl = tiling.placement;
+        let mut dispatched = 0u64;
+        for &(tm, mc) in &m_variants {
+            if mc == 0 {
+                continue;
+            }
+            for &(tn, nc) in &n_variants {
+                if nc == 0 {
+                    continue;
+                }
+                for &(tk, kc, psum_in, spill_out) in &k_variants {
+                    if kc == 0 {
+                        continue;
+                    }
+                    let spec = TileSpec {
+                        tm,
+                        tk,
+                        tn,
+                        psum_in,
+                        spill_out,
+                        input_blocked: !g.raw_input,
+                        in_base: pl.input_base,
+                        w_base: pl.weight_base,
+                        p_base: pl.psum_base,
+                        o_base: pl.output_base,
+                    };
+                    let tmetrics = cache.simulate(cfg, &spec);
+                    let count = mc * nc * kc * g.repeat;
+                    lm.tiles.add_scaled(&tmetrics, count);
+                    dispatched += count;
+                }
+            }
+        }
+
+        // Control overhead: one CSR program per dispatched tile.
+        total_dispatched += dispatched;
+        lm.aux_cycles += dispatched * tile_csr_cycles(tiling.tk);
+        // PDMA weight residency: if the whole weight operand fits in the
+        // memory the organisation can give it, recurrent repeats stream
+        // the weights once instead of every step. The separated baseline
+        // is capped by its fixed weight buffer.
+        let parts = traffic_parts(g.m, g.k, g.n, tiling.tm, tiling.tk, tiling.tn);
+        let weight_budget = match cfg.memory {
+            crate::config::MemoryOrg::Shared => 3 * cfg.memory.total_bytes() as u64 / 4,
+            crate::config::MemoryOrg::Separated { weight, .. } => weight as u64,
+        };
+        let w_groups = g.repeat / g.weight_reuse.max(1);
+        let gemm_traffic = if g.weight_reuse > 1 && g.k * g.n <= weight_budget {
+            (parts.input + parts.psum + parts.output) * g.repeat + parts.weight * w_groups
+        } else {
+            parts.total() * g.repeat
+        };
+        lm.dma_bytes += gemm_traffic;
+        lm.tile_footprint_bytes = lm
+            .tile_footprint_bytes
+            .max(tiling.footprint.total() as u64);
+        lm.macs += g.macs();
+        let _ = (nm, nn);
+
+        // DMA timing: bandwidth-limited, plus per-tile burst setup — a
+        // config that tiles finer (separated buffers) pays more burst
+        // overhead for the same bytes.
+        let t = transfer_cost(cfg, gemm_traffic);
+        lm.dma_cycles += t.cycles + dispatched * cfg.dma_burst_latency;
+        let db = tiling.double_buffered && cfg.double_buffer;
+        lm.latency_cycles = overlap_latency(
+            lm.tiles.total_cycles + lm.aux_cycles,
+            lm.dma_cycles,
+            db,
+        );
+    }
+
+    // Reshuffler pass for raw conv feature maps.
+    let rb = reshuffle_bytes(layer);
+    if rb > 0 {
+        let rc = reshuffle_cycles(rb) * layer.repeat;
+        lm.aux_cycles += rc;
+        lm.latency_cycles += rc;
+    }
+
+    (lm, total_dispatched)
+}
+
+/// Activation bytes a layer produces (what the next layer consumes).
+fn activation_out_bytes(layer: &Layer) -> u64 {
+    layer
+        .gemms()
+        .iter()
+        .map(|g| g.m * g.n * g.repeat / layer.repeat.max(1))
+        .sum()
+}
+
+/// Activation bytes a layer consumes from its predecessor.
+fn activation_in_bytes(layer: &Layer) -> u64 {
+    match layer.kind {
+        LayerKind::Conv2d { h, w, cin, .. } => h * w * cin,
+        LayerKind::DepthwiseConv { h, w, c, .. } => h * w * c,
+        LayerKind::Gemm { m, k, .. } => m * k,
+        LayerKind::BatchedMatmul { batch, m, k, .. } => batch * m * k,
+        LayerKind::Pool { h, w, c, .. } => h * w * c,
+    }
+}
+
+/// Run a whole workload (one bar of Fig. 6).
+///
+/// PDMA's layer-chaining benefit (Fig. 4): with the shared organisation,
+/// a layer's output region simply *becomes* the next layer's input
+/// region (a streamer base-pointer update) whenever it fits on chip next
+/// to the live tiles — the separated organisation must round-trip the
+/// activation through off-chip memory because the output buffer is not
+/// the input buffer.
+pub fn run_workload(cfg: &ChipConfig, w: &Workload) -> WorkloadReport {
+    let mut cache = TileCache::new();
+    let mut metrics = WorkloadMetrics {
+        name: w.name.clone(),
+        layers: Vec::with_capacity(w.layers.len()),
+    };
+    let shared = matches!(cfg.memory, crate::config::MemoryOrg::Shared);
+    // Half the shared space can host a chained activation while the
+    // other half holds the working tiles.
+    let chain_budget = (cfg.memory.total_bytes() / 2) as u64;
+    let mut dispatched = 0u64;
+    let mut prev_out: u64 = 0;
+    for layer in &w.layers {
+        let (mut lm, d) = run_layer_counted(cfg, layer, &mut cache);
+        dispatched += d;
+        if shared {
+            let a_in = activation_in_bytes(layer);
+            let chained = prev_out.min(a_in);
+            if chained > 0 && chained <= chain_budget {
+                // Saved: the predecessor's output write + our input read,
+                // once per layer invocation (not per repeat: recurrent
+                // steps re-chain every iteration).
+                let saved = 2 * chained * layer.repeat;
+                let saved = saved.min(lm.dma_bytes / 2);
+                lm.dma_bytes -= saved;
+                let saved_cycles =
+                    (saved as f64 / cfg.dma_bytes_per_cycle).ceil() as u64;
+                lm.dma_cycles = lm.dma_cycles.saturating_sub(saved_cycles);
+                lm.latency_cycles = overlap_latency(
+                    lm.tiles.total_cycles + lm.aux_cycles,
+                    lm.dma_cycles,
+                    cfg.double_buffer,
+                );
+            }
+            prev_out = activation_out_bytes(layer);
+            if prev_out > chain_budget {
+                prev_out = 0; // too big to keep resident
+            }
+        }
+        metrics.layers.push(lm);
+    }
+    WorkloadReport {
+        metrics,
+        unique_tiles: cache.len(),
+        dispatched_tiles: dispatched,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::workloads;
+    use crate::workloads::layer::{Layer, LayerKind};
+
+    #[test]
+    fn single_gemm_layer_runs() {
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new("g", LayerKind::Gemm { m: 96, k: 96, n: 96 });
+        let mut cache = TileCache::new();
+        let lm = run_layer(&cfg, &l, &mut cache);
+        assert_eq!(lm.macs, 96 * 96 * 96);
+        assert_eq!(lm.tiles.useful_macs, lm.macs);
+        assert!(lm.tiles.temporal_utilization() > 0.7);
+        assert!(lm.latency_cycles > 0);
+    }
+
+    #[test]
+    fn memoization_collapses_repeats() {
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new(
+            "heads",
+            LayerKind::BatchedMatmul {
+                batch: 12,
+                m: 512,
+                k: 64,
+                n: 512,
+            },
+        );
+        let mut cache = TileCache::new();
+        let lm = run_layer(&cfg, &l, &mut cache);
+        assert!(cache.len() <= 12, "unique tiles: {}", cache.len());
+        assert_eq!(lm.macs, 12 * 512 * 64 * 512);
+        assert_eq!(lm.tiles.useful_macs, lm.macs);
+    }
+
+    #[test]
+    fn useful_macs_are_exact_for_every_workload() {
+        // Invariant: the simulated useful MACs must equal the workload's
+        // analytic MAC count — no work lost or duplicated by tiling.
+        let cfg = ChipConfig::voltra();
+        for w in [
+            workloads::by_name("lstm").unwrap(),
+            workloads::by_name("pointnext").unwrap(),
+        ] {
+            let r = run_workload(&cfg, &w);
+            let simulated: u64 = r.metrics.layers.iter().map(|l| l.tiles.useful_macs).sum();
+            assert_eq!(simulated, w.total_macs(), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn separated_memory_increases_traffic() {
+        let l = Layer::new(
+            "big",
+            LayerKind::Gemm {
+                m: 512,
+                k: 768,
+                n: 3072,
+            },
+        );
+        let mut c1 = TileCache::new();
+        let mut c2 = TileCache::new();
+        let shared = run_layer(&ChipConfig::voltra(), &l, &mut c1);
+        let sep = run_layer(&ChipConfig::separated_memory(), &l, &mut c2);
+        assert!(
+            sep.dma_bytes >= shared.dma_bytes,
+            "separated {} vs shared {}",
+            sep.dma_bytes,
+            shared.dma_bytes
+        );
+    }
+
+    #[test]
+    fn k_round_bookkeeping_conserves_work() {
+        // Force K tiling with a huge K and check MAC conservation.
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new(
+            "deep",
+            LayerKind::Gemm {
+                m: 256,
+                k: 8192,
+                n: 256,
+            },
+        );
+        let mut cache = TileCache::new();
+        let lm = run_layer(&cfg, &l, &mut cache);
+        assert_eq!(lm.tiles.useful_macs, 256u64 * 8192 * 256);
+    }
+
+    #[test]
+    fn conv_layer_charges_reshuffle() {
+        let cfg = ChipConfig::voltra();
+        let conv = Layer::new(
+            "c",
+            LayerKind::Conv2d {
+                h: 56,
+                w: 56,
+                cin: 64,
+                cout: 64,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+            },
+        );
+        let fc = Layer::new("fc", LayerKind::Gemm { m: 3136, k: 576, n: 64 });
+        let mut c1 = TileCache::new();
+        let mut c2 = TileCache::new();
+        let lc = run_layer(&cfg, &conv, &mut c1);
+        let lf = run_layer(&cfg, &fc, &mut c2);
+        assert!(lc.aux_cycles > lf.aux_cycles);
+    }
+}

@@ -1,0 +1,175 @@
+//! A minimal inference server on top of the runtime: the coordinator's
+//! "leader" role serving batched GEMM requests over TCP.
+//!
+//! Wire protocol (line-oriented, one request per line):
+//!     GEMM <m> <k> <n> <seed>\n
+//! Response:
+//!     OK checksum=<u64> us=<micros> sim_cycles=<u64> sim_us=<f64>\n
+//! The server executes the request's numerics on the PJRT runtime
+//! (deterministic operands from the seed) and, in parallel, reports what
+//! the chip model says the same GEMM would cost on silicon.
+//!
+//! Substrate note: tokio is not vendored in the build image and the
+//! PJRT handles are not `Send`, so the server is a single-threaded
+//! std::net accept loop that owns the artifact library — connections are
+//! served in order (the heavy lifting is inside PJRT anyway); clients
+//! run on their own threads.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ChipConfig;
+use crate::coordinator::{run_layer, TileCache};
+use crate::runtime::{gemm_tiled, ArtifactLib, MatI32};
+use crate::workloads::layer::{Layer, LayerKind};
+
+/// Deterministic operand generator (SplitMix64 -> int8 range).
+fn gen_mat(seed: u64, rows: usize, cols: usize) -> MatI32 {
+    let mut s = seed;
+    MatI32::from_fn(rows, cols, |_, _| {
+        s = s.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        ((z ^ (z >> 31)) % 255) as i32 - 127
+    })
+}
+
+/// One request's results.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmResponse {
+    pub checksum: u64,
+    pub wall_us: u128,
+    pub sim_cycles: u64,
+    pub sim_us: f64,
+}
+
+/// Execute one GEMM request: real numerics on PJRT + chip-model timing.
+pub fn serve_gemm(
+    lib: &mut ArtifactLib,
+    cfg: &ChipConfig,
+    cache: &mut TileCache,
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Result<GemmResponse> {
+    if m == 0 || k == 0 || n == 0 || m * k + k * n > 64 << 20 {
+        bail!("unreasonable GEMM size {m}x{k}x{n}");
+    }
+    let x = gen_mat(seed, m, k);
+    let w = gen_mat(seed ^ 0xABCD_EF01, k, n);
+    let p = MatI32::zeros(m, n);
+    let t0 = Instant::now();
+    let (q, _acc) = gemm_tiled(lib, &x, &w, &p, 0.002)?;
+    let wall_us = t0.elapsed().as_micros();
+    let checksum = q
+        .data
+        .iter()
+        .fold(0u64, |h, &v| h.wrapping_mul(31).wrapping_add(v as u8 as u64));
+
+    // What would the chip cost? (memoized cycle model)
+    let layer = Layer::new(
+        "req",
+        LayerKind::Gemm {
+            m: m as u64,
+            k: k as u64,
+            n: n as u64,
+        },
+    );
+    let lm = run_layer(cfg, &layer, cache);
+    let sim_cycles = lm.latency_cycles;
+    let sim_us = sim_cycles as f64 / cfg.operating_point.freq_mhz;
+    Ok(GemmResponse {
+        checksum,
+        wall_us,
+        sim_cycles,
+        sim_us,
+    })
+}
+
+fn handle(stream: TcpStream, lib: &mut ArtifactLib, cfg: &ChipConfig) -> Result<()> {
+    let mut out = stream.try_clone().context("clone stream")?;
+    let reader = BufReader::new(stream);
+    let mut cache = TileCache::new();
+    for line in reader.lines() {
+        let line = line?;
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts.as_slice() {
+            ["GEMM", m, k, n, seed] => {
+                let (m, k, n, seed) = (
+                    m.parse().unwrap_or(0),
+                    k.parse().unwrap_or(0),
+                    n.parse().unwrap_or(0),
+                    seed.parse().unwrap_or(0),
+                );
+                match serve_gemm(lib, cfg, &mut cache, m, k, n, seed) {
+                    Ok(r) => writeln!(
+                        out,
+                        "OK checksum={} us={} sim_cycles={} sim_us={:.2}",
+                        r.checksum, r.wall_us, r.sim_cycles, r.sim_us
+                    )?,
+                    Err(e) => writeln!(out, "ERR {e}")?,
+                }
+            }
+            ["QUIT"] => break,
+            _ => writeln!(out, "ERR expected: GEMM <m> <k> <n> <seed> | QUIT")?,
+        }
+    }
+    Ok(())
+}
+
+/// Bind the listener (so the caller learns the port before blocking).
+pub fn bind(addr: &str) -> Result<TcpListener> {
+    TcpListener::bind(addr).with_context(|| format!("bind {addr}"))
+}
+
+/// Run the accept loop on the CURRENT thread until `max_conns`
+/// connections have been served (`None` = forever). PJRT handles are not
+/// `Send`, so the artifact library lives here.
+pub fn serve_blocking(
+    mut lib: ArtifactLib,
+    cfg: &ChipConfig,
+    listener: TcpListener,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let _ = handle(stream, &mut lib, cfg);
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_operands_are_deterministic_and_int8() {
+        let a = gen_mat(7, 16, 16);
+        let b = gen_mat(7, 16, 16);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|&v| (-127..=127).contains(&v)));
+        let c = gen_mat(8, 16, 16);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn checksum_is_order_sensitive() {
+        let h = |v: &[i32]| {
+            v.iter()
+                .fold(0u64, |h, &x| h.wrapping_mul(31).wrapping_add(x as u8 as u64))
+        };
+        assert_ne!(h(&[1, 2, 3]), h(&[3, 2, 1]));
+    }
+}

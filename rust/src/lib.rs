@@ -1,0 +1,32 @@
+//! Voltra: a production-quality reproduction of the 16 nm 1.60 TOPS/W
+//! high-utilization DNN accelerator (3D spatial data reuse + efficient
+//! shared-memory access), as a cycle-accurate architectural model plus a
+//! PJRT-based functional runtime.
+//!
+//! Layout (see DESIGN.md):
+//! * [`config`] / [`arch`] — chip parameters straight from the paper.
+//! * [`sim`] — the cycle-accurate chip model (GEMM core, banked shared
+//!   memory, streamers/AGUs/FIFOs, crossbar, SIMD, reshuffler, maxpool,
+//!   Snitch control, DMA).
+//! * [`tiling`] — PDMA shared-memory allocator, separated-buffer baseline
+//!   and the layer-wise tiling engine.
+//! * [`workloads`] — the eight evaluated networks as layer graphs.
+//! * [`power`] — energy/area/DVFS models calibrated to the die.
+//! * [`coordinator`] — runs workloads through tiling + simulation and
+//!   aggregates the paper's metrics.
+//! * [`runtime`] — loads AOT artifacts (HLO text) and executes the real
+//!   numerics through the PJRT CPU client; Python never runs at runtime.
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+pub mod workloads;
+
+pub use config::ChipConfig;
+pub use coordinator::{run_workload, WorkloadReport};
+pub use metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};

@@ -1,0 +1,351 @@
+//! `voltra` CLI: run workloads through the chip model, print the Fig. 5
+//! spec sheet, sweep the shmoo, and smoke-test the PJRT artifact path.
+//!
+//! (Substrate note: the build environment vendors no argument-parsing
+//! crate, so the CLI is hand-rolled — see DESIGN.md.)
+
+use std::collections::HashMap;
+
+use voltra::config::{ChipConfig, OperatingPoint};
+use voltra::coordinator::run_workload;
+use voltra::power::{dvfs, tops_per_watt, Activity, AreaModel, EnergyParams};
+use voltra::runtime::{default_dir, ArtifactLib, MatI32};
+use voltra::workloads;
+use voltra::{arch, metrics};
+
+fn usage() -> ! {
+    eprintln!(
+        "voltra — cycle-accurate model + PJRT runtime of the 16nm Voltra DNN accelerator
+
+USAGE:
+    voltra <COMMAND> [OPTIONS]
+
+COMMANDS:
+    info                         print the chip specification (Fig. 5)
+    run --workload <name>        run one workload through the simulator
+    suite                        run the full Fig. 6 evaluation suite
+    shmoo                        print the Fig. 7a shmoo grid
+    artifacts                    list + smoke-test the AOT artifacts
+    serve --port <p>             serve GEMM requests over TCP (demo)
+    report --workload <name>     per-layer table + energy breakdown
+
+OPTIONS:
+    --workload <name>   mobilenetv2|resnet50|vit|pointnext|lstm|bert|
+                        llama-prefill|llama-decode
+    --config <preset>   voltra|no-prefetch|separated|2d|simd64|full-xbar
+                        (default: voltra)
+    --vdd <volts>       supply voltage (default 1.0)
+    --freq <MHz>        clock (default fmax at --vdd)
+    --artifacts <dir>   artifact directory (default: ./artifacts)"
+    );
+    std::process::exit(2);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(k.to_string(), String::from("true"));
+                i += 1;
+            }
+        } else {
+            eprintln!("unexpected argument {:?}", args[i]);
+            usage();
+        }
+    }
+    m
+}
+
+fn config_from(flags: &HashMap<String, String>) -> ChipConfig {
+    let mut cfg = match flags.get("config").map(String::as_str).unwrap_or("voltra") {
+        "voltra" => ChipConfig::voltra(),
+        "no-prefetch" => ChipConfig::no_prefetch(),
+        "separated" => ChipConfig::separated_memory(),
+        "2d" => ChipConfig::array2d(),
+        "simd64" => ChipConfig::simd64(),
+        "full-xbar" => ChipConfig::full_crossbar(),
+        other => {
+            eprintln!("unknown config preset {other:?}");
+            usage();
+        }
+    };
+    let vdd: f64 = flags
+        .get("vdd")
+        .map(|v| v.parse().expect("--vdd must be a number"))
+        .unwrap_or(1.0);
+    let freq: f64 = flags
+        .get("freq")
+        .map(|v| v.parse().expect("--freq must be a number"))
+        .unwrap_or_else(|| dvfs::fmax_mhz(vdd));
+    let op = OperatingPoint {
+        voltage: vdd,
+        freq_mhz: freq,
+    };
+    if !dvfs::passes(op) {
+        eprintln!(
+            "operating point {}V/{}MHz fails the shmoo (fmax at {}V is {}MHz)",
+            vdd,
+            freq,
+            vdd,
+            dvfs::fmax_mhz(vdd)
+        );
+        std::process::exit(1);
+    }
+    cfg.operating_point = op;
+    cfg
+}
+
+fn cmd_info() {
+    let area = AreaModel::default();
+    println!("Voltra chip specification (Fig. 5)");
+    println!("  Technology                16 nm (modeled)");
+    println!("  Core area                 {:.3} mm^2", area.total(8, true));
+    println!("  Operating voltage         0.6 - 1.0 V");
+    println!("  Frequency                 300 - 800 MHz");
+    println!(
+        "  On-chip memory            {} KB data + {} KB instr",
+        arch::DATA_MEM_BYTES / 1024,
+        arch::INSTR_MEM_BYTES / 1024
+    );
+    println!("  MACs                      {} (8 x 8 x 8)", arch::MACS);
+    println!("  Peak throughput           {:.2} TOPS (INT8)", arch::PEAK_TOPS);
+    println!(
+        "  Peak area efficiency      {:.2} TOPS/mm^2",
+        arch::PEAK_TOPS / area.total(8, true)
+    );
+}
+
+fn report_line(cfg: &ChipConfig, w: &workloads::Workload) {
+    let r = run_workload(cfg, w);
+    let m = &r.metrics;
+    let p = EnergyParams::default();
+    let e = voltra::power::energy::workload_energy_j(&p, m, &Activity::default(), cfg.operating_point);
+    let t_s = m.total_latency_cycles() as f64 / (cfg.operating_point.freq_mhz * 1e6);
+    println!(
+        "{:<22} spatial {:>6.2}%  temporal {:>6.2}%  latency {:>12} cyc  {:>9.3} ms  {:>9.3} mJ  ({} unique tiles / {} dispatched)",
+        m.name,
+        100.0 * m.spatial_utilization(),
+        100.0 * m.temporal_utilization(),
+        m.total_latency_cycles(),
+        t_s * 1e3,
+        e * 1e3,
+        r.unique_tiles,
+        r.dispatched_tiles,
+    );
+}
+
+fn cmd_report(cfg: &ChipConfig, name: &str) {
+    let Some(w) = workloads::by_name(name) else {
+        eprintln!("unknown workload {name:?}");
+        usage();
+    };
+    let r = run_workload(cfg, &w);
+    let m = &r.metrics;
+    println!(
+        "{:<16} {:>9} {:>9} {:>12} {:>12} {:>12} {:>10}",
+        "layer", "spatial", "temporal", "compute cyc", "dma cyc", "latency", "KB moved"
+    );
+    for l in &m.layers {
+        if l.macs == 0 {
+            continue;
+        }
+        println!(
+            "{:<16} {:>8.1}% {:>8.1}% {:>12} {:>12} {:>12} {:>10}",
+            if l.name.len() > 16 { &l.name[..16] } else { &l.name },
+            100.0 * l.tiles.spatial_utilization(),
+            100.0 * l.tiles.temporal_utilization(),
+            l.tiles.total_cycles,
+            l.dma_cycles,
+            l.latency_cycles,
+            l.dma_bytes / 1024,
+        );
+    }
+    let p = EnergyParams::default();
+    let act = Activity::default();
+    let b = voltra::power::energy_breakdown(&p, m, &act, cfg.operating_point);
+    let tot = b.total();
+    println!("
+energy breakdown ({:.3} mJ total @{:.1}V/{:.0}MHz):",
+        tot * 1e3, cfg.operating_point.voltage, cfg.operating_point.freq_mhz);
+    for (name, j) in [
+        ("MAC array (active)", b.mac_j),
+        ("MAC array (idle lanes)", b.idle_j),
+        ("shared memory + crossbar", b.memory_j),
+        ("streamer FIFOs", b.fifo_j),
+        ("quant SIMD", b.simd_j),
+        ("control (Snitch + loops)", b.ctrl_j),
+        ("leakage", b.leak_j),
+        ("off-chip DMA", b.dma_j),
+    ] {
+        let pct = 100.0 * j / tot;
+        let bar = "#".repeat((pct / 2.0).round() as usize);
+        println!("  {name:<26} {:>7.3} mJ {pct:>5.1}%  {bar}", j * 1e3);
+    }
+}
+
+fn cmd_run(cfg: &ChipConfig, name: &str) {
+    let Some(w) = workloads::by_name(name) else {
+        eprintln!("unknown workload {name:?}");
+        usage();
+    };
+    report_line(cfg, &w);
+}
+
+fn cmd_suite(cfg: &ChipConfig) {
+    let mut spatial = Vec::new();
+    let mut temporal = Vec::new();
+    for w in workloads::evaluation_suite() {
+        let r = run_workload(cfg, &w);
+        spatial.push(r.metrics.spatial_utilization());
+        temporal.push(r.metrics.temporal_utilization());
+        report_line(cfg, &w);
+    }
+    println!(
+        "{:<22} spatial {:>6.2}%  temporal {:>6.2}%  (geomean)",
+        "geomean",
+        100.0 * metrics::geomean(&spatial),
+        100.0 * metrics::geomean(&temporal)
+    );
+}
+
+fn cmd_shmoo() {
+    println!("shmoo (Fig. 7a): rows = freq MHz, cols = VDD; o = pass, . = fail");
+    let mut freqs: Vec<f64> = (0..=12).map(|i| 250.0 + 50.0 * i as f64).collect();
+    freqs.reverse();
+    let volts: Vec<f64> = (0..=9).map(|i| 0.55 + 0.05 * i as f64).collect();
+    print!("{:>6} ", "");
+    for v in &volts {
+        print!("{v:>6.2}");
+    }
+    println!();
+    for f in freqs {
+        print!("{f:>6} ");
+        for &v in &volts {
+            let ok = dvfs::passes(OperatingPoint {
+                voltage: (v * 100.0).round() / 100.0,
+                freq_mhz: f,
+            });
+            print!("{:>6}", if ok { "o" } else { "." });
+        }
+        println!();
+    }
+    let p = EnergyParams::default();
+    let cfg = ChipConfig::voltra();
+    let t = voltra::sim::simulate_tile(&cfg, &voltra::sim::TileSpec::simple(96, 96, 96));
+    let eff = tops_per_watt(&p, &t, &Activity::default(), OperatingPoint::efficiency());
+    println!("peak system energy efficiency @0.6V/300MHz: {eff:.2} TOPS/W");
+}
+
+fn cmd_artifacts(dir: &str) {
+    let mut lib = match ArtifactLib::load(dir) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("artifacts in {dir}:");
+    for n in lib.names() {
+        let m = &lib.meta[n];
+        println!(
+            "  {:<12} {} inputs, {} outputs",
+            n,
+            m.inputs.len(),
+            m.outputs.len()
+        );
+    }
+    // Smoke: run a 96x96x96 GEMM through the tiled executor vs host ref.
+    let x = MatI32::from_fn(96, 96, |r, c| ((r * 7 + c * 13) % 255) as i32 - 127);
+    let w = MatI32::from_fn(96, 96, |r, c| ((r * 11 + c * 3) % 255) as i32 - 127);
+    let p = MatI32::zeros(96, 96);
+    match voltra::runtime::gemm_tiled(&mut lib, &x, &w, &p, 0.001) {
+        Ok((_q, acc)) => {
+            let expect = voltra::runtime::gemm_ref(&x, &w, &p);
+            assert_eq!(acc, expect, "PJRT result mismatch vs host reference");
+            println!("smoke test: 96^3 tiled GEMM on PJRT matches host reference ✓");
+        }
+        Err(e) => {
+            eprintln!("smoke test failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "run" => {
+            let cfg = config_from(&flags);
+            let Some(w) = flags.get("workload") else {
+                eprintln!("run requires --workload");
+                usage();
+            };
+            cmd_run(&cfg, w);
+        }
+        "suite" => {
+            let cfg = config_from(&flags);
+            cmd_suite(&cfg);
+        }
+        "shmoo" => cmd_shmoo(),
+        "artifacts" => {
+            let dir = flags
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| default_dir().display().to_string());
+            cmd_artifacts(&dir);
+        }
+        "report" => {
+            let cfg = config_from(&flags);
+            let Some(w) = flags.get("workload") else {
+                eprintln!("report requires --workload");
+                usage();
+            };
+            cmd_report(&cfg, w);
+        }
+        "serve" => {
+            let dir = flags
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| default_dir().display().to_string());
+            let port = flags
+                .get("port")
+                .map(|p| p.parse::<u16>().expect("--port"))
+                .unwrap_or(0);
+            let lib = match ArtifactLib::load(&dir) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("failed to load artifacts: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            let cfg = config_from(&flags);
+            let listener =
+                match voltra::coordinator::server::bind(&format!("127.0.0.1:{port}")) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        eprintln!("serve failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                };
+            println!(
+                "voltra serving on {} — protocol: GEMM <m> <k> <n> <seed>",
+                listener.local_addr().unwrap()
+            );
+            if let Err(e) =
+                voltra::coordinator::server::serve_blocking(lib, &cfg, listener, None)
+            {
+                eprintln!("serve failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        _ => usage(),
+    }
+}

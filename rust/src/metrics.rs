@@ -1,0 +1,222 @@
+//! Metric accounting: the quantities Fig. 6 / Fig. 7 report.
+//!
+//! * **Spatial utilization** — MACs doing useful work / (512 x active
+//!   cycles); degraded by workload-vs-array dimension mismatch.
+//! * **Temporal utilization** — cycles the array fires / total cycles of
+//!   the tiled layer block; degraded by bank conflicts & memory latency.
+//! * **Total latency** — compute + off-chip DMA for the whole workload.
+//!
+//! All counters are accumulated bottom-up: `TileMetrics` (one simulated
+//! tile) -> `LayerMetrics` -> `WorkloadMetrics`.
+
+/// Activity counters for one simulated GEMM tile.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TileMetrics {
+    /// Cycles from tile start to last output write (on-chip only).
+    pub total_cycles: u64,
+    /// Cycles in which the spatial array fired.
+    pub active_cycles: u64,
+    /// Useful MAC operations performed (excludes padding lanes).
+    pub useful_macs: u64,
+    /// MAC slots offered = macs_per_array x active_cycles.
+    pub offered_macs: u64,
+    /// Shared-memory bank read/write word accesses.
+    pub bank_reads: u64,
+    pub bank_writes: u64,
+    /// Requests that lost bank arbitration and were retried.
+    pub bank_conflicts: u64,
+    /// Cycles the array stalled waiting on operands.
+    pub stall_cycles: u64,
+    /// Cycles the SIMD quantizer was busy.
+    pub simd_cycles: u64,
+    /// FIFO push+pop events (energy accounting).
+    pub fifo_events: u64,
+}
+
+impl TileMetrics {
+    pub fn temporal_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.active_cycles as f64 / self.total_cycles as f64
+    }
+
+    pub fn spatial_utilization(&self) -> f64 {
+        if self.offered_macs == 0 {
+            return 0.0;
+        }
+        self.useful_macs as f64 / self.offered_macs as f64
+    }
+
+    /// Accumulate another tile executed `count` times (tile memoization).
+    pub fn add_scaled(&mut self, other: &TileMetrics, count: u64) {
+        self.total_cycles += other.total_cycles * count;
+        self.active_cycles += other.active_cycles * count;
+        self.useful_macs += other.useful_macs * count;
+        self.offered_macs += other.offered_macs * count;
+        self.bank_reads += other.bank_reads * count;
+        self.bank_writes += other.bank_writes * count;
+        self.bank_conflicts += other.bank_conflicts * count;
+        self.stall_cycles += other.stall_cycles * count;
+        self.simd_cycles += other.simd_cycles * count;
+        self.fifo_events += other.fifo_events * count;
+    }
+}
+
+/// Aggregated metrics for one network layer (all its tiles + DMA).
+#[derive(Clone, Debug, Default)]
+pub struct LayerMetrics {
+    pub name: String,
+    pub tiles: TileMetrics,
+    /// Off-chip bytes moved for this layer (in + out).
+    pub dma_bytes: u64,
+    /// DMA cycles (bandwidth + burst overhead), before overlap.
+    pub dma_cycles: u64,
+    /// Layer latency after compute/DMA overlap.
+    pub latency_cycles: u64,
+    /// Reshuffler / maxpool / auxiliary cycles.
+    pub aux_cycles: u64,
+    /// On-chip memory footprint of the chosen tiling (bytes).
+    pub tile_footprint_bytes: u64,
+    /// Useful MACs (== tiles.useful_macs, kept for convenience).
+    pub macs: u64,
+}
+
+/// Whole-workload aggregation (one bar of Fig. 6).
+#[derive(Clone, Debug, Default)]
+pub struct WorkloadMetrics {
+    pub name: String,
+    pub layers: Vec<LayerMetrics>,
+}
+
+impl WorkloadMetrics {
+    pub fn total_compute_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.tiles.total_cycles + l.aux_cycles).sum()
+    }
+
+    pub fn total_dma_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.dma_cycles).sum()
+    }
+
+    pub fn total_dma_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.dma_bytes).sum()
+    }
+
+    /// End-to-end latency including off-chip movement (Fig. 6c metric).
+    pub fn total_latency_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.latency_cycles).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// MAC-weighted mean of per-layer spatial utilization (the Fig. 6a
+    /// metric: each tiled layer block's array fill, weighted by how much
+    /// work the layer contributes).
+    pub fn spatial_utilization(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for l in &self.layers {
+            if l.tiles.offered_macs == 0 {
+                continue;
+            }
+            let u = l.tiles.useful_macs as f64 / l.tiles.offered_macs as f64;
+            num += l.macs as f64 * u;
+            den += l.macs as f64;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Aggregate fill ratio (useful / offered MAC slots) — the harsher
+    /// cycle-weighted alternative to [`Self::spatial_utilization`].
+    pub fn spatial_utilization_offered(&self) -> f64 {
+        let useful: u64 = self.layers.iter().map(|l| l.tiles.useful_macs).sum();
+        let offered: u64 = self.layers.iter().map(|l| l.tiles.offered_macs).sum();
+        if offered == 0 {
+            0.0
+        } else {
+            useful as f64 / offered as f64
+        }
+    }
+
+    /// Cycle-weighted temporal utilization (the Fig. 6b metric).
+    pub fn temporal_utilization(&self) -> f64 {
+        let active: u64 = self.layers.iter().map(|l| l.tiles.active_cycles).sum();
+        let total: u64 = self.layers.iter().map(|l| l.tiles.total_cycles).sum();
+        if total == 0 {
+            0.0
+        } else {
+            active as f64 / total as f64
+        }
+    }
+
+    pub fn bank_conflicts(&self) -> u64 {
+        self.layers.iter().map(|l| l.tiles.bank_conflicts).sum()
+    }
+}
+
+/// Geometric mean helper used by the Fig. 6 "geomean" bars.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_ratios() {
+        let t = TileMetrics {
+            total_cycles: 100,
+            active_cycles: 80,
+            useful_macs: 512 * 40,
+            offered_macs: 512 * 80,
+            ..Default::default()
+        };
+        assert!((t.temporal_utilization() - 0.8).abs() < 1e-12);
+        assert!((t.spatial_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_scaled_multiplies() {
+        let t = TileMetrics {
+            total_cycles: 10,
+            active_cycles: 8,
+            useful_macs: 100,
+            offered_macs: 200,
+            bank_reads: 5,
+            bank_writes: 3,
+            bank_conflicts: 1,
+            stall_cycles: 2,
+            simd_cycles: 4,
+            fifo_events: 7,
+        };
+        let mut acc = TileMetrics::default();
+        acc.add_scaled(&t, 3);
+        assert_eq!(acc.total_cycles, 30);
+        assert_eq!(acc.fifo_events, 21);
+    }
+
+    #[test]
+    fn geomean_of_equal_values() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let w = WorkloadMetrics::default();
+        assert_eq!(w.spatial_utilization(), 0.0);
+        assert_eq!(w.temporal_utilization(), 0.0);
+        assert_eq!(w.total_latency_cycles(), 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Area model: the 0.654 mm^2 die budget (Fig. 5) split across modules,
+//! with the two time-multiplexing scaling laws of Sec. II-D:
+//!   * SIMD area(lanes): 64 lanes cost 4.92x the 8-lane unit;
+//!   * crossbar area ~ ports^1.3: 32 ports cost 1.46x the 24-port
+//!     time-multiplexed design.
+
+use crate::sim::crossbar::crossbar_ports;
+
+/// Fixed module areas (mm^2) for the fabricated configuration
+/// (8-lane SIMD, 24-port crossbar). Sums to the published core area.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    pub gemm_array: f64,
+    pub shared_mem: f64,
+    pub streamers: f64,
+    pub reshuffler: f64,
+    pub maxpool: f64,
+    pub snitch: f64,
+    pub dma: f64,
+    /// SIMD per-lane slope / fixed offset: area(n) = a*n + b with
+    /// area(64) = 4.92 * area(8).
+    pub simd_lane_mm2: f64,
+    pub simd_fixed_mm2: f64,
+    /// Crossbar area at the 24-port reference and its port exponent.
+    pub xbar_ref_mm2: f64,
+    pub xbar_exp: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        // SIMD: solve a*64+b = 4.92*(a*8+b)  =>  b = (64-8*4.92)a/3.92
+        //   = 6.2857a; pick area(8) = 0.0080 mm^2 => a = 0.000560.
+        let a = 0.008 / (8.0 + 6.2857);
+        AreaModel {
+            gemm_array: 0.300,
+            shared_mem: 0.200,
+            streamers: 0.050,
+            reshuffler: 0.010,
+            maxpool: 0.004,
+            snitch: 0.030,
+            dma: 0.015,
+            simd_lane_mm2: a,
+            simd_fixed_mm2: 6.2857 * a,
+            xbar_ref_mm2: 0.037,
+            xbar_exp: 1.3,
+        }
+    }
+}
+
+impl AreaModel {
+    pub fn simd_area(&self, lanes: usize) -> f64 {
+        self.simd_lane_mm2 * lanes as f64 + self.simd_fixed_mm2
+    }
+
+    pub fn crossbar_area(&self, tmux_psum_output: bool) -> f64 {
+        let p = crossbar_ports(tmux_psum_output) as f64;
+        let pref = crossbar_ports(true) as f64;
+        self.xbar_ref_mm2 * (p / pref).powf(self.xbar_exp)
+    }
+
+    /// Total core area for a configuration.
+    pub fn total(&self, simd_lanes: usize, tmux_psum_output: bool) -> f64 {
+        self.gemm_array
+            + self.shared_mem
+            + self.streamers
+            + self.reshuffler
+            + self.maxpool
+            + self.snitch
+            + self.dma
+            + self.simd_area(simd_lanes)
+            + self.crossbar_area(tmux_psum_output)
+    }
+
+    /// Area efficiency (TOPS/mm^2) at peak throughput `tops`.
+    pub fn area_efficiency(&self, tops: f64, simd_lanes: usize, tmux: bool) -> f64 {
+        tops / self.total(simd_lanes, tmux)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{CORE_AREA_MM2, PEAK_TOPS};
+
+    #[test]
+    fn fabricated_config_matches_die_area() {
+        let a = AreaModel::default();
+        let total = a.total(8, true);
+        assert!(
+            (total - CORE_AREA_MM2).abs() < 0.01,
+            "module split must sum to 0.654 mm^2, got {total:.3}"
+        );
+    }
+
+    #[test]
+    fn simd_scaling_is_4_92x() {
+        let a = AreaModel::default();
+        let ratio = a.simd_area(64) / a.simd_area(8);
+        assert!((ratio - 4.92).abs() < 0.01, "got {ratio:.3}");
+    }
+
+    #[test]
+    fn crossbar_scaling_is_1_46x() {
+        let a = AreaModel::default();
+        let ratio = a.crossbar_area(false) / a.crossbar_area(true);
+        assert!((ratio - 1.46).abs() < 0.02, "got {ratio:.3}");
+    }
+
+    #[test]
+    fn area_efficiency_matches_table1() {
+        let a = AreaModel::default();
+        let ae = a.area_efficiency(PEAK_TOPS, 8, true);
+        assert!((ae - 1.25).abs() < 0.03, "got {ae:.3} TOPS/mm^2");
+    }
+
+    #[test]
+    fn ablations_grow_the_die() {
+        let a = AreaModel::default();
+        assert!(a.total(64, true) > a.total(8, true));
+        assert!(a.total(8, false) > a.total(8, true));
+    }
+}

@@ -1,0 +1,113 @@
+//! DVFS / shmoo model (Fig. 7a): which (voltage, frequency) points the
+//! die passes at, and the voltage curve of the maximum frequency.
+//!
+//! Published anchors: 0.6 V / 300 MHz (min) and 1.0 V / 800 MHz (max).
+//! Between them we use the near-linear fmax(V) a 16 nm FinFET logic
+//! corner shows over this range.
+
+use crate::config::OperatingPoint;
+
+/// Voltage anchors of the measured curve (V, fmax MHz).
+pub const FMAX_TABLE: [(f64, f64); 9] = [
+    (0.60, 300.0),
+    (0.65, 380.0),
+    (0.70, 450.0),
+    (0.75, 525.0),
+    (0.80, 600.0),
+    (0.85, 660.0),
+    (0.90, 710.0),
+    (0.95, 760.0),
+    (1.00, 800.0),
+];
+
+/// Maximum passing frequency at `v` volts (linear interpolation).
+pub fn fmax_mhz(v: f64) -> f64 {
+    let t = &FMAX_TABLE;
+    if v <= t[0].0 {
+        return if v < t[0].0 - 1e-9 { 0.0 } else { t[0].1 };
+    }
+    if v >= t[t.len() - 1].0 {
+        return t[t.len() - 1].1;
+    }
+    for w in t.windows(2) {
+        let (v0, f0) = w[0];
+        let (v1, f1) = w[1];
+        if v <= v1 {
+            return f0 + (f1 - f0) * (v - v0) / (v1 - v0);
+        }
+    }
+    unreachable!()
+}
+
+/// Does the die pass at this operating point? (the shmoo's green cells)
+pub fn passes(op: OperatingPoint) -> bool {
+    op.voltage >= 0.6 - 1e-9 && op.voltage <= 1.0 + 1e-9 && op.freq_mhz <= fmax_mhz(op.voltage) + 1e-9
+}
+
+/// The full shmoo grid (Fig. 7a): voltages x frequencies -> pass/fail.
+pub fn shmoo_grid() -> Vec<(f64, f64, bool)> {
+    let mut grid = Vec::new();
+    let mut v: f64 = 0.55;
+    while v <= 1.001 {
+        let mut f = 250.0;
+        while f <= 850.0 {
+            grid.push((
+                (v * 100.0).round() / 100.0,
+                f,
+                passes(OperatingPoint {
+                    voltage: (v * 100.0).round() / 100.0,
+                    freq_mhz: f,
+                }),
+            ));
+            f += 50.0;
+        }
+        v += 0.05;
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_match_fig5() {
+        assert_eq!(fmax_mhz(0.6), 300.0);
+        assert_eq!(fmax_mhz(1.0), 800.0);
+    }
+
+    #[test]
+    fn fmax_is_monotonic() {
+        let mut prev = 0.0;
+        let mut v = 0.6;
+        while v <= 1.0 {
+            let f = fmax_mhz(v);
+            assert!(f >= prev);
+            prev = f;
+            v += 0.01;
+        }
+    }
+
+    #[test]
+    fn published_points_pass() {
+        assert!(passes(OperatingPoint::efficiency()));
+        assert!(passes(OperatingPoint::performance()));
+        // 800 MHz at 0.6 V must fail.
+        assert!(!passes(OperatingPoint {
+            voltage: 0.6,
+            freq_mhz: 800.0
+        }));
+        // Below 0.6 V: out of the operating range.
+        assert!(!passes(OperatingPoint {
+            voltage: 0.55,
+            freq_mhz: 300.0
+        }));
+    }
+
+    #[test]
+    fn shmoo_grid_has_pass_and_fail_regions() {
+        let g = shmoo_grid();
+        let pass = g.iter().filter(|(_, _, p)| *p).count();
+        assert!(pass > 10 && pass < g.len());
+    }
+}

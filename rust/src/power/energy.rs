@@ -1,0 +1,352 @@
+//! Activity-based energy model, calibrated to the published silicon
+//! measurements (Fig. 5 / Fig. 7b):
+//!   * 1.60 TOPS/W peak system efficiency at 0.6 V / 300 MHz on the
+//!     dense M=N=K=96 GEMM;
+//!   * 171-981 mW power envelope over the 0.6-1.0 V range.
+//!
+//! Per-event energies are specified at VREF = 0.8 V and scaled with an
+//! effective exponent fitted to the measured power range: the published
+//! min/max powers imply dynamic-energy scaling of about V^1.5 across the
+//! range (a mix of pure CV^2 switching, clock tree and short-circuit
+//! components) — see EXPERIMENTS.md §Calibration. Leakage scales ~V^3.
+//!
+//! The *activity counts* come from the cycle simulator; nothing in the
+//! sparsity/matrix-size trends (Fig. 7c/d) is hard-coded.
+
+use crate::config::OperatingPoint;
+use crate::metrics::{TileMetrics, WorkloadMetrics};
+
+/// Reference voltage for the per-event constants.
+pub const VREF: f64 = 0.8;
+/// Effective dynamic-energy voltage exponent (fit, see module docs).
+pub const DYN_EXP: f64 = 1.5;
+
+/// Per-event energies at VREF, picojoules. Tuned once against the
+/// Fig. 7b calibration targets (test `peak_efficiency_matches_paper`).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    /// One INT8 MAC (two ops) in the array, active lane.
+    pub mac_pj: f64,
+    /// An idle (under-filled) MAC lane still clocked, per cycle.
+    pub mac_idle_pj: f64,
+    /// One 64-bit bank access (read or write).
+    pub bank_pj: f64,
+    /// One word through the crossbar.
+    pub xbar_pj: f64,
+    /// One FIFO push or pop.
+    pub fifo_pj: f64,
+    /// One quantization-SIMD result.
+    pub simd_pj: f64,
+    /// Control overhead (Snitch + loop controllers) per cycle.
+    pub ctrl_cycle_pj: f64,
+    /// One off-chip DMA byte (LPDDR-class interface energy).
+    pub dma_byte_pj: f64,
+    /// Leakage power at VREF, milliwatts.
+    pub leak_mw: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            mac_pj: 0.99,
+            mac_idle_pj: 0.075,
+            bank_pj: 20.8,
+            xbar_pj: 3.3,
+            fifo_pj: 0.85,
+            simd_pj: 2.1,
+            ctrl_cycle_pj: 22.6,
+            dma_byte_pj: 15.0,
+            leak_mw: 10.4,
+        }
+    }
+}
+
+/// Datapath activity factors for the sparsity study (Fig. 7c).
+#[derive(Clone, Copy, Debug)]
+pub struct Activity {
+    /// Fraction of weights that are zero (clock-gates the multiplier).
+    pub weight_sparsity: f64,
+    /// Input toggle rate, 1.0 = the dense-random reference stimulus.
+    pub input_toggle: f64,
+}
+
+impl Default for Activity {
+    fn default() -> Self {
+        Activity {
+            weight_sparsity: 0.0,
+            input_toggle: 1.0,
+        }
+    }
+}
+
+fn dyn_scale(v: f64) -> f64 {
+    (v / VREF).powf(DYN_EXP)
+}
+
+fn leak_mw_at(p: &EnergyParams, v: f64) -> f64 {
+    p.leak_mw * (v / VREF).powi(3)
+}
+
+/// Energy (joules) of one tile/layer activity bundle at an operating
+/// point, excluding off-chip DMA (added separately by workload_energy).
+pub fn tile_energy_j(
+    p: &EnergyParams,
+    t: &TileMetrics,
+    act: &Activity,
+    op: OperatingPoint,
+) -> f64 {
+    let s = dyn_scale(op.voltage);
+    // Zero weights gate the multiplier (85% of MAC switching); the
+    // residual 15% is operand latching. Input toggle scales the
+    // remaining datapath switching linearly around the reference.
+    let mac_eff = p.mac_pj
+        * (0.15 + 0.85 * (1.0 - act.weight_sparsity))
+        * (0.30 + 0.70 * act.input_toggle);
+    let idle_macs = t.offered_macs.saturating_sub(t.useful_macs) as f64;
+    let dyn_pj = t.useful_macs as f64 * mac_eff
+        + idle_macs * p.mac_idle_pj
+        + (t.bank_reads + t.bank_writes) as f64 * (p.bank_pj + p.xbar_pj)
+        + t.fifo_events as f64 * p.fifo_pj
+        + t.simd_cycles as f64 * 8.0 * p.simd_pj
+        + t.total_cycles as f64 * p.ctrl_cycle_pj;
+    let leak_j = leak_mw_at(p, op.voltage) * 1e-3 * t.total_cycles as f64
+        / (op.freq_mhz * 1e6);
+    dyn_pj * 1e-12 * s + leak_j
+}
+
+/// Per-module energy decomposition of a workload (the "where do the
+/// joules go" analysis every chip paper runs; Fig. 7c's saturation is
+/// exactly the non-MAC floor visible here).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mac_j: f64,
+    pub idle_j: f64,
+    pub memory_j: f64,
+    pub fifo_j: f64,
+    pub simd_j: f64,
+    pub ctrl_j: f64,
+    pub leak_j: f64,
+    pub dma_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.mac_j
+            + self.idle_j
+            + self.memory_j
+            + self.fifo_j
+            + self.simd_j
+            + self.ctrl_j
+            + self.leak_j
+            + self.dma_j
+    }
+}
+
+/// Decompose a workload's energy by module.
+pub fn energy_breakdown(
+    p: &EnergyParams,
+    w: &WorkloadMetrics,
+    act: &Activity,
+    op: OperatingPoint,
+) -> EnergyBreakdown {
+    let s = dyn_scale(op.voltage);
+    let mac_eff = p.mac_pj
+        * (0.15 + 0.85 * (1.0 - act.weight_sparsity))
+        * (0.30 + 0.70 * act.input_toggle);
+    let mut b = EnergyBreakdown::default();
+    for l in &w.layers {
+        let t = &l.tiles;
+        let idle = t.offered_macs.saturating_sub(t.useful_macs) as f64;
+        b.mac_j += t.useful_macs as f64 * mac_eff * 1e-12 * s;
+        b.idle_j += idle * p.mac_idle_pj * 1e-12 * s;
+        b.memory_j += (t.bank_reads + t.bank_writes) as f64 * (p.bank_pj + p.xbar_pj) * 1e-12 * s;
+        b.fifo_j += t.fifo_events as f64 * p.fifo_pj * 1e-12 * s;
+        b.simd_j += t.simd_cycles as f64 * 8.0 * p.simd_pj * 1e-12 * s;
+        b.ctrl_j += t.total_cycles as f64 * p.ctrl_cycle_pj * 1e-12 * s;
+        b.dma_j += l.dma_bytes as f64 * p.dma_byte_pj * 1e-12 * s;
+        let leak_cycles = l.latency_cycles.max(t.total_cycles);
+        b.leak_j += leak_mw_at(p, op.voltage) * 1e-3 * leak_cycles as f64 / (op.freq_mhz * 1e6);
+    }
+    b
+}
+
+/// Total workload energy (joules) including DMA traffic.
+pub fn workload_energy_j(
+    p: &EnergyParams,
+    w: &WorkloadMetrics,
+    act: &Activity,
+    op: OperatingPoint,
+) -> f64 {
+    let s = dyn_scale(op.voltage);
+    let mut e = 0.0;
+    for l in &w.layers {
+        e += tile_energy_j(p, &l.tiles, act, op);
+        e += l.dma_bytes as f64 * p.dma_byte_pj * 1e-12 * s;
+        // Leakage during the DMA-only portion of the layer.
+        let extra_cycles = l.latency_cycles.saturating_sub(l.tiles.total_cycles);
+        e += leak_mw_at(p, op.voltage) * 1e-3 * extra_cycles as f64 / (op.freq_mhz * 1e6);
+    }
+    e
+}
+
+/// System efficiency in TOPS/W for an activity bundle (2 ops per MAC).
+pub fn tops_per_watt(
+    p: &EnergyParams,
+    t: &TileMetrics,
+    act: &Activity,
+    op: OperatingPoint,
+) -> f64 {
+    let e = tile_energy_j(p, t, act, op);
+    if e <= 0.0 {
+        return 0.0;
+    }
+    // Effective ops: sparsity-gated MACs still count as delivered ops
+    // (the chip reports *effective* efficiency, Fig. 7c).
+    2.0 * t.useful_macs as f64 / e / 1e12
+}
+
+/// Average power in milliwatts while executing `t` at `op`.
+pub fn power_mw(p: &EnergyParams, t: &TileMetrics, act: &Activity, op: OperatingPoint) -> f64 {
+    let e = tile_energy_j(p, t, act, op);
+    let time_s = t.total_cycles as f64 / (op.freq_mhz * 1e6);
+    if time_s <= 0.0 {
+        0.0
+    } else {
+        e / time_s * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::sim::{simulate_tile, TileSpec};
+
+    fn dense96() -> TileMetrics {
+        simulate_tile(&ChipConfig::voltra(), &TileSpec::simple(96, 96, 96))
+    }
+
+    #[test]
+    fn peak_efficiency_matches_paper() {
+        // Fig. 7b: 1.60 TOPS/W at 0.6 V / 300 MHz on dense 96^3 GEMM.
+        let p = EnergyParams::default();
+        let t = dense96();
+        let eff = tops_per_watt(&p, &t, &Activity::default(), OperatingPoint::efficiency());
+        assert!(
+            (eff - 1.60).abs() < 0.12,
+            "expected ~1.60 TOPS/W, got {eff:.3}"
+        );
+    }
+
+    #[test]
+    fn power_envelope_matches_fig5() {
+        let p = EnergyParams::default();
+        let t = dense96();
+        let pmin = power_mw(&p, &t, &Activity::default(), OperatingPoint::efficiency());
+        let pmax = power_mw(&p, &t, &Activity::default(), OperatingPoint::performance());
+        assert!((140.0..230.0).contains(&pmin), "min power {pmin:.0} mW");
+        assert!((800.0..1150.0).contains(&pmax), "max power {pmax:.0} mW");
+    }
+
+    #[test]
+    fn efficiency_falls_with_voltage() {
+        let p = EnergyParams::default();
+        let t = dense96();
+        let a = Activity::default();
+        let e06 = tops_per_watt(&p, &t, &a, OperatingPoint::efficiency());
+        let e08 = tops_per_watt(
+            &p,
+            &t,
+            &a,
+            OperatingPoint {
+                voltage: 0.8,
+                freq_mhz: 600.0,
+            },
+        );
+        let e10 = tops_per_watt(&p, &t, &a, OperatingPoint::performance());
+        assert!(e06 > e08 && e08 > e10, "{e06:.2} > {e08:.2} > {e10:.2}");
+    }
+
+    #[test]
+    fn sparsity_raises_efficiency_but_saturates() {
+        let p = EnergyParams::default();
+        let t = dense96();
+        let op = OperatingPoint::efficiency();
+        let mut prev = 0.0;
+        let mut e0 = 0.0;
+        for s in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let a = Activity {
+                weight_sparsity: s,
+                input_toggle: 1.0,
+            };
+            let e = tops_per_watt(&p, &t, &a, op);
+            assert!(e >= prev, "efficiency must not fall with sparsity");
+            if s == 0.0 {
+                e0 = e;
+            }
+            prev = e;
+        }
+        // Saturation: even fully sparse weights cannot beat the
+        // non-datapath energy floor (memory, control, leakage) — the
+        // total gain stays bounded, as Fig. 7c shows.
+        assert!(prev / e0 > 1.05, "sparsity should help: {:.3}x", prev / e0);
+        assert!(prev / e0 < 2.5, "gain must saturate: {:.3}x", prev / e0);
+    }
+
+    #[test]
+    fn lower_toggle_rate_saves_energy() {
+        let p = EnergyParams::default();
+        let t = dense96();
+        let op = OperatingPoint::efficiency();
+        let dense = tops_per_watt(&p, &t, &Activity::default(), op);
+        let calm = tops_per_watt(
+            &p,
+            &t,
+            &Activity {
+                weight_sparsity: 0.0,
+                input_toggle: 0.25,
+            },
+            op,
+        );
+        assert!(calm > dense);
+    }
+
+    #[test]
+    fn breakdown_components_sum_close_to_total() {
+        use crate::coordinator::run_workload;
+        use crate::workloads::by_name;
+        let cfg = ChipConfig::voltra();
+        let w = by_name("pointnext").unwrap();
+        let m = run_workload(&cfg, &w).metrics;
+        let p = EnergyParams::default();
+        let a = Activity::default();
+        let op = OperatingPoint::efficiency();
+        let b = energy_breakdown(&p, &m, &a, op);
+        let total = workload_energy_j(&p, &m, &a, op);
+        // The breakdown's leakage window differs slightly (max vs sum of
+        // latency/compute), so allow a small tolerance.
+        assert!(
+            (b.total() - total).abs() / total < 0.1,
+            "breakdown {} vs total {}",
+            b.total(),
+            total
+        );
+        // Every component is positive and MACs are not the whole story.
+        assert!(b.mac_j > 0.0 && b.memory_j > 0.0 && b.ctrl_j > 0.0);
+        assert!(b.mac_j / b.total() < 0.9);
+    }
+
+    #[test]
+    fn idle_lanes_cost_less_than_active() {
+        let p = EnergyParams::default();
+        let cfg = ChipConfig::voltra();
+        let full = simulate_tile(&cfg, &TileSpec::simple(64, 64, 64));
+        let ragged = simulate_tile(&cfg, &TileSpec::simple(33, 64, 64));
+        let op = OperatingPoint::efficiency();
+        let a = Activity::default();
+        let e_full = tile_energy_j(&p, &full, &a, op) / full.useful_macs as f64;
+        let e_rag = tile_energy_j(&p, &ragged, &a, op) / ragged.useful_macs as f64;
+        // Ragged tiles pay idle-lane overhead per useful MAC.
+        assert!(e_rag > e_full);
+    }
+}

@@ -1,0 +1,9 @@
+//! Energy, area and DVFS models calibrated to the published silicon
+//! numbers (Fig. 5, Fig. 7, Table I).
+
+pub mod area;
+pub mod dvfs;
+pub mod energy;
+
+pub use area::AreaModel;
+pub use energy::{energy_breakdown, power_mw, tops_per_watt, Activity, EnergyBreakdown, EnergyParams};

@@ -1,0 +1,199 @@
+//! Artifact library: loads the AOT manifest, compiles HLO-text modules
+//! on the PJRT CPU client, and validates call signatures.
+//!
+//! Python lowers once at build time (`make artifacts`); from here on the
+//! request path is pure Rust + PJRT.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::json::{parse, Json};
+
+/// Tensor dtype as declared in the manifest (artifact I/O is i32/f32:
+/// the xla crate's literal API has no i8; int8 values ride in i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    I32,
+    F32,
+}
+
+impl DType {
+    fn from_tag(s: &str) -> Result<Self> {
+        match s {
+            "i32" => Ok(DType::I32),
+            "f32" => Ok(DType::F32),
+            other => bail!("unsupported dtype tag {other:?}"),
+        }
+    }
+}
+
+/// Declared signature of one artifact entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The manifest + lazily compiled executables.
+pub struct ArtifactLib {
+    pub dir: PathBuf,
+    pub meta: HashMap<String, ArtifactMeta>,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("expected array"))?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = DType::from_tag(
+                t.get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("missing dtype"))?,
+            )?;
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl ArtifactLib {
+    /// Load `<dir>/manifest.json` and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != "hlo-text/v1" {
+            bail!("unsupported manifest format {format:?}");
+        }
+        let mut meta = HashMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            meta.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: dir.join(
+                        a.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name}: missing file"))?,
+                    ),
+                    inputs: tensor_specs(a.get("inputs").ok_or_else(|| anyhow!("inputs"))?)?,
+                    outputs: tensor_specs(a.get("outputs").ok_or_else(|| anyhow!("outputs"))?)?,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e}"))?;
+        Ok(ArtifactLib {
+            dir,
+            meta,
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.meta.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .meta
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-UTF-8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", meta.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute `name` with literal inputs; returns the tuple elements.
+    /// Shapes/dtypes are validated against the manifest first.
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let meta = self
+            .meta
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let n = lit.element_count();
+            if n != spec.elements() {
+                bail!(
+                    "{name}: input {i} has {n} elements, manifest says {:?}",
+                    spec.shape
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("{e}"))?;
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                meta.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Default artifact directory: `$VOLTRA_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("VOLTRA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,206 @@
+//! Tiled GEMM execution on the PJRT runtime: the functional twin of the
+//! coordinator's timing model.
+//!
+//! Arbitrary (M, K, N) INT8 GEMMs are executed by dispatching the
+//! `gemm64` artifact tile by tile, chaining partial sums through the
+//! `acc` output exactly like the chip's psum streamer re-injects them.
+//! This is the request path of the end-to-end examples: Rust + PJRT
+//! only, Python never runs.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifacts::ArtifactLib;
+
+/// Default tile edge used by the tiled executor (the gemm64 artifact).
+pub const TILE: usize = 64;
+/// Larger tile used when the operands amortize it (the gemm128 artifact).
+pub const TILE_BIG: usize = 128;
+
+/// Row-major int32 matrix (values in int8 range on int8 paths).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        MatI32 { rows, cols, data }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Copy a `tile x tile` tile starting at (r0, c0), zero-padded.
+    fn tile(&self, r0: usize, c0: usize, tile: usize) -> Vec<i32> {
+        let mut t = vec![0i32; tile * tile];
+        let rmax = (self.rows - r0).min(tile);
+        let cmax = (self.cols - c0).min(tile);
+        for r in 0..rmax {
+            let src = (r0 + r) * self.cols + c0;
+            t[r * tile..r * tile + cmax].copy_from_slice(&self.data[src..src + cmax]);
+        }
+        t
+    }
+
+    /// Write back a tile (cropping the padding).
+    fn set_tile(&mut self, r0: usize, c0: usize, t: &[i32], tile: usize) {
+        let rmax = (self.rows - r0).min(tile);
+        let cmax = (self.cols - c0).min(tile);
+        for r in 0..rmax {
+            let dst = (r0 + r) * self.cols + c0;
+            self.data[dst..dst + cmax].copy_from_slice(&t[r * tile..r * tile + cmax]);
+        }
+    }
+}
+
+fn lit_tile(t: &[i32], tile: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(t).reshape(&[tile as i64, tile as i64])?)
+}
+
+/// `q = requant(psum + x @ w)`, `acc = psum + x @ w` for arbitrary
+/// shapes, executed tile-by-tile on the `gemm64` artifact.
+///
+/// Returns (quantized, accumulator). All int8-path values must be within
+/// [-128, 127]; the kernel truncates to int8 internally.
+pub fn gemm_tiled(
+    lib: &mut ArtifactLib,
+    x: &MatI32,
+    w: &MatI32,
+    psum: &MatI32,
+    scale: f32,
+) -> Result<(MatI32, MatI32)> {
+    if x.cols != w.rows || psum.rows != x.rows || psum.cols != w.cols {
+        bail!(
+            "shape mismatch: x {}x{}, w {}x{}, psum {}x{}",
+            x.rows,
+            x.cols,
+            w.rows,
+            w.cols,
+            psum.rows,
+            psum.cols
+        );
+    }
+    let (m, k, n) = (x.rows, x.cols, w.cols);
+    // §Perf note: a 128-edge artifact (gemm128) was evaluated to cut the
+    // number of PJRT dispatches 4x, but the interpret-lowered Pallas
+    // while-loop costs more per byte at that block size and the padding
+    // waste grows — the 64-edge tile measured fastest end-to-end (see
+    // EXPERIMENTS.md §Perf, iterations 3-4). Kept available for callers
+    // who batch very large aligned GEMMs.
+    let (tile, art) = (TILE, "gemm64");
+    let scale_lit = xla::Literal::vec1(&[scale]);
+    let mut q = MatI32::zeros(m, n);
+    let mut acc_out = MatI32::zeros(m, n);
+
+    let mut mi = 0;
+    while mi < m {
+        let mut ni = 0;
+        while ni < n {
+            // Output-stationary accumulation over K tiles, psum-chained
+            // exactly like the chip.
+            let mut acc = psum.tile(mi, ni, tile);
+            let mut q_tile = vec![0i32; tile * tile];
+            let mut ki = 0;
+            // §Perf iteration 5: an accumulate-only artifact for interior
+            // K-rounds (skipping the requant epilogue) was measured and
+            // REVERTED — the second executable's compile+dispatch overhead
+            // outweighed the saved epilogue at this tile size.
+            while ki < k {
+                let xt = lit_tile(&x.tile(mi, ki, tile), tile)?;
+                let wt = lit_tile(&w.tile(ki, ni, tile), tile)?;
+                let pt = lit_tile(&acc, tile)?;
+                let outs = lib.run(art, &[xt, wt, pt, scale_lit.clone()])?;
+                q_tile = outs[0].to_vec::<i32>()?;
+                acc = outs[1].to_vec::<i32>()?;
+                ki += tile;
+            }
+            q.set_tile(mi, ni, &q_tile, tile);
+            acc_out.set_tile(mi, ni, &acc, tile);
+            ni += tile;
+        }
+        mi += tile;
+    }
+    Ok((q, acc_out))
+}
+
+/// Reference GEMM on the host for verification (int32 exact).
+pub fn gemm_ref(x: &MatI32, w: &MatI32, psum: &MatI32) -> MatI32 {
+    let mut out = MatI32::zeros(x.rows, w.cols);
+    for r in 0..x.rows {
+        for c in 0..w.cols {
+            let mut s = psum.at(r, c) as i64;
+            for i in 0..x.cols {
+                s += x.at(r, i) as i64 * w.at(i, c) as i64;
+            }
+            out.data[r * w.cols + c] = s as i32;
+        }
+    }
+    out
+}
+
+/// Host-side requantization oracle (matches kernels/quant.py + ref.py).
+pub fn requant_ref(acc: &MatI32, scale: f32) -> MatI32 {
+    let mut out = MatI32::zeros(acc.rows, acc.cols);
+    for (o, &a) in out.data.iter_mut().zip(&acc.data) {
+        let v = (a as f32 * scale).round_ties_even();
+        *o = v.clamp(-128.0, 127.0) as i32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_tile_pads_and_crops() {
+        let m = MatI32::from_fn(3, 5, |r, c| (r * 5 + c) as i32);
+        let t = m.tile(0, 0, TILE);
+        assert_eq!(t[0], 0);
+        assert_eq!(t[4], 4);
+        assert_eq!(t[5], 0, "padding must be zero");
+        assert_eq!(t[TILE], 5, "second row starts at stride TILE");
+        let mut back = MatI32::zeros(3, 5);
+        back.set_tile(0, 0, &t, TILE);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn host_gemm_ref_small() {
+        let x = MatI32::from_fn(2, 3, |r, c| (r + c) as i32);
+        let w = MatI32::from_fn(3, 2, |r, c| (r as i32) - (c as i32));
+        let p = MatI32::zeros(2, 2);
+        let out = gemm_ref(&x, &w, &p);
+        // row0 = [0,1,2] dot cols of w.
+        assert_eq!(out.at(0, 0), 0 * 0 + 1 * 1 + 2 * 2);
+        assert_eq!(out.at(0, 1), 0 * -1 + 1 * 0 + 2 * 1);
+    }
+
+    #[test]
+    fn requant_ref_clamps() {
+        let acc = MatI32 {
+            rows: 1,
+            cols: 4,
+            data: vec![1000, -1000, 64, -64],
+        };
+        let q = requant_ref(&acc, 1.0);
+        assert_eq!(q.data, vec![127, -128, 64, -64]);
+    }
+}

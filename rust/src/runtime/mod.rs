@@ -1,0 +1,9 @@
+//! The PJRT runtime: Rust loads the AOT-compiled HLO-text artifacts and
+//! executes the chip's numerics directly — Python is build-time only.
+
+pub mod artifacts;
+pub mod executor;
+pub mod json;
+
+pub use artifacts::{default_dir, ArtifactLib, DType, TensorSpec};
+pub use executor::{gemm_ref, gemm_tiled, requant_ref, MatI32, TILE};

@@ -1,0 +1,199 @@
+//! Multi-dimensional affine Address Generation Unit (Sec. II-B).
+//!
+//! Each flexible data streamer embeds an AGU that walks a programmable
+//! N-deep loop nest and emits `base + Σ idx_d · stride_d` every step.
+//! Voltra instantiates a 6-D AGU in the input streamer (enough for the
+//! implicit-im2col access of any Conv2D: kernel-h, kernel-w, channel
+//! block, output-x, output-y, batch/row block) and a 3-D AGU in the
+//! weight streamer.  The Snitch core programs bounds/strides/base through
+//! CSRs (`sim::snitch`).
+//!
+//! Addresses are in *bank words* (64-bit units) — the granularity at
+//! which the shared memory is accessed.
+
+/// One loop dimension: iterates `bound` times advancing by `stride` words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoopDim {
+    pub bound: u64,
+    pub stride: i64,
+}
+
+/// A programmable affine AGU with up to `MAX_DIMS` nested loops.
+/// Dimension 0 is innermost (fastest varying), matching the chip's CSR
+/// programming order.
+#[derive(Clone, Debug)]
+pub struct AffineAgu {
+    base: u64,
+    dims: Vec<LoopDim>,
+    idx: Vec<u64>,
+    done: bool,
+}
+
+pub const INPUT_AGU_MAX_DIMS: usize = 6;
+pub const WEIGHT_AGU_MAX_DIMS: usize = 3;
+
+impl AffineAgu {
+    /// `dims[0]` is the innermost loop. Empty `dims` yields exactly one
+    /// address (the base) — the degenerate single-access pattern.
+    pub fn new(base: u64, dims: Vec<LoopDim>) -> Self {
+        assert!(
+            dims.iter().all(|d| d.bound > 0),
+            "all loop bounds must be positive"
+        );
+        let n = dims.len();
+        AffineAgu {
+            base,
+            dims,
+            idx: vec![0; n],
+            done: false,
+        }
+    }
+
+    /// Total number of addresses this program emits.
+    pub fn total(&self) -> u64 {
+        self.dims.iter().map(|d| d.bound).product::<u64>().max(1)
+    }
+
+    /// Current address without advancing.
+    pub fn current(&self) -> Option<u64> {
+        if self.done {
+            return None;
+        }
+        let mut a = self.base as i64;
+        for (d, &i) in self.dims.iter().zip(&self.idx) {
+            a += d.stride * i as i64;
+        }
+        debug_assert!(a >= 0, "AGU generated a negative address");
+        Some(a as u64)
+    }
+
+    /// Emit the current address and step the loop nest.
+    pub fn next_addr(&mut self) -> Option<u64> {
+        let a = self.current()?;
+        // Odometer increment, innermost first.
+        let mut carry = true;
+        for (d, i) in self.dims.iter().zip(self.idx.iter_mut()) {
+            if !carry {
+                break;
+            }
+            *i += 1;
+            if *i == d.bound {
+                *i = 0;
+            } else {
+                carry = false;
+            }
+        }
+        if carry {
+            self.done = true;
+        }
+        Some(a)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn reset(&mut self) {
+        for i in &mut self.idx {
+            *i = 0;
+        }
+        self.done = false;
+    }
+
+    /// The 2-D pattern of a row-major matrix tile: `rows` rows of
+    /// `words_per_row` consecutive words separated by `row_stride` words.
+    pub fn matrix_tile(base: u64, rows: u64, words_per_row: u64, row_stride: i64) -> Self {
+        AffineAgu::new(
+            base,
+            vec![
+                LoopDim {
+                    bound: words_per_row,
+                    stride: 1,
+                },
+                LoopDim {
+                    bound: rows,
+                    stride: row_stride,
+                },
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_walk() {
+        let mut a = AffineAgu::new(10, vec![LoopDim { bound: 4, stride: 2 }]);
+        let got: Vec<u64> = std::iter::from_fn(|| a.next_addr()).collect();
+        assert_eq!(got, vec![10, 12, 14, 16]);
+        assert!(a.is_done());
+        assert_eq!(a.next_addr(), None);
+    }
+
+    #[test]
+    fn nested_loops_inner_first() {
+        // 2 rows x 3 words, row stride 10.
+        let mut a = AffineAgu::matrix_tile(0, 2, 3, 10);
+        let got: Vec<u64> = std::iter::from_fn(|| a.next_addr()).collect();
+        assert_eq!(got, vec![0, 1, 2, 10, 11, 12]);
+    }
+
+    #[test]
+    fn total_counts_product() {
+        let a = AffineAgu::new(
+            0,
+            vec![
+                LoopDim { bound: 3, stride: 1 },
+                LoopDim { bound: 5, stride: 7 },
+            ],
+        );
+        assert_eq!(a.total(), 15);
+    }
+
+    #[test]
+    fn degenerate_emits_base_once() {
+        let mut a = AffineAgu::new(42, vec![]);
+        assert_eq!(a.total(), 1);
+        assert_eq!(a.next_addr(), Some(42));
+        assert_eq!(a.next_addr(), None);
+    }
+
+    #[test]
+    fn im2col_6d_pattern() {
+        // A miniature implicit-im2col: 2x2 kernel over a 3x3 single-channel
+        // map (1 word per pixel, row stride 3), output 2x2, stride 1:
+        // 6-D nest degenerates to 4 used dims.
+        let mut a = AffineAgu::new(
+            0,
+            vec![
+                LoopDim { bound: 2, stride: 1 }, // kernel w
+                LoopDim { bound: 2, stride: 3 }, // kernel h
+                LoopDim { bound: 2, stride: 1 }, // out x
+                LoopDim { bound: 2, stride: 3 }, // out y
+            ],
+        );
+        let got: Vec<u64> = std::iter::from_fn(|| a.next_addr()).collect();
+        assert_eq!(got.len(), 16);
+        // First patch: pixels (0,0),(0,1),(1,0),(1,1) -> words 0,1,3,4.
+        assert_eq!(&got[..4], &[0, 1, 3, 4]);
+        // Last patch starts at pixel (1,1) -> word 4.
+        assert_eq!(&got[12..], &[4, 5, 7, 8]);
+    }
+
+    #[test]
+    fn reset_replays_identically() {
+        let mut a = AffineAgu::matrix_tile(5, 3, 2, 4);
+        let first: Vec<u64> = std::iter::from_fn(|| a.next_addr()).collect();
+        a.reset();
+        let second: Vec<u64> = std::iter::from_fn(|| a.next_addr()).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bound_rejected() {
+        let _ = AffineAgu::new(0, vec![LoopDim { bound: 0, stride: 1 }]);
+    }
+}

@@ -1,0 +1,134 @@
+//! The DMA core and off-chip memory model (Sec. II; footnote 1: off-chip
+//! movement is simulated, as the paper itself does with an RTL model).
+//!
+//! Functional: copies bytes between a host-side `Vec<u8>` ("DRAM") and
+//! the on-chip `BankedMemory`. Timing: bandwidth-limited bursts with a
+//! fixed setup latency; transfers optionally overlap compute (double
+//! buffering) when the allocator granted space for two tiles.
+
+use crate::config::ChipConfig;
+use crate::sim::memory::BankedMemory;
+
+/// Timing model for one logical transfer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DmaTransfer {
+    pub bytes: u64,
+    pub bursts: u64,
+    pub cycles: u64,
+}
+
+/// Cycle cost of moving `bytes` off-chip<->on-chip.
+/// Bursts are 1 KiB (a typical AXI-ish max burst for such SoCs).
+pub fn transfer_cost(cfg: &ChipConfig, bytes: u64) -> DmaTransfer {
+    const BURST_BYTES: u64 = 1024;
+    if bytes == 0 {
+        return DmaTransfer::default();
+    }
+    let bursts = bytes.div_ceil(BURST_BYTES);
+    let bw_cycles = (bytes as f64 / cfg.dma_bytes_per_cycle).ceil() as u64;
+    DmaTransfer {
+        bytes,
+        bursts,
+        cycles: bw_cycles + bursts * cfg.dma_burst_latency,
+    }
+}
+
+/// Combine a layer's compute cycles and DMA cycles into latency,
+/// honouring the double-buffering capability (Fig. 6c's "total latency"):
+/// with double buffering the longer of the two pipelines dominates and
+/// the shorter hides; without, they serialize.
+pub fn overlap_latency(compute_cycles: u64, dma_cycles: u64, double_buffered: bool) -> u64 {
+    if double_buffered {
+        compute_cycles.max(dma_cycles)
+            + compute_cycles.min(dma_cycles).min(compute_cycles.max(dma_cycles) / 8)
+    } else {
+        compute_cycles + dma_cycles
+    }
+}
+
+/// The DMA engine: functional copies + accumulated statistics.
+#[derive(Debug, Default)]
+pub struct DmaEngine {
+    pub total_bytes_in: u64,
+    pub total_bytes_out: u64,
+    pub total_cycles: u64,
+}
+
+impl DmaEngine {
+    /// DRAM -> on-chip memory at `word_addr` (64-bit word granularity).
+    pub fn load(
+        &mut self,
+        cfg: &ChipConfig,
+        dram: &[u8],
+        dram_off: usize,
+        chip: &mut BankedMemory,
+        word_addr: u64,
+        bytes: usize,
+    ) -> DmaTransfer {
+        chip.write_bytes(word_addr as usize * 8, &dram[dram_off..dram_off + bytes]);
+        let t = transfer_cost(cfg, bytes as u64);
+        self.total_bytes_in += bytes as u64;
+        self.total_cycles += t.cycles;
+        t
+    }
+
+    /// On-chip memory -> DRAM.
+    pub fn store(
+        &mut self,
+        cfg: &ChipConfig,
+        chip: &BankedMemory,
+        word_addr: u64,
+        dram: &mut [u8],
+        dram_off: usize,
+        bytes: usize,
+    ) -> DmaTransfer {
+        chip.read_bytes(word_addr as usize * 8, &mut dram[dram_off..dram_off + bytes]);
+        let t = transfer_cost(cfg, bytes as u64);
+        self.total_bytes_out += bytes as u64;
+        self.total_cycles += t.cycles;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let cfg = ChipConfig::voltra();
+        let small = transfer_cost(&cfg, 1024);
+        let big = transfer_cost(&cfg, 64 * 1024);
+        assert!(big.cycles > small.cycles * 32);
+        assert_eq!(small.bursts, 1);
+        assert_eq!(big.bursts, 64);
+    }
+
+    #[test]
+    fn zero_transfer_is_free() {
+        let cfg = ChipConfig::voltra();
+        assert_eq!(transfer_cost(&cfg, 0), DmaTransfer::default());
+    }
+
+    #[test]
+    fn overlap_hides_shorter_side() {
+        let l = overlap_latency(1000, 400, true);
+        assert!(l < 1400 && l >= 1000);
+        assert_eq!(overlap_latency(1000, 400, false), 1400);
+    }
+
+    #[test]
+    fn functional_roundtrip() {
+        let cfg = ChipConfig::voltra();
+        let mut chip = BankedMemory::new();
+        let mut dma = DmaEngine::default();
+        let dram: Vec<u8> = (0..256).map(|i| i as u8).collect();
+        dma.load(&cfg, &dram, 0, &mut chip, 4, 256);
+        let mut back = vec![0u8; 256];
+        dma.store(&cfg, &chip, 4, &mut back, 0, 256);
+        assert_eq!(back, dram);
+        assert_eq!(dma.total_bytes_in, 256);
+        assert_eq!(dma.total_bytes_out, 256);
+    }
+}

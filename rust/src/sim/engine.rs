@@ -1,0 +1,518 @@
+//! The cycle-accurate tile engine: one on-chip GEMM tile, cycle by cycle.
+//!
+//! This is the model that produces Fig. 6b's temporal-utilization numbers.
+//! Every cycle:
+//!   1. memory responses arrive (after `mem_latency`) and fill the
+//!      streamers' FIFOs;
+//!   2. the spatial array fires iff every operand FIFO can supply this
+//!      step (and, for a continuation tile, the partial sums have been
+//!      re-injected) — otherwise it stalls;
+//!   3. finished 8x8 output tiles drain through the quantization SIMD
+//!      (`simd_lanes` results per cycle) and the output streamer writes
+//!      words back through the (possibly time-multiplexed) psum/output
+//!      crossbar port;
+//!   4. streamer MICs issue next bank requests — running *ahead* of the
+//!      array when MGDP prefetching is on, or only on demand when it is
+//!      off — and the banks arbitrate.
+//!
+//! With prefetching, the eight-deep FIFOs absorb bank-conflict jitter and
+//! access latency; without it, every conflict and every latency cycle
+//! lands on the array — the "severe bank contention" of Sec. I.
+
+use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
+use crate::metrics::TileMetrics;
+use crate::sim::gemm_core::{block_residue, step_demand};
+use crate::sim::memory::{BankRequest, BankedMemory, Requester};
+
+/// Static description of one tile execution (the memoization key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileSpec {
+    pub tm: u64,
+    pub tk: u64,
+    pub tn: u64,
+    /// Continuation of a K-tiled accumulation: psums stream in first.
+    pub psum_in: bool,
+    /// Not the last K-round: spill int32 psums (bypass quantization).
+    pub spill_out: bool,
+    /// Input operand was reshuffled to the blocked layout (C8HWC8 /
+    /// blocked row-major, Sec. II-E). Raw row-major layouts conflict.
+    pub input_blocked: bool,
+    /// Region base word addresses (from the allocator). Bank alignment
+    /// of these bases decides which accesses collide.
+    pub in_base: u64,
+    pub w_base: u64,
+    pub p_base: u64,
+    pub o_base: u64,
+}
+
+impl TileSpec {
+    /// A standalone tile with the default PDMA-style placement.
+    pub fn simple(tm: u64, tk: u64, tn: u64) -> Self {
+        TileSpec {
+            tm,
+            tk,
+            tn,
+            psum_in: false,
+            spill_out: false,
+            input_blocked: true,
+            in_base: 0,
+            w_base: 8, // next super-bank group
+            p_base: 16,
+            o_base: 24,
+        }
+    }
+}
+
+const MAX_CHANNELS: usize = 8;
+
+/// Per-channel streamer state (input lanes + weight lane). The MIC
+/// pipelines requests: it may have several accesses in flight (the bank
+/// accepts one per cycle), bounded by the FIFO space it reserved.
+#[derive(Clone, Copy, Default)]
+struct Channel {
+    issued: u64,
+    /// Words sitting in the FIFO, not yet consumed.
+    fill: u64,
+    /// In-flight ring: landing cycles of outstanding requests.
+    ready: [u64; 8],
+    rhead: usize,
+    rlen: usize,
+}
+
+impl Channel {
+    fn new() -> Self {
+        Channel {
+            issued: 0,
+            fill: 0,
+            ready: [u64::MAX; 8],
+            rhead: 0,
+            rlen: 0,
+        }
+    }
+
+    fn inflight(&self) -> u64 {
+        self.rlen as u64
+    }
+
+    fn launch(&mut self, lands_at: u64) {
+        debug_assert!(self.rlen < 8);
+        self.ready[(self.rhead + self.rlen) % 8] = lands_at;
+        self.rlen += 1;
+    }
+
+    /// Pop at most one arrival this cycle (the MIC issues <= 1/cycle so
+    /// landings are also <= 1/cycle).
+    fn arrive(&mut self, cycle: u64) -> bool {
+        if self.rlen > 0 && self.ready[self.rhead] == cycle {
+            self.rhead = (self.rhead + 1) % 8;
+            self.rlen -= 1;
+            self.fill += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Simulate one tile on the configured array. Returns activity counters.
+pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+    let demand = step_demand(cfg.array);
+    let macs = cfg.array.macs() as u64;
+    let separate_ports = matches!(cfg.memory, MemoryOrg::Separated { .. });
+
+    let (am, an, ak) = match cfg.array {
+        ArrayGeometry::Spatial3D { m, n, k } => (m as u64, n as u64, k as u64),
+        ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64, 1u64),
+    };
+    let sub_m = spec.tm.div_ceil(am).max(1);
+    let sub_n = spec.tn.div_ceil(an).max(1);
+    let ksteps = spec.tk.div_ceil(ak).max(1);
+    let n_sub = sub_m * sub_n;
+    let total_steps = n_sub * ksteps;
+    let outputs_per_sub = am * an;
+    // Psum words per subtile: int32 accumulators, 2 per 64-bit word.
+    let psum_words_per_sub = (outputs_per_sub * 4).div_ceil(8);
+    // Valid (non-padding) results per subtile and their output bytes
+    // (int8 after quantization, int32 if spilled): residue-aware — the
+    // SIMD and the output streamer only handle real results.
+    let out_bytes_per_result: u64 = if spec.spill_out { 4 } else { 1 };
+    let mut out_total_bytes: u64 = 0;
+    for ti in 0..sub_m {
+        for tj in 0..sub_n {
+            let mr = block_residue(spec.tm, am, ti);
+            let nr = block_residue(spec.tn, an, tj);
+            out_total_bytes += mr * nr * out_bytes_per_result;
+        }
+    }
+
+    let n_in = demand.input_channels.min(MAX_CHANNELS);
+    let n_w_words = demand.weight_words as u64;
+    let fifo_depth = if cfg.prefetch {
+        cfg.stream_fifo_depth as u64
+    } else {
+        1
+    };
+
+    let mut mem =
+        BankedMemory::with_size(crate::arch::DATA_MEM_BYTES, cfg.num_banks);
+    let mut inputs = [Channel::new(); MAX_CHANNELS];
+    let mut weight = Channel::new();
+    // Psum prefetch progress (words delivered / issued).
+    let mut psum_issued: u64 = 0;
+    let mut psum_fill: u64 = 0;
+    let mut psum_pending: u64 = u64::MAX;
+    let psum_total = if spec.psum_in {
+        n_sub * psum_words_per_sub
+    } else {
+        0
+    };
+
+    // SIMD queue (results awaiting quantization) and output byte queue.
+    let mut simd_queue: u64 = 0;
+    let mut out_bytes: u64 = 0;
+    let mut out_written_bytes: u64 = 0;
+
+    let mut fired: u64 = 0;
+    let mut m = TileMetrics::default();
+    let mut cycle: u64 = 0;
+    // Reused request buffer: keep the hot loop allocation-free.
+    let mut reqs: Vec<BankRequest> = Vec::with_capacity(MAX_CHANNELS + 4);
+    let mut req_kind: Vec<u8> = Vec::with_capacity(MAX_CHANNELS + 4);
+
+    let row_stride_words = ksteps; // raw row-major: one K-row per array row
+    let max_cycles = 1_000_000 + total_steps * 64;
+
+    while (fired < total_steps || simd_queue > 0 || out_written_bytes < out_total_bytes)
+        && cycle < max_cycles
+    {
+        // ---- 1. arrivals ------------------------------------------------
+        for ch in inputs.iter_mut().take(n_in) {
+            if ch.arrive(cycle) {
+                m.fifo_events += 1;
+            }
+        }
+        if weight.arrive(cycle) {
+            m.fifo_events += 1;
+        }
+        if psum_pending == cycle {
+            psum_pending = u64::MAX;
+            psum_fill += 1;
+            m.fifo_events += 1;
+        }
+
+        // ---- 2. fire the array ------------------------------------------
+        if fired < total_steps {
+            let sub = fired / ksteps;
+            let ks = fired % ksteps;
+            let ti = sub / sub_n;
+            let tj = sub % sub_n;
+            let inputs_ready = inputs.iter().take(n_in).all(|c| c.fill > 0);
+            let weight_ready = weight.fill > 0;
+            let psum_ready = !spec.psum_in || psum_fill >= (sub + 1) * psum_words_per_sub
+                || psum_fill == psum_total; // degenerate tail
+            // Output registers are double-buffered: a subtile may finish
+            // while the *previous* subtile's results still drain through
+            // the SIMD, but not while two subtiles' worth are pending.
+            let regs_free = ks < ksteps - 1 || simd_queue <= outputs_per_sub;
+            if inputs_ready && weight_ready && psum_ready && regs_free {
+                for ch in inputs.iter_mut().take(n_in) {
+                    ch.fill -= 1;
+                    m.fifo_events += 1;
+                }
+                weight.fill -= 1;
+                m.fifo_events += 1;
+                fired += 1;
+                m.active_cycles += 1;
+                let mr = block_residue(spec.tm, am, ti);
+                let nr = block_residue(spec.tn, an, tj);
+                let kr = block_residue(spec.tk, ak, ks);
+                m.useful_macs += mr * nr * kr;
+                m.offered_macs += macs;
+                // Subtile complete: valid results to the SIMD / spill path.
+                if fired % ksteps == 0 {
+                    let valid = mr * nr;
+                    if spec.spill_out {
+                        out_bytes += valid * 4;
+                    } else {
+                        simd_queue += valid;
+                    }
+                }
+            } else {
+                m.stall_cycles += 1;
+            }
+        }
+
+        // ---- 3. SIMD drain + output write -------------------------------
+        if simd_queue > 0 {
+            let done = simd_queue.min(cfg.simd_lanes as u64);
+            simd_queue -= done;
+            m.simd_cycles += 1;
+            if !spec.spill_out {
+                // Quantized int8 results pack into the output FIFO.
+                out_bytes += done;
+            }
+        }
+
+        // ---- 4. issue requests + arbitration -----------------------------
+        reqs.clear();
+        req_kind.clear();
+        // Input channels (fine-grained 64-bit, Fig. 3a).
+        for (r, ch) in inputs.iter_mut().enumerate().take(n_in) {
+            if ch.issued < total_steps && ch.fill + ch.inflight() < fifo_depth {
+                let demand_ok = cfg.prefetch || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == fired);
+                if demand_ok {
+                    let s = ch.issued;
+                    let sub = s / ksteps;
+                    let ks = s % ksteps;
+                    let ti = sub / sub_n;
+                    let addr = if spec.input_blocked {
+                        spec.in_base + s * n_in as u64 + r as u64
+                    } else {
+                        spec.in_base + (ti * am + r as u64) * row_stride_words + ks
+                    };
+                    reqs.push(BankRequest {
+                        word_addr: addr,
+                        write: false,
+                        requester: Requester::Input(r as u8),
+                        super_bank: false,
+                    });
+                    req_kind.push(r as u8);
+                }
+            }
+        }
+        // Weight channel (coarse-grained 512-bit super bank, Fig. 3b).
+        if weight.issued < total_steps && weight.fill + weight.inflight() < fifo_depth {
+            let demand_ok =
+                cfg.prefetch || (weight.fill == 0 && weight.inflight() == 0 && weight.issued == fired);
+            if demand_ok {
+                let s = weight.issued;
+                let sub = s / ksteps;
+                let ks = s % ksteps;
+                let tj = sub % sub_n;
+                let addr = spec.w_base + (tj * ksteps + ks) * n_w_words;
+                reqs.push(BankRequest {
+                    word_addr: addr,
+                    write: false,
+                    requester: Requester::Weight,
+                    super_bank: demand.weight_super_bank,
+                });
+                req_kind.push(100);
+            }
+        }
+        // Psum read & output write share a crossbar port when tmux'd;
+        // psum has priority (Sec. II-D).
+        let psum_wants = spec.psum_in && psum_issued < psum_total && psum_pending == u64::MAX;
+        // Write a 64-bit word when one is full, or flush the tail once
+        // compute has finished.
+        let drained = fired >= total_steps && simd_queue == 0;
+        let out_wants = out_bytes >= 8 || (drained && out_bytes > 0);
+        let (psum_go, out_go) = if cfg.tmux_psum_output {
+            if psum_wants {
+                (true, false)
+            } else {
+                (false, out_wants)
+            }
+        } else {
+            (psum_wants, out_wants)
+        };
+        if psum_go {
+            reqs.push(BankRequest {
+                word_addr: spec.p_base + psum_issued,
+                write: false,
+                requester: Requester::Psum,
+                super_bank: false,
+            });
+            req_kind.push(101);
+        }
+        if out_go {
+            reqs.push(BankRequest {
+                word_addr: spec.o_base + out_written_bytes / 8,
+                write: true,
+                requester: Requester::Output,
+                super_bank: false,
+            });
+            req_kind.push(102);
+        }
+
+        if separate_ports {
+            // Dedicated per-operand buffers: every request is served by
+            // its own SRAM — no cross-class arbitration (Fig. 1a).
+            for (i, r) in reqs.iter().enumerate() {
+                let kind = req_kind[i];
+                match kind {
+                    0..=99 => {
+                        let ch = &mut inputs[kind as usize];
+                        ch.issued += 1;
+                        ch.launch(cycle + cfg.mem_latency);
+                    }
+                    100 => {
+                        weight.issued += 1;
+                        weight.launch(cycle + cfg.mem_latency);
+                    }
+                    101 => {
+                        psum_issued += 1;
+                        psum_pending = cycle + cfg.mem_latency;
+                    }
+                    102 => {
+                        let chunk = out_bytes.min(8);
+                        out_written_bytes += chunk;
+                        out_bytes -= chunk;
+                        m.bank_writes += 1;
+                    }
+                    _ => unreachable!(),
+                }
+                if !r.write {
+                    m.bank_reads += if r.super_bank { 8 } else { 1 };
+                }
+            }
+        } else {
+            let res = mem.arbitrate(&reqs);
+            m.bank_reads += res.reads;
+            m.bank_writes += res.writes;
+            m.bank_conflicts += res.denied.len() as u64;
+            for &gi in &res.granted {
+                match req_kind[gi] {
+                    r @ 0..=99 => {
+                        let ch = &mut inputs[r as usize];
+                        ch.issued += 1;
+                        ch.launch(cycle + cfg.mem_latency);
+                    }
+                    100 => {
+                        weight.issued += 1;
+                        weight.launch(cycle + cfg.mem_latency);
+                    }
+                    101 => {
+                        psum_issued += 1;
+                        psum_pending = cycle + cfg.mem_latency;
+                    }
+                    102 => {
+                        let chunk = out_bytes.min(8);
+                        out_written_bytes += chunk;
+                        out_bytes -= chunk;
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+
+        cycle += 1;
+    }
+
+    debug_assert!(cycle < max_cycles, "tile simulation did not converge");
+    m.total_cycles = cycle;
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    fn total_useful(tm: u64, tk: u64, tn: u64) -> u64 {
+        tm * tk * tn
+    }
+
+    #[test]
+    fn aligned_tile_counts_exact_macs() {
+        let cfg = ChipConfig::voltra();
+        let spec = TileSpec::simple(64, 64, 64);
+        let m = simulate_tile(&cfg, &spec);
+        assert_eq!(m.useful_macs, total_useful(64, 64, 64));
+        // 64 subtiles x 8 ksteps of firing.
+        assert_eq!(m.active_cycles, 512);
+        assert!(m.total_cycles >= 512);
+    }
+
+    #[test]
+    fn prefetch_beats_demand_fetch() {
+        let spec = TileSpec::simple(64, 256, 64);
+        let with = simulate_tile(&ChipConfig::voltra(), &spec);
+        let without = simulate_tile(&ChipConfig::no_prefetch(), &spec);
+        assert_eq!(with.useful_macs, without.useful_macs);
+        let ru = with.temporal_utilization() / without.temporal_utilization();
+        assert!(
+            ru > 1.5,
+            "MGDP should dominate demand fetching, got ratio {ru:.2} \
+             ({:.3} vs {:.3})",
+            with.temporal_utilization(),
+            without.temporal_utilization()
+        );
+    }
+
+    #[test]
+    fn voltra_reaches_high_temporal_utilization() {
+        let spec = TileSpec::simple(64, 512, 64);
+        let m = simulate_tile(&ChipConfig::voltra(), &spec);
+        let u = m.temporal_utilization();
+        assert!(u > 0.75, "expected >0.75 temporal utilization, got {u:.3}");
+    }
+
+    #[test]
+    fn separated_memory_has_no_conflicts() {
+        let spec = TileSpec::simple(64, 128, 64);
+        let m = simulate_tile(&ChipConfig::separated_memory(), &spec);
+        assert_eq!(m.bank_conflicts, 0);
+        assert!(m.temporal_utilization() > 0.85);
+    }
+
+    #[test]
+    fn ragged_tile_underfills_spatially() {
+        let cfg = ChipConfig::voltra();
+        let m = simulate_tile(&cfg, &TileSpec::simple(6, 64, 64));
+        assert_eq!(m.useful_macs, 6 * 64 * 64);
+        let su = m.spatial_utilization();
+        assert!((su - 0.75).abs() < 1e-9, "6/8 fill expected, got {su}");
+    }
+
+    #[test]
+    fn continuation_tile_reads_psums() {
+        let cfg = ChipConfig::voltra();
+        let mut spec = TileSpec::simple(32, 64, 32);
+        spec.psum_in = true;
+        let m = simulate_tile(&cfg, &spec);
+        // 16 subtiles x 32 psum words must have been read.
+        assert!(m.bank_reads > 16 * 32);
+        assert_eq!(m.useful_macs, 32 * 64 * 32);
+    }
+
+    #[test]
+    fn spill_tile_writes_int32() {
+        let cfg = ChipConfig::voltra();
+        let mut spill = TileSpec::simple(32, 64, 32);
+        spill.spill_out = true;
+        let mut quant = TileSpec::simple(32, 64, 32);
+        quant.spill_out = false;
+        let ms = simulate_tile(&cfg, &spill);
+        let mq = simulate_tile(&cfg, &quant);
+        assert!(
+            ms.bank_writes > mq.bank_writes,
+            "int32 spill ({}) must write more words than int8 ({})",
+            ms.bank_writes,
+            mq.bank_writes
+        );
+    }
+
+    #[test]
+    fn raw_layout_conflicts_more_than_blocked() {
+        let cfg = ChipConfig::no_prefetch();
+        let mut raw = TileSpec::simple(64, 256, 64);
+        raw.input_blocked = false;
+        let blocked = TileSpec::simple(64, 256, 64);
+        let mr = simulate_tile(&cfg, &raw);
+        let mb = simulate_tile(&cfg, &blocked);
+        assert!(
+            mr.bank_conflicts >= mb.bank_conflicts,
+            "row-major input should not conflict less ({} vs {})",
+            mr.bank_conflicts,
+            mb.bank_conflicts
+        );
+    }
+
+    #[test]
+    fn simulation_terminates_on_minimal_tile() {
+        let cfg = ChipConfig::voltra();
+        let m = simulate_tile(&cfg, &TileSpec::simple(1, 1, 1));
+        assert_eq!(m.useful_macs, 1);
+        assert_eq!(m.active_cycles, 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! Fixed-capacity FIFO: the prefetch buffers inside the data streamers.
+//!
+//! The chip inserts eight-deep FIFOs into the input/weight access channels
+//! (MGDP, Sec. II-B) and one-deep FIFOs into the psum/output channels.
+//! The FIFO is the *only* elasticity between the shared memory and the
+//! GEMM core: its depth decides how much bank-conflict jitter can be
+//! hidden.
+
+/// A bounded FIFO with O(1) push/pop, generic over the queued token.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    buf: Vec<Option<T>>,
+    head: usize,
+    len: usize,
+}
+
+impl<T: Clone> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Fifo {
+            buf: vec![None; capacity],
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    /// Space left, in tokens — the MIC prefetches only when this is > 0.
+    pub fn space(&self) -> usize {
+        self.buf.len() - self.len
+    }
+
+    pub fn push(&mut self, v: T) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        let tail = (self.head + self.len) % self.buf.len();
+        self.buf[tail] = Some(v);
+        self.len += 1;
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        let v = self.buf[self.head].take();
+        self.head = (self.head + 1) % self.buf.len();
+        self.len -= 1;
+        v
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.buf[self.head].as_ref()
+    }
+
+    pub fn clear(&mut self) {
+        for s in &mut self.buf {
+            *s = None;
+        }
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_order() {
+        let mut f = Fifo::new(3);
+        assert!(f.push(1) && f.push(2) && f.push(3));
+        assert!(f.is_full());
+        assert!(!f.push(4));
+        assert_eq!(f.pop(), Some(1));
+        assert!(f.push(4));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), Some(4));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn wraps_many_times() {
+        let mut f = Fifo::new(2);
+        for i in 0..100 {
+            assert!(f.push(i));
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn space_accounting() {
+        let mut f = Fifo::new(8);
+        assert_eq!(f.space(), 8);
+        f.push(0u64);
+        f.push(1);
+        assert_eq!(f.space(), 6);
+        f.pop();
+        assert_eq!(f.space(), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u32>::new(0);
+    }
+}

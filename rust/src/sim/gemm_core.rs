@@ -1,0 +1,238 @@
+//! The GEMM core's spatial organisation: Voltra's 8x8x8 3D array and the
+//! conventional 2D baseline, with the dimension-mapping and utilization
+//! arithmetic of Fig. 6a.
+//!
+//! The 3D array (Sec. II-A) unrolls all three GEMM dimensions spatially:
+//! M and N across the 8x8 Dot-ProdU grid, K across the 8-wide dot product
+//! inside each Dot-ProdU. A workload whose dimensions are not multiples
+//! of (8, 8, 8) under-fills the array; the *spatial utilization* is the
+//! fraction of the 512 MACs doing useful work while the array is firing.
+//!
+//! The 2D baseline spends all 512 MACs on M x N (16 x 32) and iterates K
+//! temporally — so it wastes nothing on K but suffers roughly double the
+//! under-fill on skinny M/N (up to 2.0x, Fig. 6a).
+//!
+//! Both geometries may swap the M/N mapping per layer (a free choice for
+//! the hardware loop controller); the model picks the better one, as the
+//! chip's compiler would.
+
+use crate::config::ArrayGeometry;
+
+/// Per-compute-step operand demand of an array geometry, used by the
+/// cycle engine to drive the streamers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepDemand {
+    /// Parallel input channels, each fetching one 64-bit word per step.
+    pub input_channels: usize,
+    /// Weight words per step when fetched through ordinary 64-bit ports.
+    pub weight_words: usize,
+    /// Whether the weight fetch is one 512-bit super-bank access.
+    pub weight_super_bank: bool,
+    /// K elements consumed per compute step.
+    pub k_per_step: usize,
+    /// Output-stationary tile shape held in the array (rows, cols).
+    pub tile_m: usize,
+    pub tile_n: usize,
+}
+
+/// Resolved mapping of a GEMM onto an array geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct Mapping {
+    pub geometry: ArrayGeometry,
+    /// Whether M and N were swapped relative to the workload's (M, N).
+    pub swapped: bool,
+    pub demand: StepDemand,
+}
+
+impl Mapping {
+    /// Choose the better of (M, N) and (N, M) for this geometry.
+    pub fn choose(geometry: ArrayGeometry, m: u64, n: u64) -> Mapping {
+        let direct = spatial_utilization_mapped(geometry, m, n, false);
+        let swapped = spatial_utilization_mapped(geometry, m, n, true);
+        let swap = swapped > direct + 1e-12;
+        Mapping {
+            geometry,
+            swapped: swap,
+            demand: step_demand(geometry),
+        }
+    }
+
+    /// Effective array dims (am, an, ak) after the swap decision.
+    pub fn array_dims(&self) -> (u64, u64, u64) {
+        let (am, an, ak) = match self.geometry {
+            ArrayGeometry::Spatial3D { m, n, k } => (m as u64, n as u64, k as u64),
+            ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64, 1),
+        };
+        if self.swapped {
+            (an, am, ak)
+        } else {
+            (am, an, ak)
+        }
+    }
+}
+
+/// Per-step operand demand for a geometry (INT8 operands, 8-byte words).
+pub fn step_demand(geometry: ArrayGeometry) -> StepDemand {
+    match geometry {
+        ArrayGeometry::Spatial3D { m, n, k } => StepDemand {
+            // One 64-bit word per array row: 8 input channels (Fig. 3a).
+            input_channels: m,
+            // 8 rows x 8 K-elems of weights = 64 B = one super bank
+            // (Fig. 3b).
+            weight_words: k * n / 8,
+            weight_super_bank: true,
+            k_per_step: k,
+            tile_m: m,
+            tile_n: n,
+        },
+        ArrayGeometry::Spatial2D { m, n } => StepDemand {
+            // One K-element per MAC column per cycle: m INT8 values for
+            // the input vector = m/8 words; n values for the weight row.
+            input_channels: (m / 8).max(1),
+            weight_words: (n / 8).max(1),
+            weight_super_bank: false,
+            k_per_step: 1,
+            tile_m: m,
+            tile_n: n,
+        },
+    }
+}
+
+#[inline]
+fn fill(dim: u64, unroll: u64) -> f64 {
+    if dim == 0 {
+        return 0.0;
+    }
+    let rounds = dim.div_ceil(unroll);
+    dim as f64 / (rounds * unroll) as f64
+}
+
+fn spatial_utilization_mapped(geometry: ArrayGeometry, m: u64, n: u64, swap: bool) -> f64 {
+    let (m, n) = if swap { (n, m) } else { (m, n) };
+    match geometry {
+        ArrayGeometry::Spatial3D {
+            m: am,
+            n: an,
+            k: _,
+        } => fill(m, am as u64) * fill(n, an as u64),
+        ArrayGeometry::Spatial2D { m: am, n: an } => fill(m, am as u64) * fill(n, an as u64),
+    }
+}
+
+/// Spatial utilization of one GEMM (M, K, N) on a geometry, best mapping.
+///
+/// For the 3D array the K dimension is spatially unrolled 8-wide, so a
+/// ragged K under-fills the Dot-ProdUs; for the 2D array K is temporal
+/// and contributes no spatial loss.
+pub fn spatial_utilization(geometry: ArrayGeometry, m: u64, k: u64, n: u64) -> f64 {
+    let mn = spatial_utilization_mapped(geometry, m, n, false)
+        .max(spatial_utilization_mapped(geometry, m, n, true));
+    match geometry {
+        ArrayGeometry::Spatial3D { k: ak, .. } => mn * fill(k, ak as u64),
+        ArrayGeometry::Spatial2D { .. } => mn,
+    }
+}
+
+/// Ideal active compute cycles for a GEMM on a geometry (no stalls):
+/// every (am x an) output tile needs ceil(K / ak) steps.
+pub fn ideal_active_cycles(geometry: ArrayGeometry, m: u64, k: u64, n: u64) -> u64 {
+    let (am, an, ak) = match geometry {
+        ArrayGeometry::Spatial3D { m, n, k } => (m as u64, n as u64, k as u64),
+        ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64, 1),
+    };
+    // Best mapping (swap M/N if it reduces rounds).
+    let direct = m.div_ceil(am) * n.div_ceil(an);
+    let swapped = n.div_ceil(am) * m.div_ceil(an);
+    direct.min(swapped) * k.div_ceil(ak)
+}
+
+/// The residue of `dim` in its `i`-th block of size `unroll`
+/// (full blocks return `unroll`, the last may be partial).
+#[inline]
+pub fn block_residue(dim: u64, unroll: u64, i: u64) -> u64 {
+    let full = dim / unroll;
+    if i < full {
+        unroll
+    } else {
+        dim - full * unroll
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A3: ArrayGeometry = ArrayGeometry::Spatial3D { m: 8, n: 8, k: 8 };
+    const A2: ArrayGeometry = ArrayGeometry::Spatial2D { m: 16, n: 32 };
+
+    #[test]
+    fn aligned_gemm_is_fully_utilized() {
+        assert!((spatial_utilization(A3, 96, 96, 96) - 1.0).abs() < 1e-12);
+        assert!((spatial_utilization(A2, 96, 96, 96) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ragged_k_hurts_3d_not_2d() {
+        // K = 9 fills 9/16 of two dot-product rounds on the 3D array.
+        let u3 = spatial_utilization(A3, 64, 9, 64);
+        assert!((u3 - 9.0 / 16.0).abs() < 1e-12);
+        let u2 = spatial_utilization(A2, 64, 9, 64);
+        assert!((u2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skinny_m_hurts_2d_twice_as_much() {
+        // M = 8: 3D fills 8/8 = 1.0; 2D fills 8/16 = 0.5 -> the "up to
+        // 2.0x" of Fig. 6a.
+        let u3 = spatial_utilization(A3, 8, 512, 512);
+        let u2 = spatial_utilization(A2, 8, 512, 512);
+        assert!((u3 - 1.0).abs() < 1e-12);
+        assert!((u2 - 0.5).abs() < 1e-12);
+        assert!((u3 / u2 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swap_is_used_when_beneficial() {
+        // M = 32, N = 16 on the 16x32 2D array: direct fill = 1.0 after
+        // swap; without swap it is (32/32)*(16/32) = 0.5.
+        let u = spatial_utilization(A2, 32, 64, 16);
+        assert!((u - 1.0).abs() < 1e-12);
+        let m = Mapping::choose(A2, 32, 16);
+        assert!(m.swapped);
+    }
+
+    #[test]
+    fn gemv_utilization_gap_is_bounded() {
+        // Single-token GEMV (M=1): 12.5% on 3D, 6.25% on 2D.
+        let u3 = spatial_utilization(A3, 1, 3072, 3072);
+        let u2 = spatial_utilization(A2, 1, 3072, 3072);
+        assert!((u3 - 0.125).abs() < 1e-12);
+        // 2D swaps to place N on the 32 side; M=1 on the 16 side.
+        assert!((u2 - 1.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ideal_cycles_match_mac_count_when_aligned() {
+        // 64x64x64 on 8x8x8: 64 tiles x 8 ksteps = 512 cycles; equals
+        // MACs / 512.
+        let c = ideal_active_cycles(A3, 64, 64, 64);
+        assert_eq!(c, 512);
+        assert_eq!(c, 64 * 64 * 64 / 512);
+    }
+
+    #[test]
+    fn step_demand_matches_paper_channels() {
+        let d = step_demand(A3);
+        assert_eq!(d.input_channels, 8); // 64-bit fine-grained channels
+        assert!(d.weight_super_bank); // 512-bit coarse channel
+        assert_eq!(d.weight_words, 8);
+        assert_eq!(d.tile_m * d.tile_n, 64);
+    }
+
+    #[test]
+    fn residues() {
+        assert_eq!(block_residue(20, 8, 0), 8);
+        assert_eq!(block_residue(20, 8, 1), 8);
+        assert_eq!(block_residue(20, 8, 2), 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! The maxpool unit (Sec. II-E): eight parallel comparison lanes,
+//! arbitrary window sizes processed sequentially.
+
+/// Functional max pooling over an HWC INT8 tensor (C along lanes).
+/// Returns (out, out_h, out_w).
+pub fn maxpool_hwc(
+    src: &[i8],
+    h: usize,
+    w: usize,
+    c: usize,
+    window: usize,
+    stride: usize,
+) -> (Vec<i8>, usize, usize) {
+    assert!(window >= 1 && stride >= 1 && window <= h && window <= w);
+    assert_eq!(src.len(), h * w * c);
+    let oh = (h - window) / stride + 1;
+    let ow = (w - window) / stride + 1;
+    let mut out = vec![i8::MIN; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for dy in 0..window {
+                for dx in 0..window {
+                    let iy = oy * stride + dy;
+                    let ix = ox * stride + dx;
+                    for ch in 0..c {
+                        let v = src[(iy * w + ix) * c + ch];
+                        let o = &mut out[(oy * ow + ox) * c + ch];
+                        if v > *o {
+                            *o = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Cycle cost: the eight comparison lanes consume eight channel values
+/// per cycle; each output element needs `window^2` comparisons walked
+/// sequentially (Sec. II-E "arbitrary window sizes in a sequential
+/// manner").
+pub fn maxpool_cycles(h: usize, w: usize, c: usize, window: usize, stride: usize) -> u64 {
+    let oh = (h - window) / stride + 1;
+    let ow = (w - window) / stride + 1;
+    let lanes = 8u64;
+    let per_out = (window * window) as u64;
+    (oh * ow) as u64 * per_out * (c as u64).div_ceil(lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool2x2_basic() {
+        // 4x4 single channel.
+        #[rustfmt::skip]
+        let src: Vec<i8> = vec![
+            1, 2,   3, 4,
+            5, 6,   7, 8,
+            -1, -2, -3, -4,
+            -5, 0,  9, -8,
+        ];
+        let (out, oh, ow) = maxpool_hwc(&src, 4, 4, 1, 2, 2);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(out, vec![6, 8, 0, 9]);
+    }
+
+    #[test]
+    fn pool_window3_stride1() {
+        let src: Vec<i8> = (0..25).map(|i| i as i8).collect();
+        let (out, oh, ow) = maxpool_hwc(&src, 5, 5, 1, 3, 1);
+        assert_eq!((oh, ow), (3, 3));
+        // Max of each 3x3 window is its bottom-right element.
+        assert_eq!(out[0], 12);
+        assert_eq!(out[8], 24);
+    }
+
+    #[test]
+    fn channels_pool_independently() {
+        // 2x2, 2 channels; channel 0 ascending, channel 1 descending.
+        let src: Vec<i8> = vec![0, 10, 1, 9, 2, 8, 3, 7];
+        let (out, ..) = maxpool_hwc(&src, 2, 2, 2, 2, 2);
+        assert_eq!(out, vec![3, 10]);
+    }
+
+    #[test]
+    fn cycles_scale_with_window_and_channels() {
+        let base = maxpool_cycles(8, 8, 8, 2, 2);
+        assert_eq!(base, 16 * 4); // 16 outputs x 4 comparisons x 1 lane-group
+        let more_c = maxpool_cycles(8, 8, 64, 2, 2);
+        assert_eq!(more_c, base * 8);
+        let bigger_win = maxpool_cycles(8, 8, 8, 4, 4);
+        assert_eq!(bigger_win, 4 * 16);
+    }
+}

@@ -1,0 +1,306 @@
+//! The unified multi-bank shared data memory (Sec. II: 32 banks x 64 bit).
+//!
+//! Two roles:
+//! * **functional** — stores real bytes, so the DMA, reshuffler and
+//!   runtime integration tests can move actual tensor data through it;
+//! * **timing** — per-cycle arbitration: each bank serves one 64-bit
+//!   access per cycle; the weight streamer's 512-bit *super-bank* access
+//!   claims eight aligned banks at once (Sec. II-B, Fig. 3b).
+//!
+//! Addresses are bank *words* (64-bit). Word `a` lives in bank
+//! `a % NUM_BANKS`, row `a / NUM_BANKS` — the word-interleaved mapping
+//! that makes consecutive words hit consecutive banks (what the
+//! reshuffler's blocked layouts exploit).
+
+use crate::arch::{BANK_WIDTH_BYTES, DATA_MEM_BYTES, NUM_BANKS, SUPER_BANK_BANKS};
+
+/// Identifies the requesting channel class for arbitration/energy stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Requester {
+    Input(u8),
+    Weight,
+    Psum,
+    Output,
+    Simd,
+    Reshuffler,
+    Dma,
+}
+
+/// One access request in a cycle.
+#[derive(Clone, Copy, Debug)]
+pub struct BankRequest {
+    pub word_addr: u64,
+    pub write: bool,
+    pub requester: Requester,
+    /// 512-bit super-bank access: claims the whole aligned 8-bank group.
+    pub super_bank: bool,
+}
+
+/// Outcome of one cycle of bank arbitration. Reused across cycles to
+/// keep the simulator's inner loop allocation-free (§Perf): `granted`
+/// and `denied` are cleared, not reallocated, by `arbitrate`.
+#[derive(Clone, Debug, Default)]
+pub struct ArbitrationResult {
+    /// Indices (into the request slice) that were granted.
+    pub granted: Vec<usize>,
+    /// Indices that lost arbitration and must retry.
+    pub denied: Vec<usize>,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl ArbitrationResult {
+    fn clear(&mut self) {
+        self.granted.clear();
+        self.denied.clear();
+        self.reads = 0;
+        self.writes = 0;
+    }
+}
+
+/// The banked memory: functional byte store + per-cycle arbiter.
+pub struct BankedMemory {
+    data: Vec<u8>,
+    num_banks: usize,
+    /// Round-robin priority pointer, rotated every cycle for fairness.
+    rr: usize,
+    /// busy[b] = this cycle's bank b already granted (scratch, reused).
+    busy: Vec<bool>,
+    /// Reused result buffer (§Perf: no allocation per cycle).
+    scratch: ArbitrationResult,
+}
+
+impl BankedMemory {
+    pub fn new() -> Self {
+        Self::with_size(DATA_MEM_BYTES, NUM_BANKS)
+    }
+
+    pub fn with_size(bytes: usize, num_banks: usize) -> Self {
+        BankedMemory {
+            data: vec![0; bytes],
+            num_banks,
+            rr: 0,
+            busy: vec![false; num_banks],
+            scratch: ArbitrationResult::default(),
+        }
+    }
+
+    pub fn num_banks(&self) -> usize {
+        self.num_banks
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn words(&self) -> u64 {
+        (self.data.len() / BANK_WIDTH_BYTES) as u64
+    }
+
+    #[inline]
+    pub fn bank_of(&self, word_addr: u64) -> usize {
+        (word_addr as usize) % self.num_banks
+    }
+
+    /// The aligned 8-bank group a super-bank access occupies.
+    #[inline]
+    pub fn super_group_of(&self, word_addr: u64) -> usize {
+        self.bank_of(word_addr) / SUPER_BANK_BANKS
+    }
+
+    // ------------------------------------------------------ functional
+
+    pub fn read_word(&self, word_addr: u64) -> u64 {
+        let off = word_addr as usize * BANK_WIDTH_BYTES;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.data[off..off + 8]);
+        u64::from_le_bytes(b)
+    }
+
+    pub fn write_word(&mut self, word_addr: u64, value: u64) {
+        let off = word_addr as usize * BANK_WIDTH_BYTES;
+        self.data[off..off + 8].copy_from_slice(&value.to_le_bytes());
+    }
+
+    pub fn read_bytes(&self, byte_addr: usize, out: &mut [u8]) {
+        out.copy_from_slice(&self.data[byte_addr..byte_addr + out.len()]);
+    }
+
+    pub fn write_bytes(&mut self, byte_addr: usize, src: &[u8]) {
+        self.data[byte_addr..byte_addr + src.len()].copy_from_slice(src);
+    }
+
+    // ---------------------------------------------------------- timing
+
+    /// Arbitrate one cycle's requests: every bank serves at most one
+    /// access; a super-bank request needs its whole aligned group free.
+    ///
+    /// Priority: psum first (the chip prioritises partial-sum reads,
+    /// Sec. II-D), then round-robin over the remaining requests so no
+    /// streamer starves.
+    pub fn arbitrate(&mut self, reqs: &[BankRequest]) -> &ArbitrationResult {
+        self.scratch.clear();
+        if reqs.is_empty() {
+            return &self.scratch;
+        }
+        for b in &mut self.busy {
+            *b = false;
+        }
+
+        // Pass 1: psum (highest priority, Sec. II-D).
+        // Pass 2: everyone else starting from the round-robin pointer.
+        // Both passes grant in place — no order buffer is materialized.
+        let n = reqs.len();
+        for i in 0..n {
+            if matches!(reqs[i].requester, Requester::Psum) {
+                self.try_grant(reqs, i);
+            }
+        }
+        for k in 0..n {
+            let i = (self.rr + k) % n;
+            if !matches!(reqs[i].requester, Requester::Psum) {
+                self.try_grant(reqs, i);
+            }
+        }
+        self.rr = (self.rr + 1) % n.max(1);
+        &self.scratch
+    }
+
+    #[inline]
+    fn try_grant(&mut self, reqs: &[BankRequest], i: usize) {
+        let r = &reqs[i];
+        if r.super_bank {
+            let g = (r.word_addr as usize % self.num_banks) / SUPER_BANK_BANKS;
+            let lo = g * SUPER_BANK_BANKS;
+            if self.busy[lo..lo + SUPER_BANK_BANKS].iter().any(|&b| b) {
+                self.scratch.denied.push(i);
+            } else {
+                for b in &mut self.busy[lo..lo + SUPER_BANK_BANKS] {
+                    *b = true;
+                }
+                self.scratch.granted.push(i);
+                if r.write {
+                    self.scratch.writes += SUPER_BANK_BANKS as u64;
+                } else {
+                    self.scratch.reads += SUPER_BANK_BANKS as u64;
+                }
+            }
+        } else {
+            let b = (r.word_addr as usize) % self.num_banks;
+            if self.busy[b] {
+                self.scratch.denied.push(i);
+            } else {
+                self.busy[b] = true;
+                self.scratch.granted.push(i);
+                if r.write {
+                    self.scratch.writes += 1;
+                } else {
+                    self.scratch.reads += 1;
+                }
+            }
+        }
+    }
+}
+
+impl Default for BankedMemory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(addr: u64, requester: Requester) -> BankRequest {
+        BankRequest {
+            word_addr: addr,
+            write: false,
+            requester,
+            super_bank: false,
+        }
+    }
+
+    #[test]
+    fn word_interleaving() {
+        let m = BankedMemory::new();
+        assert_eq!(m.bank_of(0), 0);
+        assert_eq!(m.bank_of(31), 31);
+        assert_eq!(m.bank_of(32), 0);
+        assert_eq!(m.super_group_of(0), 0);
+        assert_eq!(m.super_group_of(8), 1);
+        assert_eq!(m.super_group_of(31), 3);
+    }
+
+    #[test]
+    fn functional_read_write() {
+        let mut m = BankedMemory::new();
+        m.write_word(100, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(m.read_word(100), 0xDEAD_BEEF_CAFE_F00D);
+        m.write_bytes(16, &[1, 2, 3, 4]);
+        let mut out = [0u8; 4];
+        m.read_bytes(16, &mut out);
+        assert_eq!(out, [1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn distinct_banks_all_granted() {
+        let mut m = BankedMemory::new();
+        let reqs: Vec<_> = (0..8).map(|i| req(i, Requester::Input(i as u8))).collect();
+        let r = m.arbitrate(&reqs);
+        assert_eq!(r.granted.len(), 8);
+        assert!(r.denied.is_empty());
+        assert_eq!(r.reads, 8);
+    }
+
+    #[test]
+    fn same_bank_serializes() {
+        let mut m = BankedMemory::new();
+        // words 0 and 32 both live in bank 0.
+        let reqs = vec![req(0, Requester::Input(0)), req(32, Requester::Input(1))];
+        let r = m.arbitrate(&reqs);
+        assert_eq!(r.granted.len(), 1);
+        assert_eq!(r.denied.len(), 1);
+    }
+
+    #[test]
+    fn super_bank_claims_group() {
+        let mut m = BankedMemory::new();
+        let mut reqs = vec![BankRequest {
+            word_addr: 8, // group 1: banks 8..16
+            write: false,
+            requester: Requester::Weight,
+            super_bank: true,
+        }];
+        reqs.push(req(9, Requester::Input(0))); // bank 9: conflicts
+        reqs.push(req(0, Requester::Input(1))); // bank 0: fine
+        let r = m.arbitrate(&reqs);
+        assert_eq!(r.granted.len(), 2);
+        assert_eq!(r.denied, vec![1]);
+        assert_eq!(r.reads, 8 + 1);
+    }
+
+    #[test]
+    fn psum_wins_over_output_on_same_bank() {
+        let mut m = BankedMemory::new();
+        for _ in 0..5 {
+            // Whatever the round-robin pointer, psum must win.
+            let reqs = vec![req(0, Requester::Output), req(32, Requester::Psum)];
+            let r = m.arbitrate(&reqs);
+            assert!(r.granted.contains(&1), "psum must be granted");
+        }
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        let mut m = BankedMemory::new();
+        let mut wins = [0u32; 2];
+        for _ in 0..100 {
+            let reqs = vec![req(0, Requester::Input(0)), req(32, Requester::Input(1))];
+            let r = m.arbitrate(&reqs);
+            wins[r.granted[0]] += 1;
+        }
+        assert_eq!(wins[0], 50);
+        assert_eq!(wins[1], 50);
+    }
+}

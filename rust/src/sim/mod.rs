@@ -1,0 +1,29 @@
+//! The cycle-accurate Voltra chip model.
+//!
+//! One module per microarchitectural block of Fig. 2:
+//! * [`gemm_core`] — the 8x8x8 3D spatial array (+ 2D baseline maths);
+//! * [`array2d`] — the conventional 2D baseline of Fig. 6a;
+//! * [`memory`] — 32-bank shared memory with super-bank accesses;
+//! * [`crossbar`] — port discipline incl. the time-muxed psum/output port;
+//! * [`agu`] / [`streamer`] / [`fifo`] — the flexible data streamers;
+//! * [`engine`] — the per-tile cycle simulation loop;
+//! * [`simd`] — the 8-lane quantization unit;
+//! * [`reshuffler`] / [`maxpool`] — auxiliary blocks;
+//! * [`snitch`] — CSR programming model;
+//! * [`dma`] — off-chip movement.
+
+pub mod agu;
+pub mod array2d;
+pub mod crossbar;
+pub mod dma;
+pub mod engine;
+pub mod fifo;
+pub mod gemm_core;
+pub mod maxpool;
+pub mod memory;
+pub mod reshuffler;
+pub mod simd;
+pub mod snitch;
+pub mod streamer;
+
+pub use engine::{simulate_tile, TileSpec};

@@ -1,0 +1,155 @@
+//! The data reshuffler (Sec. II-E): layout transformations that make the
+//! streamers' accesses bank-conflict-free.
+//!
+//! Two transformations the paper names explicitly:
+//! * row-major -> *blocked row-major* for GEMM input matrices (each
+//!   8-row x 8-col block becomes contiguous, so the input streamer's
+//!   eight 64-bit channels hit eight consecutive banks);
+//! * HWC -> *C/8HWC8* for Conv2D feature maps (channel groups of eight
+//!   become the innermost, contiguous axis).
+//!
+//! Functional (byte-exact) + a cycle cost model: the unit reads and
+//! writes one 64-bit word per cycle per port through its streamer.
+
+/// Row-major (rows x cols) -> blocked row-major with (br x bc) blocks.
+/// Elements are bytes (INT8). `rows`/`cols` must tile exactly.
+pub fn block_rowmajor(src: &[u8], rows: usize, cols: usize, br: usize, bc: usize) -> Vec<u8> {
+    assert_eq!(src.len(), rows * cols);
+    assert!(rows % br == 0 && cols % bc == 0, "dims must tile");
+    let mut dst = vec![0u8; src.len()];
+    let mut w = 0;
+    for bi in 0..rows / br {
+        for bj in 0..cols / bc {
+            for r in 0..br {
+                for c in 0..bc {
+                    dst[w] = src[(bi * br + r) * cols + bj * bc + c];
+                    w += 1;
+                }
+            }
+        }
+    }
+    dst
+}
+
+/// Inverse of [`block_rowmajor`].
+pub fn unblock_rowmajor(src: &[u8], rows: usize, cols: usize, br: usize, bc: usize) -> Vec<u8> {
+    assert_eq!(src.len(), rows * cols);
+    let mut dst = vec![0u8; src.len()];
+    let mut r_ = 0;
+    for bi in 0..rows / br {
+        for bj in 0..cols / bc {
+            for r in 0..br {
+                for c in 0..bc {
+                    dst[(bi * br + r) * cols + bj * bc + c] = src[r_];
+                    r_ += 1;
+                }
+            }
+        }
+    }
+    dst
+}
+
+/// HWC -> C/8 H W C8: split channels into groups of 8 and hoist the
+/// group index outermost. `c` must be a multiple of 8 (pad first).
+pub fn hwc_to_c8hwc8(src: &[u8], h: usize, w: usize, c: usize) -> Vec<u8> {
+    assert_eq!(src.len(), h * w * c);
+    assert!(c % 8 == 0, "pad channels to a multiple of 8 first");
+    let groups = c / 8;
+    let mut dst = vec![0u8; src.len()];
+    let mut idx = 0;
+    for g in 0..groups {
+        for y in 0..h {
+            for x in 0..w {
+                for ci in 0..8 {
+                    dst[idx] = src[(y * w + x) * c + g * 8 + ci];
+                    idx += 1;
+                }
+            }
+        }
+    }
+    dst
+}
+
+/// Inverse of [`hwc_to_c8hwc8`].
+pub fn c8hwc8_to_hwc(src: &[u8], h: usize, w: usize, c: usize) -> Vec<u8> {
+    assert_eq!(src.len(), h * w * c);
+    let groups = c / 8;
+    let mut dst = vec![0u8; src.len()];
+    let mut idx = 0;
+    for g in 0..groups {
+        for y in 0..h {
+            for x in 0..w {
+                for ci in 0..8 {
+                    dst[(y * w + x) * c + g * 8 + ci] = src[idx];
+                    idx += 1;
+                }
+            }
+        }
+    }
+    dst
+}
+
+/// Cycle cost of reshuffling `bytes` bytes: the unit streams one 64-bit
+/// word per cycle in and out through its dedicated streamer pair
+/// (read + write ports operate concurrently), plus a small setup cost
+/// for the Snitch CSR programming.
+pub fn reshuffle_cycles(bytes: u64) -> u64 {
+    const SETUP: u64 = 16;
+    SETUP + bytes.div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_roundtrip() {
+        let rows = 16;
+        let cols = 24;
+        let src: Vec<u8> = (0..rows * cols).map(|i| (i % 251) as u8).collect();
+        let b = block_rowmajor(&src, rows, cols, 8, 8);
+        let back = unblock_rowmajor(&b, rows, cols, 8, 8);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn block_makes_tiles_contiguous() {
+        // 8x16 matrix: the first 64 bytes of the blocked form must be the
+        // top-left 8x8 tile.
+        let rows = 8;
+        let cols = 16;
+        let src: Vec<u8> = (0..rows * cols).map(|i| i as u8).collect();
+        let b = block_rowmajor(&src, rows, cols, 8, 8);
+        for r in 0..8 {
+            for c in 0..8 {
+                assert_eq!(b[r * 8 + c], src[r * cols + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn c8hwc8_roundtrip() {
+        let (h, w, c) = (5, 7, 16);
+        let src: Vec<u8> = (0..h * w * c).map(|i| (i % 253) as u8).collect();
+        let t = hwc_to_c8hwc8(&src, h, w, c);
+        assert_eq!(c8hwc8_to_hwc(&t, h, w, c), src);
+    }
+
+    #[test]
+    fn c8hwc8_groups_channels() {
+        let (h, w, c) = (2, 2, 16);
+        let src: Vec<u8> = (0..h * w * c).map(|i| i as u8).collect();
+        let t = hwc_to_c8hwc8(&src, h, w, c);
+        // First 8 bytes: channels 0..8 of pixel (0,0) = bytes 0..8.
+        assert_eq!(&t[..8], &src[..8]);
+        // Next 8: channels 0..8 of pixel (0,1) = bytes 16..24.
+        assert_eq!(&t[8..16], &src[16..24]);
+    }
+
+    #[test]
+    fn cycle_cost_is_streaming() {
+        assert_eq!(reshuffle_cycles(0), 16);
+        assert_eq!(reshuffle_cycles(64), 16 + 8);
+        assert_eq!(reshuffle_cycles(65), 16 + 9);
+    }
+}

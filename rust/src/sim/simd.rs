@@ -1,0 +1,126 @@
+//! The quantization SIMD unit (Sec. II-D): functional model + the
+//! time-multiplexing cost arithmetic reproduced by `ablation_tmux`.
+//!
+//! The unit converts the GEMM core's 32-bit outputs to 8-bit, fusing the
+//! activation. Exploiting output stationarity, only eight PE lanes are
+//! instantiated; a hardware loop unroller walks 64 results through them
+//! over eight cycles.
+
+/// Quantization parameters, programmed over CSR.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub relu: bool,
+}
+
+/// Functional requantization of one result (bit-exact with the Pallas
+/// kernel `python/compile/kernels/quant.py` and its jnp oracle).
+#[inline]
+pub fn requant_one(acc: i32, p: QuantParams) -> i8 {
+    let mut v = (acc as f32 * p.scale).round_ties_even();
+    // f32 rounding of .5 cases: the kernel uses jnp.round (banker's
+    // rounding), matched by round_ties_even above.
+    if p.relu && v < 0.0 {
+        v = 0.0;
+    }
+    v.clamp(-128.0, 127.0) as i8
+}
+
+/// The SIMD unit with `lanes` parallel quantization PEs.
+#[derive(Clone, Debug)]
+pub struct QuantSimd {
+    pub lanes: usize,
+    pub params: QuantParams,
+    /// Total busy cycles (for utilization/energy accounting).
+    pub busy_cycles: u64,
+    pub results: u64,
+}
+
+impl QuantSimd {
+    pub fn new(lanes: usize, params: QuantParams) -> Self {
+        assert!(lanes > 0);
+        QuantSimd {
+            lanes,
+            params,
+            busy_cycles: 0,
+            results: 0,
+        }
+    }
+
+    /// Quantize a block of accumulators, counting the cycles the loop
+    /// unroller needs: ceil(len / lanes).
+    pub fn process(&mut self, accs: &[i32], out: &mut Vec<i8>) -> u64 {
+        let cycles = (accs.len() as u64).div_ceil(self.lanes as u64);
+        self.busy_cycles += cycles;
+        self.results += accs.len() as u64;
+        out.extend(accs.iter().map(|&a| requant_one(a, self.params)));
+        cycles
+    }
+
+    /// Cycles to drain one 8x8 output tile (64 results).
+    pub fn tile_drain_cycles(&self) -> u64 {
+        64u64.div_ceil(self.lanes as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const Q1: QuantParams = QuantParams {
+        scale: 1.0,
+        relu: false,
+    };
+
+    #[test]
+    fn requant_saturates() {
+        assert_eq!(requant_one(1_000_000, Q1), 127);
+        assert_eq!(requant_one(-1_000_000, Q1), -128);
+        assert_eq!(requant_one(5, Q1), 5);
+        assert_eq!(requant_one(-128, Q1), -128);
+    }
+
+    #[test]
+    fn requant_scales_and_rounds() {
+        let q = QuantParams {
+            scale: 0.5,
+            relu: false,
+        };
+        assert_eq!(requant_one(5, q), 2); // 2.5 rounds to even
+        assert_eq!(requant_one(7, q), 4); // 3.5 rounds to even
+        assert_eq!(requant_one(-5, q), -2);
+    }
+
+    #[test]
+    fn requant_relu() {
+        let q = QuantParams {
+            scale: 1.0,
+            relu: true,
+        };
+        assert_eq!(requant_one(-7, q), 0);
+        assert_eq!(requant_one(7, q), 7);
+    }
+
+    #[test]
+    fn eight_lane_unit_takes_eight_cycles_per_tile() {
+        let mut s = QuantSimd::new(8, Q1);
+        let mut out = Vec::new();
+        let c = s.process(&[1; 64], &mut out);
+        assert_eq!(c, 8); // the paper's 64-results-over-8-cycles
+        assert_eq!(out.len(), 64);
+        assert_eq!(s.tile_drain_cycles(), 8);
+    }
+
+    #[test]
+    fn sixtyfour_lane_unit_takes_one_cycle() {
+        let s = QuantSimd::new(64, Q1);
+        assert_eq!(s.tile_drain_cycles(), 1);
+    }
+
+    #[test]
+    fn partial_blocks_round_up() {
+        let mut s = QuantSimd::new(8, Q1);
+        let mut out = Vec::new();
+        assert_eq!(s.process(&[0; 9], &mut out), 2);
+    }
+}

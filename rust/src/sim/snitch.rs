@@ -1,0 +1,207 @@
+//! The RISC-V Snitch control core (Sec. II): a lightweight 32-bit integer
+//! core that orchestrates the functional blocks and data streamers
+//! through CSR writes.
+//!
+//! We model the *programming interface*, not the RV32I pipeline: a CSR
+//! address map covering every streamer's base/bounds/strides registers,
+//! the GEMM core's matrix-dimension registers and the SIMD unit's
+//! quantization parameters, plus a cost model (one CSR write per cycle —
+//! the configuration overhead the chip pays per tile launch).
+
+use std::collections::BTreeMap;
+
+use crate::sim::agu::LoopDim;
+use crate::sim::streamer::{Grain, StreamerProgram};
+
+/// CSR address blocks (one per programmable unit).
+pub const CSR_GEMM_BASE: u32 = 0x3C0;
+pub const CSR_STREAMER_BASE: u32 = 0x400;
+/// CSRs per streamer: base_lo, base_hi, 6x(bound,stride), flags.
+pub const CSR_PER_STREAMER: u32 = 0x20;
+pub const CSR_SIMD_BASE: u32 = 0x600;
+
+/// Streamer indices (the seven streamers of Fig. 2b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StreamerId {
+    GemmInput = 0,
+    GemmWeight = 1,
+    GemmPsum = 2,
+    GemmOutput = 3,
+    SimdIn = 4,
+    SimdOut = 5,
+    Reshuffler = 6,
+}
+
+/// One CSR write (address, value) — the unit of control cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsrWrite {
+    pub addr: u32,
+    pub value: u32,
+}
+
+/// A complete per-tile control program, as the Snitch core would emit.
+#[derive(Clone, Debug, Default)]
+pub struct CsrProgram {
+    pub writes: Vec<CsrWrite>,
+}
+
+impl CsrProgram {
+    /// Cycles to issue: one CSR instruction per write plus the launch.
+    pub fn cycles(&self) -> u64 {
+        self.writes.len() as u64 + 1
+    }
+
+    pub fn push(&mut self, addr: u32, value: u32) {
+        self.writes.push(CsrWrite { addr, value });
+    }
+
+    /// Program the GEMM core's hardware loop controller with the tile
+    /// dimensions (it clears accumulators at each output-tile boundary).
+    pub fn program_gemm_dims(&mut self, tm: u32, tk: u32, tn: u32, psum_in: bool) {
+        self.push(CSR_GEMM_BASE, tm);
+        self.push(CSR_GEMM_BASE + 1, tk);
+        self.push(CSR_GEMM_BASE + 2, tn);
+        self.push(CSR_GEMM_BASE + 3, psum_in as u32);
+    }
+
+    /// Program one streamer's AGU (base pointer, loop bounds, strides,
+    /// grain/transpose flags).
+    pub fn program_streamer(&mut self, id: StreamerId, prog: &StreamerProgram) {
+        let base = CSR_STREAMER_BASE + (id as u32) * CSR_PER_STREAMER;
+        self.push(base, (prog.base_word & 0xFFFF_FFFF) as u32);
+        self.push(base + 1, (prog.base_word >> 32) as u32);
+        for (i, d) in prog.dims.iter().enumerate() {
+            let i = i as u32;
+            self.push(base + 2 + 2 * i, d.bound as u32);
+            self.push(base + 3 + 2 * i, d.stride as u32);
+        }
+        let flags = match prog.grain {
+            Grain::Fine => 0u32,
+            Grain::Coarse => 1,
+        } | ((prog.transpose as u32) << 1)
+            | ((prog.dims.len() as u32) << 2);
+        self.push(base + 2 + 12, flags);
+    }
+
+    pub fn program_simd(&mut self, scale_bits: u32, relu: bool) {
+        self.push(CSR_SIMD_BASE, scale_bits);
+        self.push(CSR_SIMD_BASE + 1, relu as u32);
+    }
+}
+
+/// A CSR register file that accepts programs and can reconstruct the
+/// streamer configuration (used by tests to verify round-tripping).
+#[derive(Clone, Debug, Default)]
+pub struct CsrFile {
+    regs: BTreeMap<u32, u32>,
+}
+
+impl CsrFile {
+    pub fn apply(&mut self, prog: &CsrProgram) {
+        for w in &prog.writes {
+            self.regs.insert(w.addr, w.value);
+        }
+    }
+
+    pub fn read(&self, addr: u32) -> u32 {
+        *self.regs.get(&addr).unwrap_or(&0)
+    }
+
+    /// Reconstruct a streamer program from the register file.
+    pub fn decode_streamer(&self, id: StreamerId) -> StreamerProgram {
+        let base = CSR_STREAMER_BASE + (id as u32) * CSR_PER_STREAMER;
+        let base_word =
+            (self.read(base) as u64) | ((self.read(base + 1) as u64) << 32);
+        let flags = self.read(base + 2 + 12);
+        let ndims = (flags >> 2) as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for i in 0..ndims as u32 {
+            dims.push(LoopDim {
+                bound: self.read(base + 2 + 2 * i) as u64,
+                stride: self.read(base + 3 + 2 * i) as i32 as i64,
+            });
+        }
+        let grain = if flags & 1 == 1 {
+            Grain::Coarse
+        } else {
+            Grain::Fine
+        };
+        let mut p = StreamerProgram::new(base_word, dims, grain);
+        if flags & 2 != 0 {
+            p = p.with_transpose();
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streamer_program_roundtrips_through_csrs() {
+        let prog = StreamerProgram::new(
+            0x1_0000_0010,
+            vec![
+                LoopDim { bound: 8, stride: 1 },
+                LoopDim {
+                    bound: 4,
+                    stride: -64,
+                },
+                LoopDim {
+                    bound: 2,
+                    stride: 512,
+                },
+            ],
+            Grain::Coarse,
+        )
+        .with_transpose();
+        let mut cp = CsrProgram::default();
+        cp.program_streamer(StreamerId::GemmWeight, &prog);
+        let mut rf = CsrFile::default();
+        rf.apply(&cp);
+        let got = rf.decode_streamer(StreamerId::GemmWeight);
+        assert_eq!(got, prog);
+    }
+
+    #[test]
+    fn programs_cost_one_cycle_per_write() {
+        let mut cp = CsrProgram::default();
+        cp.program_gemm_dims(64, 512, 64, false);
+        assert_eq!(cp.cycles(), 4 + 1);
+    }
+
+    #[test]
+    fn streamer_blocks_do_not_overlap() {
+        // Each streamer owns CSR_PER_STREAMER addresses; the highest
+        // register used (flags at +14) must fit.
+        assert!(2 + 12 < CSR_PER_STREAMER);
+        let mut cp = CsrProgram::default();
+        let p = StreamerProgram::new(0, vec![LoopDim { bound: 1, stride: 0 }; 6], Grain::Fine);
+        cp.program_streamer(StreamerId::GemmInput, &p);
+        cp.program_streamer(StreamerId::GemmWeight, &p);
+        let addrs: Vec<u32> = cp.writes.iter().map(|w| w.addr).collect();
+        let unique: std::collections::BTreeSet<u32> = addrs.iter().copied().collect();
+        assert_eq!(addrs.len(), unique.len(), "overlapping CSR addresses");
+    }
+
+    #[test]
+    fn negative_strides_survive() {
+        let prog = StreamerProgram::new(
+            0,
+            vec![LoopDim {
+                bound: 3,
+                stride: -8,
+            }],
+            Grain::Fine,
+        );
+        let mut cp = CsrProgram::default();
+        cp.program_streamer(StreamerId::GemmPsum, &prog);
+        let mut rf = CsrFile::default();
+        rf.apply(&cp);
+        assert_eq!(
+            rf.decode_streamer(StreamerId::GemmPsum).dims[0].stride,
+            -8
+        );
+    }
+}

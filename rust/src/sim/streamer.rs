@@ -1,0 +1,212 @@
+//! Flexible data streamer: the programmable front-end between the shared
+//! memory and a functional block (Sec. II-B, Fig. 3).
+//!
+//! A streamer = multi-dimensional AGU + Memory Interface Controllers
+//! (one per access channel) + data FIFOs. This module is the
+//! *programming-level* view used by the Snitch CSR interface and the
+//! functional data paths (reshuffler, runtime staging); the cycle-level
+//! behaviour of the channels lives in `sim::engine`.
+
+use crate::arch;
+use crate::sim::agu::{AffineAgu, LoopDim};
+use crate::sim::memory::{BankedMemory, Requester};
+
+/// Channel granularity of a streamer (the "mixed-grained" in MGDP).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Grain {
+    /// 64-bit channels — fine-grained strided access (input streamer).
+    Fine,
+    /// 512-bit super-bank channel — coarse-grained bulk access (weight
+    /// streamer).
+    Coarse,
+}
+
+/// A complete streamer program, as written over CSRs by the Snitch core.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamerProgram {
+    pub base_word: u64,
+    pub dims: Vec<LoopDim>,
+    pub grain: Grain,
+    /// On-the-fly transpose in the weight streamer (Sec. II-C): swaps the
+    /// two innermost loop dimensions while streaming.
+    pub transpose: bool,
+}
+
+impl StreamerProgram {
+    pub fn new(base_word: u64, dims: Vec<LoopDim>, grain: Grain) -> Self {
+        StreamerProgram {
+            base_word,
+            dims,
+            grain,
+            transpose: false,
+        }
+    }
+
+    pub fn with_transpose(mut self) -> Self {
+        self.transpose = true;
+        self
+    }
+
+    /// Validate against the hardware AGU depth of the target streamer.
+    pub fn check_dims(&self, requester: Requester) -> Result<(), String> {
+        let max = match requester {
+            Requester::Input(_) => arch::INPUT_AGU_DIMS,
+            Requester::Weight => arch::WEIGHT_AGU_DIMS,
+            _ => 3,
+        };
+        if self.dims.len() > max {
+            return Err(format!(
+                "{:?} streamer supports {}-D programs, got {}-D",
+                requester,
+                max,
+                self.dims.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the AGU (applying the transposer's dimension swap).
+    pub fn agu(&self) -> AffineAgu {
+        let mut dims = self.dims.clone();
+        if self.transpose && dims.len() >= 2 {
+            dims.swap(0, 1);
+        }
+        AffineAgu::new(self.base_word, dims)
+    }
+
+    /// Words transferred per AGU step (1 fine, 8 coarse).
+    pub fn words_per_access(&self) -> u64 {
+        match self.grain {
+            Grain::Fine => 1,
+            Grain::Coarse => arch::SUPER_BANK_BANKS as u64,
+        }
+    }
+
+    /// Total words the program touches.
+    pub fn total_words(&self) -> u64 {
+        self.agu().total() * self.words_per_access()
+    }
+}
+
+/// Functionally stream words out of the memory in program order
+/// (build/debug path — the hot path never materializes this).
+pub fn read_stream(mem: &BankedMemory, prog: &StreamerProgram) -> Vec<u64> {
+    let mut agu = prog.agu();
+    let mut out = Vec::with_capacity(prog.total_words() as usize);
+    while let Some(a) = agu.next_addr() {
+        match prog.grain {
+            Grain::Fine => out.push(mem.read_word(a)),
+            Grain::Coarse => {
+                // A super-bank access returns the whole aligned 64-byte
+                // group.
+                for i in 0..arch::SUPER_BANK_BANKS as u64 {
+                    out.push(mem.read_word(a + i));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Functionally write a stream into memory in program order.
+pub fn write_stream(mem: &mut BankedMemory, prog: &StreamerProgram, words: &[u64]) {
+    let mut agu = prog.agu();
+    let mut it = words.iter();
+    while let Some(a) = agu.next_addr() {
+        match prog.grain {
+            Grain::Fine => {
+                if let Some(w) = it.next() {
+                    mem.write_word(a, *w);
+                }
+            }
+            Grain::Coarse => {
+                for i in 0..arch::SUPER_BANK_BANKS as u64 {
+                    if let Some(w) = it.next() {
+                        mem.write_word(a + i, *w);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim_limits_match_paper() {
+        let p6 = StreamerProgram::new(
+            0,
+            vec![LoopDim { bound: 2, stride: 1 }; 6],
+            Grain::Fine,
+        );
+        assert!(p6.check_dims(Requester::Input(0)).is_ok());
+        let p7 = StreamerProgram::new(
+            0,
+            vec![LoopDim { bound: 2, stride: 1 }; 7],
+            Grain::Fine,
+        );
+        assert!(p7.check_dims(Requester::Input(0)).is_err());
+        let w4 = StreamerProgram::new(
+            0,
+            vec![LoopDim { bound: 2, stride: 1 }; 4],
+            Grain::Coarse,
+        );
+        assert!(w4.check_dims(Requester::Weight).is_err());
+    }
+
+    #[test]
+    fn fine_stream_roundtrip() {
+        let mut mem = BankedMemory::new();
+        let prog = StreamerProgram::new(
+            10,
+            vec![LoopDim { bound: 4, stride: 2 }],
+            Grain::Fine,
+        );
+        write_stream(&mut mem, &prog, &[1, 2, 3, 4]);
+        assert_eq!(read_stream(&mem, &prog), vec![1, 2, 3, 4]);
+        // Strided placement: words at 10, 12, 14, 16.
+        assert_eq!(mem.read_word(12), 2);
+        assert_eq!(mem.read_word(11), 0);
+    }
+
+    #[test]
+    fn coarse_stream_moves_super_banks() {
+        let mut mem = BankedMemory::new();
+        for i in 0..16 {
+            mem.write_word(i, 100 + i);
+        }
+        let prog = StreamerProgram::new(
+            0,
+            vec![LoopDim { bound: 2, stride: 8 }],
+            Grain::Coarse,
+        );
+        let got = read_stream(&mem, &prog);
+        assert_eq!(got.len(), 16);
+        assert_eq!(got[0], 100);
+        assert_eq!(got[15], 115);
+        assert_eq!(prog.total_words(), 16);
+    }
+
+    #[test]
+    fn transposer_swaps_walk_order() {
+        let mut mem = BankedMemory::new();
+        // 2x3 row-major matrix at base 0 (1 word per element).
+        for i in 0..6 {
+            mem.write_word(i, i);
+        }
+        let normal = StreamerProgram::new(
+            0,
+            vec![
+                LoopDim { bound: 3, stride: 1 }, // cols
+                LoopDim { bound: 2, stride: 3 }, // rows
+            ],
+            Grain::Fine,
+        );
+        assert_eq!(read_stream(&mem, &normal), vec![0, 1, 2, 3, 4, 5]);
+        let t = normal.clone().with_transpose();
+        // K^T on the fly: column-major order.
+        assert_eq!(read_stream(&mem, &t), vec![0, 3, 1, 4, 2, 5]);
+    }
+}

@@ -1,0 +1,184 @@
+//! On-chip memory allocation: PDMA's dynamic shared-space carving vs the
+//! separated fixed-buffer baseline (Sec. II-C, Fig. 1).
+//!
+//! The shared organisation lets one layer give almost the whole 128 KiB
+//! to whatever operand mix it needs (and re-partition per layer via
+//! streamer base pointers); the separated organisation must fit each
+//! operand class inside its dedicated buffer — "the tiling strategy must
+//! conform to the size of the smallest buffer".
+
+use crate::arch::{BANK_WIDTH_BYTES, SUPER_BANK_BANKS};
+use crate::config::MemoryOrg;
+
+/// Operand classes as the chip's streamers see them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Operand {
+    Input,
+    Weight,
+    Psum,
+    Output,
+}
+
+/// Byte footprint of one tile residency (already including double
+/// buffering where requested).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Footprint {
+    pub input: usize,
+    pub weight: usize,
+    pub psum: usize,
+    pub output: usize,
+}
+
+impl Footprint {
+    pub fn total(&self) -> usize {
+        self.input + self.weight + self.psum + self.output
+    }
+}
+
+/// A concrete placement: word base addresses for each operand region.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Placement {
+    pub input_base: u64,
+    pub weight_base: u64,
+    pub psum_base: u64,
+    pub output_base: u64,
+}
+
+/// Does `fp` fit this memory organisation?
+pub fn fits(org: &MemoryOrg, fp: &Footprint) -> bool {
+    match *org {
+        MemoryOrg::Shared => fp.total() <= org.total_bytes(),
+        MemoryOrg::Separated {
+            input,
+            weight,
+            output,
+            psum,
+        } => fp.input <= input && fp.weight <= weight && fp.psum <= psum && fp.output <= output,
+    }
+}
+
+/// Place the regions. Shared memory packs them back-to-back (the PDMA
+/// base pointers land wherever the allocator cursor is — this is what
+/// makes the bank alignment of concurrent streams workload-dependent);
+/// separated memory has fixed per-class bases.
+pub fn place(org: &MemoryOrg, fp: &Footprint) -> Option<Placement> {
+    if !fits(org, fp) {
+        return None;
+    }
+    let wpb = BANK_WIDTH_BYTES; // bytes per word
+    let align = |b: usize| -> u64 {
+        // Super-bank alignment: weight regions must start on an 8-word
+        // boundary so 512-bit accesses hit one aligned group.
+        (b.div_ceil(wpb * SUPER_BANK_BANKS) * SUPER_BANK_BANKS) as u64
+    };
+    match *org {
+        MemoryOrg::Shared => {
+            let input_base = 0u64;
+            let weight_base = align(fp.input);
+            let psum_base = weight_base + align(fp.weight);
+            let output_base = psum_base + align(fp.psum);
+            Some(Placement {
+                input_base,
+                weight_base,
+                psum_base,
+                output_base,
+            })
+        }
+        MemoryOrg::Separated { input, weight, psum, .. } => {
+            // Dedicated SRAMs: model as disjoint address spaces laid out
+            // consecutively (their bank conflicts are already suppressed
+            // by the engine's separate-ports mode).
+            let input_base = 0u64;
+            let weight_base = align(input);
+            let psum_base = weight_base + align(weight);
+            let output_base = psum_base + align(psum);
+            Some(Placement {
+                input_base,
+                weight_base,
+                psum_base,
+                output_base,
+            })
+        }
+    }
+}
+
+/// Largest shared-memory share a single operand may claim under PDMA
+/// (everything minus one super-bank row for each other operand).
+pub fn max_operand_bytes(org: &MemoryOrg, op: Operand) -> usize {
+    match *org {
+        MemoryOrg::Shared => org.total_bytes(),
+        MemoryOrg::Separated {
+            input,
+            weight,
+            output,
+            psum,
+        } => match op {
+            Operand::Input => input,
+            Operand::Weight => weight,
+            Operand::Psum => psum,
+            Operand::Output => output,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DATA_MEM_BYTES;
+
+    fn fp(i: usize, w: usize, p: usize, o: usize) -> Footprint {
+        Footprint {
+            input: i,
+            weight: w,
+            psum: p,
+            output: o,
+        }
+    }
+
+    #[test]
+    fn shared_fits_any_mix_up_to_capacity() {
+        let org = MemoryOrg::Shared;
+        assert!(fits(&org, &fp(100 * 1024, 20 * 1024, 4 * 1024, 4 * 1024)));
+        assert!(fits(&org, &fp(4 * 1024, 120 * 1024, 2 * 1024, 2 * 1024)));
+        assert!(!fits(&org, &fp(100 * 1024, 30 * 1024, 0, 0)));
+    }
+
+    #[test]
+    fn separated_is_capped_per_class() {
+        let org = MemoryOrg::separated_default();
+        // Fits in total but not in the weight buffer.
+        let f = fp(10 * 1024, 100 * 1024, 1024, 1024);
+        assert!(f.total() <= DATA_MEM_BYTES);
+        assert!(!fits(&org, &f));
+        // The same total, balanced: fits.
+        assert!(fits(&org, &fp(36 * 1024, 50 * 1024, 4 * 1024, 20 * 1024)));
+    }
+
+    #[test]
+    fn placement_is_disjoint_and_aligned() {
+        let org = MemoryOrg::Shared;
+        let f = fp(1000, 2000, 512, 256);
+        let p = place(&org, &f).unwrap();
+        assert_eq!(p.input_base, 0);
+        assert_eq!(p.weight_base % 8, 0, "weight base must be super-bank aligned");
+        assert!(p.weight_base as usize * 8 >= f.input);
+        assert!(p.psum_base > p.weight_base);
+        assert!(p.output_base > p.psum_base);
+    }
+
+    #[test]
+    fn overfull_returns_none() {
+        let f = fp(DATA_MEM_BYTES, 8, 8, 8);
+        assert_eq!(place(&MemoryOrg::Shared, &f), None);
+    }
+
+    #[test]
+    fn pdma_lets_one_operand_take_everything() {
+        assert_eq!(
+            max_operand_bytes(&MemoryOrg::Shared, Operand::Weight),
+            DATA_MEM_BYTES
+        );
+        let sep = MemoryOrg::separated_default();
+        assert!(max_operand_bytes(&sep, Operand::Weight) < DATA_MEM_BYTES / 2);
+    }
+}

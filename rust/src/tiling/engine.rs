@@ -1,0 +1,261 @@
+//! Layer-wise tiling engine (Sec. III-A: "we apply layer-wise tiling,
+//! where each layer is partitioned to fully exploit the GEMM core's
+//! output-stationary dataflow", following ZigZag [22]).
+//!
+//! For a GEMM (M, K, N) and a memory organisation, enumerate tile sizes
+//! (tm, tk, tn), keep those whose residency fits the allocator, and pick
+//! the one minimizing off-chip traffic. This is exactly where PDMA wins:
+//! a shared space admits larger, better-balanced tiles than fixed
+//! per-operand buffers, cutting DMA traffic 1.15-2.36x (Fig. 6c).
+
+use crate::config::{ArrayGeometry, ChipConfig};
+use crate::tiling::allocator::{fits, place, Footprint, Placement};
+
+/// A chosen tiling for one GEMM layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tiling {
+    pub tm: u64,
+    pub tk: u64,
+    pub tn: u64,
+    /// Off-chip bytes moved for the whole layer under this tiling.
+    pub traffic_bytes: u64,
+    /// Whether in/weight tiles are double-buffered (DMA overlaps compute).
+    pub double_buffered: bool,
+    pub footprint: Footprint,
+    pub placement: Placement,
+}
+
+impl Tiling {
+    pub fn rounds(&self, m: u64, k: u64, n: u64) -> (u64, u64, u64) {
+        (m.div_ceil(self.tm), k.div_ceil(self.tk), n.div_ceil(self.tn))
+    }
+}
+
+/// Candidate tile sizes: multiples of 8 on a coarse ladder + the full dim.
+fn candidates(dim: u64) -> Vec<u64> {
+    let ladder = [
+        8u64, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048, 3072,
+        4096, 8192,
+    ];
+    let mut v: Vec<u64> = ladder.iter().copied().filter(|&t| t < dim).collect();
+    v.push(dim);
+    v
+}
+
+/// Per-operand off-chip traffic (bytes) for a tiling of GEMM (M, K, N).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrafficParts {
+    pub input: u64,
+    pub weight: u64,
+    pub psum: u64,
+    pub output: u64,
+}
+
+impl TrafficParts {
+    pub fn total(&self) -> u64 {
+        self.input + self.weight + self.psum + self.output
+    }
+}
+
+/// Off-chip traffic split by operand; see [`traffic_bytes`].
+pub fn traffic_parts(m: u64, k: u64, n: u64, tm: u64, tk: u64, tn: u64) -> TrafficParts {
+    let nm = m.div_ceil(tm);
+    let nk = k.div_ceil(tk);
+    let nn = n.div_ceil(tn);
+    let in_bytes;
+    let w_bytes;
+    if nk == 1 {
+        // Output-stationary sweep with a resident strip: the better of
+        // keeping the input strip (loop n inner) or the weight strip
+        // (loop m inner) resident across the inner loop.
+        let in_if_m_outer = m * k; // input tile constant per mi
+        let w_if_m_outer = k * n * nm;
+        let in_if_n_outer = m * k * nn;
+        let w_if_n_outer = k * n;
+        if in_if_m_outer + w_if_m_outer <= in_if_n_outer + w_if_n_outer {
+            in_bytes = in_if_m_outer;
+            w_bytes = w_if_m_outer;
+        } else {
+            in_bytes = in_if_n_outer;
+            w_bytes = w_if_n_outer;
+        }
+    } else {
+        // K tiled: every (mi, ni) revisit reloads both operand tiles and
+        // round-trips int32 partial sums (nk - 1) times.
+        in_bytes = m * k * nn;
+        w_bytes = k * n * nm;
+    }
+    let psum_spill = if nk > 1 { 2 * 4 * m * n * (nk - 1) } else { 0 };
+    TrafficParts {
+        input: in_bytes,
+        weight: w_bytes,
+        psum: psum_spill,
+        output: m * n, // final int8 results
+    }
+}
+
+/// Off-chip traffic (bytes) for a tiling of GEMM (M, K, N), INT8 in/out,
+/// INT32 spilled partial sums. See DESIGN.md §7 for the reuse model.
+pub fn traffic_bytes(m: u64, k: u64, n: u64, tm: u64, tk: u64, tn: u64) -> u64 {
+    traffic_parts(m, k, n, tm, tk, tn).total()
+}
+
+/// Tile residency footprint in bytes (INT8 operands, INT32 psums).
+pub fn footprint(tm: u64, tk: u64, tn: u64, k_tiled: bool, double_buffer: bool) -> Footprint {
+    let db = if double_buffer { 2 } else { 1 };
+    Footprint {
+        input: (tm * tk) as usize * db,
+        weight: (tk * tn) as usize * db,
+        psum: if k_tiled { (4 * tm * tn) as usize } else { 0 },
+        output: (tm * tn) as usize,
+    }
+}
+
+/// Choose the minimum-traffic tiling that fits the memory organisation.
+///
+/// Preference order: less traffic, then larger `tk` (deeper
+/// output-stationary accumulation — the chip's own bias, Fig. 7d), then
+/// fewer tiles.
+pub fn choose_tiling(cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
+    // Tiles must not under-fill the spatial array: a tile narrower than
+    // the array's unroll wastes lanes in *every* cycle, which no mapper
+    // would choose. (Unless the layer dimension itself is smaller.)
+    let (am, an) = match cfg.array {
+        ArrayGeometry::Spatial3D { m, n, .. } => (m as u64, n as u64),
+        ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64),
+    };
+    let tm_min = am.min(m);
+    let tn_min = an.min(n);
+    let mut best: Option<Tiling> = None;
+    for &tk in &candidates(k) {
+        for &tm in &candidates(m) {
+            if tm < tm_min {
+                continue;
+            }
+            for &tn in &candidates(n) {
+                if tn < tn_min {
+                    continue;
+                }
+                let k_tiled = tk < k;
+                // Try double-buffered first (overlap), fall back to single.
+                for db in [cfg.double_buffer, false] {
+                    let fp = footprint(tm, tk, tn, k_tiled, db);
+                    if !fits(&cfg.memory, &fp) {
+                        continue;
+                    }
+                    let traffic = traffic_bytes(m, k, n, tm, tk, tn);
+                    let ntiles = m.div_ceil(tm) * k.div_ceil(tk) * n.div_ceil(tn);
+                    let cand = Tiling {
+                        tm,
+                        tk,
+                        tn,
+                        traffic_bytes: traffic,
+                        double_buffered: db,
+                        footprint: fp,
+                        placement: place(&cfg.memory, &fp).unwrap(),
+                    };
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            let b_tiles = m.div_ceil(b.tm) * k.div_ceil(b.tk) * n.div_ceil(b.tn);
+                            // Less traffic, then keep the DMA overlapped
+                            // (double buffering hides the whole transfer),
+                            // then fewer tile launches, then deeper K.
+                            (traffic, std::cmp::Reverse(db), ntiles, std::cmp::Reverse(tk))
+                                < (b.traffic_bytes, std::cmp::Reverse(b.double_buffered),
+                                   b_tiles, std::cmp::Reverse(b.tk))
+                        }
+                    };
+                    if better {
+                        best = Some(cand);
+                    }
+                    break; // db=true fit; no need to try single-buffered
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Lower bound on traffic: every operand moved exactly once.
+pub fn compulsory_traffic(m: u64, k: u64, n: u64) -> u64 {
+    m * k + k * n + m * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn small_layer_runs_untiled() {
+        let cfg = ChipConfig::voltra();
+        let t = choose_tiling(&cfg, 96, 96, 96).unwrap();
+        assert_eq!((t.tm, t.tk, t.tn), (96, 96, 96));
+        assert_eq!(t.traffic_bytes, compulsory_traffic(96, 96, 96));
+        assert!(t.double_buffered);
+    }
+
+    #[test]
+    fn traffic_never_below_compulsory() {
+        for (m, k, n) in [(64, 64, 64), (3136, 576, 64), (512, 768, 768), (1, 3072, 8192)] {
+            for tm in [8u64, 64] {
+                for tk in [8u64, 64] {
+                    for tn in [8u64, 64] {
+                        assert!(
+                            traffic_bytes(m, k, n, tm.min(m), tk.min(k), tn.min(n))
+                                >= compulsory_traffic(m, k, n),
+                            "m={m} k={k} n={n}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_beats_separated_on_traffic() {
+        // A big BERT-ish GEMM: PDMA should find a lower-traffic tiling.
+        let shared = choose_tiling(&ChipConfig::voltra(), 512, 768, 3072).unwrap();
+        let sep = choose_tiling(&ChipConfig::separated_memory(), 512, 768, 3072).unwrap();
+        assert!(
+            shared.traffic_bytes <= sep.traffic_bytes,
+            "shared {} vs separated {}",
+            shared.traffic_bytes,
+            sep.traffic_bytes
+        );
+    }
+
+    #[test]
+    fn footprint_fits_memory() {
+        let cfg = ChipConfig::voltra();
+        let t = choose_tiling(&cfg, 3136, 576, 256).unwrap();
+        assert!(t.footprint.total() <= 128 * 1024);
+    }
+
+    #[test]
+    fn k_tiling_adds_psum_buffer() {
+        let fp = footprint(64, 64, 64, true, false);
+        assert_eq!(fp.psum, 4 * 64 * 64);
+        let fp2 = footprint(64, 64, 64, false, false);
+        assert_eq!(fp2.psum, 0);
+    }
+
+    #[test]
+    fn tiny_gemv_tiles_trivially() {
+        let cfg = ChipConfig::voltra();
+        let t = choose_tiling(&cfg, 1, 3072, 3072).unwrap();
+        assert!(t.tm == 1);
+        assert!(t.traffic_bytes < 2 * compulsory_traffic(1, 3072, 3072));
+    }
+
+    #[test]
+    fn huge_layer_still_tiles() {
+        // ResNet50 conv2_x-ish: M = 3136, K = 576, N = 64.
+        let cfg = ChipConfig::voltra();
+        let t = choose_tiling(&cfg, 3136, 576, 64).unwrap();
+        let (nm, nk, nn) = t.rounds(3136, 576, 64);
+        assert!(nm * nk * nn > 1);
+        assert!(t.footprint.total() <= 128 * 1024);
+    }
+}

@@ -1,0 +1,8 @@
+//! Tiling & on-chip memory allocation: the PDMA mechanism (Sec. II-C)
+//! and the layer-wise tiling engine (Sec. III-A).
+
+pub mod allocator;
+pub mod engine;
+
+pub use allocator::{fits, place, Footprint, Operand, Placement};
+pub use engine::{choose_tiling, compulsory_traffic, traffic_bytes, Tiling};

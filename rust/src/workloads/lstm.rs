@@ -1,0 +1,82 @@
+//! Two-layer edge LSTM (hidden 128, batch 32, 128 time steps): the RNN
+//! of Fig. 6 (workload 5). The recurrent weight matrices (64 KiB per
+//! projection) fit on chip under PDMA and stay resident across all 128
+//! steps, while a fixed separated weight buffer must re-stream them —
+//! the mechanism behind the Fig. 6c latency gap on recurrent nets.
+
+use crate::workloads::layer::{Layer, LayerKind, Workload};
+
+pub const BATCH: u64 = 64;
+pub const HIDDEN: u64 = 128;
+pub const INPUT: u64 = 64;
+pub const STEPS: u64 = 128;
+pub const LAYERS: u64 = 2;
+
+pub fn lstm() -> Workload {
+    let mut layers = Vec::new();
+    for l in 0..LAYERS {
+        let k_x = if l == 0 { INPUT } else { HIDDEN };
+        // Per time step: gates = x @ Wx + h @ Wh (accumulated on-chip by
+        // the psum streamer), N = 4 * hidden gate columns.
+        layers.push(
+            Layer::new(
+                format!("l{l}_x_gates"),
+                LayerKind::Gemm {
+                    m: BATCH,
+                    k: k_x,
+                    n: 4 * HIDDEN,
+                },
+            )
+            .repeated(STEPS),
+        );
+        layers.push(
+            Layer::new(
+                format!("l{l}_h_gates"),
+                LayerKind::Gemm {
+                    m: BATCH,
+                    k: HIDDEN,
+                    n: 4 * HIDDEN,
+                },
+            )
+            .repeated(STEPS),
+        );
+    }
+    layers.push(Layer::new(
+        "fc",
+        LayerKind::Gemm {
+            m: BATCH,
+            k: HIDDEN,
+            n: 1000,
+        },
+    ));
+    Workload::new("LSTM", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recurrence_repeats_per_step() {
+        let w = lstm();
+        let g = w.layers[0].gemms()[0];
+        assert_eq!(g.repeat, STEPS);
+        assert_eq!(g.m, BATCH);
+        assert_eq!(g.n, 4 * HIDDEN);
+    }
+
+    #[test]
+    fn mac_count() {
+        // 2 layers x 128 steps x 8 x (k + 512) x 2048 MACs.
+        let w = lstm();
+        let expected: u64 = STEPS * BATCH * 4 * HIDDEN * (INPUT + HIDDEN)
+            + STEPS * BATCH * 4 * HIDDEN * (HIDDEN + HIDDEN)
+            + BATCH * HIDDEN * 1000;
+        assert_eq!(w.total_macs(), expected);
+    }
+
+    #[test]
+    fn batch_fits_3d_m_axis() {
+        assert_eq!(BATCH % 8, 0);
+    }
+}

@@ -1,0 +1,127 @@
+//! MobileNetV2 (224x224, batch 1): the skinny-channel CNN whose
+//! pointwise/depthwise mix stresses spatial utilization (Fig. 6 workload
+//! 1 — depthwise layers are the worst case for wide arrays).
+
+use crate::workloads::layer::{Layer, LayerKind, Workload};
+
+fn conv(name: String, h: u64, cin: u64, cout: u64, k: u64, s: u64) -> Layer {
+    Layer::new(
+        name,
+        LayerKind::Conv2d {
+            h,
+            w: h,
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride: s,
+        },
+    )
+}
+
+fn dw(name: String, h: u64, c: u64, s: u64) -> Layer {
+    Layer::new(
+        name,
+        LayerKind::DepthwiseConv {
+            h,
+            w: h,
+            c,
+            kh: 3,
+            kw: 3,
+            stride: s,
+        },
+    )
+}
+
+/// Inverted residual: 1x1 expand (t*cin), 3x3 depthwise, 1x1 project.
+fn inverted_residual(
+    layers: &mut Vec<Layer>,
+    id: String,
+    h: u64,
+    cin: u64,
+    cout: u64,
+    t: u64,
+    s: u64,
+) -> u64 {
+    let cexp = cin * t;
+    if t != 1 {
+        layers.push(conv(format!("{id}_expand"), h, cin, cexp, 1, 1));
+    }
+    layers.push(dw(format!("{id}_dw"), h, cexp, s));
+    let h2 = h.div_ceil(s);
+    layers.push(conv(format!("{id}_project"), h2, cexp, cout, 1, 1));
+    h2
+}
+
+pub fn mobilenetv2() -> Workload {
+    let mut layers = Vec::new();
+    layers.push(conv("conv0".into(), 224, 3, 32, 3, 2));
+    // (expansion t, cout, repeats n, stride s) — the paper's Table 2.
+    let cfg: [(u64, u64, u64, u64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut h = 112;
+    let mut cin = 32;
+    for (bi, (t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..*n {
+            let stride = if r == 0 { *s } else { 1 };
+            h = inverted_residual(
+                &mut layers,
+                format!("block{bi}_{r}"),
+                h,
+                cin,
+                *c,
+                *t,
+                stride,
+            );
+            cin = *c;
+        }
+    }
+    layers.push(conv("conv_last".into(), 7, 320, 1280, 1, 1));
+    layers.push(Layer::new("fc", LayerKind::Gemm { m: 1, k: 1280, n: 1000 }));
+    Workload::new("MobileNetV2", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_count_is_about_300_mflops() {
+        // Published MobileNetV2: ~300 MMACs.
+        let w = mobilenetv2();
+        let m = w.total_macs() as f64 / 1e6;
+        assert!((250.0..420.0).contains(&m), "expected ~300 MMACs, got {m:.0}");
+    }
+
+    #[test]
+    fn has_depthwise_gemvs() {
+        let w = mobilenetv2();
+        let dw_gemms: Vec<_> = w
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::DepthwiseConv { .. }))
+            .collect();
+        assert_eq!(dw_gemms.len(), 17, "one depthwise per inverted residual");
+        for l in dw_gemms {
+            assert_eq!(l.gemms()[0].n, 1);
+        }
+    }
+
+    #[test]
+    fn final_resolution_is_7x7() {
+        let w = mobilenetv2();
+        let last = w
+            .layers
+            .iter()
+            .find(|l| l.name == "conv_last")
+            .unwrap();
+        assert_eq!(last.gemms()[0].m, 49);
+    }
+}

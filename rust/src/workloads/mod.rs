@@ -1,0 +1,93 @@
+//! The workload zoo of Fig. 6: eight networks spanning CNN, point-cloud,
+//! RNN and transformer families, defined layer-by-layer with their real
+//! published geometries.
+
+pub mod im2col;
+pub mod layer;
+pub mod lstm;
+pub mod mobilenetv2;
+pub mod pointnext;
+pub mod resnet50;
+pub mod transformers;
+
+pub use layer::{GemmOp, Layer, LayerKind, Workload};
+
+/// The eight evaluation workloads in the paper's Fig. 6 order:
+/// MobileNetV2 (1), ResNet50 (2), ViT-B (3), PointNeXt (4), LSTM (5),
+/// BERT-Base T=512 (6), LLaMA3.2-3B prefill T=256 (7), decode (8).
+pub fn evaluation_suite() -> Vec<Workload> {
+    vec![
+        mobilenetv2::mobilenetv2(),
+        resnet50::resnet50(),
+        transformers::vit_b(),
+        pointnext::pointnext_s(),
+        lstm::lstm(),
+        transformers::bert_base(512),
+        transformers::llama_prefill(256),
+        transformers::llama_decode(256, 6),
+    ]
+}
+
+/// Look a workload up by a CLI-friendly name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    let n = name.to_ascii_lowercase();
+    Some(match n.as_str() {
+        "mobilenetv2" | "mobilenet" => mobilenetv2::mobilenetv2(),
+        "resnet50" | "resnet" => resnet50::resnet50(),
+        "vit" | "vit-b" | "vitb" => transformers::vit_b(),
+        "pointnext" => pointnext::pointnext_s(),
+        "lstm" => lstm::lstm(),
+        "bert" | "bert-base" => transformers::bert_base(512),
+        "llama-prefill" | "prefill" => transformers::llama_prefill(256),
+        "llama-decode" | "decode" => transformers::llama_decode(256, 6),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_eight_workloads_in_paper_order() {
+        let s = evaluation_suite();
+        let names: Vec<&str> = s.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "MobileNetV2",
+                "ResNet50",
+                "ViT-B",
+                "PointNeXt",
+                "LSTM",
+                "BERT-Base",
+                "LLaMA3.2-3B-prefill",
+                "LLaMA3.2-3B-decode",
+            ]
+        );
+    }
+
+    #[test]
+    fn every_workload_has_nonzero_macs() {
+        for w in evaluation_suite() {
+            assert!(w.total_macs() > 0, "{} has no MACs", w.name);
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in [
+            "mobilenetv2",
+            "resnet50",
+            "vit",
+            "pointnext",
+            "lstm",
+            "bert",
+            "llama-prefill",
+            "llama-decode",
+        ] {
+            assert!(by_name(n).is_some(), "{n} not resolvable");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,114 @@
+//! ResNet-50 (224x224, batch 1): the canonical CNN of Fig. 1c / Fig. 6.
+
+use crate::workloads::layer::{Layer, LayerKind, Workload};
+
+fn conv(name: &str, h: u64, w: u64, cin: u64, cout: u64, k: u64, s: u64) -> Layer {
+    Layer::new(
+        name,
+        LayerKind::Conv2d {
+            h,
+            w,
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride: s,
+        },
+    )
+}
+
+/// One bottleneck block: 1x1 reduce, 3x3, 1x1 expand (+ projection on the
+/// first block of a stage).
+fn bottleneck(
+    layers: &mut Vec<Layer>,
+    stage: &str,
+    idx: u64,
+    h: u64,
+    cin: u64,
+    cmid: u64,
+    cout: u64,
+    stride: u64,
+) {
+    let name = |p: &str| format!("{stage}_{idx}_{p}");
+    layers.push(conv(&name("1x1a"), h, h, cin, cmid, 1, 1));
+    let h2 = h.div_ceil(stride);
+    layers.push(conv(&name("3x3"), h, h, cmid, cmid, 3, stride));
+    layers.push(conv(&name("1x1b"), h2, h2, cmid, cout, 1, 1));
+    if idx == 0 {
+        layers.push(conv(&name("proj"), h, h, cin, cout, 1, stride));
+    }
+}
+
+pub fn resnet50() -> Workload {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", 224, 224, 3, 64, 7, 2));
+    layers.push(Layer::new(
+        "pool1",
+        LayerKind::Pool {
+            h: 112,
+            w: 112,
+            c: 64,
+            window: 3,
+            stride: 2,
+        },
+    ));
+    // (stage, blocks, h_in, cin, cmid, cout, stride of first block)
+    let stages: [(&str, u64, u64, u64, u64, u64, u64); 4] = [
+        ("conv2", 3, 56, 64, 64, 256, 1),
+        ("conv3", 4, 56, 256, 128, 512, 2),
+        ("conv4", 6, 28, 512, 256, 1024, 2),
+        ("conv5", 3, 14, 1024, 512, 2048, 2),
+    ];
+    for (name, blocks, h_in, cin, cmid, cout, s0) in stages {
+        let mut h = h_in;
+        let mut ci = cin;
+        for b in 0..blocks {
+            let s = if b == 0 { s0 } else { 1 };
+            bottleneck(&mut layers, name, b, h, ci, cmid, cout, s);
+            h = h.div_ceil(s);
+            ci = cout;
+        }
+    }
+    layers.push(Layer::new("fc", LayerKind::Gemm { m: 1, k: 2048, n: 1000 }));
+    Workload::new("ResNet50", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_count_is_about_4_gflops() {
+        // Published ResNet-50: ~4.1 GMACs (2 ops each).
+        let w = resnet50();
+        let g = w.total_macs() as f64 / 1e9;
+        assert!(
+            (3.4..4.6).contains(&g),
+            "expected ~3.8-4.1 GMACs, got {g:.2}"
+        );
+    }
+
+    #[test]
+    fn layer_count_is_resnet50_shaped() {
+        let w = resnet50();
+        // 1 stem + pool + 16 bottlenecks x 3 conv + 4 projections + fc.
+        assert_eq!(
+            w.layers.len(),
+            1 + 1 + 16 * 3 + 4 + 1,
+            "layer inventory changed"
+        );
+    }
+
+    #[test]
+    fn spatial_dims_chain() {
+        // Last stage convs must be at 7x7 resolution: their gemm M = 49.
+        let w = resnet50();
+        let last_conv = w
+            .layers
+            .iter()
+            .rev()
+            .find(|l| l.name.starts_with("conv5"))
+            .unwrap();
+        assert_eq!(last_conv.gemms()[0].m, 49);
+    }
+}

@@ -1,0 +1,154 @@
+//! Transformer workloads of Fig. 6: ViT-B/16, BERT-Base (T=512) and
+//! LLaMA3.2-3B prefill (T=256) / decode.
+//!
+//! Decode note (DESIGN.md substitution log): the paper measures the
+//! decode stage where "a lot of GEMV operations occur" at 69.71% spatial
+//! utilization. A strictly single-stream decode is pure GEMV (M=1) and
+//! would sit at 12.5% on *any* 512-MAC array; the reported number implies
+//! a small serving batch. We model decode as a 6-way batched step (a
+//! realistic edge-serving batch), which lands the projections at M=6
+//! (75% fill on the 8-wide M axis) plus per-sequence M=1 attention — the
+//! combination reproduces the ~0.7 utilization and the ~2x gap to the 2D
+//! baseline.
+
+use crate::workloads::layer::{Layer, LayerKind, Workload};
+
+fn gemm(name: impl Into<String>, m: u64, k: u64, n: u64) -> Layer {
+    Layer::new(name, LayerKind::Gemm { m, k, n })
+}
+
+fn bmm(name: impl Into<String>, batch: u64, m: u64, k: u64, n: u64) -> Layer {
+    Layer::new(name, LayerKind::BatchedMatmul { batch, m, k, n })
+}
+
+/// One encoder block: fused QKV, per-head attention, projection, MLP.
+fn encoder_block(
+    layers: &mut Vec<Layer>,
+    prefix: &str,
+    t: u64,
+    d: u64,
+    heads: u64,
+    d_ff: u64,
+    repeat: u64,
+) {
+    let dh = d / heads;
+    layers.push(gemm(format!("{prefix}_qkv"), t, d, 3 * d).repeated(repeat));
+    layers.push(bmm(format!("{prefix}_scores"), heads, t, dh, t).repeated(repeat));
+    layers.push(bmm(format!("{prefix}_context"), heads, t, t, dh).repeated(repeat));
+    layers.push(gemm(format!("{prefix}_proj"), t, d, d).repeated(repeat));
+    layers.push(gemm(format!("{prefix}_mlp_up"), t, d, d_ff).repeated(repeat));
+    layers.push(gemm(format!("{prefix}_mlp_down"), t, d_ff, d).repeated(repeat));
+}
+
+/// ViT-B/16 at 224x224: 196 patch tokens + CLS = 197; 12 blocks, d=768.
+pub fn vit_b() -> Workload {
+    let mut layers = Vec::new();
+    // Patch embedding: a 16x16/16 conv == GEMM (196, 768, 768).
+    layers.push(gemm("patch_embed", 196, 16 * 16 * 3, 768));
+    encoder_block(&mut layers, "enc", 197, 768, 12, 3072, 12);
+    layers.push(gemm("head", 1, 768, 1000));
+    Workload::new("ViT-B", layers)
+}
+
+/// BERT-Base, input token size 512 (Fig. 6 workload 6).
+pub fn bert_base(t: u64) -> Workload {
+    let mut layers = Vec::new();
+    encoder_block(&mut layers, "enc", t, 768, 12, 3072, 12);
+    Workload::new("BERT-Base", layers)
+}
+
+/// LLaMA3.2-3B geometry: 28 layers, d=3072, 24 Q heads / 8 KV heads
+/// (GQA), head dim 128, FFN 8192 (SwiGLU: gate+up+down).
+const LLAMA_LAYERS: u64 = 28;
+const LLAMA_D: u64 = 3072;
+const LLAMA_QH: u64 = 24;
+const LLAMA_KVH: u64 = 8;
+const LLAMA_DH: u64 = 128;
+const LLAMA_FF: u64 = 8192;
+
+/// Prefill stage, input token size 256 (Fig. 6 workload 7).
+pub fn llama_prefill(t: u64) -> Workload {
+    let mut layers = Vec::new();
+    let kv = LLAMA_KVH * LLAMA_DH;
+    layers.push(gemm("q_proj", t, LLAMA_D, LLAMA_QH * LLAMA_DH).repeated(LLAMA_LAYERS));
+    layers.push(gemm("kv_proj", t, LLAMA_D, 2 * kv).repeated(LLAMA_LAYERS));
+    layers.push(bmm("scores", LLAMA_QH, t, LLAMA_DH, t).repeated(LLAMA_LAYERS));
+    layers.push(bmm("context", LLAMA_QH, t, t, LLAMA_DH).repeated(LLAMA_LAYERS));
+    layers.push(gemm("o_proj", t, LLAMA_QH * LLAMA_DH, LLAMA_D).repeated(LLAMA_LAYERS));
+    layers.push(gemm("gate_up", t, LLAMA_D, 2 * LLAMA_FF).repeated(LLAMA_LAYERS));
+    layers.push(gemm("ffn_down", t, LLAMA_FF, LLAMA_D).repeated(LLAMA_LAYERS));
+    Workload::new("LLaMA3.2-3B-prefill", layers)
+}
+
+/// Decode stage with context length `t` and serving batch `batch`
+/// (see module doc): one generated token per sequence.
+pub fn llama_decode(t: u64, batch: u64) -> Workload {
+    let mut layers = Vec::new();
+    let kv = LLAMA_KVH * LLAMA_DH;
+    let b = batch;
+    layers.push(gemm("q_proj", b, LLAMA_D, LLAMA_QH * LLAMA_DH).repeated(LLAMA_LAYERS));
+    layers.push(gemm("kv_proj", b, LLAMA_D, 2 * kv).repeated(LLAMA_LAYERS));
+    // Attention against the KV cache is strictly per-sequence GEMV:
+    // q (1 x dh) x K^T (dh x t), then scores (1 x t) x V (t x dh).
+    layers.push(bmm("scores", b * LLAMA_QH, 1, LLAMA_DH, t).repeated(LLAMA_LAYERS));
+    layers.push(bmm("context", b * LLAMA_QH, 1, t, LLAMA_DH).repeated(LLAMA_LAYERS));
+    layers.push(gemm("o_proj", b, LLAMA_QH * LLAMA_DH, LLAMA_D).repeated(LLAMA_LAYERS));
+    layers.push(gemm("gate_up", b, LLAMA_D, 2 * LLAMA_FF).repeated(LLAMA_LAYERS));
+    layers.push(gemm("ffn_down", b, LLAMA_FF, LLAMA_D).repeated(LLAMA_LAYERS));
+    Workload::new("LLaMA3.2-3B-decode", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_macs_are_about_17g() {
+        // Published ViT-B/16: ~17.6 GMACs at 224x224.
+        let g = vit_b().total_macs() as f64 / 1e9;
+        assert!((15.0..20.0).contains(&g), "got {g:.1} GMACs");
+    }
+
+    #[test]
+    fn bert_macs_scale_with_tokens() {
+        let m512 = bert_base(512).total_macs();
+        let m64 = bert_base(64).total_macs();
+        assert!(m512 > m64 * 7, "quadratic attention term should show");
+    }
+
+    #[test]
+    fn llama_prefill_macs() {
+        // 3B params, 256 tokens: >= 2 * 256 * 3e9 MACs on projections
+        // alone is the wrong metric (GQA shrinks KV); sanity-band check.
+        let g = llama_prefill(256).total_macs() as f64 / 1e9;
+        assert!((500.0..900.0).contains(&g), "got {g:.0} GMACs");
+    }
+
+    #[test]
+    fn decode_is_gemv_heavy() {
+        let w = llama_decode(256, 6);
+        let attn_macs: u64 = w
+            .layers
+            .iter()
+            .filter(|l| l.name.contains("scores") || l.name.contains("context"))
+            .map(|l| l.macs())
+            .sum();
+        let m1_ops: u64 = w
+            .layers
+            .iter()
+            .flat_map(|l| l.gemms())
+            .filter(|g| g.m == 1)
+            .map(|g| g.repeat)
+            .sum();
+        assert!(attn_macs > 0);
+        // 2 GEMVs per head per layer x 6 sequences x 24 heads x 28 layers.
+        assert_eq!(m1_ops, 2 * 6 * 24 * 28);
+    }
+
+    #[test]
+    fn decode_projections_are_batch_6() {
+        let w = llama_decode(256, 6);
+        let q = w.layers.iter().find(|l| l.name == "q_proj").unwrap();
+        assert_eq!(q.gemms()[0].m, 6);
+    }
+}

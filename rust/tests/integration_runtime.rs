@@ -1,0 +1,221 @@
+//! Runtime integration: every AOT artifact executed through PJRT and
+//! checked against host oracles. Requires `make artifacts` to have run
+//! (the Makefile's `test` target guarantees it); tests are skipped with
+//! a notice when the artifact directory is absent.
+
+use voltra::runtime::{default_dir, gemm_ref, gemm_tiled, requant_ref, ArtifactLib, MatI32};
+
+fn lib() -> Option<ArtifactLib> {
+    match ArtifactLib::load(default_dir()) {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+struct Rng(u64);
+impl Rng {
+    fn next_i8(&mut self) -> i32 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        ((z ^ (z >> 31)) % 255) as i32 - 127
+    }
+    fn mat(&mut self, r: usize, c: usize) -> MatI32 {
+        MatI32::from_fn(r, c, |_, _| self.next_i8())
+    }
+}
+
+fn lit(m: &MatI32) -> xla::Literal {
+    xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .unwrap()
+}
+
+#[test]
+fn manifest_covers_all_entry_points() {
+    let Some(lib) = lib() else { return };
+    let names = lib.names();
+    for expected in [
+        "gemm8",
+        "gemm64",
+        "gemm96",
+        "gemm_ragged",
+        "conv3x3",
+        "conv3x3s2",
+        "mha64",
+        "lstm64",
+        "maxpool2x2",
+    ] {
+        assert!(names.contains(&expected), "missing artifact {expected}");
+    }
+}
+
+#[test]
+fn gemm_artifacts_are_bit_exact() {
+    let Some(mut lib) = lib() else { return };
+    let mut rng = Rng(1);
+    for (name, m, k, n) in [
+        ("gemm8", 8, 8, 8),
+        ("gemm64", 64, 64, 64),
+        ("gemm96", 96, 96, 96),
+        ("gemm_ragged", 40, 64, 64),
+    ] {
+        let x = rng.mat(m, k);
+        let w = rng.mat(k, n);
+        let p = rng.mat(m, n);
+        let outs = lib
+            .run(name, &[lit(&x), lit(&w), lit(&p), xla::Literal::vec1(&[0.01f32])])
+            .unwrap();
+        let acc = outs[1].to_vec::<i32>().unwrap();
+        let expect = gemm_ref(&x, &w, &p);
+        assert_eq!(acc, expect.data, "{name}: accumulator mismatch");
+        let q = outs[0].to_vec::<i32>().unwrap();
+        let q_expect = requant_ref(&expect, 0.01);
+        assert_eq!(q, q_expect.data, "{name}: requant mismatch");
+    }
+}
+
+#[test]
+fn signature_validation_rejects_bad_inputs() {
+    let Some(mut lib) = lib() else { return };
+    let bad = MatI32::zeros(7, 8);
+    let err = match lib.run("gemm8", &[lit(&bad)]) {
+        Ok(_) => panic!("wrong arity must fail"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("expected 4 inputs"));
+    let err2 = match lib.run(
+        "gemm8",
+        &[
+            lit(&bad),
+            lit(&MatI32::zeros(8, 8)),
+            lit(&MatI32::zeros(8, 8)),
+            xla::Literal::vec1(&[1.0f32]),
+        ],
+    ) {
+        Ok(_) => panic!("wrong shape must fail"),
+        Err(e) => e,
+    };
+    assert!(format!("{err2}").contains("elements"));
+}
+
+#[test]
+fn conv_artifact_matches_direct_convolution() {
+    let Some(mut lib) = lib() else { return };
+    let mut rng = Rng(3);
+    // conv3x3: x (1,8,8,16), w (3,3,16,16), SAME stride 1.
+    let x: Vec<i32> = (0..8 * 8 * 16).map(|_| rng.next_i8()).collect();
+    let w: Vec<i32> = (0..3 * 3 * 16 * 16).map(|_| rng.next_i8()).collect();
+    let scale = 0.01f32;
+    let outs = lib
+        .run(
+            "conv3x3",
+            &[
+                xla::Literal::vec1(&x).reshape(&[1, 8, 8, 16]).unwrap(),
+                xla::Literal::vec1(&w).reshape(&[3, 3, 16, 16]).unwrap(),
+                xla::Literal::vec1(&[scale]),
+            ],
+        )
+        .unwrap();
+    let got = outs[0].to_vec::<i32>().unwrap();
+
+    // Host direct convolution (SAME padding).
+    let mut expect = vec![0i32; 8 * 8 * 16];
+    for oy in 0..8i32 {
+        for ox in 0..8i32 {
+            for f in 0..16usize {
+                let mut acc: i64 = 0;
+                for dy in 0..3i32 {
+                    for dx in 0..3i32 {
+                        let iy = oy + dy - 1;
+                        let ix = ox + dx - 1;
+                        if iy < 0 || iy >= 8 || ix < 0 || ix >= 8 {
+                            continue;
+                        }
+                        for c in 0..16usize {
+                            let xv = x[((iy * 8 + ix) as usize) * 16 + c] as i64;
+                            let wv =
+                                w[(((dy * 3 + dx) as usize) * 16 + c) * 16 + f] as i64;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                let q = (acc as f32 * scale).round_ties_even().clamp(-128.0, 127.0);
+                expect[((oy * 8 + ox) as usize) * 16 + f] = q as i32;
+            }
+        }
+    }
+    assert_eq!(got, expect, "conv3x3 artifact vs direct convolution");
+}
+
+#[test]
+fn maxpool_artifact_matches_host_model() {
+    let Some(mut lib) = lib() else { return };
+    let mut rng = Rng(5);
+    let x: Vec<i32> = (0..8 * 8 * 16).map(|_| rng.next_i8()).collect();
+    let outs = lib
+        .run(
+            "maxpool2x2",
+            &[xla::Literal::vec1(&x).reshape(&[1, 8, 8, 16]).unwrap()],
+        )
+        .unwrap();
+    let got = outs[0].to_vec::<i32>().unwrap();
+    // Host: maxpool via the simulator's functional unit.
+    let xi8: Vec<i8> = x.iter().map(|&v| v as i8).collect();
+    let (pooled, ph, pw) = voltra::sim::maxpool::maxpool_hwc(&xi8, 8, 8, 16, 2, 2);
+    assert_eq!((ph, pw), (4, 4));
+    let expect: Vec<i32> = pooled.iter().map(|&v| v as i32).collect();
+    assert_eq!(got, expect);
+}
+
+#[test]
+fn lstm_artifact_produces_bounded_state() {
+    let Some(mut lib) = lib() else { return };
+    let mut rng = Rng(9);
+    let b = 8usize;
+    let hidden = 64usize;
+    let x = rng.mat(b, hidden);
+    let h = rng.mat(b, hidden);
+    let c = vec![0f32; b * hidden];
+    let wx = rng.mat(hidden, 4 * hidden);
+    let wh = rng.mat(hidden, 4 * hidden);
+    let bias = vec![0f32; 4 * hidden];
+    let outs = lib
+        .run(
+            "lstm64",
+            &[
+                lit(&x),
+                lit(&h),
+                xla::Literal::vec1(&c).reshape(&[b as i64, hidden as i64]).unwrap(),
+                lit(&wx),
+                lit(&wh),
+                xla::Literal::vec1(&bias),
+                xla::Literal::vec1(&[0.0002f32]),
+            ],
+        )
+        .unwrap();
+    let hq = outs[0].to_vec::<i32>().unwrap();
+    let cn = outs[1].to_vec::<f32>().unwrap();
+    assert!(hq.iter().all(|&v| (-128..=127).contains(&v)));
+    // |c_1| <= |c_0| + 1 = 1 elementwise.
+    assert!(cn.iter().all(|&v| v.abs() <= 1.0 + 1e-5));
+}
+
+#[test]
+fn tiled_executor_handles_ragged_shapes() {
+    let Some(mut lib) = lib() else { return };
+    let mut rng = Rng(11);
+    for (m, k, n) in [(1, 100, 10), (65, 64, 63), (130, 200, 70)] {
+        let x = rng.mat(m, k);
+        let w = rng.mat(k, n);
+        let p = rng.mat(m, n);
+        let (q, acc) = gemm_tiled(&mut lib, &x, &w, &p, 0.002).unwrap();
+        let expect = gemm_ref(&x, &w, &p);
+        assert_eq!(acc, expect, "{m}x{k}x{n}");
+        assert_eq!(q, requant_ref(&expect, 0.002), "{m}x{k}x{n} quant");
+    }
+}

@@ -1,0 +1,67 @@
+//! End-to-end serving test: client threads talk to the single-threaded
+//! coordinator server over a real TCP socket; responses carry both the
+//! PJRT-computed checksum and the chip model's cost estimate.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::server::{bind, serve_blocking};
+use voltra::runtime::{default_dir, ArtifactLib};
+
+#[test]
+fn serves_gemm_requests_over_tcp() {
+    let lib = match ArtifactLib::load(default_dir()) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            return;
+        }
+    };
+    let listener = bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // Client on its own thread (the PJRT side must stay on this one).
+    let client = std::thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut responses = Vec::new();
+        for req in [
+            "GEMM 64 64 64 1",
+            "GEMM 96 96 96 2",
+            "GEMM 64 64 64 1", // identical request -> identical checksum
+            "GEMM 0 0 0 0",    // must be rejected
+            "NONSENSE",
+            "QUIT",
+        ] {
+            writeln!(conn, "{req}").unwrap();
+            if req == "QUIT" {
+                break;
+            }
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            responses.push(line.trim().to_string());
+        }
+        responses
+    });
+
+    let cfg = ChipConfig::voltra();
+    serve_blocking(lib, &cfg, listener, Some(1)).unwrap();
+    let responses = client.join().unwrap();
+
+    assert_eq!(responses.len(), 5);
+    assert!(responses[0].starts_with("OK checksum="), "{}", responses[0]);
+    assert!(responses[1].starts_with("OK checksum="), "{}", responses[1]);
+    // Determinism: same request, same checksum.
+    let checksum = |s: &str| {
+        s.split_whitespace()
+            .find_map(|t| t.strip_prefix("checksum="))
+            .map(str::to_string)
+    };
+    assert_eq!(checksum(&responses[0]), checksum(&responses[2]));
+    assert_ne!(checksum(&responses[0]), checksum(&responses[1]));
+    assert!(responses[3].starts_with("ERR"), "{}", responses[3]);
+    assert!(responses[4].starts_with("ERR"), "{}", responses[4]);
+    // The chip-model estimate rides along.
+    assert!(responses[0].contains("sim_cycles="));
+}

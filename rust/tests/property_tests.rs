@@ -1,0 +1,230 @@
+//! Property-based tests over the coordinator/simulator invariants.
+//!
+//! Substrate note (DESIGN.md): no property-testing crate is vendored in
+//! the build image, so this file carries its own SplitMix64-driven
+//! harness — hundreds of randomized cases per property, with the failing
+//! seed printed for reproduction.
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::{run_layer, TileCache};
+use voltra::sim::agu::{AffineAgu, LoopDim};
+use voltra::sim::engine::{simulate_tile, TileSpec};
+use voltra::sim::fifo::Fifo;
+use voltra::sim::simd::{requant_one, QuantParams};
+use voltra::tiling::engine::{choose_tiling, compulsory_traffic, traffic_bytes};
+use voltra::tiling::fits;
+use voltra::workloads::layer::{Layer, LayerKind};
+
+/// SplitMix64: tiny, deterministic, good-enough PRNG for case generation.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+#[test]
+fn prop_simulated_tiles_conserve_macs() {
+    let cfg = ChipConfig::voltra();
+    let mut rng = Rng(0xC0FFEE);
+    for case in 0..150 {
+        let tm = rng.range(1, 96);
+        let tk = rng.range(1, 256);
+        let tn = rng.range(1, 96);
+        let mut spec = TileSpec::simple(tm, tk, tn);
+        spec.psum_in = rng.next() % 2 == 0;
+        spec.spill_out = rng.next() % 2 == 0;
+        let m = simulate_tile(&cfg, &spec);
+        assert_eq!(
+            m.useful_macs,
+            tm * tk * tn,
+            "case {case}: tile {tm}x{tk}x{tn} (seed-reproducible)"
+        );
+        assert!(m.active_cycles <= m.total_cycles);
+        assert!(m.spatial_utilization() <= 1.0 + 1e-12);
+        assert!(m.temporal_utilization() <= 1.0 + 1e-12);
+    }
+}
+
+#[test]
+fn prop_prefetch_never_hurts() {
+    let with = ChipConfig::voltra();
+    let without = ChipConfig::no_prefetch();
+    let mut rng = Rng(0xBADC0DE);
+    for case in 0..60 {
+        let tm = rng.range(1, 12) * 8;
+        let tk = rng.range(1, 32) * 8;
+        let tn = rng.range(1, 12) * 8;
+        let spec = TileSpec::simple(tm, tk, tn);
+        let a = simulate_tile(&with, &spec);
+        let b = simulate_tile(&without, &spec);
+        // Tiny-K tiles can see a few cycles of extra arbitration noise
+        // from the run-ahead prefetcher; anything beyond 5% is a bug.
+        assert!(
+            a.total_cycles as f64 <= 1.05 * b.total_cycles as f64,
+            "case {case}: MGDP slower on {tm}x{tk}x{tn}: {} vs {}",
+            a.total_cycles,
+            b.total_cycles
+        );
+    }
+}
+
+#[test]
+fn prop_tiling_always_fits_and_meets_compulsory_bound() {
+    let mut rng = Rng(0x7117E);
+    for cfg in [ChipConfig::voltra(), ChipConfig::separated_memory()] {
+        for case in 0..120 {
+            let m = rng.range(1, 4096);
+            let k = rng.range(1, 8192);
+            let n = rng.range(1, 4096);
+            let t = choose_tiling(&cfg, m, k, n)
+                .unwrap_or_else(|| panic!("case {case}: no tiling for {m}x{k}x{n}"));
+            assert!(fits(&cfg.memory, &t.footprint), "case {case}");
+            assert!(
+                t.traffic_bytes >= compulsory_traffic(m, k, n),
+                "case {case}: traffic below compulsory"
+            );
+            assert!(t.tm <= m.max(8) && t.tk <= k.max(8) && t.tn <= n.max(8));
+        }
+    }
+}
+
+#[test]
+fn prop_traffic_monotone_in_tile_size_along_k() {
+    // Growing tk (deeper output-stationary accumulation) never increases
+    // traffic: fewer psum round-trips, fewer operand revisits.
+    let mut rng = Rng(0x5EED);
+    for case in 0..80 {
+        let m = rng.range(2, 64) * 8;
+        let k = rng.range(4, 128) * 8;
+        let n = rng.range(2, 64) * 8;
+        let tm = 64.min(m);
+        let tn = 64.min(n);
+        let tk_small = rng.range(1, k / 8 / 2).max(1) * 8;
+        let tk_big = (tk_small * 2).min(k);
+        let small = traffic_bytes(m, k, n, tm, tk_small, tn);
+        let big = traffic_bytes(m, k, n, tm, tk_big, tn);
+        assert!(
+            big <= small,
+            "case {case}: tk {tk_small}->{tk_big} raised traffic {small}->{big} (m={m} k={k} n={n})"
+        );
+    }
+}
+
+#[test]
+fn prop_layer_runner_matches_analytic_macs() {
+    let cfg = ChipConfig::voltra();
+    let mut rng = Rng(0xFACADE);
+    for case in 0..40 {
+        let layer = match rng.next() % 3 {
+            0 => Layer::new(
+                "g",
+                LayerKind::Gemm {
+                    m: rng.range(1, 512),
+                    k: rng.range(1, 1024),
+                    n: rng.range(1, 512),
+                },
+            ),
+            1 => Layer::new(
+                "c",
+                LayerKind::Conv2d {
+                    h: rng.range(4, 32),
+                    w: rng.range(4, 32),
+                    cin: rng.range(1, 64),
+                    cout: rng.range(1, 64),
+                    kh: 3,
+                    kw: 3,
+                    stride: rng.range(1, 2),
+                },
+            ),
+            _ => Layer::new(
+                "b",
+                LayerKind::BatchedMatmul {
+                    batch: rng.range(1, 8),
+                    m: rng.range(1, 128),
+                    k: rng.range(1, 128),
+                    n: rng.range(1, 128),
+                },
+            ),
+        };
+        let mut cache = TileCache::new();
+        let lm = run_layer(&cfg, &layer, &mut cache);
+        assert_eq!(lm.tiles.useful_macs, layer.macs(), "case {case}: {layer:?}");
+        assert!(lm.latency_cycles >= lm.tiles.total_cycles.min(lm.dma_cycles));
+    }
+}
+
+#[test]
+fn prop_agu_emits_exactly_total_addresses() {
+    let mut rng = Rng(0xA61);
+    for case in 0..200 {
+        let ndims = rng.range(1, 4) as usize;
+        let dims: Vec<LoopDim> = (0..ndims)
+            .map(|_| LoopDim {
+                bound: rng.range(1, 9),
+                stride: rng.range(0, 64) as i64,
+            })
+            .collect();
+        let mut agu = AffineAgu::new(rng.range(0, 1024), dims);
+        let expect = agu.total();
+        let mut n = 0u64;
+        while agu.next_addr().is_some() {
+            n += 1;
+            assert!(n <= expect, "case {case}: AGU emitted too many");
+        }
+        assert_eq!(n, expect, "case {case}");
+    }
+}
+
+#[test]
+fn prop_fifo_is_order_preserving() {
+    let mut rng = Rng(0xF1F0);
+    for _ in 0..100 {
+        let cap = rng.range(1, 16) as usize;
+        let mut f = Fifo::new(cap);
+        let mut model: std::collections::VecDeque<u64> = Default::default();
+        for _ in 0..200 {
+            if rng.next() % 2 == 0 {
+                let v = rng.next();
+                assert_eq!(f.push(v), model.len() < cap);
+                if model.len() < cap {
+                    model.push_back(v);
+                }
+            } else {
+                assert_eq!(f.pop(), model.pop_front());
+            }
+            assert_eq!(f.len(), model.len());
+        }
+    }
+}
+
+#[test]
+fn prop_requant_is_always_saturated_and_monotone() {
+    let mut rng = Rng(0x0DD);
+    let p = QuantParams {
+        scale: 0.037,
+        relu: false,
+    };
+    let mut prev_in = i32::MIN;
+    let mut prev_out = i8::MIN;
+    let mut cases: Vec<i32> = (0..300).map(|_| rng.next() as i32).collect();
+    cases.sort_unstable();
+    for v in cases {
+        let q = requant_one(v, p);
+        assert!((-128..=127).contains(&(q as i32)));
+        if v >= prev_in {
+            assert!(q >= prev_out, "requant not monotone at {v}");
+        }
+        prev_in = v;
+        prev_out = q;
+    }
+}
