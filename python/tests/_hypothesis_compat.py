@@ -1,0 +1,79 @@
+"""Hypothesis, or a deterministic fallback when it is not installed.
+
+The hermetic build image (see DESIGN.md: Substrate) has no package
+index, so `hypothesis` may be absent. Property tests import `given`,
+`settings` and `st` from this module: when hypothesis is installed they
+get the real library; otherwise a tiny shim draws `max_examples`
+seeded-deterministic samples per property, covering the same strategy
+surface the suites use (integers, floats, booleans, sampled_from).
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**63 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+            del allow_nan, allow_infinity  # the shim never generates either
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(items):
+            pool = list(items)
+            return _Strategy(lambda rng: rng.choice(pool))
+
+    st = _Strategies()
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        del deadline
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**kw_strategies):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", 20)
+                # Seeded per test name: failures reproduce exactly.
+                rng = random.Random("voltra::" + fn.__name__)
+                for _ in range(n):
+                    kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(**kwargs)
+
+            # No functools.wraps here: pytest must see a ZERO-argument
+            # signature, or it would treat the property's parameters as
+            # missing fixtures. Copy only the identity attributes.
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            # Honour @settings applied below @given (decorator order is
+            # insensitive in real hypothesis): inherit, don't overwrite.
+            runner._max_examples = getattr(fn, "_max_examples", 20)
+            return runner
+
+        return deco

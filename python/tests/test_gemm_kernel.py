@@ -8,7 +8,7 @@ and operand distribution, including the saturating edges of int8.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels.gemm import (
     ARRAY_K,

@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels.quant import LANES, QMAX, QMIN, maxpool2d_int8, requant_int8
 from compile.kernels.ref import maxpool2d_ref, requant_ref

@@ -1,0 +1,69 @@
+//! §Perf: the multi-workload sweep engine — private per-run caches vs
+//! one process-wide shared cache, sequential vs thread pool.
+//!
+//! The shared cache is the serving story in miniature: networks share
+//! tile shapes (transformer blocks, ResNet stages, common GEMM ladders),
+//! so one warm cache answers the whole suite with zero new simulations.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::{
+    run_suite_parallel, run_workload, run_workload_shared, SharedTileCache,
+};
+use voltra::workloads::evaluation_suite;
+
+fn main() {
+    common::header("§Perf — multi-workload sweep: cache sharing & parallelism");
+    let cfg = ChipConfig::voltra();
+    let suite = evaluation_suite();
+
+    common::report("suite x8, sequential, private caches", 3, || {
+        for w in &suite {
+            std::hint::black_box(run_workload(&cfg, w));
+        }
+    });
+
+    common::report("suite x8, sequential, one shared cache", 3, || {
+        let cache = SharedTileCache::new();
+        for w in &suite {
+            std::hint::black_box(run_workload_shared(&cfg, w, &cache));
+        }
+    });
+
+    for threads in [2usize, 4, 8] {
+        common::report(&format!("suite x8, parallel x{threads}, shared cache"), 3, || {
+            let cache = SharedTileCache::new();
+            std::hint::black_box(run_suite_parallel(&cfg, &suite, threads, &cache));
+        });
+    }
+
+    // Steady-state serving: a warm cache answers the whole suite without
+    // a single new simulation.
+    let warm = SharedTileCache::new();
+    for w in &suite {
+        run_workload_shared(&cfg, w, &warm);
+    }
+    let cold_misses = warm.stats().misses;
+    common::report("suite x8, warm shared cache (pure hits)", 5, || {
+        for w in &suite {
+            std::hint::black_box(run_workload_shared(&cfg, w, &warm));
+        }
+    });
+    assert_eq!(
+        warm.stats().misses,
+        cold_misses,
+        "a warm sweep must not simulate anything new"
+    );
+
+    common::rule();
+    let s = warm.stats();
+    println!(
+        "shared cache after the full suite: {} unique tiles, {} hits / {} misses ({:.1}% hit rate)",
+        warm.len(),
+        s.hits,
+        s.misses,
+        100.0 * s.hit_rate()
+    );
+}

@@ -13,20 +13,32 @@
 //!      reshuffler passes for raw-layout feature maps);
 //!   5. combine compute with bandwidth-limited DMA (overlapped when the
 //!      allocator could double-buffer).
+//!
+//! Concurrency (DESIGN.md §Concurrency): the chip-model path is pure —
+//! `choose_tiling` and `simulate_tile` depend only on `(cfg, key)` — so
+//! memoization can be shared process-wide. [`TileCache`] is the cheap
+//! single-thread cache (one run, no locking); [`SharedTileCache`] is the
+//! sharded `RwLock` cache every server connection and sweep worker hits
+//! concurrently. Both sit behind the [`SimCache`] trait so the layer
+//! runner is written once.
 
 pub mod server;
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
 
 use crate::config::ChipConfig;
-use crate::metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};
+use crate::metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
+use crate::sim::agu::LoopDim;
 use crate::sim::dma::{overlap_latency, transfer_cost};
 use crate::sim::engine::{simulate_tile, TileSpec};
 use crate::sim::gemm_core::Mapping;
 use crate::sim::reshuffler::reshuffle_cycles;
 use crate::sim::snitch::{CsrProgram, StreamerId};
 use crate::sim::streamer::{Grain, StreamerProgram};
-use crate::sim::agu::LoopDim;
 use crate::tiling::engine::{choose_tiling, traffic_parts, Tiling};
 use crate::workloads::{Layer, LayerKind, Workload};
 
@@ -34,13 +46,29 @@ use crate::workloads::{Layer, LayerKind, Workload};
 #[derive(Clone, Debug)]
 pub struct WorkloadReport {
     pub metrics: WorkloadMetrics,
-    /// Tiles simulated (after memoization) vs dispatched in total.
+    /// Tiles simulated (after memoization) vs dispatched in total. For a
+    /// shared-cache run this is the cache's *global* population when the
+    /// workload finished (tiles may have been simulated by other runs).
     pub unique_tiles: usize,
     pub dispatched_tiles: u64,
 }
 
+/// What the layer runner needs from a memoization store. The tiling
+/// search and the tile simulation are pure functions of `(cfg, key)`,
+/// so any cache implementation returns identical values — only the
+/// sharing/locking strategy differs.
+pub trait SimCache {
+    /// Memoized tiling search (the config is fixed per cache lifetime).
+    fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling>;
+    /// Memoized tile simulation.
+    fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics;
+    /// Distinct tile specs simulated so far.
+    fn unique_tiles(&self) -> usize;
+}
+
 /// Per-run memoization: simulated tiles AND tiling decisions (repeated
 /// transformer blocks / ResNet stages share layer shapes — §Perf).
+/// Single-threaded; for cross-thread sharing use [`SharedTileCache`].
 pub struct TileCache {
     map: HashMap<TileSpec, TileMetrics>,
     tilings: HashMap<(u64, u64, u64), Option<Tiling>>,
@@ -86,6 +114,120 @@ impl Default for TileCache {
     }
 }
 
+impl SimCache for TileCache {
+    fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
+        TileCache::tiling(self, cfg, m, k, n)
+    }
+
+    fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+        TileCache::simulate(self, cfg, spec)
+    }
+
+    fn unique_tiles(&self) -> usize {
+        self.len()
+    }
+}
+
+/// Shard count of the shared cache: enough to keep eight sweep threads
+/// plus a fleet of server connections off each other's locks.
+const CACHE_SHARDS: usize = 16;
+
+/// Process-wide, thread-safe tile memoization: the store a concurrent
+/// serving engine amortizes its simulation work into (the temporal-reuse
+/// argument of the paper, applied to the model itself).
+///
+/// Design:
+/// * sharded by key hash so unrelated lookups never contend;
+/// * `RwLock` per shard — the steady state is read-mostly (hits);
+/// * misses simulate *outside* any lock: the simulation is pure, so two
+///   racing threads at worst duplicate work and insert identical values
+///   (last write wins, both results are equal by construction).
+///
+/// The cache is keyed by [`TileSpec`] / GEMM dims only, so it must not
+/// be shared across *different* [`ChipConfig`]s — same contract as
+/// [`TileCache`], enforced by the callers that own the cache.
+#[derive(Default)]
+pub struct SharedTileCache {
+    tiles: [RwLock<HashMap<TileSpec, TileMetrics>>; CACHE_SHARDS],
+    tilings: [RwLock<HashMap<(u64, u64, u64), Option<Tiling>>>; CACHE_SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+fn shard_of<K: Hash>(key: &K) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % CACHE_SHARDS
+}
+
+impl SharedTileCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Memoized tile simulation, callable from any thread.
+    pub fn simulate(&self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+        let shard = &self.tiles[shard_of(spec)];
+        if let Some(m) = shard.read().expect("tile shard poisoned").get(spec) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *m;
+        }
+        // Miss: simulate without holding the lock (pure + idempotent).
+        let m = simulate_tile(cfg, spec);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard.write().expect("tile shard poisoned").insert(*spec, m);
+        m
+    }
+
+    /// Memoized tiling search, callable from any thread.
+    pub fn tiling(&self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
+        let key = (m, k, n);
+        let shard = &self.tilings[shard_of(&key)];
+        if let Some(t) = shard.read().expect("tiling shard poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *t;
+        }
+        let t = choose_tiling(cfg, m, k, n);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard.write().expect("tiling shard poisoned").insert(key, t);
+        t
+    }
+
+    /// Distinct tile specs simulated so far (across all shards).
+    pub fn len(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|s| s.read().expect("tile shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit/miss counters since construction (tilings + tiles combined).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl SimCache for &SharedTileCache {
+    fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
+        SharedTileCache::tiling(*self, cfg, m, k, n)
+    }
+
+    fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+        SharedTileCache::simulate(*self, cfg, spec)
+    }
+
+    fn unique_tiles(&self) -> usize {
+        self.len()
+    }
+}
+
 /// The CSR programming cost of launching one tile (Snitch writes the
 /// GEMM dims + the four GEMM streamers).
 pub fn tile_csr_cycles(tk: u64) -> u64 {
@@ -123,15 +265,15 @@ fn edge(d: u64, t: u64) -> (u64, u64, u64) {
 }
 
 /// Run one layer's GEMMs through tiling + simulation.
-pub fn run_layer(cfg: &ChipConfig, layer: &Layer, cache: &mut TileCache) -> LayerMetrics {
+pub fn run_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -> LayerMetrics {
     run_layer_counted(cfg, layer, cache).0
 }
 
 /// Like [`run_layer`], also returning the number of dispatched tiles.
-pub fn run_layer_counted(
+pub fn run_layer_counted<C: SimCache>(
     cfg: &ChipConfig,
     layer: &Layer,
-    cache: &mut TileCache,
+    cache: &mut C,
 ) -> (LayerMetrics, u64) {
     let mut lm = LayerMetrics {
         name: layer.name.clone(),
@@ -300,7 +442,8 @@ fn activation_in_bytes(layer: &Layer) -> u64 {
     }
 }
 
-/// Run a whole workload (one bar of Fig. 6).
+/// Run a whole workload against a caller-supplied cache (the generic
+/// engine behind [`run_workload`] and [`run_workload_shared`]).
 ///
 /// PDMA's layer-chaining benefit (Fig. 4): with the shared organisation,
 /// a layer's output region simply *becomes* the next layer's input
@@ -308,8 +451,11 @@ fn activation_in_bytes(layer: &Layer) -> u64 {
 /// to the live tiles — the separated organisation must round-trip the
 /// activation through off-chip memory because the output buffer is not
 /// the input buffer.
-pub fn run_workload(cfg: &ChipConfig, w: &Workload) -> WorkloadReport {
-    let mut cache = TileCache::new();
+pub fn run_workload_with<C: SimCache>(
+    cfg: &ChipConfig,
+    w: &Workload,
+    cache: &mut C,
+) -> WorkloadReport {
     let mut metrics = WorkloadMetrics {
         name: w.name.clone(),
         layers: Vec::with_capacity(w.layers.len()),
@@ -321,7 +467,7 @@ pub fn run_workload(cfg: &ChipConfig, w: &Workload) -> WorkloadReport {
     let mut dispatched = 0u64;
     let mut prev_out: u64 = 0;
     for layer in &w.layers {
-        let (mut lm, d) = run_layer_counted(cfg, layer, &mut cache);
+        let (mut lm, d) = run_layer_counted(cfg, layer, cache);
         dispatched += d;
         if shared {
             let a_in = activation_in_bytes(layer);
@@ -351,9 +497,62 @@ pub fn run_workload(cfg: &ChipConfig, w: &Workload) -> WorkloadReport {
     }
     WorkloadReport {
         metrics,
-        unique_tiles: cache.len(),
+        unique_tiles: cache.unique_tiles(),
         dispatched_tiles: dispatched,
     }
+}
+
+/// Run a whole workload (one bar of Fig. 6) with a fresh private cache.
+pub fn run_workload(cfg: &ChipConfig, w: &Workload) -> WorkloadReport {
+    let mut cache = TileCache::new();
+    run_workload_with(cfg, w, &mut cache)
+}
+
+/// Run a workload against a process-wide shared cache: repeated or
+/// concurrent runs reuse every tile any earlier run simulated.
+pub fn run_workload_shared(
+    cfg: &ChipConfig,
+    w: &Workload,
+    cache: &SharedTileCache,
+) -> WorkloadReport {
+    let mut handle = cache;
+    run_workload_with(cfg, w, &mut handle)
+}
+
+/// Run many workloads across a thread pool sharing one cache (the
+/// multi-workload sweep mode of the CLI). Results come back in input
+/// order; `threads == 1` degenerates to a sequential shared-cache run.
+pub fn run_suite_parallel(
+    cfg: &ChipConfig,
+    workloads: &[Workload],
+    threads: usize,
+    cache: &SharedTileCache,
+) -> Vec<WorkloadReport> {
+    let n = workloads.len();
+    let workers = threads.clamp(1, n.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<WorkloadReport>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = run_workload_shared(cfg, &workloads[i], cache);
+                *slots[i].lock().expect("sweep slot poisoned") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("sweep slot poisoned")
+                .expect("sweep worker skipped a workload")
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -469,5 +668,62 @@ mod tests {
         let lc = run_layer(&cfg, &conv, &mut c1);
         let lf = run_layer(&cfg, &fc, &mut c2);
         assert!(lc.aux_cycles > lf.aux_cycles);
+    }
+
+    #[test]
+    fn shared_cache_run_matches_private_cache_run() {
+        let cfg = ChipConfig::voltra();
+        let w = workloads::by_name("pointnext").unwrap();
+        let private = run_workload(&cfg, &w);
+        let shared = SharedTileCache::new();
+        let a = run_workload_shared(&cfg, &w, &shared);
+        let b = run_workload_shared(&cfg, &w, &shared);
+        assert_eq!(private.metrics, a.metrics);
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.dispatched_tiles, private.dispatched_tiles);
+        // The second run resimulated nothing.
+        assert_eq!(a.unique_tiles, b.unique_tiles);
+        let s = shared.stats();
+        assert!(s.hits > 0, "second run must hit the cache: {s:?}");
+    }
+
+    #[test]
+    fn parallel_suite_matches_sequential_runs() {
+        let cfg = ChipConfig::voltra();
+        let suite = vec![
+            workloads::by_name("lstm").unwrap(),
+            workloads::by_name("pointnext").unwrap(),
+            workloads::by_name("mobilenetv2").unwrap(),
+        ];
+        let cache = SharedTileCache::new();
+        let par = run_suite_parallel(&cfg, &suite, 3, &cache);
+        assert_eq!(par.len(), suite.len());
+        for (r, w) in par.iter().zip(&suite) {
+            let seq = run_workload(&cfg, w);
+            assert_eq!(r.metrics, seq.metrics, "{} diverged", w.name);
+            assert_eq!(r.dispatched_tiles, seq.dispatched_tiles);
+        }
+    }
+
+    #[test]
+    fn shared_cache_is_consistent_under_contention() {
+        // Many threads hammering the same small key set must all read
+        // identical values and populate each key exactly once.
+        let cfg = ChipConfig::voltra();
+        let cache = SharedTileCache::new();
+        let specs: Vec<TileSpec> = (1..=8)
+            .map(|i| TileSpec::simple(8 * i, 64, 8 * i))
+            .collect();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for spec in &specs {
+                        let got = cache.simulate(&cfg, spec);
+                        assert_eq!(got, simulate_tile(&cfg, spec));
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), specs.len());
     }
 }

@@ -1,29 +1,40 @@
-//! A minimal inference server on top of the runtime: the coordinator's
-//! "leader" role serving batched GEMM requests over TCP.
+//! The coordinator's serving engine: GEMM requests over TCP, served
+//! concurrently against a process-wide shared tile cache.
 //!
 //! Wire protocol (line-oriented, one request per line):
 //!     GEMM <m> <k> <n> <seed>\n
 //! Response:
 //!     OK checksum=<u64> us=<micros> sim_cycles=<u64> sim_us=<f64>\n
-//! The server executes the request's numerics on the PJRT runtime
-//! (deterministic operands from the seed) and, in parallel, reports what
-//! the chip model says the same GEMM would cost on silicon.
+//! The server executes the request's numerics (deterministic operands
+//! from the seed) and, in parallel, reports what the chip model says the
+//! same GEMM would cost on silicon.
 //!
-//! Substrate note: tokio is not vendored in the build image and the
-//! PJRT handles are not `Send`, so the server is a single-threaded
-//! std::net accept loop that owns the artifact library — connections are
-//! served in order (the heavy lifting is inside PJRT anyway); clients
-//! run on their own threads.
+//! Concurrency model (DESIGN.md §Concurrency):
+//! * every accepted connection gets its own handler thread;
+//! * the chip-model cost lookup runs *on the handler thread*, answered
+//!   from the [`SharedTileCache`] — many connections resolve sim costs
+//!   concurrently, and a tile any connection ever simulated is never
+//!   simulated again for the lifetime of the server;
+//! * the numerics backend is confined to ONE dedicated worker thread
+//!   fed over an mpsc channel (PJRT handles are not `Send`; the
+//!   [`GemmBackend`] factory runs on that thread), with per-request
+//!   reply channels. While the worker crunches a request's numerics the
+//!   handler overlaps the sim-cost computation for the same request.
+//!
+//! [`serve_blocking`] remains as the single-threaded reference engine:
+//! byte-identical responses (modulo the wall-clock `us=` field), used by
+//! the differential tests in `tests/concurrent_server.rs`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ChipConfig;
-use crate::coordinator::{run_layer, TileCache};
-use crate::runtime::{gemm_tiled, ArtifactLib, MatI32};
+use crate::coordinator::{run_layer, SharedTileCache};
+use crate::runtime::{GemmBackend, MatI32};
 use crate::workloads::layer::{Layer, LayerKind};
 
 /// Deterministic operand generator (SplitMix64 -> int8 range).
@@ -47,31 +58,93 @@ pub struct GemmResponse {
     pub sim_us: f64,
 }
 
-/// Execute one GEMM request: real numerics on PJRT + chip-model timing.
-pub fn serve_gemm(
-    lib: &mut ArtifactLib,
-    cfg: &ChipConfig,
-    cache: &mut TileCache,
+/// Serving counters returned by both engines.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Connections fully served (handler completed without an error).
+    pub served: usize,
+    /// Connections whose handler failed (logged to stderr).
+    pub failed: usize,
+}
+
+/// A parsed request line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Parsed {
+    Gemm {
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+    },
+    Quit,
+}
+
+/// Parse one request line; `Err` carries the full `ERR ...` response.
+fn parse_request(line: &str) -> std::result::Result<Parsed, String> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["GEMM", m, k, n, seed] => {
+            fn int<T: std::str::FromStr>(tok: &str) -> std::result::Result<T, String> {
+                tok.parse()
+                    .map_err(|_| format!("ERR bad integer {tok:?}"))
+            }
+            Ok(Parsed::Gemm {
+                m: int(m)?,
+                k: int(k)?,
+                n: int(n)?,
+                seed: int(seed)?,
+            })
+        }
+        ["QUIT"] => Ok(Parsed::Quit),
+        _ => Err("ERR expected: GEMM <m> <k> <n> <seed> | QUIT".to_string()),
+    }
+}
+
+/// Reject degenerate or memory-hostile requests before any work happens
+/// (u128 arithmetic: a hostile request must not overflow the check).
+fn check_size(m: usize, k: usize, n: usize) -> Result<()> {
+    // Bound every allocation the request forces: x (m*k), w (k*n), and
+    // the m*n-sized psum/quantized/accumulator outputs — a thin-K
+    // request like 50000x1x50000 is output-hostile, not operand-hostile.
+    let xw = (m as u128) * (k as u128);
+    let ww = (k as u128) * (n as u128);
+    let out = (m as u128) * (n as u128);
+    let too_big = match xw.checked_add(ww).and_then(|e| e.checked_add(out)) {
+        Some(elems) => elems > 64 << 20,
+        None => true,
+    };
+    if m == 0 || k == 0 || n == 0 || too_big {
+        bail!("unreasonable GEMM size {m}x{k}x{n}");
+    }
+    Ok(())
+}
+
+/// Execute one request's numerics on the backend: deterministic operands
+/// from the seed, returning (checksum, wall_us).
+fn run_numerics(
+    backend: &mut impl GemmBackend,
     m: usize,
     k: usize,
     n: usize,
     seed: u64,
-) -> Result<GemmResponse> {
-    if m == 0 || k == 0 || n == 0 || m * k + k * n > 64 << 20 {
-        bail!("unreasonable GEMM size {m}x{k}x{n}");
-    }
+) -> Result<(u64, u128)> {
+    check_size(m, k, n)?;
     let x = gen_mat(seed, m, k);
     let w = gen_mat(seed ^ 0xABCD_EF01, k, n);
     let p = MatI32::zeros(m, n);
     let t0 = Instant::now();
-    let (q, _acc) = gemm_tiled(lib, &x, &w, &p, 0.002)?;
+    let (q, _acc) = backend.gemm(&x, &w, &p, 0.002)?;
     let wall_us = t0.elapsed().as_micros();
     let checksum = q
         .data
         .iter()
         .fold(0u64, |h, &v| h.wrapping_mul(31).wrapping_add(v as u8 as u64));
+    Ok((checksum, wall_us))
+}
 
-    // What would the chip cost? (memoized cycle model)
+/// What the chip would cost for this GEMM (memoized cycle model; safe to
+/// call from many threads at once).
+pub fn sim_cost(cfg: &ChipConfig, cache: &SharedTileCache, m: usize, k: usize, n: usize) -> (u64, f64) {
     let layer = Layer::new(
         "req",
         LayerKind::Gemm {
@@ -80,9 +153,24 @@ pub fn serve_gemm(
             n: n as u64,
         },
     );
-    let lm = run_layer(cfg, &layer, cache);
+    let mut handle = cache;
+    let lm = run_layer(cfg, &layer, &mut handle);
     let sim_cycles = lm.latency_cycles;
-    let sim_us = sim_cycles as f64 / cfg.operating_point.freq_mhz;
+    (sim_cycles, sim_cycles as f64 / cfg.operating_point.freq_mhz)
+}
+
+/// Execute one GEMM request end to end: numerics + chip-model timing.
+pub fn serve_gemm(
+    backend: &mut impl GemmBackend,
+    cfg: &ChipConfig,
+    cache: &SharedTileCache,
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Result<GemmResponse> {
+    let (checksum, wall_us) = run_numerics(backend, m, k, n, seed)?;
+    let (sim_cycles, sim_us) = sim_cost(cfg, cache, m, k, n);
     Ok(GemmResponse {
         checksum,
         wall_us,
@@ -91,32 +179,98 @@ pub fn serve_gemm(
     })
 }
 
-fn handle(stream: TcpStream, lib: &mut ArtifactLib, cfg: &ChipConfig) -> Result<()> {
+fn format_ok(r: &GemmResponse) -> String {
+    format!(
+        "OK checksum={} us={} sim_cycles={} sim_us={:.2}",
+        r.checksum, r.wall_us, r.sim_cycles, r.sim_us
+    )
+}
+
+/// Serve one connection with the backend on the current thread.
+fn handle_sequential(
+    stream: TcpStream,
+    backend: &mut impl GemmBackend,
+    cfg: &ChipConfig,
+    cache: &SharedTileCache,
+) -> Result<()> {
     let mut out = stream.try_clone().context("clone stream")?;
     let reader = BufReader::new(stream);
-    let mut cache = TileCache::new();
     for line in reader.lines() {
         let line = line?;
-        let parts: Vec<&str> = line.split_whitespace().collect();
-        match parts.as_slice() {
-            ["GEMM", m, k, n, seed] => {
-                let (m, k, n, seed) = (
-                    m.parse().unwrap_or(0),
-                    k.parse().unwrap_or(0),
-                    n.parse().unwrap_or(0),
-                    seed.parse().unwrap_or(0),
-                );
-                match serve_gemm(lib, cfg, &mut cache, m, k, n, seed) {
-                    Ok(r) => writeln!(
-                        out,
-                        "OK checksum={} us={} sim_cycles={} sim_us={:.2}",
-                        r.checksum, r.wall_us, r.sim_cycles, r.sim_us
-                    )?,
+        match parse_request(&line) {
+            Ok(Parsed::Gemm { m, k, n, seed }) => {
+                match serve_gemm(backend, cfg, cache, m, k, n, seed) {
+                    Ok(r) => writeln!(out, "{}", format_ok(&r))?,
                     Err(e) => writeln!(out, "ERR {e}")?,
                 }
             }
-            ["QUIT"] => break,
-            _ => writeln!(out, "ERR expected: GEMM <m> <k> <n> <seed> | QUIT")?,
+            Ok(Parsed::Quit) => break,
+            Err(resp) => writeln!(out, "{resp}")?,
+        }
+    }
+    Ok(())
+}
+
+/// One numerics request in flight to the dedicated worker thread.
+struct NumericsJob {
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+    reply: mpsc::Sender<Result<(u64, u128)>>,
+}
+
+/// Serve one connection, overlapping numerics (worker thread) with the
+/// shared-cache sim-cost lookup (this thread).
+fn handle_concurrent(
+    stream: TcpStream,
+    cfg: &ChipConfig,
+    cache: &SharedTileCache,
+    jobs: &mpsc::Sender<NumericsJob>,
+) -> Result<()> {
+    let mut out = stream.try_clone().context("clone stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        match parse_request(&line) {
+            Ok(Parsed::Gemm { m, k, n, seed }) => {
+                // Cheap validation here so malformed sizes never occupy
+                // the (serialized) numerics worker.
+                if let Err(e) = check_size(m, k, n) {
+                    writeln!(out, "ERR {e}")?;
+                    continue;
+                }
+                let (reply_tx, reply_rx) = mpsc::channel();
+                jobs.send(NumericsJob {
+                    m,
+                    k,
+                    n,
+                    seed,
+                    reply: reply_tx,
+                })
+                .map_err(|_| anyhow!("numerics worker is gone"))?;
+                // Overlap: the chip-model cost resolves here while the
+                // worker crunches the numerics.
+                let (sim_cycles, sim_us) = sim_cost(cfg, cache, m, k, n);
+                match reply_rx.recv() {
+                    Ok(Ok((checksum, wall_us))) => {
+                        let r = GemmResponse {
+                            checksum,
+                            wall_us,
+                            sim_cycles,
+                            sim_us,
+                        };
+                        writeln!(out, "{}", format_ok(&r))?;
+                    }
+                    Ok(Err(e)) => writeln!(out, "ERR {e}")?,
+                    Err(_) => {
+                        writeln!(out, "ERR numerics worker is gone")?;
+                        bail!("numerics worker is gone");
+                    }
+                }
+            }
+            Ok(Parsed::Quit) => break,
+            Err(resp) => writeln!(out, "{resp}")?,
         }
     }
     Ok(())
@@ -127,32 +281,154 @@ pub fn bind(addr: &str) -> Result<TcpListener> {
     TcpListener::bind(addr).with_context(|| format!("bind {addr}"))
 }
 
-/// Run the accept loop on the CURRENT thread until `max_conns`
-/// connections have been served (`None` = forever). PJRT handles are not
-/// `Send`, so the artifact library lives here.
+/// Single-threaded reference engine: serve connections in order on the
+/// CURRENT thread. Only *successfully served* connections count toward
+/// `max_conns` (`None` = forever); accept failures and handler errors
+/// are logged to stderr and do not count.
 pub fn serve_blocking(
-    mut lib: ArtifactLib,
+    backend: &mut impl GemmBackend,
     cfg: &ChipConfig,
     listener: TcpListener,
     max_conns: Option<usize>,
-) -> Result<()> {
-    let mut served = 0usize;
+    cache: &SharedTileCache,
+) -> Result<ServerStats> {
+    let mut stats = ServerStats::default();
     for stream in listener.incoming() {
-        let Ok(stream) = stream else { continue };
-        let _ = handle(stream, &mut lib, cfg);
-        served += 1;
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("voltra-serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let peer = stream.peer_addr().ok();
+        match handle_sequential(stream, backend, cfg, cache) {
+            Ok(()) => stats.served += 1,
+            Err(e) => {
+                stats.failed += 1;
+                eprintln!("voltra-serve: connection {peer:?} failed: {e:#}");
+            }
+        }
         if let Some(max) = max_conns {
-            if served >= max {
+            if stats.served >= max {
                 break;
             }
         }
     }
-    Ok(())
+    Ok(stats)
+}
+
+/// The concurrent serving engine: one handler thread per connection, one
+/// dedicated numerics worker, one shared tile cache.
+///
+/// `backend_factory` runs ON the worker thread (PJRT handles are not
+/// `Send`, so the backend must be born where it lives). `max_conns`
+/// counts *accepted* connections — with parallel handlers the engine
+/// cannot know success before completion; per-connection failures are
+/// still logged and reported in the returned [`ServerStats`].
+pub fn serve_threaded<B, F>(
+    backend_factory: F,
+    cfg: &ChipConfig,
+    listener: TcpListener,
+    max_conns: Option<usize>,
+    cache: &SharedTileCache,
+) -> Result<ServerStats>
+where
+    B: GemmBackend + 'static,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
+    let (job_tx, job_rx) = mpsc::channel::<NumericsJob>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let worker = std::thread::Builder::new()
+        .name("voltra-numerics".to_string())
+        .spawn(move || {
+            let mut backend = match backend_factory() {
+                Ok(b) => {
+                    let _ = ready_tx.send(Ok(()));
+                    b
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(job) = job_rx.recv() {
+                let result = run_numerics(&mut backend, job.m, job.k, job.n, job.seed);
+                let _ = job.reply.send(result);
+            }
+        })
+        .context("spawn numerics worker")?;
+    let ready = ready_rx
+        .recv()
+        .unwrap_or_else(|_| Err(anyhow!("numerics worker died during startup")));
+    if let Err(e) = ready {
+        drop(job_tx);
+        let _ = worker.join();
+        return Err(e);
+    }
+
+    fn tally(
+        joined: std::thread::Result<Result<(), (Option<std::net::SocketAddr>, anyhow::Error)>>,
+        stats: &mut ServerStats,
+    ) {
+        match joined {
+            Ok(Ok(())) => stats.served += 1,
+            Ok(Err((peer, e))) => {
+                stats.failed += 1;
+                eprintln!("voltra-serve: connection {peer:?} failed: {e:#}");
+            }
+            Err(_) => stats.failed += 1,
+        }
+    }
+
+    let mut stats = ServerStats::default();
+    std::thread::scope(|s| {
+        let mut accepted = 0usize;
+        let mut handles = Vec::new();
+        for stream in listener.incoming() {
+            let stream = match stream {
+                Ok(st) => st,
+                Err(e) => {
+                    eprintln!("voltra-serve: accept failed: {e}");
+                    continue;
+                }
+            };
+            // Reap completed handlers first: a long-running server
+            // (max_conns = None) must not accumulate join handles, and
+            // failure logs should appear as they happen, not at shutdown.
+            let mut i = 0;
+            while i < handles.len() {
+                if handles[i].is_finished() {
+                    tally(handles.swap_remove(i).join(), &mut stats);
+                } else {
+                    i += 1;
+                }
+            }
+            let jobs = job_tx.clone();
+            handles.push(s.spawn(move || {
+                let peer = stream.peer_addr().ok();
+                handle_concurrent(stream, cfg, cache, &jobs).map_err(|e| (peer, e))
+            }));
+            accepted += 1;
+            if let Some(max) = max_conns {
+                if accepted >= max {
+                    break;
+                }
+            }
+        }
+        for h in handles {
+            tally(h.join(), &mut stats);
+        }
+    });
+    drop(job_tx);
+    let _ = worker.join();
+    Ok(stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::HostBackend;
 
     #[test]
     fn generated_operands_are_deterministic_and_int8() {
@@ -171,5 +447,51 @@ mod tests {
                 .fold(0u64, |h, &x| h.wrapping_mul(31).wrapping_add(x as u8 as u64))
         };
         assert_ne!(h(&[1, 2, 3]), h(&[3, 2, 1]));
+    }
+
+    #[test]
+    fn parser_distinguishes_bad_integers_from_bad_commands() {
+        assert_eq!(
+            parse_request("GEMM 8 8 8 1"),
+            Ok(Parsed::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                seed: 1
+            })
+        );
+        assert_eq!(parse_request("QUIT"), Ok(Parsed::Quit));
+        let e = parse_request("GEMM a b c 1").unwrap_err();
+        assert!(e.starts_with("ERR bad integer"), "{e}");
+        let e = parse_request("GEMM 8 8 8").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        let e = parse_request("NONSENSE").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        // A negative dimension is a bad integer for usize, not a usage error.
+        let e = parse_request("GEMM -8 8 8 1").unwrap_err();
+        assert!(e.starts_with("ERR bad integer"), "{e}");
+    }
+
+    #[test]
+    fn size_check_rejects_degenerate_and_huge() {
+        assert!(check_size(0, 0, 0).is_err());
+        assert!(check_size(8, 8, 8).is_ok());
+        // Thin-K: tiny operands, gigabyte outputs — must be rejected.
+        assert!(check_size(50_000, 1, 50_000).is_err());
+        // Would overflow naive usize arithmetic; must be cleanly rejected.
+        assert!(check_size(usize::MAX, usize::MAX, usize::MAX).is_err());
+    }
+
+    #[test]
+    fn serve_gemm_on_host_backend_is_deterministic() {
+        let cfg = ChipConfig::voltra();
+        let cache = SharedTileCache::new();
+        let mut b = HostBackend;
+        let r1 = serve_gemm(&mut b, &cfg, &cache, 64, 64, 64, 1).unwrap();
+        let r2 = serve_gemm(&mut b, &cfg, &cache, 64, 64, 64, 1).unwrap();
+        assert_eq!(r1.checksum, r2.checksum);
+        assert_eq!(r1.sim_cycles, r2.sim_cycles);
+        let r3 = serve_gemm(&mut b, &cfg, &cache, 64, 64, 64, 2).unwrap();
+        assert_ne!(r1.checksum, r3.checksum);
     }
 }

@@ -13,9 +13,12 @@
 //! * [`workloads`] — the eight evaluated networks as layer graphs.
 //! * [`power`] — energy/area/DVFS models calibrated to the die.
 //! * [`coordinator`] — runs workloads through tiling + simulation and
-//!   aggregates the paper's metrics.
+//!   aggregates the paper's metrics; its serving + sweep engine runs
+//!   many connections/workloads concurrently against one process-wide
+//!   [`SharedTileCache`] (DESIGN.md §Concurrency).
 //! * [`runtime`] — loads AOT artifacts (HLO text) and executes the real
-//!   numerics through the PJRT CPU client; Python never runs at runtime.
+//!   numerics through the PJRT CPU client behind the pluggable
+//!   [`runtime::GemmBackend`] seam; Python never runs at runtime.
 
 pub mod arch;
 pub mod config;
@@ -28,5 +31,8 @@ pub mod tiling;
 pub mod workloads;
 
 pub use config::ChipConfig;
-pub use coordinator::{run_workload, WorkloadReport};
-pub use metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};
+pub use coordinator::{
+    run_suite_parallel, run_workload, run_workload_shared, SharedTileCache, SimCache, TileCache,
+    WorkloadReport,
+};
+pub use metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};

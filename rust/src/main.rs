@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use voltra::config::{ChipConfig, OperatingPoint};
 use voltra::coordinator::run_workload;
 use voltra::power::{dvfs, tops_per_watt, Activity, AreaModel, EnergyParams};
-use voltra::runtime::{default_dir, ArtifactLib, MatI32};
+use voltra::runtime::{default_dir, ArtifactLib, GemmBackend, HostBackend, MatI32, PjrtBackend};
 use voltra::workloads;
 use voltra::{arch, metrics};
 
@@ -24,9 +24,13 @@ COMMANDS:
     info                         print the chip specification (Fig. 5)
     run --workload <name>        run one workload through the simulator
     suite                        run the full Fig. 6 evaluation suite
+    sweep                        run all eight networks across a thread
+                                 pool sharing one tile cache
     shmoo                        print the Fig. 7a shmoo grid
     artifacts                    list + smoke-test the AOT artifacts
-    serve --port <p>             serve GEMM requests over TCP (demo)
+    serve --port <p>             concurrent GEMM serving over TCP
+                                 (PJRT numerics when artifacts load,
+                                 host-oracle fallback otherwise)
     report --workload <name>     per-layer table + energy breakdown
 
 OPTIONS:
@@ -34,6 +38,7 @@ OPTIONS:
                         llama-prefill|llama-decode
     --config <preset>   voltra|no-prefetch|separated|2d|simd64|full-xbar
                         (default: voltra)
+    --threads <n>       sweep thread-pool size (default: all cores)
     --vdd <volts>       supply voltage (default 1.0)
     --freq <MHz>        clock (default fmax at --vdd)
     --artifacts <dir>   artifact directory (default: ./artifacts)"
@@ -122,6 +127,10 @@ fn cmd_info() {
 
 fn report_line(cfg: &ChipConfig, w: &workloads::Workload) {
     let r = run_workload(cfg, w);
+    print_report(cfg, &r);
+}
+
+fn print_report(cfg: &ChipConfig, r: &voltra::WorkloadReport) {
     let m = &r.metrics;
     let p = EnergyParams::default();
     let e = voltra::power::energy::workload_energy_j(&p, m, &Activity::default(), cfg.operating_point);
@@ -213,6 +222,42 @@ fn cmd_suite(cfg: &ChipConfig) {
     );
 }
 
+/// Multi-workload sweep: all eight networks across a thread pool sharing
+/// one process-wide tile cache (repeated shapes across networks simulate
+/// once for the whole sweep).
+fn cmd_sweep(cfg: &ChipConfig, threads: usize) {
+    let suite = workloads::evaluation_suite();
+    let cache = voltra::SharedTileCache::new();
+    let t0 = std::time::Instant::now();
+    let reports = voltra::run_suite_parallel(cfg, &suite, threads, &cache);
+    let dt = t0.elapsed();
+    let mut spatial = Vec::new();
+    let mut temporal = Vec::new();
+    for r in &reports {
+        spatial.push(r.metrics.spatial_utilization());
+        temporal.push(r.metrics.temporal_utilization());
+        print_report(cfg, r);
+    }
+    println!(
+        "{:<22} spatial {:>6.2}%  temporal {:>6.2}%  (geomean)",
+        "geomean",
+        100.0 * metrics::geomean(&spatial),
+        100.0 * metrics::geomean(&temporal)
+    );
+    let s = cache.stats();
+    println!(
+        "sweep: {} workloads on {} threads in {:.2}s — shared cache: {} unique tiles, \
+         {} hits / {} misses ({:.1}% hit rate)",
+        reports.len(),
+        threads,
+        dt.as_secs_f64(),
+        cache.len(),
+        s.hits,
+        s.misses,
+        100.0 * s.hit_rate(),
+    );
+}
+
 fn cmd_shmoo() {
     println!("shmoo (Fig. 7a): rows = freq MHz, cols = VDD; o = pass, . = fail");
     let mut freqs: Vec<f64> = (0..=12).map(|i| 250.0 + 50.0 * i as f64).collect();
@@ -294,6 +339,16 @@ fn main() {
             let cfg = config_from(&flags);
             cmd_suite(&cfg);
         }
+        "sweep" => {
+            let cfg = config_from(&flags);
+            let threads = flags
+                .get("threads")
+                .map(|v| v.parse::<usize>().expect("--threads must be an integer"))
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+                });
+            cmd_sweep(&cfg, threads);
+        }
         "shmoo" => cmd_shmoo(),
         "artifacts" => {
             let dir = flags
@@ -319,13 +374,6 @@ fn main() {
                 .get("port")
                 .map(|p| p.parse::<u16>().expect("--port"))
                 .unwrap_or(0);
-            let lib = match ArtifactLib::load(&dir) {
-                Ok(l) => l,
-                Err(e) => {
-                    eprintln!("failed to load artifacts: {e:#}");
-                    std::process::exit(1);
-                }
-            };
             let cfg = config_from(&flags);
             let listener =
                 match voltra::coordinator::server::bind(&format!("127.0.0.1:{port}")) {
@@ -339,11 +387,33 @@ fn main() {
                 "voltra serving on {} — protocol: GEMM <m> <k> <n> <seed>",
                 listener.local_addr().unwrap()
             );
-            if let Err(e) =
-                voltra::coordinator::server::serve_blocking(lib, &cfg, listener, None)
-            {
-                eprintln!("serve failed: {e:#}");
-                std::process::exit(1);
+            // The backend is constructed on the dedicated numerics worker
+            // thread (PJRT handles are not Send): real artifacts when they
+            // load, bit-identical host oracle otherwise.
+            let factory = move || -> anyhow::Result<Box<dyn GemmBackend>> {
+                match PjrtBackend::load(&dir) {
+                    Ok(b) => {
+                        eprintln!("numerics backend: pjrt (artifacts from {dir})");
+                        Ok(Box::new(b))
+                    }
+                    Err(e) => {
+                        eprintln!("numerics backend: host oracle (PJRT unavailable: {e:#})");
+                        Ok(Box::new(HostBackend))
+                    }
+                }
+            };
+            let cache = voltra::SharedTileCache::new();
+            match voltra::coordinator::server::serve_threaded(
+                factory, &cfg, listener, None, &cache,
+            ) {
+                Ok(stats) => println!(
+                    "served {} connections ({} failed)",
+                    stats.served, stats.failed
+                ),
+                Err(e) => {
+                    eprintln!("serve failed: {e:#}");
+                    std::process::exit(1);
+                }
             }
         }
         _ => usage(),

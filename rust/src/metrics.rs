@@ -63,8 +63,33 @@ impl TileMetrics {
     }
 }
 
+/// Hit/miss counters of a tile cache (the shared serving cache reports
+/// these so the sweep/serve paths can show how much simulation work the
+/// memoization removed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups answered without simulating (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+}
+
 /// Aggregated metrics for one network layer (all its tiles + DMA).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerMetrics {
     pub name: String,
     pub tiles: TileMetrics,
@@ -83,7 +108,7 @@ pub struct LayerMetrics {
 }
 
 /// Whole-workload aggregation (one bar of Fig. 6).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WorkloadMetrics {
     pub name: String,
     pub layers: Vec<LayerMetrics>,
@@ -210,6 +235,15 @@ mod tests {
     fn geomean_of_equal_values() {
         assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_stats_hit_rate() {
+        let s = CacheStats { hits: 0, misses: 0 };
+        assert_eq!(s.hit_rate(), 0.0);
+        let s = CacheStats { hits: 3, misses: 1 };
+        assert_eq!(s.lookups(), 4);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! Numerics backends for the serving engine: the single seam between
+//! the coordinator's request path and whatever executes the GEMM.
+//!
+//! Two implementations:
+//! * [`PjrtBackend`] — the AOT-artifact path ([`gemm_tiled`] over the
+//!   PJRT client). Not `Send` in general (PJRT handles are pinned), so
+//!   the server confines it to one dedicated worker thread.
+//! * [`HostBackend`] — the bit-exact host oracle ([`gemm_ref`] +
+//!   [`requant_ref`]). Always available; the serving engine falls back
+//!   to it when artifacts are absent, and tests use it to exercise the
+//!   full concurrent wire path deterministically. The two backends are
+//!   interchangeable by construction: the runtime integration suite
+//!   asserts the artifact path is bit-exact against exactly this oracle.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifacts::ArtifactLib;
+use crate::runtime::executor::{gemm_ref, gemm_tiled, requant_ref, MatI32};
+
+/// Executes `q = requant(psum + x @ w, scale)`, returning `(q, acc)`.
+pub trait GemmBackend {
+    /// Human-readable backend name for logs.
+    fn name(&self) -> &'static str;
+
+    fn gemm(
+        &mut self,
+        x: &MatI32,
+        w: &MatI32,
+        psum: &MatI32,
+        scale: f32,
+    ) -> Result<(MatI32, MatI32)>;
+}
+
+impl<B: GemmBackend + ?Sized> GemmBackend for Box<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn gemm(
+        &mut self,
+        x: &MatI32,
+        w: &MatI32,
+        psum: &MatI32,
+        scale: f32,
+    ) -> Result<(MatI32, MatI32)> {
+        (**self).gemm(x, w, psum, scale)
+    }
+}
+
+/// The real-numerics path: tiled dispatch onto the AOT artifacts.
+pub struct PjrtBackend {
+    lib: ArtifactLib,
+}
+
+impl PjrtBackend {
+    pub fn new(lib: ArtifactLib) -> Self {
+        PjrtBackend { lib }
+    }
+
+    /// Load the artifact library from `dir` (fails when `make artifacts`
+    /// has not run or the PJRT runtime is unavailable).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self::new(ArtifactLib::load(dir)?))
+    }
+}
+
+impl GemmBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn gemm(
+        &mut self,
+        x: &MatI32,
+        w: &MatI32,
+        psum: &MatI32,
+        scale: f32,
+    ) -> Result<(MatI32, MatI32)> {
+        gemm_tiled(&mut self.lib, x, w, psum, scale)
+    }
+}
+
+/// The host oracle: exact int32 accumulation + the same requant rule the
+/// Pallas kernel implements. Bit-identical to [`PjrtBackend`] output.
+pub struct HostBackend;
+
+impl GemmBackend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn gemm(
+        &mut self,
+        x: &MatI32,
+        w: &MatI32,
+        psum: &MatI32,
+        scale: f32,
+    ) -> Result<(MatI32, MatI32)> {
+        if x.cols != w.rows || psum.rows != x.rows || psum.cols != w.cols {
+            bail!(
+                "shape mismatch: x {}x{}, w {}x{}, psum {}x{}",
+                x.rows,
+                x.cols,
+                w.rows,
+                w.cols,
+                psum.rows,
+                psum.cols
+            );
+        }
+        let acc = gemm_ref(x, w, psum);
+        let q = requant_ref(&acc, scale);
+        Ok((q, acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_backend_quantizes_its_accumulator() {
+        let x = MatI32::from_fn(4, 3, |r, c| (r + c) as i32);
+        let w = MatI32::from_fn(3, 5, |r, c| r as i32 - c as i32);
+        let p = MatI32::zeros(4, 5);
+        let (q, acc) = HostBackend.gemm(&x, &w, &p, 0.5).unwrap();
+        assert_eq!(acc, gemm_ref(&x, &w, &p));
+        assert_eq!(q, requant_ref(&acc, 0.5));
+    }
+
+    #[test]
+    fn host_backend_rejects_shape_mismatch() {
+        let x = MatI32::zeros(4, 3);
+        let w = MatI32::zeros(4, 5); // wrong inner dim
+        let p = MatI32::zeros(4, 5);
+        assert!(HostBackend.gemm(&x, &w, &p, 1.0).is_err());
+    }
+
+    #[test]
+    fn boxed_backends_forward() {
+        let mut b: Box<dyn GemmBackend> = Box::new(HostBackend);
+        assert_eq!(b.name(), "host");
+        let x = MatI32::zeros(2, 2);
+        assert!(b.gemm(&x, &x, &x, 1.0).is_ok());
+    }
+}

@@ -2,8 +2,10 @@
 //! executes the chip's numerics directly — Python is build-time only.
 
 pub mod artifacts;
+pub mod backend;
 pub mod executor;
 pub mod json;
 
 pub use artifacts::{default_dir, ArtifactLib, DType, TensorSpec};
+pub use backend::{GemmBackend, HostBackend, PjrtBackend};
 pub use executor::{gemm_ref, gemm_tiled, requant_ref, MatI32, TILE};

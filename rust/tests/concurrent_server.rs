@@ -1,0 +1,150 @@
+//! Differential and cache-reuse tests for the concurrent serving engine:
+//! * N parallel clients against `serve_threaded` receive responses
+//!   byte-identical to the single-threaded `serve_blocking` reference
+//!   (modulo the wall-clock `us=` field, the protocol's only
+//!   nondeterministic bytes);
+//! * the shared tile cache survives across connections — repeated
+//!   identical connections add no new unique tiles and no cache misses.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::server::{bind, serve_blocking, serve_threaded};
+use voltra::coordinator::SharedTileCache;
+use voltra::runtime::HostBackend;
+
+/// The request script every client plays (mix of cached-shape repeats,
+/// ragged shapes, rejects and parse errors).
+const REQS: [&str; 7] = [
+    "GEMM 64 64 64 1",
+    "GEMM 96 96 96 2",
+    "GEMM 40 64 72 3",
+    "GEMM 64 64 64 1",
+    "GEMM 0 0 0 0",
+    "GEMM 1x 2 3 4",
+    "QUIT",
+];
+
+/// Strip the wall-clock token so responses compare byte-identically.
+fn normalize(resp: &str) -> String {
+    resp.split_whitespace()
+        .filter(|t| !t.starts_with("us="))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Play the request script over one connection; normalized responses.
+fn client(addr: SocketAddr) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut responses = Vec::new();
+    for req in REQS {
+        writeln!(conn, "{req}").unwrap();
+        if req == "QUIT" {
+            break;
+        }
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "server hung up mid-script on {req:?}");
+        responses.push(normalize(line.trim()));
+    }
+    responses
+}
+
+#[test]
+fn concurrent_clients_match_sequential_responses() {
+    // Reference: the single-threaded engine, fresh cache.
+    let listener = bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = thread::spawn(move || {
+        let cfg = ChipConfig::voltra();
+        let cache = SharedTileCache::new();
+        serve_blocking(&mut HostBackend, &cfg, listener, Some(1), &cache).unwrap()
+    });
+    let reference = client(addr);
+    let stats = server.join().unwrap();
+    assert_eq!(stats.served, 1);
+    assert_eq!(reference.len(), REQS.len() - 1);
+    assert!(reference[0].starts_with("OK checksum="), "{}", reference[0]);
+
+    // The concurrent engine: 4 clients in parallel, one shared cache.
+    let listener = bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cache = Arc::new(SharedTileCache::new());
+    let server = {
+        let cache = Arc::clone(&cache);
+        thread::spawn(move || {
+            let cfg = ChipConfig::voltra();
+            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(4), &cache).unwrap()
+        })
+    };
+    let clients: Vec<_> = (0..4).map(|_| thread::spawn(move || client(addr))).collect();
+    for c in clients {
+        assert_eq!(
+            c.join().unwrap(),
+            reference,
+            "a concurrent client diverged from the sequential reference"
+        );
+    }
+    let stats = server.join().unwrap();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn shared_cache_survives_across_connections() {
+    let listener = bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cache = Arc::new(SharedTileCache::new());
+    let server = {
+        let cache = Arc::clone(&cache);
+        thread::spawn(move || {
+            let cfg = ChipConfig::voltra();
+            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(3), &cache).unwrap()
+        })
+    };
+
+    // First connection populates the cache (responses received => all
+    // sim-cost lookups for it have completed).
+    let first = client(addr);
+    let unique_after_first = cache.len();
+    let misses_after_first = cache.stats().misses;
+    assert!(unique_after_first > 0, "first connection must simulate tiles");
+
+    // Identical connections answer from the cache: same bytes, no growth.
+    for _ in 0..2 {
+        assert_eq!(client(addr), first);
+    }
+    let stats = server.join().unwrap();
+    assert_eq!(stats.served, 3);
+    assert_eq!(
+        cache.len(),
+        unique_after_first,
+        "unique tiles must not grow across identical connections"
+    );
+    assert_eq!(
+        cache.stats().misses,
+        misses_after_first,
+        "repeat connections must be pure cache hits"
+    );
+    assert!(cache.stats().hits > 0);
+}
+
+#[test]
+fn backend_factory_failure_surfaces_at_startup() {
+    let listener = bind("127.0.0.1:0").unwrap();
+    let cache = SharedTileCache::new();
+    let cfg = ChipConfig::voltra();
+    let r = serve_threaded::<HostBackend, _>(
+        || Err(anyhow::anyhow!("backend deliberately unavailable")),
+        &cfg,
+        listener,
+        Some(1),
+        &cache,
+    );
+    let e = r.expect_err("factory failure must abort serving");
+    assert!(format!("{e}").contains("deliberately unavailable"));
+}

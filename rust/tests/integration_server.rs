@@ -1,27 +1,22 @@
-//! End-to-end serving test: client threads talk to the single-threaded
-//! coordinator server over a real TCP socket; responses carry both the
-//! PJRT-computed checksum and the chip model's cost estimate.
+//! End-to-end serving test: a client thread talks to the single-threaded
+//! reference engine over a real TCP socket. Runs on the host numerics
+//! backend, so it never skips; the PJRT backend path is exercised by the
+//! same engine whenever artifacts are present (see `integration_runtime`
+//! for the bit-exactness proof that makes the two interchangeable).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use voltra::config::ChipConfig;
 use voltra::coordinator::server::{bind, serve_blocking};
-use voltra::runtime::{default_dir, ArtifactLib};
+use voltra::coordinator::SharedTileCache;
+use voltra::runtime::{HostBackend, PjrtBackend};
 
 #[test]
 fn serves_gemm_requests_over_tcp() {
-    let lib = match ArtifactLib::load(default_dir()) {
-        Ok(l) => l,
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts` first): {e}");
-            return;
-        }
-    };
     let listener = bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
 
-    // Client on its own thread (the PJRT side must stay on this one).
     let client = std::thread::spawn(move || {
         let mut conn = TcpStream::connect(addr).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -31,6 +26,7 @@ fn serves_gemm_requests_over_tcp() {
             "GEMM 96 96 96 2",
             "GEMM 64 64 64 1", // identical request -> identical checksum
             "GEMM 0 0 0 0",    // must be rejected
+            "GEMM a b c 1",    // malformed numbers -> distinct parse error
             "NONSENSE",
             "QUIT",
         ] {
@@ -46,10 +42,14 @@ fn serves_gemm_requests_over_tcp() {
     });
 
     let cfg = ChipConfig::voltra();
-    serve_blocking(lib, &cfg, listener, Some(1)).unwrap();
+    let cache = SharedTileCache::new();
+    let mut backend = HostBackend;
+    let stats = serve_blocking(&mut backend, &cfg, listener, Some(1), &cache).unwrap();
     let responses = client.join().unwrap();
 
-    assert_eq!(responses.len(), 5);
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(responses.len(), 6);
     assert!(responses[0].starts_with("OK checksum="), "{}", responses[0]);
     assert!(responses[1].starts_with("OK checksum="), "{}", responses[1]);
     // Determinism: same request, same checksum.
@@ -60,8 +60,26 @@ fn serves_gemm_requests_over_tcp() {
     };
     assert_eq!(checksum(&responses[0]), checksum(&responses[2]));
     assert_ne!(checksum(&responses[0]), checksum(&responses[1]));
-    assert!(responses[3].starts_with("ERR"), "{}", responses[3]);
-    assert!(responses[4].starts_with("ERR"), "{}", responses[4]);
+    assert!(responses[3].starts_with("ERR unreasonable"), "{}", responses[3]);
+    assert!(responses[4].starts_with("ERR bad integer"), "{}", responses[4]);
+    assert!(responses[5].starts_with("ERR expected"), "{}", responses[5]);
     // The chip-model estimate rides along.
     assert!(responses[0].contains("sim_cycles="));
+    // The serving cache was populated by the connection and survives it.
+    assert!(!cache.is_empty());
+}
+
+#[test]
+fn pjrt_backend_loads_or_fails_cleanly() {
+    // Without `make artifacts` (or without the native PJRT runtime) the
+    // artifact backend must fail with a diagnostic, never panic — the
+    // serving engine falls back to the host oracle in that case.
+    match PjrtBackend::load(voltra::runtime::default_dir()) {
+        Ok(_) => eprintln!("PJRT artifacts present; serve will use them"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(!msg.is_empty());
+            eprintln!("SKIP pjrt path (expected without `make artifacts`): {msg}");
+        }
+    }
 }

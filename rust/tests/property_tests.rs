@@ -6,7 +6,7 @@
 //! seed printed for reproduction.
 
 use voltra::config::ChipConfig;
-use voltra::coordinator::{run_layer, TileCache};
+use voltra::coordinator::{run_layer, SharedTileCache, TileCache};
 use voltra::sim::agu::{AffineAgu, LoopDim};
 use voltra::sim::engine::{simulate_tile, TileSpec};
 use voltra::sim::fifo::Fifo;
@@ -160,6 +160,55 @@ fn prop_layer_runner_matches_analytic_macs() {
         let lm = run_layer(&cfg, &layer, &mut cache);
         assert_eq!(lm.tiles.useful_macs, layer.macs(), "case {case}: {layer:?}");
         assert!(lm.latency_cycles >= lm.tiles.total_cycles.min(lm.dma_cycles));
+    }
+}
+
+#[test]
+fn prop_shared_cache_equals_fresh_cache_on_tiles() {
+    // The shared serving cache must be a pure memoization: for any tile
+    // spec, it returns exactly what a fresh private cache (and the raw
+    // simulator) returns — first as a miss, then as a hit.
+    let cfg = ChipConfig::voltra();
+    let shared = SharedTileCache::new();
+    let mut rng = Rng(0x5AFE);
+    for case in 0..120 {
+        let tm = rng.range(1, 96);
+        let tk = rng.range(1, 256);
+        let tn = rng.range(1, 96);
+        let mut spec = TileSpec::simple(tm, tk, tn);
+        spec.psum_in = rng.next() % 2 == 0;
+        spec.spill_out = rng.next() % 2 == 0;
+        let mut fresh = TileCache::new();
+        let a = fresh.simulate(&cfg, &spec);
+        let b = shared.simulate(&cfg, &spec);
+        let c = shared.simulate(&cfg, &spec); // guaranteed hit path
+        assert_eq!(a, b, "case {case}: miss path diverged on {spec:?}");
+        assert_eq!(b, c, "case {case}: hit path diverged on {spec:?}");
+    }
+    assert!(shared.stats().hits >= 120, "hit path never exercised");
+}
+
+#[test]
+fn prop_layer_runs_identical_on_both_caches() {
+    // Whole layers (tiling search + tile enumeration + DMA folding) must
+    // produce identical LayerMetrics whichever cache backs them.
+    let cfg = ChipConfig::voltra();
+    let shared = SharedTileCache::new();
+    let mut rng = Rng(0xCACHE);
+    for case in 0..30 {
+        let layer = Layer::new(
+            "p",
+            LayerKind::Gemm {
+                m: rng.range(1, 512),
+                k: rng.range(1, 1024),
+                n: rng.range(1, 512),
+            },
+        );
+        let mut fresh = TileCache::new();
+        let a = run_layer(&cfg, &layer, &mut fresh);
+        let mut handle = &shared;
+        let b = run_layer(&cfg, &layer, &mut handle);
+        assert_eq!(a, b, "case {case}: {layer:?}");
     }
 }
 

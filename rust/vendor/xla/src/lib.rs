@@ -1,0 +1,234 @@
+//! Vendored stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! Substrate note (DESIGN.md §Substrate): the build image ships neither
+//! the native XLA/PJRT shared libraries nor crates.io access, so this
+//! path crate keeps the workspace compiling against the exact API
+//! surface `voltra::runtime` uses. The [`Literal`] container is fully
+//! functional (typed buffer + shape, reshape/to_vec round-trips); the
+//! PJRT client/executable surface compiles but reports at *runtime*
+//! that the native backend is unavailable — `ArtifactLib::load` then
+//! fails cleanly and every artifact-dependent path (tests, examples,
+//! the serving engine's numerics worker) falls back or skips, exactly
+//! as on a machine without `make artifacts`.
+//!
+//! Swapping the real binding back in is a one-line Cargo.toml change;
+//! no source file mentions the stub.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's: displayable, a real `std::error::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT native runtime is not available in this build (vendored xla stub; \
+         swap in the real xla crate in rust/Cargo.toml to execute AOT artifacts)"
+            .to_string(),
+    ))
+}
+
+/// Element types the manifest declares (int8 values ride in i32).
+#[derive(Clone, Debug, PartialEq)]
+enum Buf {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Marker trait for element types a [`Literal`] can hold.
+pub trait NativeType: Sized + Copy {
+    fn wrap(v: Vec<Self>) -> Buf;
+    fn unwrap(b: &Buf) -> Option<Vec<Self>>;
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Buf {
+        Buf::I32(v)
+    }
+    fn unwrap(b: &Buf) -> Option<Vec<Self>> {
+        match b {
+            Buf::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Buf {
+        Buf::F32(v)
+    }
+    fn unwrap(b: &Buf) -> Option<Vec<Self>> {
+        match b {
+            Buf::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side tensor value: typed buffer + shape. Fully functional.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// A rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            buf: T::wrap(v.to_vec()),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal {
+            buf: self.buf.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.buf {
+            Buf::I32(v) => v.len(),
+            Buf::F32(v) => v.len(),
+            Buf::Tuple(t) => t.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the buffer out as `Vec<T>`; errors on a dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf).ok_or_else(|| Error("literal dtype mismatch in to_vec".to_string()))
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.buf {
+            Buf::Tuple(t) => Ok(t),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+
+    /// Build a tuple literal (used by tests / future host backends).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let n = elems.len() as i64;
+        Literal {
+            buf: Buf::Tuple(elems),
+            dims: vec![n],
+        }
+    }
+}
+
+/// Parsed HLO module handle. The stub never parses: construction fails.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable()
+    }
+}
+
+/// Computation handle wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. `cpu()` reports the backend as unavailable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_i32_and_f32() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        assert_eq!(l.element_count(), 6);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(r.to_vec::<f32>().is_err());
+        let f = Literal::vec1(&[0.5f32]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_counts() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn tuple_destructures() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_surface_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("not available"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
