@@ -53,7 +53,7 @@ fn main() {
     );
     common::rule();
     let net = resnet50();
-    for bw in [2.0, 4.0, 8.0, 16.0, 32.0] {
+    for bw in [2u64, 4, 8, 16, 32] {
         let mut v = ChipConfig::voltra();
         v.dma_bytes_per_cycle = bw;
         let mut s = ChipConfig::separated_memory();
@@ -61,7 +61,7 @@ fn main() {
         let lv = run_workload(&v, &net).metrics.total_latency_cycles();
         let ls = run_workload(&s, &net).metrics.total_latency_cycles();
         println!(
-            "{bw:>10.0} {lv:>14} {ls:>14} {:>7.2}x",
+            "{bw:>10} {lv:>14} {ls:>14} {:>7.2}x",
             ls as f64 / lv as f64
         );
     }

@@ -1,0 +1,54 @@
+//! perf: the event-driven layer pipeline scheduler's hot path
+//! (DESIGN.md §9) — the per-layer timeline resolution that replaced the
+//! analytic overlap heuristic, plus the consumer path (a full workload
+//! run) where the scheduler must stay invisible in the profile.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::run_workload;
+use voltra::sim::pipeline::{schedule, TilePlan, TileRun};
+use voltra::workloads::by_name;
+
+fn main() {
+    common::header("perf — layer pipeline scheduler");
+
+    // Synthetic stress: many short mixed runs, which defeats the
+    // closed-form fast path as hard as any real dispatch sequence can
+    // (real layers have a handful of long runs, not 4096 short ones).
+    let plans: Vec<TilePlan> = (0..512u64)
+        .map(|i| TilePlan {
+            double_buffered: i % 2 == 0,
+            runs: (0..8u64)
+                .map(|j| TileRun {
+                    count: 1 + (i + j) % 7,
+                    compute_cycles: 500 + 37 * j,
+                    dma_cycles: 400 + 53 * ((i + j) % 11),
+                })
+                .collect(),
+        })
+        .collect();
+    let s = schedule(&plans);
+    println!(
+        "synthetic: {} runs -> latency {} (compute {}, dma {}, hidden {})",
+        512 * 8,
+        s.latency_cycles,
+        s.compute_cycles,
+        s.dma_cycles,
+        s.hidden_cycles()
+    );
+    assert!(s.latency_cycles >= s.compute_cycles.max(s.dma_cycles));
+    assert!(s.latency_cycles <= s.compute_cycles + s.dma_cycles);
+    common::report("schedule 4096 mixed tile runs", 200, || {
+        let _ = schedule(&plans);
+    });
+
+    // Consumer path: tiling + memoized tile simulation + scheduling for
+    // a real network, fresh cache each iteration.
+    let cfg = ChipConfig::voltra();
+    let w = by_name("resnet50").unwrap();
+    common::report("resnet50 end-to-end (fresh cache)", 3, || {
+        let _ = run_workload(&cfg, &w);
+    });
+}

@@ -120,8 +120,10 @@ pub struct ChipConfig {
     pub num_banks: usize,
     /// Shared-memory access latency in cycles (bank + crossbar).
     pub mem_latency: u64,
-    /// Off-chip DMA bandwidth, bytes per core cycle.
-    pub dma_bytes_per_cycle: f64,
+    /// Off-chip DMA bandwidth, bytes per core cycle. Integer so DMA
+    /// timing is exact `div_ceil` arithmetic (platform-deterministic,
+    /// no precision loss on huge transfers).
+    pub dma_bytes_per_cycle: u64,
     /// Fixed DMA burst setup latency in cycles.
     pub dma_burst_latency: u64,
     /// Overlap DMA with compute via double buffering when the allocator
@@ -147,7 +149,7 @@ impl ChipConfig {
             tmux_psum_output: true,
             num_banks: arch::NUM_BANKS,
             mem_latency: 2,
-            dma_bytes_per_cycle: 8.0,
+            dma_bytes_per_cycle: 8,
             dma_burst_latency: 24,
             double_buffer: true,
             operating_point: OperatingPoint::performance(),

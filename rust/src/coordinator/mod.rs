@@ -11,8 +11,11 @@
 //!      not ~10^5;
 //!   4. charge auxiliary cycles (Snitch CSR programming per tile,
 //!      reshuffler passes for raw-layout feature maps);
-//!   5. combine compute with bandwidth-limited DMA (overlapped when the
-//!      allocator could double-buffer).
+//!   5. emit the dispatched tile sequence as a per-GEMM [`sim::pipeline`]
+//!      plan and resolve the layer's latency with the event-driven
+//!      pipeline scheduler — DMA overlaps compute tile by tile exactly
+//!      where the allocator granted ping-pong regions for *that* GEMM
+//!      (a fused layer may mix grants across its GEMMs).
 //!
 //! Concurrency (DESIGN.md §Concurrency): the chip-model path is pure —
 //! `choose_tiling` and `simulate_tile` depend only on `(cfg, key)` — so
@@ -33,9 +36,10 @@ use std::sync::{Mutex, RwLock};
 use crate::config::ChipConfig;
 use crate::metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
 use crate::sim::agu::LoopDim;
-use crate::sim::dma::{overlap_latency, transfer_cost};
+use crate::sim::dma::transfer_cost;
 use crate::sim::engine::{simulate_tile, TileSpec};
 use crate::sim::gemm_core::Mapping;
+use crate::sim::pipeline::{self, LayerPlan, TilePlan, TileRun};
 use crate::sim::reshuffler::reshuffle_cycles;
 use crate::sim::snitch::{CsrProgram, StreamerId};
 use crate::sim::streamer::{Grain, StreamerProgram};
@@ -264,6 +268,28 @@ fn edge(d: u64, t: u64) -> (u64, u64, u64) {
     }
 }
 
+/// Split one GEMM's DMA cycles across its tile runs proportional to the
+/// raw bytes each tile variant moves (operands in, psums in/out, results
+/// out) — integer-exact via [`pipeline::DmaSplitter`]: the run totals
+/// sum to `total_dma`, so the scheduler's DMA busy time equals the
+/// layer's accounted DMA cycles. `raw` entries are
+/// `(count, compute_cycles_per_tile, bytes_per_tile)`.
+fn attribute_dma(raw: &[(u64, u64, u64)], total_dma: u64) -> Vec<TileRun> {
+    let mut total_weight: u128 = raw.iter().map(|&(c, _, b)| c as u128 * b as u128).sum();
+    // Degenerate zero-byte variants (tiling never emits them): fall back
+    // to uniform attribution so no DMA time is dropped.
+    let uniform = total_weight == 0;
+    if uniform {
+        total_weight = raw.iter().map(|&(c, _, _)| c as u128).sum();
+    }
+    let mut runs = Vec::with_capacity(raw.len() + 1);
+    let mut split = pipeline::DmaSplitter::new(total_weight, total_dma);
+    for &(count, compute, bytes) in raw {
+        split.push(&mut runs, count, compute, if uniform { 1 } else { bytes });
+    }
+    runs
+}
+
 /// Run one layer's GEMMs through tiling + simulation.
 pub fn run_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -> LayerMetrics {
     run_layer_counted(cfg, layer, cache).0
@@ -275,10 +301,24 @@ pub fn run_layer_counted<C: SimCache>(
     layer: &Layer,
     cache: &mut C,
 ) -> (LayerMetrics, u64) {
+    let (lm, dispatched, _) = run_layer_planned(cfg, layer, cache);
+    (lm, dispatched)
+}
+
+/// Full layer run: metrics, dispatch count, and the tile plan the
+/// pipeline scheduler consumed. The workload runner keeps the plan so
+/// activation chaining can trim the DMA attribution and *re-schedule*
+/// instead of re-applying an analytic overlap formula.
+pub fn run_layer_planned<C: SimCache>(
+    cfg: &ChipConfig,
+    layer: &Layer,
+    cache: &mut C,
+) -> (LayerMetrics, u64, LayerPlan) {
     let mut lm = LayerMetrics {
         name: layer.name.clone(),
         ..Default::default()
     };
+    let mut plan = LayerPlan::default();
     let mut total_dispatched = 0u64;
 
     for mut g in layer.gemms() {
@@ -317,7 +357,11 @@ pub fn run_layer_counted<C: SimCache>(
                     // Interior rounds: the first has no psum-in; the last
                     // interior one quantizes only if there is no edge.
                     let mut first = 1u64.min(cnt);
-                    let mut last = if last_is_edge { 0 } else { 1u64.min(cnt.saturating_sub(first)) };
+                    let mut last = if last_is_edge {
+                        0
+                    } else {
+                        1u64.min(cnt.saturating_sub(first))
+                    };
                     if cnt == 1 && !last_is_edge {
                         // Single interior round that is both first & last.
                         first = 1;
@@ -340,7 +384,13 @@ pub fn run_layer_counted<C: SimCache>(
         }
 
         let pl = tiling.placement;
+        // Control overhead: one CSR program per dispatched tile (part of
+        // the tile engine's per-tile busy time in the schedule).
+        let csr_cycles = tile_csr_cycles(tiling.tk);
         let mut dispatched = 0u64;
+        // (count, per-tile compute cycles, per-tile raw bytes) per
+        // variant, in dispatch order — the scheduler's tile runs.
+        let mut raw_runs: Vec<(u64, u64, u64)> = Vec::new();
         for &(tm, mc) in &m_variants {
             if mc == 0 {
                 continue;
@@ -369,13 +419,19 @@ pub fn run_layer_counted<C: SimCache>(
                     let count = mc * nc * kc * g.repeat;
                     lm.tiles.add_scaled(&tmetrics, count);
                     dispatched += count;
+                    // Raw byte weight of this variant for DMA
+                    // attribution: operand tiles in, int32 psums
+                    // round-tripped, results out.
+                    let psum_bytes = if psum_in { 4 * tm * tn } else { 0 };
+                    let out_bytes = if spill_out { 4 * tm * tn } else { tm * tn };
+                    let tile_bytes = tm * tk + tk * tn + psum_bytes + out_bytes;
+                    raw_runs.push((count, tmetrics.total_cycles + csr_cycles, tile_bytes));
                 }
             }
         }
 
-        // Control overhead: one CSR program per dispatched tile.
         total_dispatched += dispatched;
-        lm.aux_cycles += dispatched * tile_csr_cycles(tiling.tk);
+        lm.aux_cycles += dispatched * csr_cycles;
         // PDMA weight residency: if the whole weight operand fits in the
         // memory the organisation can give it, recurrent repeats stream
         // the weights once instead of every step. The separated baseline
@@ -392,34 +448,40 @@ pub fn run_layer_counted<C: SimCache>(
             parts.total() * g.repeat
         };
         lm.dma_bytes += gemm_traffic;
-        lm.tile_footprint_bytes = lm
-            .tile_footprint_bytes
-            .max(tiling.footprint.total() as u64);
+        lm.tile_footprint_bytes = lm.tile_footprint_bytes.max(tiling.footprint.total() as u64);
         lm.macs += g.macs();
         let _ = (nm, nn);
 
         // DMA timing: bandwidth-limited, plus per-tile burst setup — a
         // config that tiles finer (separated buffers) pays more burst
-        // overhead for the same bytes.
+        // overhead for the same bytes. The total is attributed across
+        // this GEMM's tile runs so the scheduler can interleave it with
+        // compute at tile granularity.
         let t = transfer_cost(cfg, gemm_traffic);
-        lm.dma_cycles += t.cycles + dispatched * cfg.dma_burst_latency;
-        let db = tiling.double_buffered && cfg.double_buffer;
-        lm.latency_cycles = overlap_latency(
-            lm.tiles.total_cycles + lm.aux_cycles,
-            lm.dma_cycles,
-            db,
-        );
+        let gemm_dma_cycles = t.cycles + dispatched * cfg.dma_burst_latency;
+        lm.dma_cycles += gemm_dma_cycles;
+        plan.gemms.push(TilePlan {
+            runs: attribute_dma(&raw_runs, gemm_dma_cycles),
+            // Ping-pong regions exist only when the allocator granted
+            // double-buffer space for THIS GEMM — per-GEMM, never
+            // inherited from whichever GEMM the layer lowered last.
+            double_buffered: tiling.double_buffered && cfg.double_buffer,
+        });
     }
 
-    // Reshuffler pass for raw conv feature maps.
+    // Reshuffler pass for raw conv feature maps (serial, before the
+    // tile timeline can stream the blocked layout).
     let rb = reshuffle_bytes(layer);
     if rb > 0 {
-        let rc = reshuffle_cycles(rb) * layer.repeat;
-        lm.aux_cycles += rc;
-        lm.latency_cycles += rc;
+        plan.reshuffle_cycles = reshuffle_cycles(rb) * layer.repeat;
+        lm.aux_cycles += plan.reshuffle_cycles;
     }
 
-    (lm, total_dispatched)
+    let s = pipeline::schedule_layer(&plan);
+    lm.latency_cycles = s.latency_cycles;
+    lm.overlap_cycles = s.hidden_cycles();
+
+    (lm, total_dispatched, plan)
 }
 
 /// Activation bytes a layer produces (what the next layer consumes).
@@ -438,6 +500,7 @@ fn activation_in_bytes(layer: &Layer) -> u64 {
         LayerKind::DepthwiseConv { h, w, c, .. } => h * w * c,
         LayerKind::Gemm { m, k, .. } => m * k,
         LayerKind::BatchedMatmul { batch, m, k, .. } => batch * m * k,
+        LayerKind::Fused(ref gemms) => gemms.iter().map(|&(m, k, _)| m * k).sum(),
         LayerKind::Pool { h, w, c, .. } => h * w * c,
     }
 }
@@ -467,7 +530,7 @@ pub fn run_workload_with<C: SimCache>(
     let mut dispatched = 0u64;
     let mut prev_out: u64 = 0;
     for layer in &w.layers {
-        let (mut lm, d) = run_layer_counted(cfg, layer, cache);
+        let (mut lm, d, mut plan) = run_layer_planned(cfg, layer, cache);
         dispatched += d;
         if shared {
             let a_in = activation_in_bytes(layer);
@@ -479,14 +542,17 @@ pub fn run_workload_with<C: SimCache>(
                 let saved = 2 * chained * layer.repeat;
                 let saved = saved.min(lm.dma_bytes / 2);
                 lm.dma_bytes -= saved;
-                let saved_cycles =
-                    (saved as f64 / cfg.dma_bytes_per_cycle).ceil() as u64;
-                lm.dma_cycles = lm.dma_cycles.saturating_sub(saved_cycles);
-                lm.latency_cycles = overlap_latency(
-                    lm.tiles.total_cycles + lm.aux_cycles,
-                    lm.dma_cycles,
-                    cfg.double_buffer,
-                );
+                let saved_cycles = saved.div_ceil(cfg.dma_bytes_per_cycle.max(1));
+                let new_dma = lm.dma_cycles.saturating_sub(saved_cycles);
+                // Trim the plan's per-tile DMA attribution to the new
+                // total and re-resolve the timeline — chaining shortens
+                // the transfers, it does not change the overlap rules
+                // (each GEMM keeps its own ping-pong grant).
+                pipeline::scale_dma(&mut plan.gemms, new_dma);
+                lm.dma_cycles = new_dma;
+                let s = pipeline::schedule_layer(&plan);
+                lm.latency_cycles = s.latency_cycles;
+                lm.overlap_cycles = s.hidden_cycles();
             }
             prev_out = activation_out_bytes(layer);
             if prev_out > chain_budget {
@@ -606,6 +672,39 @@ mod tests {
             let simulated: u64 = r.metrics.layers.iter().map(|l| l.tiles.useful_macs).sum();
             assert_eq!(simulated, w.total_macs(), "{}", w.name);
         }
+    }
+
+    #[test]
+    fn single_buffered_layer_fully_serializes() {
+        // A GEMM too large to ping-pong in the shared space gets no
+        // overlap: the schedule degenerates to compute + DMA exactly.
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new("big", LayerKind::Gemm { m: 512, k: 768, n: 768 });
+        let mut cache = TileCache::new();
+        let lm = run_layer(&cfg, &l, &mut cache);
+        assert_eq!(
+            lm.latency_cycles,
+            lm.tiles.total_cycles + lm.aux_cycles + lm.dma_cycles
+        );
+        assert_eq!(lm.overlap_cycles, 0);
+    }
+
+    #[test]
+    fn double_buffered_layer_hides_dma_behind_compute() {
+        // Twelve identical ping-pong tiles: all but the first transfer
+        // overlaps a neighbour tile's compute.
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new(
+            "heads",
+            LayerKind::BatchedMatmul { batch: 12, m: 64, k: 64, n: 64 },
+        );
+        let mut cache = TileCache::new();
+        let lm = run_layer(&cfg, &l, &mut cache);
+        let compute = lm.tiles.total_cycles + lm.aux_cycles;
+        assert!(lm.overlap_cycles > 0, "ping-pong schedule hid nothing");
+        assert!(lm.latency_cycles >= compute.max(lm.dma_cycles));
+        assert!(lm.latency_cycles < compute + lm.dma_cycles);
+        assert_eq!(lm.overlap_cycles, compute + lm.dma_cycles - lm.latency_cycles);
     }
 
     #[test]

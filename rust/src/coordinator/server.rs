@@ -144,7 +144,13 @@ fn run_numerics(
 
 /// What the chip would cost for this GEMM (memoized cycle model; safe to
 /// call from many threads at once).
-pub fn sim_cost(cfg: &ChipConfig, cache: &SharedTileCache, m: usize, k: usize, n: usize) -> (u64, f64) {
+pub fn sim_cost(
+    cfg: &ChipConfig,
+    cache: &SharedTileCache,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> (u64, f64) {
     let layer = Layer::new(
         "req",
         LayerKind::Gemm {

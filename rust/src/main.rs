@@ -133,7 +133,12 @@ fn report_line(cfg: &ChipConfig, w: &workloads::Workload) {
 fn print_report(cfg: &ChipConfig, r: &voltra::WorkloadReport) {
     let m = &r.metrics;
     let p = EnergyParams::default();
-    let e = voltra::power::energy::workload_energy_j(&p, m, &Activity::default(), cfg.operating_point);
+    let e = voltra::power::energy::workload_energy_j(
+        &p,
+        m,
+        &Activity::default(),
+        cfg.operating_point,
+    );
     let t_s = m.total_latency_cycles() as f64 / (cfg.operating_point.freq_mhz * 1e6);
     println!(
         "{:<22} spatial {:>6.2}%  temporal {:>6.2}%  latency {:>12} cyc  {:>9.3} ms  {:>9.3} mJ  ({} unique tiles / {} dispatched)",
@@ -156,31 +161,46 @@ fn cmd_report(cfg: &ChipConfig, name: &str) {
     let r = run_workload(cfg, &w);
     let m = &r.metrics;
     println!(
-        "{:<16} {:>9} {:>9} {:>12} {:>12} {:>12} {:>10}",
-        "layer", "spatial", "temporal", "compute cyc", "dma cyc", "latency", "KB moved"
+        "{:<16} {:>9} {:>9} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "layer", "spatial", "temporal", "compute cyc", "dma cyc", "overlap", "latency", "KB moved"
     );
     for l in &m.layers {
         if l.macs == 0 {
             continue;
         }
         println!(
-            "{:<16} {:>8.1}% {:>8.1}% {:>12} {:>12} {:>12} {:>10}",
-            if l.name.len() > 16 { &l.name[..16] } else { &l.name },
+            "{:<16} {:>8.1}% {:>8.1}% {:>12} {:>12} {:>12} {:>12} {:>10}",
+            if l.name.len() > 16 {
+                &l.name[..16]
+            } else {
+                &l.name
+            },
             100.0 * l.tiles.spatial_utilization(),
             100.0 * l.tiles.temporal_utilization(),
             l.tiles.total_cycles,
             l.dma_cycles,
+            l.overlap_cycles,
             l.latency_cycles,
             l.dma_bytes / 1024,
         );
     }
+    println!(
+        "pipeline: {} compute cyc + {} dma cyc -> {} latency cyc ({} hidden by overlap)",
+        m.total_compute_cycles(),
+        m.total_dma_cycles(),
+        m.total_latency_cycles(),
+        m.total_overlap_cycles(),
+    );
     let p = EnergyParams::default();
     let act = Activity::default();
     let b = voltra::power::energy_breakdown(&p, m, &act, cfg.operating_point);
     let tot = b.total();
-    println!("
-energy breakdown ({:.3} mJ total @{:.1}V/{:.0}MHz):",
-        tot * 1e3, cfg.operating_point.voltage, cfg.operating_point.freq_mhz);
+    println!(
+        "\nenergy breakdown ({:.3} mJ total @{:.1}V/{:.0}MHz):",
+        tot * 1e3,
+        cfg.operating_point.voltage,
+        cfg.operating_point.freq_mhz
+    );
     for (name, j) in [
         ("MAC array (active)", b.mac_j),
         ("MAC array (idle lanes)", b.idle_j),

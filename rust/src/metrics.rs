@@ -97,8 +97,13 @@ pub struct LayerMetrics {
     pub dma_bytes: u64,
     /// DMA cycles (bandwidth + burst overhead), before overlap.
     pub dma_cycles: u64,
-    /// Layer latency after compute/DMA overlap.
+    /// Layer latency as resolved by the event-driven pipeline scheduler
+    /// (`sim::pipeline`): compute and DMA overlapped tile by tile where
+    /// the allocator granted ping-pong regions.
     pub latency_cycles: u64,
+    /// Cycles the schedule hid by overlapping DMA with compute:
+    /// `(compute + dma) - latency`; 0 when fully serialized.
+    pub overlap_cycles: u64,
     /// Reshuffler / maxpool / auxiliary cycles.
     pub aux_cycles: u64,
     /// On-chip memory footprint of the chosen tiling (bytes).
@@ -130,6 +135,12 @@ impl WorkloadMetrics {
     /// End-to-end latency including off-chip movement (Fig. 6c metric).
     pub fn total_latency_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.latency_cycles).sum()
+    }
+
+    /// Cycles hidden by compute/DMA overlap across the whole workload
+    /// (what double buffering bought; the scheduler's Fig. 6c levers).
+    pub fn total_overlap_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.overlap_cycles).sum()
     }
 
     pub fn total_macs(&self) -> u64 {
@@ -252,5 +263,6 @@ mod tests {
         assert_eq!(w.spatial_utilization(), 0.0);
         assert_eq!(w.temporal_utilization(), 0.0);
         assert_eq!(w.total_latency_cycles(), 0);
+        assert_eq!(w.total_overlap_cycles(), 0);
     }
 }

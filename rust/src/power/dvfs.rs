@@ -41,7 +41,9 @@ pub fn fmax_mhz(v: f64) -> f64 {
 
 /// Does the die pass at this operating point? (the shmoo's green cells)
 pub fn passes(op: OperatingPoint) -> bool {
-    op.voltage >= 0.6 - 1e-9 && op.voltage <= 1.0 + 1e-9 && op.freq_mhz <= fmax_mhz(op.voltage) + 1e-9
+    op.voltage >= 0.6 - 1e-9
+        && op.voltage <= 1.0 + 1e-9
+        && op.freq_mhz <= fmax_mhz(op.voltage) + 1e-9
 }
 
 /// The full shmoo grid (Fig. 7a): voltages x frequencies -> pass/fail.

@@ -6,4 +6,6 @@ pub mod dvfs;
 pub mod energy;
 
 pub use area::AreaModel;
-pub use energy::{energy_breakdown, power_mw, tops_per_watt, Activity, EnergyBreakdown, EnergyParams};
+pub use energy::{
+    energy_breakdown, power_mw, tops_per_watt, Activity, EnergyBreakdown, EnergyParams,
+};

@@ -82,8 +82,9 @@ impl ArtifactLib {
     /// Load `<dir>/manifest.json` and create the PJRT CPU client.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
         let j = parse(&text).map_err(|e| anyhow!("{e}"))?;
         let format = j
             .get("format")

@@ -19,13 +19,18 @@ pub struct DmaTransfer {
 
 /// Cycle cost of moving `bytes` off-chip<->on-chip.
 /// Bursts are 1 KiB (a typical AXI-ish max burst for such SoCs).
+///
+/// Integer-exact: bandwidth division is `div_ceil` over the integer
+/// bytes-per-cycle rate, so multi-petabyte transfer sizes (sweep
+/// extremes, hostile inputs) never lose cycles to `f64` rounding and the
+/// result is identical on every platform.
 pub fn transfer_cost(cfg: &ChipConfig, bytes: u64) -> DmaTransfer {
     const BURST_BYTES: u64 = 1024;
     if bytes == 0 {
         return DmaTransfer::default();
     }
     let bursts = bytes.div_ceil(BURST_BYTES);
-    let bw_cycles = (bytes as f64 / cfg.dma_bytes_per_cycle).ceil() as u64;
+    let bw_cycles = bytes.div_ceil(cfg.dma_bytes_per_cycle.max(1));
     DmaTransfer {
         bytes,
         bursts,
@@ -37,6 +42,11 @@ pub fn transfer_cost(cfg: &ChipConfig, bytes: u64) -> DmaTransfer {
 /// honouring the double-buffering capability (Fig. 6c's "total latency"):
 /// with double buffering the longer of the two pipelines dominates and
 /// the shorter hides; without, they serialize.
+///
+/// Retained as the analytic *cross-check* for the event-driven scheduler
+/// ([`crate::sim::pipeline`]) that replaced it on the workload path:
+/// every schedule must land inside this function's serial/overlapped
+/// envelope (asserted by `tests/pipeline_invariants.rs`).
 pub fn overlap_latency(compute_cycles: u64, dma_cycles: u64, double_buffered: bool) -> u64 {
     if double_buffered {
         compute_cycles.max(dma_cycles)
@@ -109,6 +119,18 @@ mod tests {
     fn zero_transfer_is_free() {
         let cfg = ChipConfig::voltra();
         assert_eq!(transfer_cost(&cfg, 0), DmaTransfer::default());
+    }
+
+    #[test]
+    fn huge_transfer_timing_is_integer_exact() {
+        // Regression: the old `f64` bandwidth division rounded
+        // (2^53 + 1) down to 2^53 and lost a cycle — results depended on
+        // float rounding instead of being platform-deterministic.
+        let cfg = ChipConfig::voltra(); // 8 bytes/cycle
+        let bytes = (1u64 << 53) + 1;
+        let t = transfer_cost(&cfg, bytes);
+        let expect = (1u64 << 50) + 1 + bytes.div_ceil(1024) * cfg.dma_burst_latency;
+        assert_eq!(t.cycles, expect);
     }
 
     #[test]

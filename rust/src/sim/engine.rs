@@ -68,44 +68,49 @@ const MAX_CHANNELS: usize = 8;
 /// Per-channel streamer state (input lanes + weight lane). The MIC
 /// pipelines requests: it may have several accesses in flight (the bank
 /// accepts one per cycle), bounded by the FIFO space it reserved.
-#[derive(Clone, Copy, Default)]
+///
+/// The in-flight queue is sized from the *configured* FIFO depth
+/// (`ChipConfig::stream_fifo_depth` is a sweep axis, not a hardware
+/// constant): a fixed 8-slot ring silently corrupted depth > 8 sweep
+/// points whenever the memory latency let more than eight requests pile
+/// up (regression-tested below).
+#[derive(Clone)]
 struct Channel {
     issued: u64,
     /// Words sitting in the FIFO, not yet consumed.
     fill: u64,
-    /// In-flight ring: landing cycles of outstanding requests.
-    ready: [u64; 8],
-    rhead: usize,
-    rlen: usize,
+    /// In-flight queue: landing cycles of outstanding requests, in
+    /// issue order (the MIC issues <= 1/cycle, so landings are FIFO).
+    ready: std::collections::VecDeque<u64>,
+    /// Reserved FIFO space bounds outstanding requests: `fill +
+    /// inflight < cap` is the issue condition, so `cap` slots suffice.
+    cap: usize,
 }
 
 impl Channel {
-    fn new() -> Self {
+    fn new(cap: usize) -> Self {
         Channel {
             issued: 0,
             fill: 0,
-            ready: [u64::MAX; 8],
-            rhead: 0,
-            rlen: 0,
+            ready: std::collections::VecDeque::with_capacity(cap.max(1)),
+            cap: cap.max(1),
         }
     }
 
     fn inflight(&self) -> u64 {
-        self.rlen as u64
+        self.ready.len() as u64
     }
 
     fn launch(&mut self, lands_at: u64) {
-        debug_assert!(self.rlen < 8);
-        self.ready[(self.rhead + self.rlen) % 8] = lands_at;
-        self.rlen += 1;
+        debug_assert!(self.ready.len() < self.cap, "in-flight overflow: issue gating broken");
+        self.ready.push_back(lands_at);
     }
 
     /// Pop at most one arrival this cycle (the MIC issues <= 1/cycle so
     /// landings are also <= 1/cycle).
     fn arrive(&mut self, cycle: u64) -> bool {
-        if self.rlen > 0 && self.ready[self.rhead] == cycle {
-            self.rhead = (self.rhead + 1) % 8;
-            self.rlen -= 1;
+        if self.ready.front() == Some(&cycle) {
+            self.ready.pop_front();
             self.fill += 1;
             true
         } else {
@@ -153,10 +158,10 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         1
     };
 
-    let mut mem =
-        BankedMemory::with_size(crate::arch::DATA_MEM_BYTES, cfg.num_banks);
-    let mut inputs = [Channel::new(); MAX_CHANNELS];
-    let mut weight = Channel::new();
+    let mut mem = BankedMemory::with_size(crate::arch::DATA_MEM_BYTES, cfg.num_banks);
+    let mut inputs: Vec<Channel> =
+        (0..MAX_CHANNELS).map(|_| Channel::new(fifo_depth as usize)).collect();
+    let mut weight = Channel::new(fifo_depth as usize);
     // Psum prefetch progress (words delivered / issued).
     let mut psum_issued: u64 = 0;
     let mut psum_fill: u64 = 0;
@@ -259,7 +264,8 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         // Input channels (fine-grained 64-bit, Fig. 3a).
         for (r, ch) in inputs.iter_mut().enumerate().take(n_in) {
             if ch.issued < total_steps && ch.fill + ch.inflight() < fifo_depth {
-                let demand_ok = cfg.prefetch || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == fired);
+                let demand_ok =
+                    cfg.prefetch || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == fired);
                 if demand_ok {
                     let s = ch.issued;
                     let sub = s / ksteps;
@@ -282,8 +288,8 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         }
         // Weight channel (coarse-grained 512-bit super bank, Fig. 3b).
         if weight.issued < total_steps && weight.fill + weight.inflight() < fifo_depth {
-            let demand_ok =
-                cfg.prefetch || (weight.fill == 0 && weight.inflight() == 0 && weight.issued == fired);
+            let demand_ok = cfg.prefetch
+                || (weight.fill == 0 && weight.inflight() == 0 && weight.issued == fired);
             if demand_ok {
                 let s = weight.issued;
                 let sub = s / ksteps;
@@ -514,5 +520,24 @@ mod tests {
         let m = simulate_tile(&cfg, &TileSpec::simple(1, 1, 1));
         assert_eq!(m.useful_macs, 1);
         assert_eq!(m.active_cycles, 1);
+    }
+
+    #[test]
+    fn deep_fifo_with_slow_memory_keeps_inflight_queue_consistent() {
+        // Regression: `stream_fifo_depth` is configurable but the
+        // in-flight ring was hardcoded to 8 slots — a depth-16 sweep
+        // point with a memory latency that lets >8 requests pile up
+        // tripped the debug assertion (and corrupted the ring in
+        // release). The queue is now sized from the config.
+        let mut cfg = ChipConfig::voltra();
+        cfg.stream_fifo_depth = 16;
+        cfg.mem_latency = 12;
+        let spec = TileSpec::simple(64, 256, 64);
+        let m = simulate_tile(&cfg, &spec);
+        assert_eq!(m.useful_macs, 64 * 256 * 64);
+        // The deep FIFO must actually cover the latency: utilization
+        // stays pipelined, nowhere near demand-fetch levels.
+        let u = m.temporal_utilization();
+        assert!(u > 0.5, "depth-16 pipelining collapsed: {u:.3}");
     }
 }

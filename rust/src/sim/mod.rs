@@ -10,7 +10,10 @@
 //! * [`simd`] — the 8-lane quantization unit;
 //! * [`reshuffler`] / [`maxpool`] — auxiliary blocks;
 //! * [`snitch`] — CSR programming model;
-//! * [`dma`] — off-chip movement.
+//! * [`dma`] — off-chip movement;
+//! * [`pipeline`] — the event-driven layer pipeline scheduler that
+//!   resolves each layer's tile sequence against the DMA engine and the
+//!   tile engine (DESIGN.md §9).
 
 pub mod agu;
 pub mod array2d;
@@ -21,9 +24,11 @@ pub mod fifo;
 pub mod gemm_core;
 pub mod maxpool;
 pub mod memory;
+pub mod pipeline;
 pub mod reshuffler;
 pub mod simd;
 pub mod snitch;
 pub mod streamer;
 
 pub use engine::{simulate_tile, TileSpec};
+pub use pipeline::{LayerPlan, Schedule, TilePlan, TileRun};

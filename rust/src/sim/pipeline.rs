@@ -1,0 +1,426 @@
+//! Event-driven layer pipeline scheduler (DESIGN.md §9).
+//!
+//! Replaces the analytic `overlap_latency` heuristic on the workload
+//! path: instead of blending a layer's *total* compute and DMA cycles
+//! with a scalar max/sum formula, the coordinator emits the layer's
+//! dispatched tile sequence as [`TilePlan`]s and this module walks it as
+//! an event timeline over two serial resources:
+//!
+//! * the **DMA engine** — fetches every tile's working set (per-tile
+//!   cycles attributed from the layer's reuse-model traffic, bandwidth
+//!   and burst setup included), one tile at a time;
+//! * the **tile engine** — executes each tile for its memoized simulated
+//!   cycle count plus the Snitch CSR program that launches it.
+//!
+//! The dependence rules are the hardware's ping-pong discipline:
+//!
+//! * a tile's compute starts once its DMA completed AND the previous
+//!   tile's compute retired (there is one array);
+//! * with double buffering (the allocator granted ping-pong regions for
+//!   *this* GEMM), tile `i`'s DMA may start as soon as tile `i-2`
+//!   released its half of the region — the transfer overlaps tile
+//!   `i-1`'s compute;
+//! * without double buffering there is a single region, so tile `i`'s
+//!   DMA waits for tile `i-1`'s compute — transfer and compute fully
+//!   serialize.
+//!
+//! Prefetch depth, psum-spill round-trips and GEMM boundaries thereby
+//! emerge from the schedule instead of a fixed `/8` bubble term. The old
+//! [`crate::sim::dma::overlap_latency`] survives as the analytic
+//! cross-check: every schedule lands inside its serial/overlapped
+//! envelope `[max(compute, dma), compute + dma]` by construction
+//! (property-tested below and at workload level).
+//!
+//! Runs of identical tiles advance in closed form: the recurrence's
+//! increments become constant within three steps (both resources then
+//! advance by `max(c, d)` when double-buffered, `c + d` when not), so a
+//! million-tile layer schedules in microseconds. The equality of the
+//! closed form against the tile-by-tile walk is itself a unit test.
+
+/// A run of identical tiles inside one GEMM's dispatch sequence (the
+/// interior/edge x K-round variants the coordinator enumerates share
+/// per-tile costs, so each variant is one run).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileRun {
+    pub count: u64,
+    /// Tile-engine busy cycles per tile (simulated + CSR programming).
+    pub compute_cycles: u64,
+    /// DMA-engine busy cycles per tile (bandwidth + burst share).
+    pub dma_cycles: u64,
+}
+
+/// One GEMM's dispatched tile sequence plus its double-buffer grant.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TilePlan {
+    pub runs: Vec<TileRun>,
+    /// The allocator granted ping-pong regions for THIS GEMM. A layer
+    /// may mix grants across its GEMMs (LSTM gate bundles, attention
+    /// QKV) — the flag must never leak from one GEMM to the whole
+    /// layer, which is exactly the accounting bug the scheduler fixed.
+    pub double_buffered: bool,
+}
+
+/// A whole layer as the scheduler consumes it.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub gemms: Vec<TilePlan>,
+    /// Serial reshuffler pass charged after the tile timeline.
+    pub reshuffle_cycles: u64,
+}
+
+/// Resolved timeline of one layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Schedule {
+    /// End-to-end cycles from first DMA issue to last compute retire
+    /// (plus the serial reshuffle pass for [`LayerPlan`] scheduling).
+    pub latency_cycles: u64,
+    /// Total tile-engine busy cycles (sum of count x compute).
+    pub compute_cycles: u64,
+    /// Total DMA-engine busy cycles (sum of count x dma).
+    pub dma_cycles: u64,
+}
+
+impl Schedule {
+    /// Cycles the schedule hid by overlapping the two resources:
+    /// `compute + dma - latency` (zero when fully serialized).
+    pub fn hidden_cycles(&self) -> u64 {
+        (self.compute_cycles + self.dma_cycles).saturating_sub(self.latency_cycles)
+    }
+}
+
+/// Pipeline state: absolute cycle stamps of the two resources.
+///
+/// Invariants maintained by `step`: `prev >= dma_free` (a tile retires
+/// after its own DMA) and `prev >= prev2` (retire order is dispatch
+/// order). Both are what make the closed-form tail exact.
+#[derive(Clone, Copy, Debug, Default)]
+struct Timeline {
+    /// When the DMA engine finishes its latest transfer.
+    dma_free: u64,
+    /// Compute-retire time of the last tile.
+    prev: u64,
+    /// Compute-retire time of the tile before it (ping/pong release).
+    prev2: u64,
+}
+
+impl Timeline {
+    /// Advance the timeline by one tile.
+    fn step(&mut self, compute: u64, dma: u64, double_buffered: bool) {
+        let buffer_ready = if double_buffered {
+            self.prev2
+        } else {
+            self.prev
+        };
+        let dma_done = self.dma_free.max(buffer_ready) + dma;
+        self.dma_free = dma_done;
+        let retired = dma_done.max(self.prev) + compute;
+        self.prev2 = self.prev;
+        self.prev = retired;
+    }
+
+    /// Shift every stamp forward (the steady-state closed form).
+    fn shift(&mut self, cycles: u64) {
+        self.dma_free += cycles;
+        self.prev += cycles;
+        self.prev2 += cycles;
+    }
+}
+
+/// Tiles of a run to walk explicitly before the steady-state increments
+/// are provably constant (see the case analysis in the unit tests).
+const WARMUP_TILES: u64 = 3;
+
+/// Resolve the event timeline of a GEMM sequence. The timeline is
+/// continuous across GEMM boundaries: a double-buffered GEMM's first
+/// transfer may overlap the previous GEMM's tail compute, a
+/// single-buffered GEMM's may not.
+pub fn schedule(plans: &[TilePlan]) -> Schedule {
+    let mut t = Timeline::default();
+    let mut compute: u64 = 0;
+    let mut dma: u64 = 0;
+    for plan in plans {
+        for run in &plan.runs {
+            if run.count == 0 {
+                continue;
+            }
+            compute += run.count * run.compute_cycles;
+            dma += run.count * run.dma_cycles;
+            let explicit = run.count.min(WARMUP_TILES);
+            for _ in 0..explicit {
+                t.step(run.compute_cycles, run.dma_cycles, plan.double_buffered);
+            }
+            let rest = run.count - explicit;
+            if rest > 0 {
+                let delta = if plan.double_buffered {
+                    run.compute_cycles.max(run.dma_cycles)
+                } else {
+                    run.compute_cycles + run.dma_cycles
+                };
+                t.shift(rest * delta);
+            }
+        }
+    }
+    Schedule {
+        latency_cycles: t.prev,
+        compute_cycles: compute,
+        dma_cycles: dma,
+    }
+}
+
+/// Resolve a whole layer: the GEMM timeline plus the serial reshuffler
+/// pass (raw-layout feature maps must be re-laid-out before streaming).
+/// The pass extends both the latency and the engine-side busy time —
+/// nothing overlaps it, so `hidden_cycles` is unchanged by it and keeps
+/// matching the layer's `(compute + aux + dma) - latency` accounting.
+pub fn schedule_layer(plan: &LayerPlan) -> Schedule {
+    let mut s = schedule(&plan.gemms);
+    s.latency_cycles += plan.reshuffle_cycles;
+    s.compute_cycles += plan.reshuffle_cycles;
+    s
+}
+
+/// Integer-exact largest-remainder distributor: hands a fixed `total`
+/// out across successive `(count, weight)` slices proportionally to
+/// `count * weight`, emitting tile runs whose shares always sum to
+/// exactly the cumulative rounded target — no cycle lost or invented.
+/// Shared by the coordinator's byte-proportional DMA attribution and by
+/// [`scale_dma`]'s re-scaling, so the two stay arithmetically identical.
+pub struct DmaSplitter {
+    total_weight: u128,
+    total: u64,
+    acc_weight: u128,
+    acc: u64,
+}
+
+impl DmaSplitter {
+    /// `total_weight` must equal the sum of `count as u128 * weight as
+    /// u128` over every slice subsequently pushed; zero disables the
+    /// splitter (nothing to distribute against).
+    pub fn new(total_weight: u128, total: u64) -> Self {
+        DmaSplitter {
+            total_weight,
+            total,
+            acc_weight: 0,
+            acc: 0,
+        }
+    }
+
+    /// Attribute the next slice of `count` tiles (each `compute_cycles`
+    /// on the tile engine, proportional weight `weight`) and append its
+    /// run(s) — a floor-share run plus a remainder run of `+1` tiles —
+    /// to `out`.
+    pub fn push(&mut self, out: &mut Vec<TileRun>, count: u64, compute_cycles: u64, weight: u64) {
+        if count == 0 || self.total_weight == 0 {
+            return;
+        }
+        self.acc_weight += count as u128 * weight as u128;
+        let cum = (self.acc_weight * self.total as u128 / self.total_weight) as u64;
+        let share = cum - self.acc;
+        self.acc = cum;
+        let per_tile = share / count;
+        let extra = share % count;
+        if count > extra {
+            out.push(TileRun {
+                count: count - extra,
+                compute_cycles,
+                dma_cycles: per_tile,
+            });
+        }
+        if extra > 0 {
+            out.push(TileRun {
+                count: extra,
+                compute_cycles,
+                dma_cycles: per_tile + 1,
+            });
+        }
+    }
+}
+
+/// Rescale a layer's per-tile DMA attribution to a new layer total
+/// (activation chaining removes off-chip round-trips *after* the plan
+/// was built). Distribution is proportional per run, integer-exact: the
+/// new run totals sum to exactly `new_total`, so the re-scheduled
+/// latency keeps satisfying the overlap envelope against the layer's
+/// accounted DMA cycles.
+pub fn scale_dma(plans: &mut [TilePlan], new_total: u64) {
+    let old_total: u128 = plans
+        .iter()
+        .flat_map(|p| p.runs.iter())
+        .map(|r| r.count as u128 * r.dma_cycles as u128)
+        .sum();
+    if old_total == 0 || old_total == new_total as u128 {
+        return;
+    }
+    let mut split = DmaSplitter::new(old_total, new_total);
+    for plan in plans.iter_mut() {
+        let mut runs = Vec::with_capacity(plan.runs.len() + 1);
+        for r in &plan.runs {
+            split.push(&mut runs, r.count, r.compute_cycles, r.dma_cycles);
+        }
+        plan.runs = runs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Expand every run to count-1 runs: the closed form never kicks in,
+    /// so this is the tile-by-tile reference walk.
+    fn expand(plans: &[TilePlan]) -> Vec<TilePlan> {
+        plans
+            .iter()
+            .map(|p| TilePlan {
+                double_buffered: p.double_buffered,
+                runs: p
+                    .runs
+                    .iter()
+                    .flat_map(|r| {
+                        std::iter::repeat(TileRun { count: 1, ..*r }).take(r.count as usize)
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    fn plan(db: bool, runs: &[(u64, u64, u64)]) -> TilePlan {
+        TilePlan {
+            double_buffered: db,
+            runs: runs
+                .iter()
+                .map(|&(count, compute_cycles, dma_cycles)| TileRun {
+                    count,
+                    compute_cycles,
+                    dma_cycles,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn empty_schedule_is_zero() {
+        assert_eq!(schedule(&[]), Schedule::default());
+        let s = schedule(&[plan(true, &[(0, 10, 10)])]);
+        assert_eq!(s.latency_cycles, 0);
+    }
+
+    #[test]
+    fn single_tile_always_serializes() {
+        for db in [false, true] {
+            let s = schedule(&[plan(db, &[(1, 700, 300)])]);
+            assert_eq!(s.latency_cycles, 1000);
+            assert_eq!(s.hidden_cycles(), 0);
+        }
+    }
+
+    #[test]
+    fn single_buffered_run_is_fully_serial() {
+        let s = schedule(&[plan(false, &[(10, 700, 300)])]);
+        assert_eq!(s.latency_cycles, 10_000);
+        assert_eq!(s.compute_cycles, 7000);
+        assert_eq!(s.dma_cycles, 3000);
+        assert_eq!(s.hidden_cycles(), 0);
+    }
+
+    #[test]
+    fn double_buffered_run_hides_the_shorter_side() {
+        // 10 tiles, compute-bound: first transfer exposed, rest hidden.
+        let s = schedule(&[plan(true, &[(10, 700, 300)])]);
+        assert_eq!(s.latency_cycles, 300 + 10 * 700);
+        assert_eq!(s.hidden_cycles(), 9 * 300);
+        // DMA-bound: compute tail exposed instead.
+        let s = schedule(&[plan(true, &[(10, 300, 700)])]);
+        assert_eq!(s.latency_cycles, 10 * 700 + 300);
+        assert_eq!(s.hidden_cycles(), 9 * 300);
+    }
+
+    #[test]
+    fn closed_form_matches_tile_by_tile_walk() {
+        // SplitMix64-driven: random mixed plans must schedule identically
+        // whether runs advance in closed form or one tile at a time.
+        let mut state = 0x5EEDu64;
+        let mut next = move || {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        for case in 0..200 {
+            let nplans = 1 + next() % 4;
+            let plans: Vec<TilePlan> = (0..nplans)
+                .map(|_| {
+                    let nruns = 1 + next() % 4;
+                    plan(
+                        next() % 2 == 0,
+                        &(0..nruns)
+                            .map(|_| (next() % 40, next() % 500, next() % 500))
+                            .collect::<Vec<_>>(),
+                    )
+                })
+                .collect();
+            let fast = schedule(&plans);
+            let slow = schedule(&expand(&plans));
+            assert_eq!(fast, slow, "case {case}: {plans:?}");
+        }
+    }
+
+    #[test]
+    fn schedule_stays_in_the_overlap_envelope() {
+        let plans = vec![
+            plan(true, &[(100, 431, 377), (3, 97, 911)]),
+            plan(false, &[(57, 200, 1000)]),
+            plan(true, &[(1000, 12, 13)]),
+        ];
+        let s = schedule(&plans);
+        assert!(s.latency_cycles >= s.compute_cycles.max(s.dma_cycles));
+        assert!(s.latency_cycles <= s.compute_cycles + s.dma_cycles);
+        assert!(s.hidden_cycles() > 0);
+    }
+
+    #[test]
+    fn layer_plan_adds_serial_reshuffle() {
+        let lp = LayerPlan {
+            gemms: vec![plan(true, &[(4, 100, 50)])],
+            reshuffle_cycles: 777,
+        };
+        let base = schedule(&lp.gemms);
+        let s = schedule_layer(&lp);
+        assert_eq!(s.latency_cycles, base.latency_cycles + 777);
+        assert_eq!(s.hidden_cycles(), base.hidden_cycles());
+    }
+
+    #[test]
+    fn scale_dma_is_integer_exact_and_proportional() {
+        let mut plans = vec![
+            plan(true, &[(7, 100, 33), (5, 100, 101)]),
+            plan(false, &[(13, 50, 67)]),
+        ];
+        let old: u64 = plans
+            .iter()
+            .flat_map(|p| p.runs.iter())
+            .map(|r| r.count * r.dma_cycles)
+            .sum();
+        let new_total = old / 3;
+        scale_dma(&mut plans, new_total);
+        let got: u64 = plans
+            .iter()
+            .flat_map(|p| p.runs.iter())
+            .map(|r| r.count * r.dma_cycles)
+            .sum();
+        assert_eq!(got, new_total);
+        // Tile population is preserved (runs may split, never shrink).
+        let tiles: u64 = plans.iter().flat_map(|p| p.runs.iter()).map(|r| r.count).sum();
+        assert_eq!(tiles, 7 + 5 + 13);
+        // Scaling to zero empties the DMA side entirely.
+        scale_dma(&mut plans, 0);
+        let gone: u64 = plans
+            .iter()
+            .flat_map(|p| p.runs.iter())
+            .map(|r| r.count * r.dma_cycles)
+            .sum();
+        assert_eq!(gone, 0);
+        let s = schedule(&plans);
+        assert_eq!(s.latency_cycles, s.compute_cycles);
+    }
+}

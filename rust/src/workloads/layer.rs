@@ -70,6 +70,11 @@ pub enum LayerKind {
     },
     /// Batched matmul (attention score / context): `batch` heads.
     BatchedMatmul { batch: u64, m: u64, k: u64, n: u64 },
+    /// A fused bundle of GEMMs dispatched back-to-back as ONE layer
+    /// (LSTM gate bundle, attention QKV): each entry is `(m, k, n)`.
+    /// The coordinator tiles — and double-buffers — every GEMM
+    /// independently, so one layer can mix ping-pong grants.
+    Fused(Vec<(u64, u64, u64)>),
     /// Max pooling (runs on the maxpool unit, not the GEMM core).
     Pool {
         h: u64,
@@ -136,6 +141,9 @@ impl Layer {
             }
             LayerKind::BatchedMatmul { batch, m, k, n } => {
                 vec![GemmOp::new(m, k, n).repeated(batch)]
+            }
+            LayerKind::Fused(ref gemms) => {
+                gemms.iter().map(|&(m, k, n)| GemmOp::new(m, k, n)).collect()
             }
             LayerKind::Pool { .. } => vec![],
         };
@@ -232,6 +240,19 @@ mod tests {
         let base = Layer::new("fc", LayerKind::Gemm { m: 8, k: 512, n: 2048 });
         let rep = base.clone().repeated(128);
         assert_eq!(rep.macs(), 128 * base.macs());
+    }
+
+    #[test]
+    fn fused_bundle_lowers_to_multiple_gemms() {
+        let l = Layer::new("qkv", LayerKind::Fused(vec![(512, 768, 768), (64, 64, 64)]));
+        let gs = l.gemms();
+        assert_eq!(gs.len(), 2);
+        assert_eq!((gs[0].m, gs[0].k, gs[0].n), (512, 768, 768));
+        assert_eq!((gs[1].m, gs[1].k, gs[1].n), (64, 64, 64));
+        assert_eq!(l.macs(), 512 * 768 * 768 + 64 * 64 * 64);
+        // Layer-level repeats apply to every GEMM of the bundle.
+        let r = l.repeated(3);
+        assert!(r.gemms().iter().all(|g| g.repeat == 3 && g.weight_reuse == 3));
     }
 
     #[test]

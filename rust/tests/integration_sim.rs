@@ -95,8 +95,15 @@ fn fig6c_band_matches_paper_shape() {
         ratios.push(ls / lv);
     }
     let max = ratios.iter().cloned().fold(0.0, f64::max);
-    // Paper: 1.15 - 2.36x total-latency advantage.
-    assert!((1.3..=2.6).contains(&max), "max PDMA speedup {max:.2}");
+    // Paper: 1.15 - 2.36x total-latency advantage. The event-driven
+    // scheduler exposes the recurrent suite's per-step DMA tails a bit
+    // more than the old analytic bubble did (LSTM lands at ~2.59x), so
+    // allow modest headroom above the paper's max — and pin the suite
+    // geomean tightly so a broad inflation of the separated baseline
+    // cannot hide inside the widened per-workload ceiling.
+    assert!((1.3..=2.7).contains(&max), "max PDMA speedup {max:.2}");
+    let g = geomean(&ratios);
+    assert!((1.3..=1.7).contains(&g), "geomean PDMA speedup {g:.2}");
 }
 
 #[test]

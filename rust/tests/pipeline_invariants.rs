@@ -1,0 +1,192 @@
+//! Workload-level invariants of the event-driven layer pipeline
+//! scheduler (`sim::pipeline`, DESIGN.md §9) that replaced the analytic
+//! overlap heuristic — plus the regression tests for the two standalone
+//! bugfixes that rode along:
+//!
+//! * per-GEMM double-buffer accounting (a fused layer must not inherit
+//!   the LAST GEMM's ping-pong grant for the whole layer);
+//! * config-sized streamer in-flight queues (depth-16 sweep points).
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::{run_layer, run_workload, TileCache};
+use voltra::metrics::LayerMetrics;
+use voltra::sim::dma::overlap_latency;
+use voltra::workloads::layer::{Layer, LayerKind};
+use voltra::workloads::{by_name, evaluation_suite};
+
+fn compute_cycles(l: &LayerMetrics) -> u64 {
+    l.tiles.total_cycles + l.aux_cycles
+}
+
+#[test]
+fn every_layer_latency_sits_in_the_overlap_envelope() {
+    // max(compute, dma) <= latency <= compute + dma for every layer of
+    // every network under every Fig. 6 configuration: the old analytic
+    // heuristic survives as this cross-check on the scheduler.
+    for cfg in [
+        ChipConfig::voltra(),
+        ChipConfig::separated_memory(),
+        ChipConfig::no_prefetch(),
+    ] {
+        for w in evaluation_suite() {
+            let r = run_workload(&cfg, &w);
+            for l in &r.metrics.layers {
+                if l.macs == 0 {
+                    continue;
+                }
+                let c = compute_cycles(l);
+                let d = l.dma_cycles;
+                assert!(
+                    l.latency_cycles >= c.max(d),
+                    "{} / {}: latency {} < max({c}, {d})",
+                    w.name,
+                    l.name,
+                    l.latency_cycles
+                );
+                assert!(
+                    l.latency_cycles <= overlap_latency(c, d, false),
+                    "{} / {}: latency {} > serial {c} + {d}",
+                    w.name,
+                    l.name,
+                    l.latency_cycles
+                );
+                assert_eq!(
+                    l.overlap_cycles,
+                    (c + d) - l.latency_cycles,
+                    "{} / {}: overlap breakdown inconsistent",
+                    w.name,
+                    l.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simulated_macs_match_analytic_macs_for_all_networks() {
+    let cfg = ChipConfig::voltra();
+    for w in evaluation_suite() {
+        let r = run_workload(&cfg, &w);
+        let sim: u64 = r.metrics.layers.iter().map(|l| l.tiles.useful_macs).sum();
+        assert_eq!(sim, w.total_macs(), "{}", w.name);
+    }
+}
+
+#[test]
+fn prefetch_on_total_latency_never_exceeds_prefetch_off() {
+    // MGDP prefetching only removes stall cycles from the tile engine;
+    // the DMA side is identical, so the scheduled workload latency must
+    // not grow. (Per-tile arbitration noise is allowed up to 1% per
+    // workload — see prop_prefetch_never_hurts — but never in the suite
+    // aggregate.)
+    let on = ChipConfig::voltra();
+    let off = ChipConfig::no_prefetch();
+    let mut total_on = 0u64;
+    let mut total_off = 0u64;
+    for w in evaluation_suite() {
+        let a = run_workload(&on, &w).metrics.total_latency_cycles();
+        let b = run_workload(&off, &w).metrics.total_latency_cycles();
+        assert!(
+            a as f64 <= 1.01 * b as f64,
+            "{}: prefetch-on {a} > prefetch-off {b}",
+            w.name
+        );
+        total_on += a;
+        total_off += b;
+    }
+    assert!(total_on <= total_off, "suite: {total_on} > {total_off}");
+}
+
+#[test]
+fn pdma_prefetch_speedup_lands_in_paper_band() {
+    // The paper's headline Fig. 6c claim: shared PDMA memory + MGDP
+    // prefetching vs separated buffers without prefetching cuts total
+    // latency 1.15 - 2.36x. Assert the transformer and ResNet-50
+    // workloads land inside that band under the event-driven scheduler.
+    let best = ChipConfig::voltra();
+    let base = ChipConfig {
+        prefetch: false,
+        ..ChipConfig::separated_memory()
+    };
+    for name in ["bert", "resnet50"] {
+        let w = by_name(name).unwrap();
+        let fast = run_workload(&best, &w).metrics.total_latency_cycles() as f64;
+        let slow = run_workload(&base, &w).metrics.total_latency_cycles() as f64;
+        let ratio = slow / fast;
+        assert!(
+            (1.15..=2.36).contains(&ratio),
+            "{name}: speedup {ratio:.2} outside the paper's 1.15-2.36x band"
+        );
+    }
+}
+
+#[test]
+fn mixed_double_buffer_fused_layer_accounts_per_gemm() {
+    // Regression: the layer runner used to recompute the WHOLE layer's
+    // latency inside the per-GEMM loop using the CURRENT GEMM's
+    // double-buffer flag — so a fused layer ending in a small ping-pong
+    // GEMM reported the big single-buffered GEMM's DMA as hidden.
+    let cfg = ChipConfig::voltra();
+    let big = (512u64, 768u64, 768u64); // no ping-pong residency: serial
+    let small = (64u64, 64u64, 64u64); // fits doubled: ping-pong granted
+    let mut c1 = TileCache::new();
+    let lm_big = run_layer(
+        &cfg,
+        &Layer::new("big", LayerKind::Gemm { m: big.0, k: big.1, n: big.2 }),
+        &mut c1,
+    );
+    // Fixture sanity: the big GEMM really is single-buffered (its
+    // standalone latency is the full serial sum).
+    assert_eq!(
+        lm_big.latency_cycles,
+        lm_big.tiles.total_cycles + lm_big.aux_cycles + lm_big.dma_cycles
+    );
+    let mut c2 = TileCache::new();
+    let lm_small = run_layer(
+        &cfg,
+        &Layer::new("small", LayerKind::Gemm { m: small.0, k: small.1, n: small.2 }),
+        &mut c2,
+    );
+    let mut c3 = TileCache::new();
+    let fused = Layer::new("fused", LayerKind::Fused(vec![big, small]));
+    let lm = run_layer(&cfg, &fused, &mut c3);
+    // Per-GEMM accounting: the serial GEMM's cost cannot hide behind the
+    // trailing GEMM's ping-pong grant (the pre-fix code reported the
+    // fused layer faster than its serial member alone).
+    assert!(
+        lm.latency_cycles >= lm_big.latency_cycles,
+        "fused {} < its serial member {}",
+        lm.latency_cycles,
+        lm_big.latency_cycles
+    );
+    // And pipelining across the GEMM boundary can only help, never hurt.
+    assert!(
+        lm.latency_cycles <= lm_big.latency_cycles + lm_small.latency_cycles,
+        "fused {} > serial members {} + {}",
+        lm.latency_cycles,
+        lm_big.latency_cycles,
+        lm_small.latency_cycles
+    );
+}
+
+#[test]
+fn depth16_sweep_point_runs_a_full_workload_clean() {
+    // Regression companion to the engine-level test: a deep-FIFO /
+    // high-latency sweep point must survive a whole network end to end
+    // (the fixed 8-slot in-flight ring corrupted this configuration).
+    let mut cfg = ChipConfig::voltra();
+    cfg.stream_fifo_depth = 16;
+    cfg.mem_latency = 12;
+    let w = by_name("pointnext").unwrap();
+    let r = run_workload(&cfg, &w);
+    let sim: u64 = r.metrics.layers.iter().map(|l| l.tiles.useful_macs).sum();
+    assert_eq!(sim, w.total_macs());
+    for l in &r.metrics.layers {
+        if l.macs == 0 {
+            continue;
+        }
+        let c = compute_cycles(l);
+        assert!(l.latency_cycles >= c.max(l.dma_cycles), "{}", l.name);
+        assert!(l.latency_cycles <= c + l.dma_cycles, "{}", l.name);
+    }
+}
