@@ -25,15 +25,22 @@ pub fn time<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64, f64) {
     (total / iters as f64, min, max)
 }
 
-/// Report one hot-path timing in a stable, grep-friendly format.
-pub fn report(name: &str, iters: usize, f: impl FnMut()) {
-    let (mean, min, max) = time(iters, f);
+/// Print already-collected `time` samples in the stable, grep-friendly
+/// bench format (use when the caller also needs the samples, e.g. for a
+/// speedup assertion over the SAME measurements it prints).
+pub fn show(name: &str, iters: usize, timing: (f64, f64, f64)) {
+    let (mean, min, max) = timing;
     println!(
         "bench {name:<40} mean {:>10.3} ms   min {:>10.3} ms   max {:>10.3} ms   ({iters} iters)",
         mean * 1e3,
         min * 1e3,
         max * 1e3
     );
+}
+
+/// Report one hot-path timing in a stable, grep-friendly format.
+pub fn report(name: &str, iters: usize, f: impl FnMut()) {
+    show(name, iters, time(iters, f));
 }
 
 pub fn header(title: &str) {

@@ -1,0 +1,71 @@
+//! §Perf: the compile-once planning layer (DESIGN.md §10) — cold
+//! planning (tiling search + tile simulation + residency pass) vs
+//! warm-plan execution (metric assembly over the memoized, already
+//! scheduled `WorkloadPlan`s) for the eight-workload evaluation suite.
+//!
+//! The acceptance bar (ISSUE 4): warm-plan execution must beat cold
+//! planning by at least 2x. In practice the gap is orders of magnitude —
+//! execution never touches the tiling engine or the cycle simulator.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::ChipConfig;
+use voltra::plan::PlanCache;
+use voltra::workloads::evaluation_suite;
+
+fn main() {
+    common::header("§Perf — compile-once planning: cold build vs warm execution");
+    let cfg = ChipConfig::voltra();
+    let suite = evaluation_suite();
+
+    // Measure once per configuration and print from the same samples
+    // the speedup assertion uses (no duplicated measurement passes).
+    //
+    // Cold: a fresh plan cache per iteration — every workload pays the
+    // full tiling search + tile simulation + residency pass.
+    let cold = common::time(3, || {
+        let plans = PlanCache::new();
+        for w in &suite {
+            std::hint::black_box(plans.run(&cfg, w));
+        }
+    });
+    common::show("suite x8, cold planning (fresh cache)", 3, cold);
+
+    // Warm: one shared cache, pre-planned — every run is plan-cache hit
+    // + execute.
+    let plans = PlanCache::new();
+    for w in &suite {
+        plans.run(&cfg, w);
+    }
+    let planned_misses = plans.stats().misses;
+    let warm = common::time(20, || {
+        for w in &suite {
+            std::hint::black_box(plans.run(&cfg, w));
+        }
+    });
+    common::show("suite x8, warm plans (execute only)", 20, warm);
+    assert_eq!(
+        plans.stats().misses,
+        planned_misses,
+        "a warm pass must re-plan zero workloads"
+    );
+    let (cold_mean, _, _) = cold;
+    let (warm_mean, _, _) = warm;
+
+    common::rule();
+    let speedup = cold_mean / warm_mean;
+    let s = plans.stats();
+    println!(
+        "warm-plan execution is {speedup:.1}x faster than cold planning \
+         ({} plans, {} hits / {} misses, {} unique tiles)",
+        plans.len(),
+        s.hits,
+        s.misses,
+        plans.unique_tiles()
+    );
+    assert!(
+        speedup >= 2.0,
+        "acceptance: warm execution must be >= 2x cold planning, got {speedup:.2}x"
+    );
+}

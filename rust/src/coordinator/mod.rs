@@ -1,29 +1,23 @@
-//! The coordinator: runs a workload through tiling, CSR programming and
-//! the cycle simulator, producing the paper's evaluation metrics.
+//! The coordinator: runs workloads through the compile-once planning
+//! layer ([`crate::plan`]) and the cycle simulator, producing the
+//! paper's evaluation metrics.
 //!
-//! Per layer:
-//!   1. lower to GEMMs (implicit im2col for convs);
-//!   2. choose the layer-wise tiling that fits the memory organisation
-//!      (PDMA shared vs separated buffers) with minimum off-chip traffic;
-//!   3. enumerate the distinct tile shapes (interior/edge x first/mid/
-//!      last K-round), cycle-simulate each once and scale by its count —
-//!      tiles are memoized, so a ResNet-50 run simulates ~10^2 tiles,
-//!      not ~10^5;
-//!   4. charge auxiliary cycles (Snitch CSR programming per tile,
-//!      reshuffler passes for raw-layout feature maps);
-//!   5. emit the dispatched tile sequence as a per-GEMM [`sim::pipeline`]
-//!      plan and resolve the layer's latency with the event-driven
-//!      pipeline scheduler — DMA overlaps compute tile by tile exactly
-//!      where the allocator granted ping-pong regions for *that* GEMM
-//!      (a fused layer may mix grants across its GEMMs).
+//! Since the planning extraction (DESIGN.md §10) this module owns three
+//! things:
 //!
-//! Concurrency (DESIGN.md §Concurrency): the chip-model path is pure —
-//! `choose_tiling` and `simulate_tile` depend only on `(cfg, key)` — so
-//! memoization can be shared process-wide. [`TileCache`] is the cheap
-//! single-thread cache (one run, no locking); [`SharedTileCache`] is the
-//! sharded `RwLock` cache every server connection and sweep worker hits
-//! concurrently. Both sit behind the [`SimCache`] trait so the layer
-//! runner is written once.
+//! * the **memoization stores** — [`TileCache`] (cheap, single-thread)
+//!   and [`SharedTileCache`] (sharded `RwLock`, process-wide) behind the
+//!   [`SimCache`] trait. The chip-model path is pure — `choose_tiling`
+//!   and `simulate_tile` depend only on `(cfg, key)` — so any cache
+//!   returns identical values; only the sharing strategy differs;
+//! * the **thin run API** — [`run_workload`] and friends are wrappers
+//!   over `plan::build` + `plan::execute`; per-layer planning itself
+//!   lives in [`crate::plan::planner`], activation chaining in
+//!   [`crate::plan::residency`];
+//! * the **serving engine** ([`server`]) and the suite/sweep thread
+//!   pools, which amortize both tile simulation (shared tile cache) and
+//!   whole-workload planning ([`crate::plan::PlanCache`]) across
+//!   connections and workers.
 
 pub mod server;
 
@@ -35,31 +29,29 @@ use std::sync::{Mutex, RwLock};
 
 use crate::config::ChipConfig;
 use crate::metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
+use crate::plan::{self, PlanCache};
 use crate::sim::agu::LoopDim;
-use crate::sim::dma::transfer_cost;
 use crate::sim::engine::{simulate_tile, TileSpec};
-use crate::sim::gemm_core::Mapping;
-use crate::sim::pipeline::{self, LayerPlan, TilePlan, TileRun};
-use crate::sim::reshuffler::reshuffle_cycles;
 use crate::sim::snitch::{CsrProgram, StreamerId};
 use crate::sim::streamer::{Grain, StreamerProgram};
-use crate::tiling::engine::{choose_tiling, traffic_parts, Tiling};
-use crate::workloads::{Layer, LayerKind, Workload};
+use crate::tiling::engine::{choose_tiling, Tiling};
+use crate::workloads::{Layer, Workload};
 
 /// Result of one workload run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadReport {
     pub metrics: WorkloadMetrics,
     /// Tiles simulated (after memoization) vs dispatched in total. For a
     /// shared-cache run this is the cache's *global* population when the
-    /// workload finished (tiles may have been simulated by other runs).
+    /// workload's plan was built (tiles may have been simulated by other
+    /// runs).
     pub unique_tiles: usize,
     pub dispatched_tiles: u64,
 }
 
-/// What the layer runner needs from a memoization store. The tiling
-/// search and the tile simulation are pure functions of `(cfg, key)`,
-/// so any cache implementation returns identical values — only the
+/// What the planner needs from a memoization store. The tiling search
+/// and the tile simulation are pure functions of `(cfg, key)`, so any
+/// cache implementation returns identical values — only the
 /// sharing/locking strategy differs.
 pub trait SimCache {
     /// Memoized tiling search (the config is fixed per cache lifetime).
@@ -149,7 +141,8 @@ const CACHE_SHARDS: usize = 16;
 ///
 /// The cache is keyed by [`TileSpec`] / GEMM dims only, so it must not
 /// be shared across *different* [`ChipConfig`]s — same contract as
-/// [`TileCache`], enforced by the callers that own the cache.
+/// [`TileCache`], enforced by the callers that own the cache (the
+/// [`PlanCache`] scopes one per config fingerprint).
 #[derive(Default)]
 pub struct SharedTileCache {
     tiles: [RwLock<HashMap<TileSpec, TileMetrics>>; CACHE_SHARDS],
@@ -246,53 +239,10 @@ pub fn tile_csr_cycles(tk: u64) -> u64 {
     p.cycles()
 }
 
-/// Bytes of feature map a conv layer must reshuffle (HWC -> C/8HWC8).
-fn reshuffle_bytes(layer: &Layer) -> u64 {
-    match layer.kind {
-        LayerKind::Conv2d {
-            h, w, cin, kh, kw, ..
-        } if kh * kw > 1 => h * w * cin.div_ceil(8) * 8,
-        _ => 0,
-    }
-}
-
-/// Dimension residues of round `i` over tiles of `t` covering `d`.
-fn edge(d: u64, t: u64) -> (u64, u64, u64) {
-    // (interior_count, edge_count, edge_size)
-    let full = d / t;
-    let rem = d % t;
-    if rem == 0 {
-        (full, 0, 0)
-    } else {
-        (full, 1, rem)
-    }
-}
-
-/// Split one GEMM's DMA cycles across its tile runs proportional to the
-/// raw bytes each tile variant moves (operands in, psums in/out, results
-/// out) — integer-exact via [`pipeline::DmaSplitter`]: the run totals
-/// sum to `total_dma`, so the scheduler's DMA busy time equals the
-/// layer's accounted DMA cycles. `raw` entries are
-/// `(count, compute_cycles_per_tile, bytes_per_tile)`.
-fn attribute_dma(raw: &[(u64, u64, u64)], total_dma: u64) -> Vec<TileRun> {
-    let mut total_weight: u128 = raw.iter().map(|&(c, _, b)| c as u128 * b as u128).sum();
-    // Degenerate zero-byte variants (tiling never emits them): fall back
-    // to uniform attribution so no DMA time is dropped.
-    let uniform = total_weight == 0;
-    if uniform {
-        total_weight = raw.iter().map(|&(c, _, _)| c as u128).sum();
-    }
-    let mut runs = Vec::with_capacity(raw.len() + 1);
-    let mut split = pipeline::DmaSplitter::new(total_weight, total_dma);
-    for &(count, compute, bytes) in raw {
-        split.push(&mut runs, count, compute, if uniform { 1 } else { bytes });
-    }
-    runs
-}
-
-/// Run one layer's GEMMs through tiling + simulation.
+/// Run one layer's GEMMs through planning + the pipeline scheduler,
+/// standalone (no workload-level residency pass).
 pub fn run_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -> LayerMetrics {
-    run_layer_counted(cfg, layer, cache).0
+    plan::planner::plan_layer_metrics(cfg, layer, cache).0
 }
 
 /// Like [`run_layer`], also returning the number of dispatched tiles.
@@ -301,271 +251,19 @@ pub fn run_layer_counted<C: SimCache>(
     layer: &Layer,
     cache: &mut C,
 ) -> (LayerMetrics, u64) {
-    let (lm, dispatched, _) = run_layer_planned(cfg, layer, cache);
-    (lm, dispatched)
+    plan::planner::plan_layer_metrics(cfg, layer, cache)
 }
 
-/// Full layer run: metrics, dispatch count, and the tile plan the
-/// pipeline scheduler consumed. The workload runner keeps the plan so
-/// activation chaining can trim the DMA attribution and *re-schedule*
-/// instead of re-applying an analytic overlap formula.
-pub fn run_layer_planned<C: SimCache>(
-    cfg: &ChipConfig,
-    layer: &Layer,
-    cache: &mut C,
-) -> (LayerMetrics, u64, LayerPlan) {
-    let mut lm = LayerMetrics {
-        name: layer.name.clone(),
-        ..Default::default()
-    };
-    let mut plan = LayerPlan::default();
-    let mut total_dispatched = 0u64;
-
-    for mut g in layer.gemms() {
-        // The hardware loop controller may map (M, N) either way onto the
-        // array; pick the better-filling orientation (free transpose).
-        if Mapping::choose(cfg.array, g.m, g.n).swapped {
-            std::mem::swap(&mut g.m, &mut g.n);
-        }
-        let tiling = match cache.tiling(cfg, g.m, g.k, g.n) {
-            Some(t) => t,
-            None => continue, // cannot fit: skipped (never happens: 8x8x8 always fits)
-        };
-        let (nm, nk, nn) = tiling.rounds(g.m, g.k, g.n);
-        let (m_int, m_edge, m_rem) = edge(g.m, tiling.tm);
-        let (k_int, k_edge, k_rem) = edge(g.k, tiling.tk);
-        let (n_int, n_edge, n_rem) = edge(g.n, tiling.tn);
-
-        let m_variants = [(tiling.tm, m_int), (m_rem, m_edge)];
-        let n_variants = [(tiling.tn, n_int), (n_rem, n_edge)];
-        // K-round variants: (size, count, psum_in, spill_out).
-        let mut k_variants: Vec<(u64, u64, bool, bool)> = Vec::new();
-        {
-            let k_sizes = [(tiling.tk, k_int), (k_rem, k_edge)];
-            let last_is_edge = k_edge == 1;
-            for (i, &(sz, cnt)) in k_sizes.iter().enumerate() {
-                if cnt == 0 {
-                    continue;
-                }
-                let is_edge_slot = i == 1;
-                if nk == 1 {
-                    k_variants.push((sz, cnt, false, false));
-                } else if is_edge_slot {
-                    // The edge K-round is always the last.
-                    k_variants.push((sz, cnt, true, false));
-                } else {
-                    // Interior rounds: the first has no psum-in; the last
-                    // interior one quantizes only if there is no edge.
-                    let mut first = 1u64.min(cnt);
-                    let mut last = if last_is_edge {
-                        0
-                    } else {
-                        1u64.min(cnt.saturating_sub(first))
-                    };
-                    if cnt == 1 && !last_is_edge {
-                        // Single interior round that is both first & last.
-                        first = 1;
-                        last = 0;
-                        k_variants.push((sz, 1, false, false));
-                        continue;
-                    }
-                    if first > 0 {
-                        k_variants.push((sz, first, false, true));
-                    }
-                    let mid = cnt - first - last;
-                    if mid > 0 {
-                        k_variants.push((sz, mid, true, true));
-                    }
-                    if last > 0 {
-                        k_variants.push((sz, last, true, false));
-                    }
-                }
-            }
-        }
-
-        let pl = tiling.placement;
-        // Control overhead: one CSR program per dispatched tile (part of
-        // the tile engine's per-tile busy time in the schedule).
-        let csr_cycles = tile_csr_cycles(tiling.tk);
-        let mut dispatched = 0u64;
-        // (count, per-tile compute cycles, per-tile raw bytes) per
-        // variant, in dispatch order — the scheduler's tile runs.
-        let mut raw_runs: Vec<(u64, u64, u64)> = Vec::new();
-        for &(tm, mc) in &m_variants {
-            if mc == 0 {
-                continue;
-            }
-            for &(tn, nc) in &n_variants {
-                if nc == 0 {
-                    continue;
-                }
-                for &(tk, kc, psum_in, spill_out) in &k_variants {
-                    if kc == 0 {
-                        continue;
-                    }
-                    let spec = TileSpec {
-                        tm,
-                        tk,
-                        tn,
-                        psum_in,
-                        spill_out,
-                        input_blocked: !g.raw_input,
-                        in_base: pl.input_base,
-                        w_base: pl.weight_base,
-                        p_base: pl.psum_base,
-                        o_base: pl.output_base,
-                    };
-                    let tmetrics = cache.simulate(cfg, &spec);
-                    let count = mc * nc * kc * g.repeat;
-                    lm.tiles.add_scaled(&tmetrics, count);
-                    dispatched += count;
-                    // Raw byte weight of this variant for DMA
-                    // attribution: operand tiles in, int32 psums
-                    // round-tripped, results out.
-                    let psum_bytes = if psum_in { 4 * tm * tn } else { 0 };
-                    let out_bytes = if spill_out { 4 * tm * tn } else { tm * tn };
-                    let tile_bytes = tm * tk + tk * tn + psum_bytes + out_bytes;
-                    raw_runs.push((count, tmetrics.total_cycles + csr_cycles, tile_bytes));
-                }
-            }
-        }
-
-        total_dispatched += dispatched;
-        lm.aux_cycles += dispatched * csr_cycles;
-        // PDMA weight residency: if the whole weight operand fits in the
-        // memory the organisation can give it, recurrent repeats stream
-        // the weights once instead of every step. The separated baseline
-        // is capped by its fixed weight buffer.
-        let parts = traffic_parts(g.m, g.k, g.n, tiling.tm, tiling.tk, tiling.tn);
-        let weight_budget = match cfg.memory {
-            crate::config::MemoryOrg::Shared => 3 * cfg.memory.total_bytes() as u64 / 4,
-            crate::config::MemoryOrg::Separated { weight, .. } => weight as u64,
-        };
-        let w_groups = g.repeat / g.weight_reuse.max(1);
-        let gemm_traffic = if g.weight_reuse > 1 && g.k * g.n <= weight_budget {
-            (parts.input + parts.psum + parts.output) * g.repeat + parts.weight * w_groups
-        } else {
-            parts.total() * g.repeat
-        };
-        lm.dma_bytes += gemm_traffic;
-        lm.tile_footprint_bytes = lm.tile_footprint_bytes.max(tiling.footprint.total() as u64);
-        lm.macs += g.macs();
-        let _ = (nm, nn);
-
-        // DMA timing: bandwidth-limited, plus per-tile burst setup — a
-        // config that tiles finer (separated buffers) pays more burst
-        // overhead for the same bytes. The total is attributed across
-        // this GEMM's tile runs so the scheduler can interleave it with
-        // compute at tile granularity.
-        let t = transfer_cost(cfg, gemm_traffic);
-        let gemm_dma_cycles = t.cycles + dispatched * cfg.dma_burst_latency;
-        lm.dma_cycles += gemm_dma_cycles;
-        plan.gemms.push(TilePlan {
-            runs: attribute_dma(&raw_runs, gemm_dma_cycles),
-            // Ping-pong regions exist only when the allocator granted
-            // double-buffer space for THIS GEMM — per-GEMM, never
-            // inherited from whichever GEMM the layer lowered last.
-            double_buffered: tiling.double_buffered && cfg.double_buffer,
-        });
-    }
-
-    // Reshuffler pass for raw conv feature maps (serial, before the
-    // tile timeline can stream the blocked layout).
-    let rb = reshuffle_bytes(layer);
-    if rb > 0 {
-        plan.reshuffle_cycles = reshuffle_cycles(rb) * layer.repeat;
-        lm.aux_cycles += plan.reshuffle_cycles;
-    }
-
-    let s = pipeline::schedule_layer(&plan);
-    lm.latency_cycles = s.latency_cycles;
-    lm.overlap_cycles = s.hidden_cycles();
-
-    (lm, total_dispatched, plan)
-}
-
-/// Activation bytes a layer produces (what the next layer consumes).
-fn activation_out_bytes(layer: &Layer) -> u64 {
-    layer
-        .gemms()
-        .iter()
-        .map(|g| g.m * g.n * g.repeat / layer.repeat.max(1))
-        .sum()
-}
-
-/// Activation bytes a layer consumes from its predecessor.
-fn activation_in_bytes(layer: &Layer) -> u64 {
-    match layer.kind {
-        LayerKind::Conv2d { h, w, cin, .. } => h * w * cin,
-        LayerKind::DepthwiseConv { h, w, c, .. } => h * w * c,
-        LayerKind::Gemm { m, k, .. } => m * k,
-        LayerKind::BatchedMatmul { batch, m, k, .. } => batch * m * k,
-        LayerKind::Fused(ref gemms) => gemms.iter().map(|&(m, k, _)| m * k).sum(),
-        LayerKind::Pool { h, w, c, .. } => h * w * c,
-    }
-}
-
-/// Run a whole workload against a caller-supplied cache (the generic
-/// engine behind [`run_workload`] and [`run_workload_shared`]).
-///
-/// PDMA's layer-chaining benefit (Fig. 4): with the shared organisation,
-/// a layer's output region simply *becomes* the next layer's input
-/// region (a streamer base-pointer update) whenever it fits on chip next
-/// to the live tiles — the separated organisation must round-trip the
-/// activation through off-chip memory because the output buffer is not
-/// the input buffer.
+/// Run a whole workload against a caller-supplied cache: compile the
+/// [`plan::WorkloadPlan`] (per-layer planning + residency pass), then
+/// execute it. The generic engine behind [`run_workload`] and
+/// [`run_workload_shared`].
 pub fn run_workload_with<C: SimCache>(
     cfg: &ChipConfig,
     w: &Workload,
     cache: &mut C,
 ) -> WorkloadReport {
-    let mut metrics = WorkloadMetrics {
-        name: w.name.clone(),
-        layers: Vec::with_capacity(w.layers.len()),
-    };
-    let shared = matches!(cfg.memory, crate::config::MemoryOrg::Shared);
-    // Half the shared space can host a chained activation while the
-    // other half holds the working tiles.
-    let chain_budget = (cfg.memory.total_bytes() / 2) as u64;
-    let mut dispatched = 0u64;
-    let mut prev_out: u64 = 0;
-    for layer in &w.layers {
-        let (mut lm, d, mut plan) = run_layer_planned(cfg, layer, cache);
-        dispatched += d;
-        if shared {
-            let a_in = activation_in_bytes(layer);
-            let chained = prev_out.min(a_in);
-            if chained > 0 && chained <= chain_budget {
-                // Saved: the predecessor's output write + our input read,
-                // once per layer invocation (not per repeat: recurrent
-                // steps re-chain every iteration).
-                let saved = 2 * chained * layer.repeat;
-                let saved = saved.min(lm.dma_bytes / 2);
-                lm.dma_bytes -= saved;
-                let saved_cycles = saved.div_ceil(cfg.dma_bytes_per_cycle.max(1));
-                let new_dma = lm.dma_cycles.saturating_sub(saved_cycles);
-                // Trim the plan's per-tile DMA attribution to the new
-                // total and re-resolve the timeline — chaining shortens
-                // the transfers, it does not change the overlap rules
-                // (each GEMM keeps its own ping-pong grant).
-                pipeline::scale_dma(&mut plan.gemms, new_dma);
-                lm.dma_cycles = new_dma;
-                let s = pipeline::schedule_layer(&plan);
-                lm.latency_cycles = s.latency_cycles;
-                lm.overlap_cycles = s.hidden_cycles();
-            }
-            prev_out = activation_out_bytes(layer);
-            if prev_out > chain_budget {
-                prev_out = 0; // too big to keep resident
-            }
-        }
-        metrics.layers.push(lm);
-    }
-    WorkloadReport {
-        metrics,
-        unique_tiles: cache.unique_tiles(),
-        dispatched_tiles: dispatched,
-    }
+    plan::execute(&plan::build(cfg, w, cache))
 }
 
 /// Run a whole workload (one bar of Fig. 6) with a fresh private cache.
@@ -585,7 +283,7 @@ pub fn run_workload_shared(
     run_workload_with(cfg, w, &mut handle)
 }
 
-/// Run many workloads across a thread pool sharing one cache (the
+/// Run many workloads across a thread pool sharing one tile cache (the
 /// multi-workload sweep mode of the CLI). Results come back in input
 /// order; `threads == 1` degenerates to a sequential shared-cache run.
 pub fn run_suite_parallel(
@@ -594,6 +292,27 @@ pub fn run_suite_parallel(
     threads: usize,
     cache: &SharedTileCache,
 ) -> Vec<WorkloadReport> {
+    run_suite_indexed(workloads, threads, |w| run_workload_shared(cfg, w, cache))
+}
+
+/// Run many workloads across a thread pool sharing one [`PlanCache`]:
+/// each `(config, workload)` pair is planned exactly once for the life
+/// of the cache — a warm sweep re-plans zero layers and only re-executes
+/// the memoized plans.
+pub fn run_suite_planned(
+    cfg: &ChipConfig,
+    workloads: &[Workload],
+    threads: usize,
+    plans: &PlanCache,
+) -> Vec<WorkloadReport> {
+    run_suite_indexed(workloads, threads, |w| plans.run(cfg, w))
+}
+
+/// Shared worker-pool skeleton of the two suite runners.
+fn run_suite_indexed<F>(workloads: &[Workload], threads: usize, run: F) -> Vec<WorkloadReport>
+where
+    F: Fn(&Workload) -> WorkloadReport + Sync,
+{
     let n = workloads.len();
     let workers = threads.clamp(1, n.max(1));
     let next = AtomicUsize::new(0);
@@ -606,7 +325,7 @@ pub fn run_suite_parallel(
                 if i >= n {
                     break;
                 }
-                let r = run_workload_shared(cfg, &workloads[i], cache);
+                let r = run(&workloads[i]);
                 *slots[i].lock().expect("sweep slot poisoned") = Some(r);
             });
         }
@@ -802,6 +521,25 @@ mod tests {
             assert_eq!(r.metrics, seq.metrics, "{} diverged", w.name);
             assert_eq!(r.dispatched_tiles, seq.dispatched_tiles);
         }
+    }
+
+    #[test]
+    fn planned_suite_matches_sequential_runs() {
+        let cfg = ChipConfig::voltra();
+        let suite = vec![
+            workloads::by_name("lstm").unwrap(),
+            workloads::by_name("pointnext").unwrap(),
+            workloads::by_name("vit").unwrap(),
+        ];
+        let plans = PlanCache::new();
+        let par = run_suite_planned(&cfg, &suite, 3, &plans);
+        assert_eq!(par.len(), suite.len());
+        for (r, w) in par.iter().zip(&suite) {
+            let seq = run_workload(&cfg, w);
+            assert_eq!(r.metrics, seq.metrics, "{} diverged", w.name);
+            assert_eq!(r.dispatched_tiles, seq.dispatched_tiles);
+        }
+        assert_eq!(plans.len(), suite.len());
     }
 
     #[test]

@@ -1,20 +1,26 @@
-//! The coordinator's serving engine: GEMM requests over TCP, served
-//! concurrently against a process-wide shared tile cache.
+//! The coordinator's serving engine: GEMM and workload requests over
+//! TCP, served concurrently against process-wide shared caches.
 //!
 //! Wire protocol (line-oriented, one request per line):
 //!     GEMM <m> <k> <n> <seed>\n
-//! Response:
+//!     WORKLOAD <name>\n
+//! Responses:
 //!     OK checksum=<u64> us=<micros> sim_cycles=<u64> sim_us=<f64>\n
-//! The server executes the request's numerics (deterministic operands
-//! from the seed) and, in parallel, reports what the chip model says the
-//! same GEMM would cost on silicon.
+//!     OK workload=<name> latency_cycles=<u64> compute_cycles=<u64>
+//!        dma_cycles=<u64> dma_kb=<u64> tiles=<u64> sim_ms=<f64>\n
+//! A GEMM request executes the request's numerics (deterministic
+//! operands from the seed) and, in parallel, reports what the chip model
+//! says the same GEMM would cost on silicon. A WORKLOAD request answers
+//! entirely from the [`PlanCache`]: the first request for a network
+//! compiles its plan, every later request (from any connection) executes
+//! the memoized plan — zero tiling searches, zero tile simulations.
 //!
 //! Concurrency model (DESIGN.md §Concurrency):
 //! * every accepted connection gets its own handler thread;
 //! * the chip-model cost lookup runs *on the handler thread*, answered
-//!   from the [`SharedTileCache`] — many connections resolve sim costs
-//!   concurrently, and a tile any connection ever simulated is never
-//!   simulated again for the lifetime of the server;
+//!   from the [`SharedTileCache`] / [`PlanCache`] — many connections
+//!   resolve sim costs concurrently, and a tile or plan any connection
+//!   ever computed is never computed again for the server's lifetime;
 //! * the numerics backend is confined to ONE dedicated worker thread
 //!   fed over an mpsc channel (PJRT handles are not `Send`; the
 //!   [`GemmBackend`] factory runs on that thread), with per-request
@@ -22,8 +28,9 @@
 //!   handler overlaps the sim-cost computation for the same request.
 //!
 //! [`serve_blocking`] remains as the single-threaded reference engine:
-//! byte-identical responses (modulo the wall-clock `us=` field), used by
-//! the differential tests in `tests/concurrent_server.rs`.
+//! byte-identical responses (modulo the wall-clock `us=` field, the
+//! protocol's only nondeterministic bytes), used by the differential
+//! tests in `tests/concurrent_server.rs`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -34,8 +41,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ChipConfig;
 use crate::coordinator::{run_layer, SharedTileCache};
+use crate::plan::{PlanCache, WorkloadPlan};
 use crate::runtime::{GemmBackend, MatI32};
-use crate::workloads::layer::{Layer, LayerKind};
+use crate::workloads::{self, Layer, LayerKind};
 
 /// Deterministic operand generator (SplitMix64 -> int8 range).
 fn gen_mat(seed: u64, rows: usize, cols: usize) -> MatI32 {
@@ -49,7 +57,7 @@ fn gen_mat(seed: u64, rows: usize, cols: usize) -> MatI32 {
     })
 }
 
-/// One request's results.
+/// One GEMM request's results.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GemmResponse {
     pub checksum: u64,
@@ -68,13 +76,16 @@ pub struct ServerStats {
 }
 
 /// A parsed request line.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 enum Parsed {
     Gemm {
         m: usize,
         k: usize,
         n: usize,
         seed: u64,
+    },
+    Workload {
+        name: String,
     },
     Quit,
 }
@@ -95,8 +106,11 @@ fn parse_request(line: &str) -> std::result::Result<Parsed, String> {
                 seed: int(seed)?,
             })
         }
+        ["WORKLOAD", name] => Ok(Parsed::Workload {
+            name: (*name).to_string(),
+        }),
         ["QUIT"] => Ok(Parsed::Quit),
-        _ => Err("ERR expected: GEMM <m> <k> <n> <seed> | QUIT".to_string()),
+        _ => Err("ERR expected: GEMM <m> <k> <n> <seed> | WORKLOAD <name> | QUIT".to_string()),
     }
 }
 
@@ -192,12 +206,43 @@ fn format_ok(r: &GemmResponse) -> String {
     )
 }
 
+/// Answer a WORKLOAD request from the plan cache. Every field is a pure
+/// function of the memoized plan, so the response bytes are identical
+/// across engines, connections and cache temperature — the differential
+/// tests rely on this.
+fn format_workload(cfg: &ChipConfig, name: &str, p: &WorkloadPlan) -> String {
+    let latency = p.total_latency_cycles();
+    format!(
+        "OK workload={} latency_cycles={} compute_cycles={} dma_cycles={} dma_kb={} tiles={} sim_ms={:.3}",
+        name,
+        latency,
+        p.total_compute_cycles(),
+        p.total_dma_cycles(),
+        p.total_dma_bytes() / 1024,
+        p.dispatched_tiles,
+        latency as f64 / (cfg.operating_point.freq_mhz * 1e3),
+    )
+}
+
+/// Resolve one WORKLOAD request (shared by both engines) to its full
+/// response line: plan-cache lookup, plan-once-answer-many. Warm
+/// requests never materialize the layer graph or a report — the plan
+/// cache is probed by the request's name before `by_name` runs, and the
+/// response is formatted from the immutable plan's aggregates.
+fn serve_workload(cfg: &ChipConfig, plans: &PlanCache, name: &str) -> String {
+    match plans.plan_named(cfg, name, || workloads::by_name(name)) {
+        Some(p) => format_workload(cfg, name, &p),
+        None => format!("ERR unknown workload {name:?}"),
+    }
+}
+
 /// Serve one connection with the backend on the current thread.
 fn handle_sequential(
     stream: TcpStream,
     backend: &mut impl GemmBackend,
     cfg: &ChipConfig,
     cache: &SharedTileCache,
+    plans: &PlanCache,
 ) -> Result<()> {
     let mut out = stream.try_clone().context("clone stream")?;
     let reader = BufReader::new(stream);
@@ -209,6 +254,9 @@ fn handle_sequential(
                     Ok(r) => writeln!(out, "{}", format_ok(&r))?,
                     Err(e) => writeln!(out, "ERR {e}")?,
                 }
+            }
+            Ok(Parsed::Workload { name }) => {
+                writeln!(out, "{}", serve_workload(cfg, plans, &name))?;
             }
             Ok(Parsed::Quit) => break,
             Err(resp) => writeln!(out, "{resp}")?,
@@ -227,11 +275,13 @@ struct NumericsJob {
 }
 
 /// Serve one connection, overlapping numerics (worker thread) with the
-/// shared-cache sim-cost lookup (this thread).
+/// shared-cache sim-cost lookup (this thread). WORKLOAD requests never
+/// touch the numerics worker — they are pure plan-cache reads.
 fn handle_concurrent(
     stream: TcpStream,
     cfg: &ChipConfig,
     cache: &SharedTileCache,
+    plans: &PlanCache,
     jobs: &mpsc::Sender<NumericsJob>,
 ) -> Result<()> {
     let mut out = stream.try_clone().context("clone stream")?;
@@ -275,6 +325,9 @@ fn handle_concurrent(
                     }
                 }
             }
+            Ok(Parsed::Workload { name }) => {
+                writeln!(out, "{}", serve_workload(cfg, plans, &name))?;
+            }
             Ok(Parsed::Quit) => break,
             Err(resp) => writeln!(out, "{resp}")?,
         }
@@ -297,6 +350,7 @@ pub fn serve_blocking(
     listener: TcpListener,
     max_conns: Option<usize>,
     cache: &SharedTileCache,
+    plans: &PlanCache,
 ) -> Result<ServerStats> {
     let mut stats = ServerStats::default();
     for stream in listener.incoming() {
@@ -308,7 +362,7 @@ pub fn serve_blocking(
             }
         };
         let peer = stream.peer_addr().ok();
-        match handle_sequential(stream, backend, cfg, cache) {
+        match handle_sequential(stream, backend, cfg, cache, plans) {
             Ok(()) => stats.served += 1,
             Err(e) => {
                 stats.failed += 1;
@@ -325,7 +379,7 @@ pub fn serve_blocking(
 }
 
 /// The concurrent serving engine: one handler thread per connection, one
-/// dedicated numerics worker, one shared tile cache.
+/// dedicated numerics worker, one shared tile cache, one plan cache.
 ///
 /// `backend_factory` runs ON the worker thread (PJRT handles are not
 /// `Send`, so the backend must be born where it lives). `max_conns`
@@ -338,6 +392,7 @@ pub fn serve_threaded<B, F>(
     listener: TcpListener,
     max_conns: Option<usize>,
     cache: &SharedTileCache,
+    plans: &PlanCache,
 ) -> Result<ServerStats>
 where
     B: GemmBackend + 'static,
@@ -413,7 +468,7 @@ where
             let jobs = job_tx.clone();
             handles.push(s.spawn(move || {
                 let peer = stream.peer_addr().ok();
-                handle_concurrent(stream, cfg, cache, &jobs).map_err(|e| (peer, e))
+                handle_concurrent(stream, cfg, cache, plans, &jobs).map_err(|e| (peer, e))
             }));
             accepted += 1;
             if let Some(max) = max_conns {
@@ -467,11 +522,19 @@ mod tests {
             })
         );
         assert_eq!(parse_request("QUIT"), Ok(Parsed::Quit));
+        assert_eq!(
+            parse_request("WORKLOAD bert"),
+            Ok(Parsed::Workload {
+                name: "bert".to_string()
+            })
+        );
         let e = parse_request("GEMM a b c 1").unwrap_err();
         assert!(e.starts_with("ERR bad integer"), "{e}");
         let e = parse_request("GEMM 8 8 8").unwrap_err();
         assert!(e.starts_with("ERR expected"), "{e}");
         let e = parse_request("NONSENSE").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        let e = parse_request("WORKLOAD").unwrap_err();
         assert!(e.starts_with("ERR expected"), "{e}");
         // A negative dimension is a bad integer for usize, not a usage error.
         let e = parse_request("GEMM -8 8 8 1").unwrap_err();
@@ -499,5 +562,21 @@ mod tests {
         assert_eq!(r1.sim_cycles, r2.sim_cycles);
         let r3 = serve_gemm(&mut b, &cfg, &cache, 64, 64, 64, 2).unwrap();
         assert_ne!(r1.checksum, r3.checksum);
+    }
+
+    #[test]
+    fn serve_workload_answers_from_the_plan_cache() {
+        let cfg = ChipConfig::voltra();
+        let plans = PlanCache::new();
+        let cold = serve_workload(&cfg, &plans, "lstm");
+        let warm = serve_workload(&cfg, &plans, "lstm");
+        // Byte-identical response, one plan compiled.
+        assert_eq!(cold, warm);
+        assert!(cold.starts_with("OK workload=lstm latency_cycles="), "{cold}");
+        let s = plans.stats();
+        assert_eq!(s.misses, 1, "second request must reuse the plan");
+        assert!(s.hits >= 1);
+        let e = serve_workload(&cfg, &plans, "nope");
+        assert!(e.starts_with("ERR unknown workload"), "{e}");
     }
 }

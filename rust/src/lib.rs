@@ -12,10 +12,16 @@
 //!   and the layer-wise tiling engine.
 //! * [`workloads`] — the eight evaluated networks as layer graphs.
 //! * [`power`] — energy/area/DVFS models calibrated to the die.
-//! * [`coordinator`] — runs workloads through tiling + simulation and
-//!   aggregates the paper's metrics; its serving + sweep engine runs
-//!   many connections/workloads concurrently against one process-wide
-//!   [`SharedTileCache`] (DESIGN.md §Concurrency).
+//! * [`plan`] — the compile-once planning layer (DESIGN.md §10): builds
+//!   an immutable [`plan::WorkloadPlan`] per `(config, workload)` — the
+//!   tiling/K-round/DMA-attribution decisions plus the shared-memory
+//!   residency pass — executes it as a thin pipeline-scheduler pass, and
+//!   memoizes plans process-wide in the [`PlanCache`].
+//! * [`coordinator`] — thin run wrappers over `plan::build` +
+//!   `plan::execute`, the tile memoization stores, and the serving +
+//!   sweep engine that runs many connections/workloads concurrently
+//!   against one process-wide [`SharedTileCache`] and [`PlanCache`]
+//!   (DESIGN.md §Concurrency).
 //! * [`runtime`] — loads AOT artifacts (HLO text) and executes the real
 //!   numerics through the PJRT CPU client behind the pluggable
 //!   [`runtime::GemmBackend`] seam; Python never runs at runtime.
@@ -24,6 +30,7 @@ pub mod arch;
 pub mod config;
 pub mod coordinator;
 pub mod metrics;
+pub mod plan;
 pub mod power;
 pub mod runtime;
 pub mod sim;
@@ -32,7 +39,8 @@ pub mod workloads;
 
 pub use config::ChipConfig;
 pub use coordinator::{
-    run_suite_parallel, run_workload, run_workload_shared, SharedTileCache, SimCache, TileCache,
-    WorkloadReport,
+    run_suite_parallel, run_suite_planned, run_workload, run_workload_shared, SharedTileCache,
+    SimCache, TileCache, WorkloadReport,
 };
 pub use metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
+pub use plan::{PlanCache, WorkloadPlan};

@@ -28,9 +28,10 @@ COMMANDS:
                                  pool sharing one tile cache
     shmoo                        print the Fig. 7a shmoo grid
     artifacts                    list + smoke-test the AOT artifacts
-    serve --port <p>             concurrent GEMM serving over TCP
-                                 (PJRT numerics when artifacts load,
-                                 host-oracle fallback otherwise)
+    serve --port <p>             concurrent serving over TCP: GEMM
+                                 numerics (PJRT when artifacts load,
+                                 host-oracle fallback) and WORKLOAD
+                                 requests answered from the plan cache
     report --workload <name>     per-layer table + energy breakdown
 
 OPTIONS:
@@ -191,6 +192,10 @@ fn cmd_report(cfg: &ChipConfig, name: &str) {
         m.total_latency_cycles(),
         m.total_overlap_cycles(),
     );
+    println!(
+        "residency: {} KB of activations chained on chip across layer boundaries",
+        m.total_chained_bytes() / 1024,
+    );
     let p = EnergyParams::default();
     let act = Activity::default();
     let b = voltra::power::energy_breakdown(&p, m, &act, cfg.operating_point);
@@ -226,13 +231,14 @@ fn cmd_run(cfg: &ChipConfig, name: &str) {
 }
 
 fn cmd_suite(cfg: &ChipConfig) {
+    let plans = voltra::PlanCache::new();
     let mut spatial = Vec::new();
     let mut temporal = Vec::new();
     for w in workloads::evaluation_suite() {
-        let r = run_workload(cfg, &w);
+        let r = plans.run(cfg, &w);
         spatial.push(r.metrics.spatial_utilization());
         temporal.push(r.metrics.temporal_utilization());
-        report_line(cfg, &w);
+        print_report(cfg, &r);
     }
     println!(
         "{:<22} spatial {:>6.2}%  temporal {:>6.2}%  (geomean)",
@@ -240,16 +246,23 @@ fn cmd_suite(cfg: &ChipConfig) {
         100.0 * metrics::geomean(&spatial),
         100.0 * metrics::geomean(&temporal)
     );
+    let s = plans.stats();
+    println!(
+        "plan cache: {} workload plans compiled ({} hits / {} misses)",
+        plans.len(),
+        s.hits,
+        s.misses
+    );
 }
 
 /// Multi-workload sweep: all eight networks across a thread pool sharing
-/// one process-wide tile cache (repeated shapes across networks simulate
-/// once for the whole sweep).
+/// one process-wide plan cache (each network is planned exactly once;
+/// repeated tile shapes across networks simulate once for the sweep).
 fn cmd_sweep(cfg: &ChipConfig, threads: usize) {
     let suite = workloads::evaluation_suite();
-    let cache = voltra::SharedTileCache::new();
+    let plans = voltra::PlanCache::new();
     let t0 = std::time::Instant::now();
-    let reports = voltra::run_suite_parallel(cfg, &suite, threads, &cache);
+    let reports = voltra::run_suite_planned(cfg, &suite, threads, &plans);
     let dt = t0.elapsed();
     let mut spatial = Vec::new();
     let mut temporal = Vec::new();
@@ -264,17 +277,19 @@ fn cmd_sweep(cfg: &ChipConfig, threads: usize) {
         100.0 * metrics::geomean(&spatial),
         100.0 * metrics::geomean(&temporal)
     );
-    let s = cache.stats();
+    let p = plans.stats();
+    let t = plans.tile_stats();
     println!(
-        "sweep: {} workloads on {} threads in {:.2}s — shared cache: {} unique tiles, \
-         {} hits / {} misses ({:.1}% hit rate)",
+        "sweep: {} workloads on {} threads in {:.2}s — {} plans ({} hits / {} misses), \
+         {} unique tiles ({:.1}% tile hit rate)",
         reports.len(),
         threads,
         dt.as_secs_f64(),
-        cache.len(),
-        s.hits,
-        s.misses,
-        100.0 * s.hit_rate(),
+        plans.len(),
+        p.hits,
+        p.misses,
+        plans.unique_tiles(),
+        100.0 * t.hit_rate(),
     );
 }
 
@@ -304,6 +319,36 @@ fn cmd_shmoo() {
     let t = voltra::sim::simulate_tile(&cfg, &voltra::sim::TileSpec::simple(96, 96, 96));
     let eff = tops_per_watt(&p, &t, &Activity::default(), OperatingPoint::efficiency());
     println!("peak system energy efficiency @0.6V/300MHz: {eff:.2} TOPS/W");
+
+    // DVFS scaling of a real network: plans are cycle-domain, so every
+    // operating point of the sweep reuses ONE compiled plan — the plan
+    // cache fingerprints the config without its (V, f) point.
+    let plans = voltra::PlanCache::new();
+    let w = workloads::by_name("bert").unwrap();
+    println!("\nBERT-Base latency across the DVFS ladder (one shared plan):");
+    for i in 0..=4 {
+        let vdd = 0.6 + 0.1 * i as f64;
+        let vdd = (vdd * 100.0).round() / 100.0;
+        let op = OperatingPoint {
+            voltage: vdd,
+            freq_mhz: dvfs::fmax_mhz(vdd),
+        };
+        let cfg = ChipConfig::voltra().with_operating_point(op);
+        let r = plans.run(&cfg, &w);
+        println!(
+            "  {:>4.2} V / {:>3.0} MHz: {:>9.3} ms",
+            vdd,
+            op.freq_mhz,
+            r.metrics.total_latency_cycles() as f64 / (op.freq_mhz * 1e3)
+        );
+    }
+    let s = plans.stats();
+    println!(
+        "plan cache: {} plan ({} hits / {} misses) — re-planned zero layers across the ladder",
+        plans.len(),
+        s.hits,
+        s.misses
+    );
 }
 
 fn cmd_artifacts(dir: &str) {
@@ -404,7 +449,7 @@ fn main() {
                     }
                 };
             println!(
-                "voltra serving on {} — protocol: GEMM <m> <k> <n> <seed>",
+                "voltra serving on {} — protocol: GEMM <m> <k> <n> <seed> | WORKLOAD <name>",
                 listener.local_addr().unwrap()
             );
             // The backend is constructed on the dedicated numerics worker
@@ -422,9 +467,17 @@ fn main() {
                     }
                 }
             };
-            let cache = voltra::SharedTileCache::new();
+            let plans = voltra::PlanCache::new();
+            // One tile cache for both request kinds: GEMM sim costs and
+            // WORKLOAD planning share every memoized tile simulation.
+            let cache = plans.tile_cache(&cfg);
             match voltra::coordinator::server::serve_threaded(
-                factory, &cfg, listener, None, &cache,
+                factory,
+                &cfg,
+                listener,
+                None,
+                cache.as_ref(),
+                &plans,
             ) {
                 Ok(stats) => println!(
                     "served {} connections ({} failed)",

@@ -106,6 +106,9 @@ pub struct LayerMetrics {
     pub overlap_cycles: u64,
     /// Reshuffler / maxpool / auxiliary cycles.
     pub aux_cycles: u64,
+    /// Predecessor activation bytes the residency pass chained on chip
+    /// for this layer (0 = input streamed from off-chip memory).
+    pub chained_bytes: u64,
     /// On-chip memory footprint of the chosen tiling (bytes).
     pub tile_footprint_bytes: u64,
     /// Useful MACs (== tiles.useful_macs, kept for convenience).
@@ -145,6 +148,12 @@ impl WorkloadMetrics {
 
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Activation bytes the residency pass kept on chip across layer
+    /// boundaries (the plan-recorded PDMA chaining of Fig. 4).
+    pub fn total_chained_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.chained_bytes).sum()
     }
 
     /// MAC-weighted mean of per-layer spatial utilization (the Fig. 6a

@@ -1,0 +1,299 @@
+//! Process-wide plan memoization: plan each `(config, workload)` pair
+//! exactly once, then share the immutable [`WorkloadPlan`] across every
+//! thread that needs it (suite, sweep, shmoo, the serving engine).
+//!
+//! Modeled on the coordinator's `SharedTileCache`:
+//! * sharded `RwLock` maps so unrelated lookups never contend;
+//! * misses plan *outside* any lock (planning is pure, so two racing
+//!   threads at worst duplicate work); the first insert wins and every
+//!   later lookup returns that exact `Arc` — warm hits are therefore
+//!   bit-identical forever;
+//! * tile-simulation memoization is scoped per config fingerprint (one
+//!   `SharedTileCache` per fingerprint), so one `PlanCache` can safely
+//!   serve many presets at once — tile caches must never mix configs.
+//!
+//! Keying: [`fingerprint`] hashes every `ChipConfig` field the planner
+//! reads — array geometry, memory organisation, prefetch/FIFO/SIMD/
+//! crossbar knobs, bank count, latencies, DMA parameters, double
+//! buffering — and deliberately EXCLUDES the operating point: plans are
+//! cycle-domain, so every (V, f) point of a DVFS sweep shares one plan.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
+use crate::coordinator::{SharedTileCache, WorkloadReport};
+use crate::metrics::CacheStats;
+use crate::workloads::Workload;
+
+use super::WorkloadPlan;
+
+/// Fingerprint of every config field the planner depends on. Two
+/// configs with equal fingerprints produce identical plans for any
+/// workload; the operating point is excluded (cycle-domain plans are
+/// frequency-independent).
+pub fn fingerprint(cfg: &ChipConfig) -> u64 {
+    let mut h = DefaultHasher::new();
+    match cfg.array {
+        ArrayGeometry::Spatial3D { m, n, k } => {
+            0u8.hash(&mut h);
+            (m, n, k).hash(&mut h);
+        }
+        ArrayGeometry::Spatial2D { m, n } => {
+            1u8.hash(&mut h);
+            (m, n).hash(&mut h);
+        }
+    }
+    match cfg.memory {
+        MemoryOrg::Shared => 0u8.hash(&mut h),
+        MemoryOrg::Separated {
+            input,
+            weight,
+            output,
+            psum,
+        } => {
+            1u8.hash(&mut h);
+            (input, weight, output, psum).hash(&mut h);
+        }
+    }
+    cfg.prefetch.hash(&mut h);
+    cfg.stream_fifo_depth.hash(&mut h);
+    cfg.psum_fifo_depth.hash(&mut h);
+    cfg.simd_lanes.hash(&mut h);
+    cfg.tmux_psum_output.hash(&mut h);
+    cfg.num_banks.hash(&mut h);
+    cfg.mem_latency.hash(&mut h);
+    cfg.dma_bytes_per_cycle.hash(&mut h);
+    cfg.dma_burst_latency.hash(&mut h);
+    cfg.double_buffer.hash(&mut h);
+    h.finish()
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    fingerprint: u64,
+    workload: String,
+}
+
+/// Shard count: plans are coarse objects (one per workload), so fewer
+/// shards than the tile cache suffice to keep sweep threads apart.
+const PLAN_SHARDS: usize = 8;
+
+fn shard_of<K: Hash>(key: &K) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % PLAN_SHARDS
+}
+
+/// Process-wide, thread-safe plan memoization (see module docs).
+#[derive(Default)]
+pub struct PlanCache {
+    plans: [RwLock<HashMap<PlanKey, Arc<WorkloadPlan>>>; PLAN_SHARDS],
+    /// One tile-simulation cache per config fingerprint: tiles are keyed
+    /// by `TileSpec` alone, so they must never be shared across configs.
+    tiles: RwLock<HashMap<u64, Arc<SharedTileCache>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The memoized plan for `(cfg, w)`: warm calls return the exact
+    /// same `Arc` (bit-identical execution guaranteed); cold calls plan
+    /// against the fingerprint's shared tile cache, outside any lock.
+    pub fn plan(&self, cfg: &ChipConfig, w: &Workload) -> Arc<WorkloadPlan> {
+        self.plan_named(cfg, &w.name, || Some(w.clone()))
+            .expect("resolver always yields the workload")
+    }
+
+    /// Like [`PlanCache::plan`], but keyed by a caller-supplied name
+    /// with the workload materialized LAZILY: warm hits never construct
+    /// the layer graph — the serving engine's steady state is a pure
+    /// shard read. Returns `None` (counting neither hit nor miss) when
+    /// `resolve` cannot produce the workload.
+    pub fn plan_named<F>(
+        &self,
+        cfg: &ChipConfig,
+        name: &str,
+        resolve: F,
+    ) -> Option<Arc<WorkloadPlan>>
+    where
+        F: FnOnce() -> Option<Workload>,
+    {
+        let key = PlanKey {
+            fingerprint: fingerprint(cfg),
+            workload: name.to_string(),
+        };
+        let shard = &self.plans[shard_of(&key)];
+        if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Arc::clone(p));
+        }
+        let w = resolve()?;
+        let tiles = self.tile_cache_for(key.fingerprint);
+        let mut handle = &*tiles;
+        let built = Arc::new(super::build(cfg, &w, &mut handle));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // First insert wins: racing planners agree on one canonical plan.
+        let mut map = shard.write().expect("plan shard poisoned");
+        Some(Arc::clone(map.entry(key).or_insert(built)))
+    }
+
+    /// Plan (or reuse) and execute in one call — the serving/suite path.
+    pub fn run(&self, cfg: &ChipConfig, w: &Workload) -> WorkloadReport {
+        super::execute(&self.plan(cfg, w))
+    }
+
+    /// The shared tile-simulation cache this plan cache uses for `cfg`'s
+    /// fingerprint. Callers serving the same config (e.g. the server's
+    /// per-GEMM sim-cost path) can adopt it so a tile any path ever
+    /// simulated — planning or serving — is never simulated twice.
+    pub fn tile_cache(&self, cfg: &ChipConfig) -> Arc<SharedTileCache> {
+        self.tile_cache_for(fingerprint(cfg))
+    }
+
+    /// The tile-simulation cache backing one config fingerprint.
+    fn tile_cache_for(&self, fp: u64) -> Arc<SharedTileCache> {
+        if let Some(c) = self.tiles.read().expect("tile map poisoned").get(&fp) {
+            return Arc::clone(c);
+        }
+        let mut map = self.tiles.write().expect("tile map poisoned");
+        Arc::clone(map.entry(fp).or_default())
+    }
+
+    /// Plans memoized so far (across all shards and fingerprints).
+    pub fn len(&self) -> usize {
+        self.plans
+            .iter()
+            .map(|s| s.read().expect("plan shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Plan-level hit/miss counters since construction. A warm suite or
+    /// shmoo pass must add hits only — `misses` staying flat is the
+    /// "re-planned zero layers" assertion.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Aggregate tile-simulation counters across every fingerprint's
+    /// tile cache (what planning itself memoized).
+    pub fn tile_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for c in self.tiles.read().expect("tile map poisoned").values() {
+            let s = c.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+        }
+        total
+    }
+
+    /// Distinct tile specs simulated across every fingerprint.
+    pub fn unique_tiles(&self) -> usize {
+        let map = self.tiles.read().expect("tile map poisoned");
+        map.values().map(|c| c.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OperatingPoint;
+    use crate::workloads;
+
+    #[test]
+    fn fingerprint_separates_presets() {
+        let presets = [
+            ChipConfig::voltra(),
+            ChipConfig::separated_memory(),
+            ChipConfig::no_prefetch(),
+            ChipConfig::array2d(),
+            ChipConfig::simd64(),
+            ChipConfig::full_crossbar(),
+        ];
+        let fps: Vec<u64> = presets.iter().map(fingerprint).collect();
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "presets {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_ignores_operating_point() {
+        let a = ChipConfig::voltra();
+        let b = ChipConfig::voltra().with_operating_point(OperatingPoint::efficiency());
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn warm_plan_is_the_same_arc() {
+        let pc = PlanCache::new();
+        let cfg = ChipConfig::voltra();
+        let w = workloads::by_name("lstm").unwrap();
+        let a = pc.plan(&cfg, &w);
+        let b = pc.plan(&cfg, &w);
+        assert!(Arc::ptr_eq(&a, &b), "warm hit must return the cached plan");
+        let s = pc.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(pc.len(), 1);
+    }
+
+    #[test]
+    fn plan_named_is_lazy_and_counts_unknowns_as_neither() {
+        let pc = PlanCache::new();
+        let cfg = ChipConfig::voltra();
+        let cold = pc
+            .plan_named(&cfg, "lstm", || workloads::by_name("lstm"))
+            .unwrap();
+        // Warm probe by the same name: never materializes the workload.
+        let warm = pc
+            .plan_named(&cfg, "lstm", || unreachable!("warm hit must not resolve"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&cold, &warm));
+        // Unknown names count neither hit nor miss.
+        let before = pc.stats();
+        assert!(pc.plan_named(&cfg, "nope", || None).is_none());
+        assert_eq!(pc.stats(), before);
+    }
+
+    #[test]
+    fn dvfs_points_share_one_plan() {
+        let pc = PlanCache::new();
+        let w = workloads::by_name("pointnext").unwrap();
+        let perf = ChipConfig::voltra();
+        let eff = ChipConfig::voltra().with_operating_point(OperatingPoint::efficiency());
+        let a = pc.plan(&perf, &w);
+        let b = pc.plan(&eff, &w);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(pc.stats().misses, 1);
+    }
+
+    #[test]
+    fn distinct_configs_get_distinct_tile_caches() {
+        let pc = PlanCache::new();
+        let w = workloads::by_name("lstm").unwrap();
+        pc.plan(&ChipConfig::voltra(), &w);
+        let after_one = pc.unique_tiles();
+        assert!(after_one > 0);
+        pc.plan(&ChipConfig::separated_memory(), &w);
+        assert!(
+            pc.unique_tiles() > after_one,
+            "separated preset must simulate into its own tile cache"
+        );
+        assert_eq!(pc.len(), 2);
+    }
+}

@@ -1,0 +1,241 @@
+//! Compile-once workload planning (DESIGN.md §10).
+//!
+//! The model's planning decisions — the layer-wise tiling search, the
+//! K-round variant expansion, the byte-proportional DMA attribution and
+//! the shared-memory residency (activation chaining) — are pure
+//! functions of `(ChipConfig, Workload)`. This module separates that
+//! *planning* from *execution*, the structure the paper's flexible
+//! streamers + dynamic memory allocation imply (plans are programmed
+//! once into CSRs; the datapath then just runs them):
+//!
+//! * [`build`] turns `(cfg, workload)` into an immutable [`WorkloadPlan`]
+//!   — one [`LayerPlan`] per layer holding the dispatched tile runs,
+//!   per-GEMM ping-pong grants, aggregated tile activity and the
+//!   [`ResidencyDecision`] the residency pass recorded for it;
+//! * [`residency`] is the first-class pass that models the shared space
+//!   as a dynamic allocator and decides which layer boundaries chain
+//!   their activation on chip (replacing the old inline heuristic that
+//!   mutated metrics after the fact);
+//! * [`execute`] resolves a plan to a [`WorkloadReport`] — a thin, pure
+//!   pass over [`pipeline::schedule_layer`] with no tiling search and no
+//!   tile simulation;
+//! * [`PlanCache`] memoizes plans process-wide, keyed by the config
+//!   fingerprint + workload name, so `suite` / `sweep` / `shmoo` /
+//!   `serve` plan each `(config, workload)` pair exactly once across
+//!   threads.
+//!
+//! Plans are cycle-domain and therefore *frequency-independent*: the
+//! operating point is deliberately excluded from the fingerprint, so a
+//! DVFS sweep (shmoo) reuses one plan across every (V, f) point.
+
+pub mod cache;
+pub mod planner;
+pub mod residency;
+
+pub use cache::{fingerprint, PlanCache};
+
+use crate::config::ChipConfig;
+use crate::coordinator::{SimCache, WorkloadReport};
+use crate::metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};
+use crate::sim::pipeline;
+use crate::workloads::Workload;
+
+/// What the residency pass decided at this layer's input boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyDecision {
+    /// Predecessor activation bytes consumed directly from the shared
+    /// space (streamer base-pointer update instead of a DRAM round trip).
+    pub chained_bytes: u64,
+    /// Off-chip bytes the chain removed (predecessor write + our read,
+    /// once per layer invocation).
+    pub saved_dma_bytes: u64,
+    /// DMA cycles the chain removed (already folded into the layer's
+    /// tile runs by the pass).
+    pub saved_dma_cycles: u64,
+    /// Activation bytes this layer leaves resident for its successor
+    /// (0 = evicted: too large for the allocator's activation region).
+    pub resident_out_bytes: u64,
+}
+
+/// One layer, fully planned: the dispatched tile timeline plus every
+/// aggregate the metrics need. Immutable once [`build`] returns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    pub name: String,
+    /// Aggregated activity of all dispatched tiles (memoized sims,
+    /// scaled by dispatch counts).
+    pub tiles: TileMetrics,
+    pub macs: u64,
+    /// CSR programming + reshuffler cycles.
+    pub aux_cycles: u64,
+    /// Off-chip bytes, after the residency pass trimmed chained traffic.
+    pub dma_bytes: u64,
+    /// DMA engine busy cycles, after the residency pass.
+    pub dma_cycles: u64,
+    pub tile_footprint_bytes: u64,
+    pub dispatched_tiles: u64,
+    /// Resolved pipeline latency of [`Self::timeline`] — computed once
+    /// at plan time (and re-resolved by the residency pass when it trims
+    /// a chained layer's transfers), so executing a warm plan never
+    /// re-schedules anything.
+    pub latency_cycles: u64,
+    /// Cycles the schedule hid by overlapping DMA with compute.
+    pub overlap_cycles: u64,
+    /// The tile runs + per-GEMM ping-pong grants the scheduler consumed
+    /// (run DMA shares already reflect the residency decision).
+    pub timeline: pipeline::LayerPlan,
+    pub residency: ResidencyDecision,
+}
+
+impl LayerPlan {
+    /// Re-resolve this layer's timeline through the pipeline scheduler
+    /// and refresh the stored latency/overlap (planning-time only: the
+    /// planner calls this once per layer, the residency pass once more
+    /// for each layer it trims).
+    pub(crate) fn reschedule(&mut self) {
+        let s = pipeline::schedule_layer(&self.timeline);
+        self.latency_cycles = s.latency_cycles;
+        self.overlap_cycles = s.hidden_cycles();
+    }
+
+    /// This layer's metrics (the per-layer unit of [`execute`]): a pure
+    /// field copy — the schedule was resolved at plan time.
+    pub fn resolve(&self) -> LayerMetrics {
+        LayerMetrics {
+            name: self.name.clone(),
+            tiles: self.tiles,
+            dma_bytes: self.dma_bytes,
+            dma_cycles: self.dma_cycles,
+            latency_cycles: self.latency_cycles,
+            overlap_cycles: self.overlap_cycles,
+            aux_cycles: self.aux_cycles,
+            tile_footprint_bytes: self.tile_footprint_bytes,
+            macs: self.macs,
+            chained_bytes: self.residency.chained_bytes,
+        }
+    }
+}
+
+/// An immutable compiled workload: what every run of `(cfg, workload)`
+/// shares, and what [`PlanCache`] stores.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadPlan {
+    pub workload: String,
+    /// Fingerprint of the [`ChipConfig`] this plan was built under (see
+    /// [`cache::fingerprint`]; excludes the operating point).
+    pub fingerprint: u64,
+    pub layers: Vec<LayerPlan>,
+    /// Distinct tile specs the backing cache had simulated when planning
+    /// finished (the report's `unique_tiles`).
+    pub unique_tiles: usize,
+    pub dispatched_tiles: u64,
+}
+
+impl WorkloadPlan {
+    /// Total planned latency without materializing a report.
+    pub fn total_latency_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.latency_cycles).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_dma_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.dma_bytes).sum()
+    }
+
+    /// Total tile-engine busy cycles (compute + CSR/reshuffle aux).
+    pub fn total_compute_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.tiles.total_cycles + l.aux_cycles).sum()
+    }
+
+    pub fn total_dma_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.dma_cycles).sum()
+    }
+}
+
+/// Compile a workload: per-layer planning, then the residency pass over
+/// the layer sequence. Pure in `(cfg, w)` — the cache only memoizes.
+pub fn build<C: SimCache>(cfg: &ChipConfig, w: &Workload, cache: &mut C) -> WorkloadPlan {
+    let mut layers: Vec<LayerPlan> = Vec::with_capacity(w.layers.len());
+    for l in &w.layers {
+        layers.push(planner::plan_layer(cfg, l, cache));
+    }
+    residency::apply(cfg, &w.layers, &mut layers);
+    let dispatched_tiles = layers.iter().map(|l| l.dispatched_tiles).sum();
+    WorkloadPlan {
+        workload: w.name.clone(),
+        fingerprint: cache::fingerprint(cfg),
+        layers,
+        unique_tiles: cache.unique_tiles(),
+        dispatched_tiles,
+    }
+}
+
+/// Execute a plan: resolve every layer's timeline through the pipeline
+/// scheduler and assemble the report. Deterministic — the same plan
+/// always yields a bit-identical [`WorkloadReport`].
+pub fn execute(plan: &WorkloadPlan) -> WorkloadReport {
+    WorkloadReport {
+        metrics: WorkloadMetrics {
+            name: plan.workload.clone(),
+            layers: plan.layers.iter().map(|l| l.resolve()).collect(),
+        },
+        unique_tiles: plan.unique_tiles,
+        dispatched_tiles: plan.dispatched_tiles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TileCache;
+    use crate::workloads;
+
+    #[test]
+    fn build_then_execute_matches_macs() {
+        let cfg = ChipConfig::voltra();
+        let w = workloads::by_name("pointnext").unwrap();
+        let mut cache = TileCache::new();
+        let plan = build(&cfg, &w, &mut cache);
+        assert_eq!(plan.total_macs(), w.total_macs());
+        let r = execute(&plan);
+        assert_eq!(r.metrics.total_macs(), w.total_macs());
+        assert_eq!(r.metrics.total_latency_cycles(), plan.total_latency_cycles());
+        assert_eq!(r.dispatched_tiles, plan.dispatched_tiles);
+    }
+
+    #[test]
+    fn execute_is_repeatable_bit_identical() {
+        let cfg = ChipConfig::voltra();
+        let w = workloads::by_name("lstm").unwrap();
+        let mut cache = TileCache::new();
+        let plan = build(&cfg, &w, &mut cache);
+        let a = execute(&plan);
+        let b = execute(&plan);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn plan_dma_cycles_match_timeline_runs() {
+        // Invariant the scheduler depends on: a layer's accounted DMA
+        // cycles equal the sum of its run shares, chained or not.
+        let cfg = ChipConfig::voltra();
+        for name in ["llama-decode", "resnet50"] {
+            let w = workloads::by_name(name).unwrap();
+            let mut cache = TileCache::new();
+            let plan = build(&cfg, &w, &mut cache);
+            for l in &plan.layers {
+                let run_dma: u64 = l
+                    .timeline
+                    .gemms
+                    .iter()
+                    .flat_map(|g| g.runs.iter())
+                    .map(|r| r.count * r.dma_cycles)
+                    .sum();
+                assert_eq!(run_dma, l.dma_cycles, "{}/{}", name, l.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Per-layer planning: the tiling search, K-round variant expansion,
+//! tile-run emission and DMA attribution that used to live inline in the
+//! coordinator's ~250-line `run_layer_planned` monolith.
+//!
+//! For each GEMM of a layer:
+//!   1. pick the array mapping orientation (free transpose);
+//!   2. choose the layer-wise tiling that fits the memory organisation
+//!      with minimum off-chip traffic (memoized per `(m, k, n)`);
+//!   3. enumerate the distinct tile shapes (interior/edge x first/mid/
+//!      last K-round), cycle-simulate each once and scale by its count;
+//!   4. charge auxiliary cycles (Snitch CSR programming per tile,
+//!      reshuffler passes for raw-layout feature maps);
+//!   5. emit the dispatched tile sequence as per-GEMM [`TilePlan`]s with
+//!      byte-proportional DMA shares, ready for the event-driven
+//!      pipeline scheduler.
+//!
+//! The output is a [`LayerPlan`] with a default residency decision; the
+//! workload-level [`super::residency`] pass fills that in afterwards.
+
+use crate::config::ChipConfig;
+use crate::coordinator::{tile_csr_cycles, SimCache};
+use crate::metrics::LayerMetrics;
+use crate::sim::dma::transfer_cost;
+use crate::sim::engine::TileSpec;
+use crate::sim::gemm_core::Mapping;
+use crate::sim::pipeline::{self, TilePlan, TileRun};
+use crate::sim::reshuffler::reshuffle_cycles;
+use crate::tiling::engine::traffic_parts;
+use crate::workloads::{Layer, LayerKind};
+
+use super::{LayerPlan, ResidencyDecision};
+
+/// Bytes of feature map a conv layer must reshuffle (HWC -> C/8HWC8).
+fn reshuffle_bytes(layer: &Layer) -> u64 {
+    match layer.kind {
+        LayerKind::Conv2d {
+            h, w, cin, kh, kw, ..
+        } if kh * kw > 1 => h * w * cin.div_ceil(8) * 8,
+        _ => 0,
+    }
+}
+
+/// Dimension residues of round `i` over tiles of `t` covering `d`.
+fn edge(d: u64, t: u64) -> (u64, u64, u64) {
+    // (interior_count, edge_count, edge_size)
+    let full = d / t;
+    let rem = d % t;
+    if rem == 0 {
+        (full, 0, 0)
+    } else {
+        (full, 1, rem)
+    }
+}
+
+/// Split one GEMM's DMA cycles across its tile runs proportional to the
+/// raw bytes each tile variant moves (operands in, psums in/out, results
+/// out) — integer-exact via [`pipeline::DmaSplitter`]: the run totals
+/// sum to `total_dma`, so the scheduler's DMA busy time equals the
+/// layer's accounted DMA cycles. `raw` entries are
+/// `(count, compute_cycles_per_tile, bytes_per_tile)`.
+fn attribute_dma(raw: &[(u64, u64, u64)], total_dma: u64) -> Vec<TileRun> {
+    let mut total_weight: u128 = raw.iter().map(|&(c, _, b)| c as u128 * b as u128).sum();
+    // Degenerate zero-byte variants (tiling never emits them): fall back
+    // to uniform attribution so no DMA time is dropped.
+    let uniform = total_weight == 0;
+    if uniform {
+        total_weight = raw.iter().map(|&(c, _, _)| c as u128).sum();
+    }
+    let mut runs = Vec::with_capacity(raw.len() + 1);
+    let mut split = pipeline::DmaSplitter::new(total_weight, total_dma);
+    for &(count, compute, bytes) in raw {
+        split.push(&mut runs, count, compute, if uniform { 1 } else { bytes });
+    }
+    runs
+}
+
+/// Plan one layer: tiling + memoized tile simulation + DMA attribution,
+/// emitted as an immutable [`LayerPlan`] (residency decision defaulted;
+/// the workload pass owns it).
+pub fn plan_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -> LayerPlan {
+    let mut plan = LayerPlan {
+        name: layer.name.clone(),
+        tiles: Default::default(),
+        macs: 0,
+        aux_cycles: 0,
+        dma_bytes: 0,
+        dma_cycles: 0,
+        tile_footprint_bytes: 0,
+        dispatched_tiles: 0,
+        latency_cycles: 0,
+        overlap_cycles: 0,
+        timeline: pipeline::LayerPlan::default(),
+        residency: ResidencyDecision::default(),
+    };
+
+    for mut g in layer.gemms() {
+        // The hardware loop controller may map (M, N) either way onto the
+        // array; pick the better-filling orientation (free transpose).
+        if Mapping::choose(cfg.array, g.m, g.n).swapped {
+            std::mem::swap(&mut g.m, &mut g.n);
+        }
+        let tiling = match cache.tiling(cfg, g.m, g.k, g.n) {
+            Some(t) => t,
+            None => continue, // cannot fit: skipped (never happens: 8x8x8 always fits)
+        };
+        let nk = tiling.k_rounds(g.k);
+        let (m_int, m_edge, m_rem) = edge(g.m, tiling.tm);
+        let (k_int, k_edge, k_rem) = edge(g.k, tiling.tk);
+        let (n_int, n_edge, n_rem) = edge(g.n, tiling.tn);
+
+        let m_variants = [(tiling.tm, m_int), (m_rem, m_edge)];
+        let n_variants = [(tiling.tn, n_int), (n_rem, n_edge)];
+        // K-round variants: (size, count, psum_in, spill_out).
+        let mut k_variants: Vec<(u64, u64, bool, bool)> = Vec::new();
+        {
+            let k_sizes = [(tiling.tk, k_int), (k_rem, k_edge)];
+            let last_is_edge = k_edge == 1;
+            for (i, &(sz, cnt)) in k_sizes.iter().enumerate() {
+                if cnt == 0 {
+                    continue;
+                }
+                let is_edge_slot = i == 1;
+                if nk == 1 {
+                    k_variants.push((sz, cnt, false, false));
+                } else if is_edge_slot {
+                    // The edge K-round is always the last.
+                    k_variants.push((sz, cnt, true, false));
+                } else {
+                    // Interior rounds: the first has no psum-in; the last
+                    // interior one quantizes only if there is no edge.
+                    let mut first = 1u64.min(cnt);
+                    let mut last = if last_is_edge {
+                        0
+                    } else {
+                        1u64.min(cnt.saturating_sub(first))
+                    };
+                    if cnt == 1 && !last_is_edge {
+                        // Single interior round that is both first & last.
+                        first = 1;
+                        last = 0;
+                        k_variants.push((sz, 1, false, false));
+                        continue;
+                    }
+                    if first > 0 {
+                        k_variants.push((sz, first, false, true));
+                    }
+                    let mid = cnt - first - last;
+                    if mid > 0 {
+                        k_variants.push((sz, mid, true, true));
+                    }
+                    if last > 0 {
+                        k_variants.push((sz, last, true, false));
+                    }
+                }
+            }
+        }
+
+        let pl = tiling.placement;
+        // Control overhead: one CSR program per dispatched tile (part of
+        // the tile engine's per-tile busy time in the schedule).
+        let csr_cycles = tile_csr_cycles(tiling.tk);
+        let mut dispatched = 0u64;
+        // (count, per-tile compute cycles, per-tile raw bytes) per
+        // variant, in dispatch order — the scheduler's tile runs.
+        let mut raw_runs: Vec<(u64, u64, u64)> = Vec::new();
+        for &(tm, mc) in &m_variants {
+            if mc == 0 {
+                continue;
+            }
+            for &(tn, nc) in &n_variants {
+                if nc == 0 {
+                    continue;
+                }
+                for &(tk, kc, psum_in, spill_out) in &k_variants {
+                    if kc == 0 {
+                        continue;
+                    }
+                    let spec = TileSpec {
+                        tm,
+                        tk,
+                        tn,
+                        psum_in,
+                        spill_out,
+                        input_blocked: !g.raw_input,
+                        in_base: pl.input_base,
+                        w_base: pl.weight_base,
+                        p_base: pl.psum_base,
+                        o_base: pl.output_base,
+                    };
+                    let tmetrics = cache.simulate(cfg, &spec);
+                    let count = mc * nc * kc * g.repeat;
+                    plan.tiles.add_scaled(&tmetrics, count);
+                    dispatched += count;
+                    // Raw byte weight of this variant for DMA
+                    // attribution: operand tiles in, int32 psums
+                    // round-tripped, results out.
+                    let psum_bytes = if psum_in { 4 * tm * tn } else { 0 };
+                    let out_bytes = if spill_out { 4 * tm * tn } else { tm * tn };
+                    let tile_bytes = tm * tk + tk * tn + psum_bytes + out_bytes;
+                    raw_runs.push((count, tmetrics.total_cycles + csr_cycles, tile_bytes));
+                }
+            }
+        }
+
+        plan.dispatched_tiles += dispatched;
+        plan.aux_cycles += dispatched * csr_cycles;
+        // PDMA weight residency: if the whole weight operand fits in the
+        // memory the organisation can give it, recurrent repeats stream
+        // the weights once instead of every step. The separated baseline
+        // is capped by its fixed weight buffer.
+        let parts = traffic_parts(g.m, g.k, g.n, tiling.tm, tiling.tk, tiling.tn);
+        let weight_budget = match cfg.memory {
+            crate::config::MemoryOrg::Shared => 3 * cfg.memory.total_bytes() as u64 / 4,
+            crate::config::MemoryOrg::Separated { weight, .. } => weight as u64,
+        };
+        let w_groups = g.repeat / g.weight_reuse.max(1);
+        let gemm_traffic = if g.weight_reuse > 1 && g.k * g.n <= weight_budget {
+            (parts.input + parts.psum + parts.output) * g.repeat + parts.weight * w_groups
+        } else {
+            parts.total() * g.repeat
+        };
+        plan.dma_bytes += gemm_traffic;
+        plan.tile_footprint_bytes = plan.tile_footprint_bytes.max(tiling.footprint.total() as u64);
+        plan.macs += g.macs();
+
+        // DMA timing: bandwidth-limited, plus per-tile burst setup — a
+        // config that tiles finer (separated buffers) pays more burst
+        // overhead for the same bytes. The total is attributed across
+        // this GEMM's tile runs so the scheduler can interleave it with
+        // compute at tile granularity.
+        let t = transfer_cost(cfg, gemm_traffic);
+        let gemm_dma_cycles = t.cycles + dispatched * cfg.dma_burst_latency;
+        plan.dma_cycles += gemm_dma_cycles;
+        plan.timeline.gemms.push(TilePlan {
+            runs: attribute_dma(&raw_runs, gemm_dma_cycles),
+            // Ping-pong regions exist only when the allocator granted
+            // double-buffer space for THIS GEMM — per-GEMM, never
+            // inherited from whichever GEMM the layer lowered last.
+            double_buffered: tiling.double_buffered && cfg.double_buffer,
+        });
+    }
+
+    // Reshuffler pass for raw conv feature maps (serial, before the
+    // tile timeline can stream the blocked layout).
+    let rb = reshuffle_bytes(layer);
+    if rb > 0 {
+        plan.timeline.reshuffle_cycles = reshuffle_cycles(rb) * layer.repeat;
+        plan.aux_cycles += plan.timeline.reshuffle_cycles;
+    }
+
+    // Resolve the timeline once, at plan time — execution is then a
+    // pure field copy (the residency pass re-resolves chained layers).
+    plan.reschedule();
+    plan
+}
+
+/// Plan and immediately resolve one standalone layer (no workload-level
+/// residency): the engine behind the coordinator's [`run_layer`]
+/// convenience APIs and the server's per-request sim cost.
+///
+/// [`run_layer`]: crate::coordinator::run_layer
+pub fn plan_layer_metrics<C: SimCache>(
+    cfg: &ChipConfig,
+    layer: &Layer,
+    cache: &mut C,
+) -> (LayerMetrics, u64) {
+    let plan = plan_layer(cfg, layer, cache);
+    let dispatched = plan.dispatched_tiles;
+    (plan.resolve(), dispatched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TileCache;
+
+    #[test]
+    fn pool_layer_plans_to_empty_timeline() {
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new(
+            "pool",
+            LayerKind::Pool {
+                h: 112,
+                w: 112,
+                c: 64,
+                window: 3,
+                stride: 2,
+            },
+        );
+        let mut cache = TileCache::new();
+        let p = plan_layer(&cfg, &l, &mut cache);
+        assert!(p.timeline.gemms.is_empty());
+        assert_eq!(p.macs, 0);
+        assert_eq!(p.dispatched_tiles, 0);
+    }
+
+    #[test]
+    fn run_dma_shares_sum_to_layer_dma() {
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new(
+            "g",
+            LayerKind::Gemm {
+                m: 512,
+                k: 8192,
+                n: 256,
+            },
+        );
+        let mut cache = TileCache::new();
+        let p = plan_layer(&cfg, &l, &mut cache);
+        let run_dma: u64 = p
+            .timeline
+            .gemms
+            .iter()
+            .flat_map(|g| g.runs.iter())
+            .map(|r| r.count * r.dma_cycles)
+            .sum();
+        assert_eq!(run_dma, p.dma_cycles);
+        let run_tiles: u64 = p
+            .timeline
+            .gemms
+            .iter()
+            .flat_map(|g| g.runs.iter())
+            .map(|r| r.count)
+            .sum();
+        assert_eq!(run_tiles, p.dispatched_tiles);
+    }
+
+    #[test]
+    fn fused_layer_keeps_per_gemm_grants() {
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new(
+            "fused",
+            LayerKind::Fused(vec![(512, 768, 768), (64, 64, 64)]),
+        );
+        let mut cache = TileCache::new();
+        let p = plan_layer(&cfg, &l, &mut cache);
+        assert_eq!(p.timeline.gemms.len(), 2);
+        // The big GEMM cannot ping-pong in 128 KiB; the small one can.
+        assert!(!p.timeline.gemms[0].double_buffered);
+        assert!(p.timeline.gemms[1].double_buffered);
+    }
+}

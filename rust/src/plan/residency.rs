@@ -1,0 +1,266 @@
+//! The shared-memory residency pass (DESIGN.md §10).
+//!
+//! PDMA's layer-chaining benefit (Fig. 4): with the shared organisation,
+//! a layer's output region simply *becomes* the next layer's input
+//! region — a streamer base-pointer update — whenever the dynamic
+//! allocator can keep it on chip next to the live tiles. The separated
+//! organisation must round-trip the activation through off-chip memory
+//! because the output buffer is not the input buffer.
+//!
+//! This pass walks the planned layer sequence once and models the shared
+//! space as a two-region dynamic allocator:
+//!
+//! * the **working region** — at least half the space is always held
+//!   back for the live tile footprints and their double-buffer
+//!   (ping-pong) grants, which the tiling search sized against the full
+//!   organisation; PDMA re-partitions it per layer via base pointers;
+//! * the **activation region** — whatever activation the previous layer
+//!   left resident competes for the remainder. An activation larger
+//!   than the region is evicted (it cannot sit next to any layer's
+//!   working set), and a consumer can chain at most the bytes the
+//!   region can hold.
+//!
+//! Decisions are *recorded in the plan* ([`ResidencyDecision`]) and the
+//! chained layers' tile-run DMA shares are re-scaled right here — the
+//! executor never mutates metrics after the fact (the old coordinator
+//! heuristic patched `LayerMetrics` post-hoc).
+//!
+//! Chaining semantics: the chain saves the predecessor's output write
+//! plus this layer's input read, once per layer *invocation* (recurrent
+//! steps re-chain every iteration), and can trim at most half the
+//! layer's off-chip traffic — weights and psum spills still move.
+
+use crate::config::{ChipConfig, MemoryOrg};
+use crate::sim::pipeline;
+use crate::workloads::{Layer, LayerKind};
+
+use super::LayerPlan;
+
+/// Activation bytes a layer produces (what the next layer consumes).
+///
+/// Mirror of the [`activation_in_bytes`] fused rule: only the LAST GEMM
+/// of a fused bundle produces the activation the successor reads — the
+/// earlier outputs are on-chip intermediates consumed inside the layer.
+pub fn activation_out_bytes(layer: &Layer) -> u64 {
+    if let LayerKind::Fused(ref gemms) = layer.kind {
+        return gemms.last().map(|&(m, _, n)| m * n).unwrap_or(0);
+    }
+    layer
+        .gemms()
+        .iter()
+        .map(|g| g.m * g.n * g.repeat / layer.repeat.max(1))
+        .sum()
+}
+
+/// Activation bytes a layer consumes from its predecessor.
+///
+/// For [`LayerKind::Fused`] only the FIRST GEMM reads the predecessor's
+/// activation — the later GEMMs of the bundle consume on-chip
+/// intermediates produced inside the layer — so chaining must not count
+/// their inputs (summing every `m * k` overcounted the savings).
+pub fn activation_in_bytes(layer: &Layer) -> u64 {
+    match layer.kind {
+        LayerKind::Conv2d { h, w, cin, .. } => h * w * cin,
+        LayerKind::DepthwiseConv { h, w, c, .. } => h * w * c,
+        LayerKind::Gemm { m, k, .. } => m * k,
+        LayerKind::BatchedMatmul { batch, m, k, .. } => batch * m * k,
+        LayerKind::Fused(ref gemms) => gemms.first().map(|&(m, k, _)| m * k).unwrap_or(0),
+        LayerKind::Pool { h, w, c, .. } => h * w * c,
+    }
+}
+
+/// Run the residency pass over a planned layer sequence, recording the
+/// chaining decisions and folding the saved transfers into each chained
+/// layer's timeline. `layers` and `plans` are parallel (one plan per
+/// workload layer, in order).
+pub fn apply(cfg: &ChipConfig, layers: &[Layer], plans: &mut [LayerPlan]) {
+    if !matches!(cfg.memory, MemoryOrg::Shared) {
+        // Separated buffers cannot chain: the output buffer is not the
+        // input buffer, every activation round-trips through DRAM.
+        return;
+    }
+    debug_assert_eq!(layers.len(), plans.len());
+    let capacity = cfg.memory.total_bytes() as u64;
+    // The allocator's floor for live tiles + ping-pong grants; the
+    // activation region gets the rest.
+    let working_reserve = capacity / 2;
+    let activation_region = capacity - working_reserve;
+
+    // Activation bytes currently resident from the previous layer.
+    let mut resident: u64 = 0;
+    for (layer, plan) in layers.iter().zip(plans.iter_mut()) {
+        let a_in = activation_in_bytes(layer);
+        let chained = resident.min(a_in);
+        // The eviction rule below already bounds what stays resident, so
+        // a chained region can never exceed the activation region.
+        debug_assert!(chained <= activation_region);
+        // Saved: the predecessor's output write + our input read, once
+        // per layer invocation (not per repeat: recurrent steps re-chain
+        // every iteration). A chain is only recorded when it removes
+        // actual traffic — a zero-DMA layer (e.g. Pool) passing its
+        // input through must not inflate the chained-bytes metric.
+        let saved = (2 * chained * layer.repeat).min(plan.dma_bytes / 2);
+        if saved > 0 {
+            let saved_cycles = saved.div_ceil(cfg.dma_bytes_per_cycle.max(1));
+            let new_dma = plan.dma_cycles.saturating_sub(saved_cycles);
+            // Trim the per-tile DMA attribution to the new total —
+            // chaining shortens the transfers, it does not change the
+            // overlap rules (each GEMM keeps its own ping-pong grant).
+            pipeline::scale_dma(&mut plan.timeline.gemms, new_dma);
+            plan.residency.chained_bytes = chained;
+            plan.residency.saved_dma_bytes = saved;
+            plan.residency.saved_dma_cycles = plan.dma_cycles - new_dma;
+            plan.dma_bytes -= saved;
+            plan.dma_cycles = new_dma;
+            // The trimmed timeline resolves to a new latency; refresh
+            // the plan's stored schedule.
+            plan.reschedule();
+        }
+        // What this layer leaves behind: its output stays resident only
+        // if the activation region can hold it (next to the successor's
+        // working set); otherwise it is evicted to DRAM.
+        let out = activation_out_bytes(layer);
+        resident = if out <= activation_region { out } else { 0 };
+        plan.residency.resident_out_bytes = resident;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TileCache;
+    use crate::plan::{self, ResidencyDecision};
+    use crate::workloads::{by_name, Workload};
+
+    fn gemm_layer(name: &str, m: u64, k: u64, n: u64) -> Layer {
+        Layer::new(name, LayerKind::Gemm { m, k, n })
+    }
+
+    #[test]
+    fn fused_input_counts_only_the_first_gemm() {
+        let fused = Layer::new("f", LayerKind::Fused(vec![(64, 64, 64), (64, 64, 64)]));
+        assert_eq!(activation_in_bytes(&fused), 64 * 64);
+        let empty = Layer::new("e", LayerKind::Fused(vec![]));
+        assert_eq!(activation_in_bytes(&empty), 0);
+    }
+
+    #[test]
+    fn fused_chaining_no_longer_overcounts() {
+        // Regression (ISSUE 4 satellite): a fused successor used to sum
+        // m*k over ALL its GEMMs, so a predecessor producing more than
+        // the first GEMM's input chained phantom bytes.
+        let cfg = ChipConfig::voltra();
+        let w = Workload::new(
+            "fused-chain",
+            vec![
+                gemm_layer("producer", 128, 64, 128), // out = 16384 B
+                Layer::new("consumer", LayerKind::Fused(vec![(64, 64, 64), (64, 64, 64)])),
+            ],
+        );
+        let mut cache = TileCache::new();
+        let p = plan::build(&cfg, &w, &mut cache);
+        let d = &p.layers[1].residency;
+        // Only the first GEMM's 4096-byte input chains — under the old
+        // accounting this was min(16384, 8192) = 8192.
+        assert_eq!(d.chained_bytes, 64 * 64);
+        assert_eq!(d.saved_dma_bytes, 2 * 64 * 64);
+    }
+
+    #[test]
+    fn fused_output_counts_only_the_last_gemm() {
+        let fused = Layer::new("f", LayerKind::Fused(vec![(64, 64, 64), (128, 64, 128)]));
+        assert_eq!(activation_out_bytes(&fused), 128 * 128);
+        let empty = Layer::new("e", LayerKind::Fused(vec![]));
+        assert_eq!(activation_out_bytes(&empty), 0);
+        // End to end: a Gemm successor chains against the LAST bundle
+        // output, not the sum of all of them.
+        let cfg = ChipConfig::voltra();
+        let w = Workload::new("fused-out", vec![fused, gemm_layer("consumer", 256, 256, 64)]);
+        let mut cache = TileCache::new();
+        let p = plan::build(&cfg, &w, &mut cache);
+        assert_eq!(p.layers[0].residency.resident_out_bytes, 128 * 128);
+        // consumer a_in = 256*256 > 16384: chains exactly the resident bytes.
+        assert_eq!(p.layers[1].residency.chained_bytes, 128 * 128);
+    }
+
+    #[test]
+    fn pool_breaks_the_activation_chain() {
+        // A pool layer produces no GEMM output, so nothing stays
+        // resident for the layer after it.
+        let cfg = ChipConfig::voltra();
+        let w = Workload::new(
+            "pooled",
+            vec![
+                gemm_layer("a", 64, 64, 64),
+                Layer::new(
+                    "pool",
+                    LayerKind::Pool {
+                        h: 8,
+                        w: 8,
+                        c: 64,
+                        window: 2,
+                        stride: 2,
+                    },
+                ),
+                gemm_layer("b", 64, 64, 64),
+            ],
+        );
+        let mut cache = TileCache::new();
+        let p = plan::build(&cfg, &w, &mut cache);
+        assert_eq!(p.layers[1].residency.resident_out_bytes, 0);
+        assert_eq!(p.layers[2].residency.chained_bytes, 0);
+    }
+
+    #[test]
+    fn oversized_activation_is_evicted() {
+        // 512 x 768 output = 384 KiB > the 64 KiB activation region:
+        // nothing chains into the next layer.
+        let cfg = ChipConfig::voltra();
+        let w = Workload::new(
+            "big",
+            vec![gemm_layer("a", 512, 768, 768), gemm_layer("b", 512, 768, 768)],
+        );
+        let mut cache = TileCache::new();
+        let p = plan::build(&cfg, &w, &mut cache);
+        assert_eq!(p.layers[0].residency.resident_out_bytes, 0);
+        assert_eq!(p.layers[1].residency.chained_bytes, 0);
+    }
+
+    #[test]
+    fn separated_memory_never_chains() {
+        let cfg = ChipConfig::separated_memory();
+        let w = by_name("llama-decode").unwrap();
+        let mut cache = TileCache::new();
+        let p = plan::build(&cfg, &w, &mut cache);
+        assert!(p.layers.iter().all(|l| l.residency == ResidencyDecision::default()));
+    }
+
+    #[test]
+    fn decode_chains_projection_layers() {
+        // LLaMA decode's small per-step activations (batch 6) sit well
+        // inside the activation region: the pass must chain them and the
+        // chained layers must move fewer bytes than their unchained plan.
+        let cfg = ChipConfig::voltra();
+        let w = by_name("llama-decode").unwrap();
+        let mut cache = TileCache::new();
+        let p = plan::build(&cfg, &w, &mut cache);
+        let chained: Vec<_> = p
+            .layers
+            .iter()
+            .filter(|l| l.residency.chained_bytes > 0)
+            .collect();
+        assert!(!chained.is_empty(), "decode must chain some layers");
+        for l in chained {
+            assert!(l.residency.saved_dma_bytes > 0, "{}", l.name);
+            // The run shares were re-scaled to the trimmed total.
+            let run_dma: u64 = l
+                .timeline
+                .gemms
+                .iter()
+                .flat_map(|g| g.runs.iter())
+                .map(|r| r.count * r.dma_cycles)
+                .sum();
+            assert_eq!(run_dma, l.dma_cycles, "{}", l.name);
+        }
+    }
+}

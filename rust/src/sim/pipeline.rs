@@ -236,12 +236,13 @@ impl DmaSplitter {
     }
 }
 
-/// Rescale a layer's per-tile DMA attribution to a new layer total
-/// (activation chaining removes off-chip round-trips *after* the plan
-/// was built). Distribution is proportional per run, integer-exact: the
-/// new run totals sum to exactly `new_total`, so the re-scheduled
-/// latency keeps satisfying the overlap envelope against the layer's
-/// accounted DMA cycles.
+/// Rescale a layer's per-tile DMA attribution to a new layer total —
+/// how the plan-time residency pass (`plan::residency`, DESIGN.md §10)
+/// folds activation chaining's removed off-chip round-trips into the
+/// tile runs before the executor ever schedules them. Distribution is
+/// proportional per run, integer-exact: the new run totals sum to
+/// exactly `new_total`, so the scheduled latency keeps satisfying the
+/// overlap envelope against the layer's accounted DMA cycles.
 pub fn scale_dma(plans: &mut [TilePlan], new_total: u64) {
     let old_total: u128 = plans
         .iter()

@@ -26,8 +26,13 @@ pub struct Tiling {
 }
 
 impl Tiling {
-    pub fn rounds(&self, m: u64, k: u64, n: u64) -> (u64, u64, u64) {
-        (m.div_ceil(self.tm), k.div_ceil(self.tk), n.div_ceil(self.tn))
+    /// K accumulation rounds this tiling needs for a reduction dim `k` —
+    /// what decides psum-in/spill-out variants. (The planner derives M/N
+    /// round structure from its own edge decomposition, so the old
+    /// `rounds()` triple — whose M/N counts every caller discarded — is
+    /// gone.)
+    pub fn k_rounds(&self, k: u64) -> u64 {
+        k.div_ceil(self.tk)
     }
 }
 
@@ -254,8 +259,8 @@ mod tests {
         // ResNet50 conv2_x-ish: M = 3136, K = 576, N = 64.
         let cfg = ChipConfig::voltra();
         let t = choose_tiling(&cfg, 3136, 576, 64).unwrap();
-        let (nm, nk, nn) = t.rounds(3136, 576, 64);
-        assert!(nm * nk * nn > 1);
+        let ntiles = 3136u64.div_ceil(t.tm) * t.k_rounds(576) * 64u64.div_ceil(t.tn);
+        assert!(ntiles > 1);
         assert!(t.footprint.total() <= 128 * 1024);
     }
 }

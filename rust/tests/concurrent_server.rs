@@ -14,15 +14,21 @@ use std::thread;
 use voltra::config::ChipConfig;
 use voltra::coordinator::server::{bind, serve_blocking, serve_threaded};
 use voltra::coordinator::SharedTileCache;
+use voltra::plan::PlanCache;
 use voltra::runtime::HostBackend;
 
 /// The request script every client plays (mix of cached-shape repeats,
-/// ragged shapes, rejects and parse errors).
-const REQS: [&str; 7] = [
+/// ragged shapes, plan-cache workload queries, rejects and parse
+/// errors). WORKLOAD responses carry no wall-clock token, so they must
+/// compare byte-identical across engines and cache temperature.
+const REQS: [&str; 10] = [
     "GEMM 64 64 64 1",
     "GEMM 96 96 96 2",
     "GEMM 40 64 72 3",
+    "WORKLOAD lstm",
     "GEMM 64 64 64 1",
+    "WORKLOAD lstm",
+    "WORKLOAD nope",
     "GEMM 0 0 0 0",
     "GEMM 1x 2 3 4",
     "QUIT",
@@ -62,7 +68,8 @@ fn concurrent_clients_match_sequential_responses() {
     let server = thread::spawn(move || {
         let cfg = ChipConfig::voltra();
         let cache = SharedTileCache::new();
-        serve_blocking(&mut HostBackend, &cfg, listener, Some(1), &cache).unwrap()
+        let plans = PlanCache::new();
+        serve_blocking(&mut HostBackend, &cfg, listener, Some(1), &cache, &plans).unwrap()
     });
     let reference = client(addr);
     let stats = server.join().unwrap();
@@ -78,7 +85,8 @@ fn concurrent_clients_match_sequential_responses() {
         let cache = Arc::clone(&cache);
         thread::spawn(move || {
             let cfg = ChipConfig::voltra();
-            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(4), &cache).unwrap()
+            let plans = PlanCache::new();
+            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(4), &cache, &plans).unwrap()
         })
     };
     let clients: Vec<_> = (0..4).map(|_| thread::spawn(move || client(addr))).collect();
@@ -99,22 +107,27 @@ fn shared_cache_survives_across_connections() {
     let listener = bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let cache = Arc::new(SharedTileCache::new());
+    let plans = Arc::new(PlanCache::new());
     let server = {
         let cache = Arc::clone(&cache);
+        let plans = Arc::clone(&plans);
         thread::spawn(move || {
             let cfg = ChipConfig::voltra();
-            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(3), &cache).unwrap()
+            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(3), &cache, &plans).unwrap()
         })
     };
 
-    // First connection populates the cache (responses received => all
-    // sim-cost lookups for it have completed).
+    // First connection populates the caches (responses received => all
+    // sim-cost lookups and plan compilations for it have completed).
     let first = client(addr);
     let unique_after_first = cache.len();
     let misses_after_first = cache.stats().misses;
     assert!(unique_after_first > 0, "first connection must simulate tiles");
+    assert_eq!(plans.len(), 1, "the script plans exactly one workload");
+    let plan_misses_after_first = plans.stats().misses;
+    assert_eq!(plan_misses_after_first, 1);
 
-    // Identical connections answer from the cache: same bytes, no growth.
+    // Identical connections answer from the caches: same bytes, no growth.
     for _ in 0..2 {
         assert_eq!(client(addr), first);
     }
@@ -131,12 +144,19 @@ fn shared_cache_survives_across_connections() {
         "repeat connections must be pure cache hits"
     );
     assert!(cache.stats().hits > 0);
+    assert_eq!(
+        plans.stats().misses,
+        plan_misses_after_first,
+        "repeat connections must re-plan zero workloads"
+    );
+    assert!(plans.stats().hits > 0);
 }
 
 #[test]
 fn backend_factory_failure_surfaces_at_startup() {
     let listener = bind("127.0.0.1:0").unwrap();
     let cache = SharedTileCache::new();
+    let plans = PlanCache::new();
     let cfg = ChipConfig::voltra();
     let r = serve_threaded::<HostBackend, _>(
         || Err(anyhow::anyhow!("backend deliberately unavailable")),
@@ -144,6 +164,7 @@ fn backend_factory_failure_surfaces_at_startup() {
         listener,
         Some(1),
         &cache,
+        &plans,
     );
     let e = r.expect_err("factory failure must abort serving");
     assert!(format!("{e}").contains("deliberately unavailable"));

@@ -10,6 +10,7 @@ use std::net::TcpStream;
 use voltra::config::ChipConfig;
 use voltra::coordinator::server::{bind, serve_blocking};
 use voltra::coordinator::SharedTileCache;
+use voltra::plan::PlanCache;
 use voltra::runtime::{HostBackend, PjrtBackend};
 
 #[test]
@@ -24,9 +25,12 @@ fn serves_gemm_requests_over_tcp() {
         for req in [
             "GEMM 64 64 64 1",
             "GEMM 96 96 96 2",
-            "GEMM 64 64 64 1", // identical request -> identical checksum
-            "GEMM 0 0 0 0",    // must be rejected
-            "GEMM a b c 1",    // malformed numbers -> distinct parse error
+            "GEMM 64 64 64 1",  // identical request -> identical checksum
+            "WORKLOAD lstm",    // compiled once, answered from the plan
+            "WORKLOAD lstm",    // cache hit -> byte-identical response
+            "WORKLOAD nothere", // unknown network -> rejected
+            "GEMM 0 0 0 0",     // must be rejected
+            "GEMM a b c 1",     // malformed numbers -> distinct parse error
             "NONSENSE",
             "QUIT",
         ] {
@@ -43,13 +47,14 @@ fn serves_gemm_requests_over_tcp() {
 
     let cfg = ChipConfig::voltra();
     let cache = SharedTileCache::new();
+    let plans = PlanCache::new();
     let mut backend = HostBackend;
-    let stats = serve_blocking(&mut backend, &cfg, listener, Some(1), &cache).unwrap();
+    let stats = serve_blocking(&mut backend, &cfg, listener, Some(1), &cache, &plans).unwrap();
     let responses = client.join().unwrap();
 
     assert_eq!(stats.served, 1);
     assert_eq!(stats.failed, 0);
-    assert_eq!(responses.len(), 6);
+    assert_eq!(responses.len(), 9);
     assert!(responses[0].starts_with("OK checksum="), "{}", responses[0]);
     assert!(responses[1].starts_with("OK checksum="), "{}", responses[1]);
     // Determinism: same request, same checksum.
@@ -60,13 +65,20 @@ fn serves_gemm_requests_over_tcp() {
     };
     assert_eq!(checksum(&responses[0]), checksum(&responses[2]));
     assert_ne!(checksum(&responses[0]), checksum(&responses[1]));
-    assert!(responses[3].starts_with("ERR unreasonable"), "{}", responses[3]);
-    assert!(responses[4].starts_with("ERR bad integer"), "{}", responses[4]);
-    assert!(responses[5].starts_with("ERR expected"), "{}", responses[5]);
+    // WORKLOAD requests answer from the plan cache: a repeated request is
+    // byte-identical (no wall-clock token in the response).
+    assert!(responses[3].starts_with("OK workload="), "{}", responses[3]);
+    assert_eq!(responses[3], responses[4]);
+    assert!(responses[5].starts_with("ERR unknown workload"), "{}", responses[5]);
+    assert!(responses[6].starts_with("ERR unreasonable"), "{}", responses[6]);
+    assert!(responses[7].starts_with("ERR bad integer"), "{}", responses[7]);
+    assert!(responses[8].starts_with("ERR expected"), "{}", responses[8]);
     // The chip-model estimate rides along.
     assert!(responses[0].contains("sim_cycles="));
-    // The serving cache was populated by the connection and survives it.
+    // The serving caches were populated by the connection and survive it.
     assert!(!cache.is_empty());
+    assert_eq!(plans.len(), 1, "one workload plan compiled");
+    assert_eq!(plans.stats().misses, 1, "repeat WORKLOAD was a pure hit");
 }
 
 #[test]

@@ -1,0 +1,129 @@
+//! Plan determinism and plan-cache coherence (ISSUE 4 acceptance):
+//!
+//! * a warm [`PlanCache`] hit must produce a bit-identical
+//!   [`WorkloadReport`] to the cold plan, for every suite workload under
+//!   both the `voltra` and `separated` presets;
+//! * the plan path must agree exactly with the legacy private-cache run
+//!   path (`run_workload`) on every metric;
+//! * a warm suite pass re-plans zero layers (miss counter flat);
+//! * planning is deterministic across independent caches (the IR itself
+//!   compares equal, not just the executed reports).
+
+use std::sync::Arc;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::{run_suite_planned, run_workload, TileCache};
+use voltra::plan::{self, PlanCache};
+use voltra::workloads::evaluation_suite;
+
+#[test]
+fn warm_hits_are_bit_identical_to_cold_plans_for_the_whole_suite() {
+    for cfg in [ChipConfig::voltra(), ChipConfig::separated_memory()] {
+        let plans = PlanCache::new();
+        for w in evaluation_suite() {
+            let cold = plans.run(&cfg, &w);
+            let warm = plans.run(&cfg, &w);
+            assert_eq!(cold, warm, "{}: warm report diverged", w.name);
+            // The plan-cache path (shared per-fingerprint tile cache)
+            // and a fresh private-cache run agree on every metric —
+            // cache backing must never leak into the numbers.
+            // (unique_tiles legitimately differs: private caches count
+            // per-run, the plan cache counts globally. Equality against
+            // the PRE-refactor arithmetic cannot be asserted in-repo —
+            // run_workload is itself the plan path now — and was
+            // established out of band when the refactor landed.)
+            let private = run_workload(&cfg, &w);
+            assert_eq!(cold.metrics, private.metrics, "{}: plan path diverged", w.name);
+            assert_eq!(cold.dispatched_tiles, private.dispatched_tiles, "{}", w.name);
+        }
+        let s = plans.stats();
+        assert_eq!(s.misses, 8, "each suite workload plans exactly once");
+        assert_eq!(s.hits, 8, "each warm run must hit the plan cache");
+    }
+}
+
+#[test]
+fn warm_suite_replans_zero_layers() {
+    let cfg = ChipConfig::voltra();
+    let suite = evaluation_suite();
+    let plans = PlanCache::new();
+    let cold = run_suite_planned(&cfg, &suite, 4, &plans);
+    let cold_stats = plans.stats();
+    assert_eq!(cold_stats.misses, suite.len() as u64);
+    let cold_tiles = plans.tile_stats().misses;
+
+    let warm = run_suite_planned(&cfg, &suite, 4, &plans);
+    assert_eq!(cold, warm, "warm sweep must be bit-identical");
+    let warm_stats = plans.stats();
+    assert_eq!(
+        warm_stats.misses, cold_stats.misses,
+        "a warm sweep must re-plan zero workloads"
+    );
+    assert_eq!(
+        plans.tile_stats().misses,
+        cold_tiles,
+        "a warm sweep must re-simulate zero tiles"
+    );
+    assert_eq!(warm_stats.hits, cold_stats.hits + suite.len() as u64);
+}
+
+#[test]
+fn plans_are_deterministic_across_independent_caches() {
+    // Not just the executed reports: the IR itself — tile runs, grants,
+    // residency decisions, DMA attribution — must compare equal when
+    // built twice from scratch.
+    for cfg in [ChipConfig::voltra(), ChipConfig::separated_memory()] {
+        for w in evaluation_suite() {
+            let mut c1 = TileCache::new();
+            let mut c2 = TileCache::new();
+            let a = plan::build(&cfg, &w, &mut c1);
+            let b = plan::build(&cfg, &w, &mut c2);
+            assert_eq!(a, b, "{}: plan IR not deterministic", w.name);
+        }
+    }
+}
+
+#[test]
+fn concurrent_planners_agree_on_one_canonical_plan() {
+    // Racing threads may duplicate planning work, but every caller must
+    // end up executing the same canonical Arc'd plan.
+    let cfg = ChipConfig::voltra();
+    let w = voltra::workloads::by_name("pointnext").unwrap();
+    let plans = PlanCache::new();
+    let got: Vec<Arc<plan::WorkloadPlan>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8).map(|_| s.spawn(|| plans.plan(&cfg, &w))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for p in &got[1..] {
+        assert!(
+            Arc::ptr_eq(&got[0], p) || **p == *got[0],
+            "racing planners must agree on plan content"
+        );
+    }
+    // And every later lookup returns the canonical Arc.
+    let canonical = plans.plan(&cfg, &w);
+    let again = plans.plan(&cfg, &w);
+    assert!(Arc::ptr_eq(&canonical, &again));
+    assert_eq!(plans.len(), 1);
+}
+
+#[test]
+fn chaining_reduces_traffic_against_an_unchained_plan() {
+    // The residency pass must strictly reduce off-chip traffic for the
+    // decode workload (known chained layers) relative to summing the
+    // same layers planned standalone — and never increase latency.
+    let cfg = ChipConfig::voltra();
+    let w = voltra::workloads::by_name("llama-decode").unwrap();
+    let mut cache = TileCache::new();
+    let p = plan::build(&cfg, &w, &mut cache);
+    let chained_traffic: u64 = p.layers.iter().map(|l| l.dma_bytes).sum();
+    let saved: u64 = p.layers.iter().map(|l| l.residency.saved_dma_bytes).sum();
+    assert!(saved > 0, "decode must chain activations");
+    let mut solo = TileCache::new();
+    let standalone: u64 = w
+        .layers
+        .iter()
+        .map(|l| plan::planner::plan_layer(&cfg, l, &mut solo).dma_bytes)
+        .sum();
+    assert_eq!(chained_traffic + saved, standalone);
+}
