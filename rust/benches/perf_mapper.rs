@@ -1,0 +1,76 @@
+//! Mapper-cache hot path: the cycle-domain mapping search (DESIGN.md
+//! §11) cold, vs warm hits on the process-wide cache.
+//!
+//! The search enumerates permutation x fold candidates and runs a full
+//! tiling search for each — hundreds of microseconds per distinct layer
+//! shape. The sharded cache memoizes it per (fingerprint, M, K, N), so
+//! a warm suite / sweep / serve pass pays a shard read per GEMM. The
+//! bench asserts the warm path is at least 2x the cold one (it is
+//! orders of magnitude faster; 2x keeps the smoke test robust on noisy
+//! CI runners).
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::config::ChipConfig;
+use voltra::tiling::MapperCache;
+use voltra::workloads::evaluation_suite;
+
+fn suite_shapes() -> Vec<(u64, u64, u64)> {
+    let mut shapes = std::collections::BTreeSet::new();
+    for w in evaluation_suite() {
+        for l in &w.layers {
+            for g in l.gemms() {
+                shapes.insert((g.m, g.k, g.n));
+            }
+        }
+    }
+    shapes.into_iter().collect()
+}
+
+fn main() {
+    common::header("perf — mapping search: cold search vs warm mapper-cache hit");
+    let cfg = ChipConfig::voltra();
+    let shapes = suite_shapes();
+    println!(
+        "{} distinct GEMM shapes across the eight suite workloads",
+        shapes.len()
+    );
+
+    let iters = 5;
+    // Cold: a fresh cache every iteration — every shape searches.
+    let cold = common::time(iters, || {
+        let cache = MapperCache::new();
+        for &(m, k, n) in &shapes {
+            let _ = cache.resolve(&cfg, m, k, n);
+        }
+    });
+    common::show("mapper cold (fresh cache, full search)", iters, cold);
+
+    // Warm: one cache reused — every shape is a shard read.
+    let warm_cache = MapperCache::new();
+    for &(m, k, n) in &shapes {
+        let _ = warm_cache.resolve(&cfg, m, k, n);
+    }
+    let warm = common::time(iters, || {
+        for &(m, k, n) in &shapes {
+            let _ = warm_cache.resolve(&cfg, m, k, n);
+        }
+    });
+    common::show("mapper warm (process-wide cache hits)", iters, warm);
+
+    let speedup = cold.0 / warm.0;
+    println!("warm speedup: {speedup:.1}x");
+    assert!(
+        speedup >= 2.0,
+        "warm mapper hits must be at least 2x the cold search, got {speedup:.2}x"
+    );
+
+    let stats = warm_cache.stats();
+    println!(
+        "cache: {} shapes, {} hits / {} misses",
+        warm_cache.len(),
+        stats.hits,
+        stats.misses
+    );
+}

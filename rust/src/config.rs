@@ -73,6 +73,20 @@ impl MemoryOrg {
     }
 }
 
+/// How the per-layer dimension mapping is chosen (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MappingSearch {
+    /// Legacy M/N-permutation-only choice (the pre-mapper model): pick
+    /// the better-filling orientation, never fold. Kept as the
+    /// ablation baseline the mapper is measured against.
+    SwapOnly,
+    /// Full 3D mapping search: M/N permutation plus K-extension
+    /// dimension folding, each candidate scored together with its
+    /// tiling under the cycle-domain objective in
+    /// [`crate::tiling::mapper`].
+    Fold3D,
+}
+
 /// A legal (voltage, frequency) operating point from the shmoo (Fig. 7a).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct OperatingPoint {
@@ -129,6 +143,10 @@ pub struct ChipConfig {
     /// Overlap DMA with compute via double buffering when the allocator
     /// can hold two tiles (true for the chip).
     pub double_buffer: bool,
+    /// Per-layer dimension-mapping search mode (DESIGN.md §11): the full
+    /// cycle-domain search with K-extension folding, or the legacy
+    /// permutation-only baseline.
+    pub mapping: MappingSearch,
     pub operating_point: OperatingPoint,
 }
 
@@ -152,7 +170,18 @@ impl ChipConfig {
             dma_bytes_per_cycle: 8,
             dma_burst_latency: 24,
             double_buffer: true,
+            mapping: MappingSearch::Fold3D,
             operating_point: OperatingPoint::performance(),
+        }
+    }
+
+    /// Mapper ablation baseline: the chip with the legacy
+    /// permutation-only mapping (no K-extension folding) — what the
+    /// model did before the mapping search existed.
+    pub fn swap_only() -> Self {
+        ChipConfig {
+            mapping: MappingSearch::SwapOnly,
+            ..Self::voltra()
         }
     }
 
@@ -247,5 +276,7 @@ mod tests {
             ChipConfig::separated_memory().memory,
             MemoryOrg::Separated { .. }
         ));
+        assert_eq!(v.mapping, MappingSearch::Fold3D);
+        assert_eq!(ChipConfig::swap_only().mapping, MappingSearch::SwapOnly);
     }
 }

@@ -7,9 +7,11 @@
 //!
 //! * the **memoization stores** — [`TileCache`] (cheap, single-thread)
 //!   and [`SharedTileCache`] (sharded `RwLock`, process-wide) behind the
-//!   [`SimCache`] trait. The chip-model path is pure — `choose_tiling`
-//!   and `simulate_tile` depend only on `(cfg, key)` — so any cache
-//!   returns identical values; only the sharing strategy differs;
+//!   [`SimCache`] trait. The chip-model path is pure — `simulate_tile`
+//!   depends only on `(cfg, spec)` — so any cache returns identical
+//!   values; only the sharing strategy differs. (The mapping + tiling
+//!   search has its own process-wide store, the
+//!   [`crate::tiling::mapper::MapperCache`], shared by every path.);
 //! * the **thin run API** — [`run_workload`] and friends are wrappers
 //!   over `plan::build` + `plan::execute`; per-layer planning itself
 //!   lives in [`crate::plan::planner`], activation chaining in
@@ -34,7 +36,6 @@ use crate::sim::agu::LoopDim;
 use crate::sim::engine::{simulate_tile, TileSpec};
 use crate::sim::snitch::{CsrProgram, StreamerId};
 use crate::sim::streamer::{Grain, StreamerProgram};
-use crate::tiling::engine::{choose_tiling, Tiling};
 use crate::workloads::{Layer, Workload};
 
 /// Result of one workload run.
@@ -49,41 +50,30 @@ pub struct WorkloadReport {
     pub dispatched_tiles: u64,
 }
 
-/// What the planner needs from a memoization store. The tiling search
-/// and the tile simulation are pure functions of `(cfg, key)`, so any
-/// cache implementation returns identical values — only the
-/// sharing/locking strategy differs.
+/// What the planner needs from a memoization store. The tile simulation
+/// is a pure function of `(cfg, spec)`, so any cache implementation
+/// returns identical values — only the sharing/locking strategy
+/// differs. (Mapping + tiling memoization moved to the process-wide
+/// [`crate::tiling::mapper::MapperCache`].)
 pub trait SimCache {
-    /// Memoized tiling search (the config is fixed per cache lifetime).
-    fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling>;
     /// Memoized tile simulation.
     fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics;
     /// Distinct tile specs simulated so far.
     fn unique_tiles(&self) -> usize;
 }
 
-/// Per-run memoization: simulated tiles AND tiling decisions (repeated
-/// transformer blocks / ResNet stages share layer shapes — §Perf).
-/// Single-threaded; for cross-thread sharing use [`SharedTileCache`].
+/// Per-run tile-simulation memoization (repeated transformer blocks /
+/// ResNet stages share tile shapes — §Perf). Single-threaded; for
+/// cross-thread sharing use [`SharedTileCache`].
 pub struct TileCache {
     map: HashMap<TileSpec, TileMetrics>,
-    tilings: HashMap<(u64, u64, u64), Option<Tiling>>,
 }
 
 impl TileCache {
     pub fn new() -> Self {
         TileCache {
             map: HashMap::new(),
-            tilings: HashMap::new(),
         }
-    }
-
-    /// Memoized tiling search (the config is fixed per cache lifetime).
-    pub fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
-        *self
-            .tilings
-            .entry((m, k, n))
-            .or_insert_with(|| choose_tiling(cfg, m, k, n))
     }
 
     pub fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
@@ -111,10 +101,6 @@ impl Default for TileCache {
 }
 
 impl SimCache for TileCache {
-    fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
-        TileCache::tiling(self, cfg, m, k, n)
-    }
-
     fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         TileCache::simulate(self, cfg, spec)
     }
@@ -139,14 +125,13 @@ const CACHE_SHARDS: usize = 16;
 ///   racing threads at worst duplicate work and insert identical values
 ///   (last write wins, both results are equal by construction).
 ///
-/// The cache is keyed by [`TileSpec`] / GEMM dims only, so it must not
-/// be shared across *different* [`ChipConfig`]s — same contract as
-/// [`TileCache`], enforced by the callers that own the cache (the
-/// [`PlanCache`] scopes one per config fingerprint).
+/// The cache is keyed by [`TileSpec`] only, so it must not be shared
+/// across *different* [`ChipConfig`]s — same contract as [`TileCache`],
+/// enforced by the callers that own the cache (the [`PlanCache`] scopes
+/// one per config fingerprint).
 #[derive(Default)]
 pub struct SharedTileCache {
     tiles: [RwLock<HashMap<TileSpec, TileMetrics>>; CACHE_SHARDS],
-    tilings: [RwLock<HashMap<(u64, u64, u64), Option<Tiling>>>; CACHE_SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -176,20 +161,6 @@ impl SharedTileCache {
         m
     }
 
-    /// Memoized tiling search, callable from any thread.
-    pub fn tiling(&self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
-        let key = (m, k, n);
-        let shard = &self.tilings[shard_of(&key)];
-        if let Some(t) = shard.read().expect("tiling shard poisoned").get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return *t;
-        }
-        let t = choose_tiling(cfg, m, k, n);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        shard.write().expect("tiling shard poisoned").insert(key, t);
-        t
-    }
-
     /// Distinct tile specs simulated so far (across all shards).
     pub fn len(&self) -> usize {
         self.tiles
@@ -202,7 +173,7 @@ impl SharedTileCache {
         self.len() == 0
     }
 
-    /// Hit/miss counters since construction (tilings + tiles combined).
+    /// Hit/miss counters since construction.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -212,10 +183,6 @@ impl SharedTileCache {
 }
 
 impl SimCache for &SharedTileCache {
-    fn tiling(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
-        SharedTileCache::tiling(*self, cfg, m, k, n)
-    }
-
     fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         SharedTileCache::simulate(*self, cfg, spec)
     }

@@ -8,8 +8,11 @@
 //! * [`sim`] — the cycle-accurate chip model (GEMM core, banked shared
 //!   memory, streamers/AGUs/FIFOs, crossbar, SIMD, reshuffler, maxpool,
 //!   Snitch control, DMA).
-//! * [`tiling`] — PDMA shared-memory allocator, separated-buffer baseline
-//!   and the layer-wise tiling engine.
+//! * [`tiling`] — PDMA shared-memory allocator, separated-buffer
+//!   baseline, the layer-wise tiling engine, and the per-layer mapping
+//!   search ([`tiling::mapper`], DESIGN.md §11) that folds idle array
+//!   rows onto extra K lanes (GEMV K-extension) and memoizes each layer
+//!   shape's resolved mapping process-wide.
 //! * [`workloads`] — the eight evaluated networks as layer graphs.
 //! * [`power`] — energy/area/DVFS models calibrated to the die.
 //! * [`plan`] — the compile-once planning layer (DESIGN.md §10): builds
@@ -44,3 +47,4 @@ pub use coordinator::{
 };
 pub use metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
 pub use plan::{PlanCache, WorkloadPlan};
+pub use tiling::MapperCache;

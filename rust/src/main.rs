@@ -37,8 +37,10 @@ COMMANDS:
 OPTIONS:
     --workload <name>   mobilenetv2|resnet50|vit|pointnext|lstm|bert|
                         llama-prefill|llama-decode
-    --config <preset>   voltra|no-prefetch|separated|2d|simd64|full-xbar
-                        (default: voltra)
+    --config <preset>   voltra|no-prefetch|separated|2d|simd64|full-xbar|
+                        swap-only (default: voltra; swap-only disables
+                        the 3D mapping search's K-extension folding —
+                        the pre-mapper baseline)
     --threads <n>       sweep thread-pool size (default: all cores)
     --vdd <volts>       supply voltage (default 1.0)
     --freq <MHz>        clock (default fmax at --vdd)
@@ -75,6 +77,7 @@ fn config_from(flags: &HashMap<String, String>) -> ChipConfig {
         "2d" => ChipConfig::array2d(),
         "simd64" => ChipConfig::simd64(),
         "full-xbar" => ChipConfig::full_crossbar(),
+        "swap-only" => ChipConfig::swap_only(),
         other => {
             eprintln!("unknown config preset {other:?}");
             usage();
@@ -162,19 +165,25 @@ fn cmd_report(cfg: &ChipConfig, name: &str) {
     let r = run_workload(cfg, &w);
     let m = &r.metrics;
     println!(
-        "{:<16} {:>9} {:>9} {:>12} {:>12} {:>12} {:>12} {:>10}",
-        "layer", "spatial", "temporal", "compute cyc", "dma cyc", "overlap", "latency", "KB moved"
+        "{:<16} {:>10} {:>9} {:>9} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "layer", "mapping", "spatial", "temporal", "compute cyc", "dma cyc", "overlap", "latency",
+        "KB moved"
     );
     for l in &m.layers {
         if l.macs == 0 {
             continue;
         }
         println!(
-            "{:<16} {:>8.1}% {:>8.1}% {:>12} {:>12} {:>12} {:>12} {:>10}",
+            "{:<16} {:>10} {:>8.1}% {:>8.1}% {:>12} {:>12} {:>12} {:>12} {:>10}",
             if l.name.len() > 16 {
                 &l.name[..16]
             } else {
                 &l.name
+            },
+            if l.mapping.len() > 10 {
+                &l.mapping[..10]
+            } else {
+                &l.mapping
             },
             100.0 * l.tiles.spatial_utilization(),
             100.0 * l.tiles.temporal_utilization(),

@@ -92,6 +92,10 @@ impl CacheStats {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerMetrics {
     pub name: String,
+    /// Compact description of the resolved array mapping(s) this layer's
+    /// GEMMs ran under (e.g. `8x8x8`, `1x8x64` for a K-extended GEMV,
+    /// `T`-suffixed when transposed; DESIGN.md §11).
+    pub mapping: String,
     pub tiles: TileMetrics,
     /// Off-chip bytes moved for this layer (in + out).
     pub dma_bytes: u64,

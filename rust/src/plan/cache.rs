@@ -69,6 +69,7 @@ pub fn fingerprint(cfg: &ChipConfig) -> u64 {
     cfg.dma_bytes_per_cycle.hash(&mut h);
     cfg.dma_burst_latency.hash(&mut h);
     cfg.double_buffer.hash(&mut h);
+    cfg.mapping.hash(&mut h);
     h.finish()
 }
 
@@ -223,6 +224,7 @@ mod tests {
             ChipConfig::array2d(),
             ChipConfig::simd64(),
             ChipConfig::full_crossbar(),
+            ChipConfig::swap_only(),
         ];
         let fps: Vec<u64> = presets.iter().map(fingerprint).collect();
         for i in 0..fps.len() {

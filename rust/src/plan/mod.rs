@@ -37,6 +37,7 @@ pub use cache::{fingerprint, PlanCache};
 use crate::config::ChipConfig;
 use crate::coordinator::{SimCache, WorkloadReport};
 use crate::metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};
+use crate::sim::gemm_core::Mapping;
 use crate::sim::pipeline;
 use crate::workloads::Workload;
 
@@ -85,6 +86,10 @@ pub struct LayerPlan {
     /// (run DMA shares already reflect the residency decision).
     pub timeline: pipeline::LayerPlan,
     pub residency: ResidencyDecision,
+    /// The resolved array mapping of each GEMM of this layer, in
+    /// dispatch order (DESIGN.md §11) — what `voltra report` surfaces
+    /// per layer.
+    pub mappings: Vec<Mapping>,
 }
 
 impl LayerPlan {
@@ -98,11 +103,25 @@ impl LayerPlan {
         self.overlap_cycles = s.hidden_cycles();
     }
 
+    /// Compact mapping summary for the report: consecutive duplicate
+    /// GEMM mappings collapse (a fused bundle usually maps uniformly).
+    pub fn mapping_summary(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for m in &self.mappings {
+            let d = m.describe();
+            if parts.last() != Some(&d) {
+                parts.push(d);
+            }
+        }
+        parts.join("+")
+    }
+
     /// This layer's metrics (the per-layer unit of [`execute`]): a pure
     /// field copy — the schedule was resolved at plan time.
     pub fn resolve(&self) -> LayerMetrics {
         LayerMetrics {
             name: self.name.clone(),
+            mapping: self.mapping_summary(),
             tiles: self.tiles,
             dma_bytes: self.dma_bytes,
             dma_cycles: self.dma_cycles,

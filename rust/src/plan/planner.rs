@@ -3,9 +3,9 @@
 //! coordinator's ~250-line `run_layer_planned` monolith.
 //!
 //! For each GEMM of a layer:
-//!   1. pick the array mapping orientation (free transpose);
-//!   2. choose the layer-wise tiling that fits the memory organisation
-//!      with minimum off-chip traffic (memoized per `(m, k, n)`);
+//!   1. resolve the array mapping — M/N permutation + K-extension fold —
+//!      together with its induced tiling through the process-wide
+//!      mapper cache ([`crate::tiling::mapper`], DESIGN.md §11);
 //!   3. enumerate the distinct tile shapes (interior/edge x first/mid/
 //!      last K-round), cycle-simulate each once and scale by its count;
 //!   4. charge auxiliary cycles (Snitch CSR programming per tile,
@@ -22,10 +22,10 @@ use crate::coordinator::{tile_csr_cycles, SimCache};
 use crate::metrics::LayerMetrics;
 use crate::sim::dma::transfer_cost;
 use crate::sim::engine::TileSpec;
-use crate::sim::gemm_core::Mapping;
 use crate::sim::pipeline::{self, TilePlan, TileRun};
 use crate::sim::reshuffler::reshuffle_cycles;
 use crate::tiling::engine::traffic_parts;
+use crate::tiling::mapper;
 use crate::workloads::{Layer, LayerKind};
 
 use super::{LayerPlan, ResidencyDecision};
@@ -91,18 +91,20 @@ pub fn plan_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -
         overlap_cycles: 0,
         timeline: pipeline::LayerPlan::default(),
         residency: ResidencyDecision::default(),
+        mappings: Vec::new(),
     };
 
     for mut g in layer.gemms() {
-        // The hardware loop controller may map (M, N) either way onto the
-        // array; pick the better-filling orientation (free transpose).
-        if Mapping::choose(cfg.array, g.m, g.n).swapped {
+        // Resolve how this GEMM sits on the array — permutation +
+        // K-extension fold — together with the tiling that placement
+        // induces, through the process-wide mapper cache (DESIGN.md §11).
+        let Some((mapping, tiling)) = mapper::resolve(cfg, g.m, g.k, g.n) else {
+            continue; // cannot fit: skipped (never happens: 8x8x8 always fits)
+        };
+        if mapping.swapped {
             std::mem::swap(&mut g.m, &mut g.n);
         }
-        let tiling = match cache.tiling(cfg, g.m, g.k, g.n) {
-            Some(t) => t,
-            None => continue, // cannot fit: skipped (never happens: 8x8x8 always fits)
-        };
+        plan.mappings.push(mapping);
         let nk = tiling.k_rounds(g.k);
         let (m_int, m_edge, m_rem) = edge(g.m, tiling.tm);
         let (k_int, k_edge, k_rem) = edge(g.k, tiling.tk);
@@ -182,6 +184,7 @@ pub fn plan_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -
                         psum_in,
                         spill_out,
                         input_blocked: !g.raw_input,
+                        fold: mapping.fold,
                         in_base: pl.input_base,
                         w_base: pl.weight_base,
                         p_base: pl.psum_base,
@@ -323,6 +326,27 @@ mod tests {
             .map(|r| r.count)
             .sum();
         assert_eq!(run_tiles, p.dispatched_tiles);
+    }
+
+    #[test]
+    fn plan_records_the_resolved_mapping_per_gemm() {
+        let cfg = ChipConfig::voltra();
+        let l = Layer::new(
+            "gemv",
+            LayerKind::Gemm {
+                m: 1,
+                k: 3072,
+                n: 3072,
+            },
+        );
+        let mut cache = TileCache::new();
+        let p = plan_layer(&cfg, &l, &mut cache);
+        assert_eq!(p.mappings.len(), 1);
+        assert_eq!(p.mappings[0].fold, 8, "GEMV plans under K-extension");
+        assert_eq!(p.mapping_summary(), "1x8x64");
+        // And the planned tiles carry the fold into the cycle engine:
+        // full spatial fill instead of the 12.5% row-idle floor.
+        assert!(p.tiles.spatial_utilization() > 0.99);
     }
 
     #[test]

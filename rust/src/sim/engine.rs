@@ -21,7 +21,7 @@
 
 use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
 use crate::metrics::TileMetrics;
-use crate::sim::gemm_core::{block_residue, step_demand};
+use crate::sim::gemm_core::block_residue;
 use crate::sim::memory::{BankRequest, BankedMemory, Requester};
 
 /// Static description of one tile execution (the memoization key).
@@ -37,6 +37,12 @@ pub struct TileSpec {
     /// Input operand was reshuffled to the blocked layout (C8HWC8 /
     /// blocked row-major, Sec. II-E). Raw row-major layouts conflict.
     pub input_blocked: bool,
+    /// K-extension fold of the mapping this tile runs under (array rows
+    /// re-mapped onto extra K lanes, 3D only; 1 = none). Part of the
+    /// memoization key: the same (tm, tk, tn) fires differently per
+    /// fold — fewer, denser steps, with `fold` weight super-bank
+    /// fetches per step.
+    pub fold: u8,
     /// Region base word addresses (from the allocator). Bank alignment
     /// of these bases decides which accesses collide.
     pub in_base: u64,
@@ -55,15 +61,29 @@ impl TileSpec {
             psum_in: false,
             spill_out: false,
             input_blocked: true,
+            fold: 1,
             in_base: 0,
             w_base: 8, // next super-bank group
             p_base: 16,
             o_base: 24,
         }
     }
+
+    /// A standalone tile under a K-extension fold.
+    pub fn folded(tm: u64, tk: u64, tn: u64, fold: u8) -> Self {
+        TileSpec {
+            fold,
+            ..Self::simple(tm, tk, tn)
+        }
+    }
 }
 
 const MAX_CHANNELS: usize = 8;
+
+/// Weight-channel cap: bounds the folded super-bank fetch fan-out and
+/// keeps the per-request kind codes (inputs 0..=99, weights
+/// 100..=249, psum 250, output 251) collision-free for any `TileSpec`.
+const MAX_WEIGHT_CHANNELS: usize = 128;
 
 /// Per-channel streamer state (input lanes + weight lane). The MIC
 /// pipelines requests: it may have several accesses in flight (the bank
@@ -119,15 +139,46 @@ impl Channel {
     }
 }
 
-/// Simulate one tile on the configured array. Returns activity counters.
+/// Simulate one tile on the configured array, under the tile's
+/// K-extension fold. Returns activity counters.
 pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
-    let demand = step_demand(cfg.array);
     let macs = cfg.array.macs() as u64;
     let separate_ports = matches!(cfg.memory, MemoryOrg::Separated { .. });
 
-    let (am, an, ak) = match cfg.array {
-        ArrayGeometry::Spatial3D { m, n, k } => (m as u64, n as u64, k as u64),
-        ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64, 1u64),
+    // Effective unrolls after folding `fold` array rows onto extra K
+    // lanes (3D only), plus the mapped streamer channel structure:
+    // `n_in` fine input fetches and `n_w_ch` weight fetches of
+    // `w_stride` words per step. Folding multiplies the weight fetches
+    // (each folded row group needs its own K-slice of the weights).
+    // The fold cannot exceed the physical row count, and the weight
+    // request encoding below reserves codes 100..=249 for the weight
+    // channels (psum/output live at 250/251) — clamp rather than let a
+    // hostile TileSpec alias another channel's code.
+    let fold = match cfg.array {
+        ArrayGeometry::Spatial3D { m, .. } => {
+            (spec.fold.max(1) as u64).min(m as u64).min(MAX_WEIGHT_CHANNELS as u64)
+        }
+        ArrayGeometry::Spatial2D { .. } => 1,
+    };
+    let (am, an, ak, n_in, n_w_ch, w_stride, w_super) = match cfg.array {
+        ArrayGeometry::Spatial3D { m, n, k } => (
+            (m as u64 / fold).max(1),
+            n as u64,
+            k as u64 * fold,
+            m.min(MAX_CHANNELS),
+            fold as usize,
+            8u64, // one aligned super bank per fetch
+            true,
+        ),
+        ArrayGeometry::Spatial2D { m, n } => (
+            m as u64,
+            n as u64,
+            1u64,
+            (m / 8).max(1).min(MAX_CHANNELS),
+            1usize,
+            (n / 8).max(1) as u64,
+            false,
+        ),
     };
     let sub_m = spec.tm.div_ceil(am).max(1);
     let sub_n = spec.tn.div_ceil(an).max(1);
@@ -150,8 +201,6 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         }
     }
 
-    let n_in = demand.input_channels.min(MAX_CHANNELS);
-    let n_w_words = demand.weight_words as u64;
     let fifo_depth = if cfg.prefetch {
         cfg.stream_fifo_depth as u64
     } else {
@@ -161,7 +210,8 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
     let mut mem = BankedMemory::with_size(crate::arch::DATA_MEM_BYTES, cfg.num_banks);
     let mut inputs: Vec<Channel> =
         (0..MAX_CHANNELS).map(|_| Channel::new(fifo_depth as usize)).collect();
-    let mut weight = Channel::new(fifo_depth as usize);
+    let mut weights: Vec<Channel> =
+        (0..n_w_ch).map(|_| Channel::new(fifo_depth as usize)).collect();
     // Psum prefetch progress (words delivered / issued).
     let mut psum_issued: u64 = 0;
     let mut psum_fill: u64 = 0;
@@ -196,8 +246,10 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
                 m.fifo_events += 1;
             }
         }
-        if weight.arrive(cycle) {
-            m.fifo_events += 1;
+        for ch in weights.iter_mut() {
+            if ch.arrive(cycle) {
+                m.fifo_events += 1;
+            }
         }
         if psum_pending == cycle {
             psum_pending = u64::MAX;
@@ -212,7 +264,7 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
             let ti = sub / sub_n;
             let tj = sub % sub_n;
             let inputs_ready = inputs.iter().take(n_in).all(|c| c.fill > 0);
-            let weight_ready = weight.fill > 0;
+            let weight_ready = weights.iter().all(|c| c.fill > 0);
             let psum_ready = !spec.psum_in || psum_fill >= (sub + 1) * psum_words_per_sub
                 || psum_fill == psum_total; // degenerate tail
             // Output registers are double-buffered: a subtile may finish
@@ -224,8 +276,10 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
                     ch.fill -= 1;
                     m.fifo_events += 1;
                 }
-                weight.fill -= 1;
-                m.fifo_events += 1;
+                for ch in weights.iter_mut() {
+                    ch.fill -= 1;
+                    m.fifo_events += 1;
+                }
                 fired += 1;
                 m.active_cycles += 1;
                 let mr = block_residue(spec.tm, am, ti);
@@ -286,23 +340,27 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
                 }
             }
         }
-        // Weight channel (coarse-grained 512-bit super bank, Fig. 3b).
-        if weight.issued < total_steps && weight.fill + weight.inflight() < fifo_depth {
-            let demand_ok = cfg.prefetch
-                || (weight.fill == 0 && weight.inflight() == 0 && weight.issued == fired);
-            if demand_ok {
-                let s = weight.issued;
-                let sub = s / ksteps;
-                let ks = s % ksteps;
-                let tj = sub % sub_n;
-                let addr = spec.w_base + (tj * ksteps + ks) * n_w_words;
-                reqs.push(BankRequest {
-                    word_addr: addr,
-                    write: false,
-                    requester: Requester::Weight,
-                    super_bank: demand.weight_super_bank,
-                });
-                req_kind.push(100);
+        // Weight channels (coarse-grained 512-bit super banks, Fig. 3b;
+        // a folded mapping fetches `fold` parallel K-slices per step).
+        for (c, ch) in weights.iter_mut().enumerate() {
+            if ch.issued < total_steps && ch.fill + ch.inflight() < fifo_depth {
+                let demand_ok =
+                    cfg.prefetch || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == fired);
+                if demand_ok {
+                    let s = ch.issued;
+                    let sub = s / ksteps;
+                    let ks = s % ksteps;
+                    let tj = sub % sub_n;
+                    let addr =
+                        spec.w_base + ((tj * ksteps + ks) * n_w_ch as u64 + c as u64) * w_stride;
+                    reqs.push(BankRequest {
+                        word_addr: addr,
+                        write: false,
+                        requester: Requester::Weight,
+                        super_bank: w_super,
+                    });
+                    req_kind.push(100 + c as u8);
+                }
             }
         }
         // Psum read & output write share a crossbar port when tmux'd;
@@ -328,7 +386,7 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
                 requester: Requester::Psum,
                 super_bank: false,
             });
-            req_kind.push(101);
+            req_kind.push(250);
         }
         if out_go {
             reqs.push(BankRequest {
@@ -337,7 +395,7 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
                 requester: Requester::Output,
                 super_bank: false,
             });
-            req_kind.push(102);
+            req_kind.push(251);
         }
 
         if separate_ports {
@@ -351,15 +409,16 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
                         ch.issued += 1;
                         ch.launch(cycle + cfg.mem_latency);
                     }
-                    100 => {
-                        weight.issued += 1;
-                        weight.launch(cycle + cfg.mem_latency);
+                    w @ 100..=249 => {
+                        let ch = &mut weights[(w - 100) as usize];
+                        ch.issued += 1;
+                        ch.launch(cycle + cfg.mem_latency);
                     }
-                    101 => {
+                    250 => {
                         psum_issued += 1;
                         psum_pending = cycle + cfg.mem_latency;
                     }
-                    102 => {
+                    251 => {
                         let chunk = out_bytes.min(8);
                         out_written_bytes += chunk;
                         out_bytes -= chunk;
@@ -383,15 +442,16 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
                         ch.issued += 1;
                         ch.launch(cycle + cfg.mem_latency);
                     }
-                    100 => {
-                        weight.issued += 1;
-                        weight.launch(cycle + cfg.mem_latency);
+                    w @ 100..=249 => {
+                        let ch = &mut weights[(w - 100) as usize];
+                        ch.issued += 1;
+                        ch.launch(cycle + cfg.mem_latency);
                     }
-                    101 => {
+                    250 => {
                         psum_issued += 1;
                         psum_pending = cycle + cfg.mem_latency;
                     }
-                    102 => {
+                    251 => {
                         let chunk = out_bytes.min(8);
                         out_written_bytes += chunk;
                         out_bytes -= chunk;
@@ -468,6 +528,48 @@ mod tests {
         assert_eq!(m.useful_macs, 6 * 64 * 64);
         let su = m.spatial_utilization();
         assert!((su - 0.75).abs() < 1e-9, "6/8 fill expected, got {su}");
+    }
+
+    #[test]
+    fn folded_gemv_tile_fills_the_array() {
+        // K-extension (fold 8): a GEMV tile fires 1 row x 8 cols x 64 K
+        // lanes per step — full spatial fill instead of 12.5%, at 8x
+        // fewer steps.
+        let cfg = ChipConfig::voltra();
+        let folded = simulate_tile(&cfg, &TileSpec::folded(1, 128, 256, 8));
+        assert_eq!(folded.useful_macs, total_useful(1, 128, 256));
+        assert_eq!(folded.active_cycles, 32 * 2); // 32 subtiles x 2 ksteps
+        assert!((folded.spatial_utilization() - 1.0).abs() < 1e-12);
+        let flat = simulate_tile(&cfg, &TileSpec::simple(1, 128, 256));
+        assert_eq!(flat.useful_macs, folded.useful_macs);
+        assert_eq!(flat.active_cycles, 8 * folded.active_cycles);
+        assert!((flat.spatial_utilization() - 0.125).abs() < 1e-12);
+        // The fold trades weight bandwidth for fill: fewer total cycles
+        // despite the 8 super-bank fetches per step.
+        assert!(folded.total_cycles < flat.total_cycles);
+    }
+
+    #[test]
+    fn folded_tiles_conserve_macs_at_every_fold() {
+        let cfg = ChipConfig::voltra();
+        for fold in [1u8, 2, 4, 8] {
+            for (tm, tk, tn) in [(1, 128, 256), (6, 96, 40), (13, 57, 9)] {
+                let m = simulate_tile(&cfg, &TileSpec::folded(tm, tk, tn, fold));
+                assert_eq!(m.useful_macs, total_useful(tm, tk, tn), "fold {fold}");
+                assert!(m.spatial_utilization() <= 1.0 + 1e-12);
+                assert!(m.temporal_utilization() <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fold_is_inert_on_the_2d_array() {
+        // The 2D baseline has no spatial K axis: the fold field must be
+        // ignored, not misinterpreted.
+        let cfg = ChipConfig::array2d();
+        let a = simulate_tile(&cfg, &TileSpec::simple(32, 64, 32));
+        let b = simulate_tile(&cfg, &TileSpec::folded(32, 64, 32, 8));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -12,94 +12,193 @@
 //! temporally — so it wastes nothing on K but suffers roughly double the
 //! under-fill on skinny M/N (up to 2.0x, Fig. 6a).
 //!
-//! Both geometries may swap the M/N mapping per layer (a free choice for
-//! the hardware loop controller); the model picks the better one, as the
-//! chip's compiler would.
+//! A [`Mapping`] is the resolved placement of one GEMM onto a geometry
+//! and the **single authority** for every mapping-derived quantity
+//! (utilization, ideal cycles, streamer demand). Two degrees of freedom:
+//!
+//! * **M/N permutation** — both geometries may transpose the output tile
+//!   (a free choice for the hardware loop controller);
+//! * **K-extension folding** (3D only, Sec. II-A / OpenGeMM): when a
+//!   spatial dimension under-fills its 8-wide axis, idle array rows are
+//!   re-mapped onto extra K lanes — `fold = f` leaves `8/f` rows and
+//!   accumulates `8*f` K elements per step. The GEMV case (M = 1) folds
+//!   all eight rows into a 64-deep spatial dot product instead of idling
+//!   at 12.5% fill.
+//!
+//! Which candidate wins for a given layer is decided by the cycle-domain
+//! search in [`crate::tiling::mapper`]; this module only provides the
+//! mapping arithmetic.
 
 use crate::config::ArrayGeometry;
 
-/// Per-compute-step operand demand of an array geometry, used by the
+/// Per-compute-step operand demand of a mapped array, used by the
 /// cycle engine to drive the streamers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StepDemand {
-    /// Parallel input channels, each fetching one 64-bit word per step.
+    /// Parallel fetches serving the (logical) input operand, one 64-bit
+    /// word each per step.
     pub input_channels: usize,
-    /// Weight words per step when fetched through ordinary 64-bit ports.
+    /// Weight words consumed per step (64-bit words, all channels).
     pub weight_words: usize,
-    /// Whether the weight fetch is one 512-bit super-bank access.
+    /// Parallel fetch requests serving the weight operand per step (a
+    /// folded 3D mapping needs `fold` super-bank accesses: folding
+    /// destroys the weight reuse across the folded rows).
+    pub weight_channels: usize,
+    /// Whether the weight fetch uses 512-bit super-bank accesses.
     pub weight_super_bank: bool,
     /// K elements consumed per compute step.
     pub k_per_step: usize,
-    /// Output-stationary tile shape held in the array (rows, cols).
+    /// Output-stationary tile shape held in the array, in LOGICAL (M, N)
+    /// orientation — a swapped mapping exchanges these (the regression
+    /// this field's old unswapped value caused is pinned in the tests).
     pub tile_m: usize,
     pub tile_n: usize,
 }
 
-/// Resolved mapping of a GEMM onto an array geometry.
-#[derive(Clone, Copy, Debug)]
+/// Resolved mapping of a GEMM onto an array geometry: the M/N
+/// permutation plus the K-extension fold. Every consumer (tiling
+/// search, planner, cycle engine, report) derives from this one value —
+/// no second place re-decides the orientation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Mapping {
     pub geometry: ArrayGeometry,
     /// Whether M and N were swapped relative to the workload's (M, N).
     pub swapped: bool,
-    pub demand: StepDemand,
+    /// K-extension fold factor on the array's row axis (1 = none): the
+    /// mapped array keeps `rows / fold` rows and extends the spatial K
+    /// depth to `k * fold`. Must divide the row count; 3D only.
+    pub fold: u8,
 }
 
 impl Mapping {
-    /// Choose the better of (M, N) and (N, M) for this geometry.
-    pub fn choose(geometry: ArrayGeometry, m: u64, n: u64) -> Mapping {
-        let direct = spatial_utilization_mapped(geometry, m, n, false);
-        let swapped = spatial_utilization_mapped(geometry, m, n, true);
-        let swap = swapped > direct + 1e-12;
+    /// The trivial mapping: no swap, no folding.
+    pub fn identity(geometry: ArrayGeometry) -> Mapping {
         Mapping {
             geometry,
-            swapped: swap,
-            demand: step_demand(geometry),
+            swapped: false,
+            fold: 1,
         }
     }
 
-    /// Effective array dims (am, an, ak) after the swap decision.
+    /// The legacy permutation-only chooser: the better of (M, N) and
+    /// (N, M) by M/N fill, no folding. This is the pre-mapper model and
+    /// the `MappingSearch::SwapOnly` baseline.
+    pub fn swap_only(geometry: ArrayGeometry, m: u64, n: u64) -> Mapping {
+        let direct = Mapping::identity(geometry);
+        let swapped = Mapping {
+            swapped: true,
+            ..direct
+        };
+        if swapped.mn_fill(m, n) > direct.mn_fill(m, n) + 1e-12 {
+            swapped
+        } else {
+            direct
+        }
+    }
+
+    /// Effective array unrolls `(um, un, uk)` in LOGICAL (M, N, K)
+    /// orientation: rows folded onto K first, then the swap applied.
     pub fn array_dims(&self) -> (u64, u64, u64) {
-        let (am, an, ak) = match self.geometry {
-            ArrayGeometry::Spatial3D { m, n, k } => (m as u64, n as u64, k as u64),
+        let f = self.fold.max(1) as u64;
+        let (um, un, uk) = match self.geometry {
+            ArrayGeometry::Spatial3D { m, n, k } => {
+                ((m as u64 / f).max(1), n as u64, k as u64 * f)
+            }
             ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64, 1),
         };
         if self.swapped {
-            (an, am, ak)
+            (un, um, uk)
         } else {
-            (am, an, ak)
+            (um, un, uk)
+        }
+    }
+
+    /// M/N fill product (the permutation-only objective; K excluded).
+    fn mn_fill(&self, m: u64, n: u64) -> f64 {
+        let (um, un, _) = self.array_dims();
+        fill(m, um) * fill(n, un)
+    }
+
+    /// Spatial utilization of GEMM (M, K, N) under this mapping. For the
+    /// 3D array a ragged K under-fills the (possibly extended) spatial
+    /// dot product; the 2D array iterates K temporally, no spatial loss.
+    pub fn spatial_utilization(&self, m: u64, k: u64, n: u64) -> f64 {
+        let (um, un, uk) = self.array_dims();
+        let mn = fill(m, um) * fill(n, un);
+        match self.geometry {
+            ArrayGeometry::Spatial3D { .. } => mn * fill(k, uk),
+            ArrayGeometry::Spatial2D { .. } => mn,
+        }
+    }
+
+    /// Ideal active compute cycles (no stalls) under this mapping: every
+    /// mapped output tile needs `ceil(K / uk)` steps. The mapping is the
+    /// authority — this no longer re-derives a swap of its own.
+    pub fn ideal_active_cycles(&self, m: u64, k: u64, n: u64) -> u64 {
+        let (um, un, uk) = self.array_dims();
+        m.div_ceil(um) * n.div_ceil(un) * k.div_ceil(uk)
+    }
+
+    /// Per-step operand demand under this mapping, in LOGICAL operand
+    /// terms: `input_channels`/`tile_m` describe the M-side operand
+    /// wherever the permutation placed it (the swap-blind demand of the
+    /// old `choose` drove streamers with exchanged channel counts).
+    ///
+    /// This is the CSR-programming view consumers configure streamers
+    /// from; the cycle engine derives the equivalent array-space channel
+    /// structure from `(geometry, fold)` directly (its word counts match
+    /// this function's on every shipped geometry — `(d / 8).max(1)` and
+    /// `ceil(d / 8)` agree on the multiple-of-8 unrolls).
+    pub fn demand(&self) -> StepDemand {
+        let (um, un, uk) = self.array_dims();
+        let in_words = ((um * uk) / 8).max(1) as usize;
+        let w_words = ((un * uk) / 8).max(1) as usize;
+        let three_d = matches!(self.geometry, ArrayGeometry::Spatial3D { .. });
+        // The 512-bit super-bank channel serves the array's column side
+        // (Fig. 3b); the logical weight operand streams through it
+        // unless the mapping transposed the tile.
+        let weight_super_bank = three_d && !self.swapped;
+        let weight_channels = if !three_d {
+            1
+        } else if self.swapped {
+            // Transposed: the weight operand rides the fine row channels.
+            w_words
+        } else {
+            // Folding multiplies the super-bank fetches: each folded row
+            // group needs its own K-slice of the weight matrix.
+            self.fold.max(1) as usize
+        };
+        StepDemand {
+            input_channels: in_words,
+            weight_words: w_words,
+            weight_channels,
+            weight_super_bank,
+            k_per_step: uk as usize,
+            tile_m: um as usize,
+            tile_n: un as usize,
+        }
+    }
+
+    /// Compact human form for the per-layer report column: the effective
+    /// unrolls, `T`-suffixed when transposed (e.g. `8x8x8`, `1x8x64`,
+    /// `4x8x16T`, `32x16T` for the 2D baseline).
+    pub fn describe(&self) -> String {
+        let (um, un, uk) = self.array_dims();
+        let t = if self.swapped { "T" } else { "" };
+        match self.geometry {
+            ArrayGeometry::Spatial3D { .. } => format!("{um}x{un}x{uk}{t}"),
+            ArrayGeometry::Spatial2D { .. } => format!("{um}x{un}{t}"),
         }
     }
 }
 
-/// Per-step operand demand for a geometry (INT8 operands, 8-byte words).
+/// Per-step operand demand of an unmapped geometry (identity mapping).
 pub fn step_demand(geometry: ArrayGeometry) -> StepDemand {
-    match geometry {
-        ArrayGeometry::Spatial3D { m, n, k } => StepDemand {
-            // One 64-bit word per array row: 8 input channels (Fig. 3a).
-            input_channels: m,
-            // 8 rows x 8 K-elems of weights = 64 B = one super bank
-            // (Fig. 3b).
-            weight_words: k * n / 8,
-            weight_super_bank: true,
-            k_per_step: k,
-            tile_m: m,
-            tile_n: n,
-        },
-        ArrayGeometry::Spatial2D { m, n } => StepDemand {
-            // One K-element per MAC column per cycle: m INT8 values for
-            // the input vector = m/8 words; n values for the weight row.
-            input_channels: (m / 8).max(1),
-            weight_words: (n / 8).max(1),
-            weight_super_bank: false,
-            k_per_step: 1,
-            tile_m: m,
-            tile_n: n,
-        },
-    }
+    Mapping::identity(geometry).demand()
 }
 
 #[inline]
-fn fill(dim: u64, unroll: u64) -> f64 {
+pub(crate) fn fill(dim: u64, unroll: u64) -> f64 {
     if dim == 0 {
         return 0.0;
     }
@@ -107,43 +206,20 @@ fn fill(dim: u64, unroll: u64) -> f64 {
     dim as f64 / (rounds * unroll) as f64
 }
 
-fn spatial_utilization_mapped(geometry: ArrayGeometry, m: u64, n: u64, swap: bool) -> f64 {
-    let (m, n) = if swap { (n, m) } else { (m, n) };
-    match geometry {
-        ArrayGeometry::Spatial3D {
-            m: am,
-            n: an,
-            k: _,
-        } => fill(m, am as u64) * fill(n, an as u64),
-        ArrayGeometry::Spatial2D { m: am, n: an } => fill(m, am as u64) * fill(n, an as u64),
-    }
-}
-
-/// Spatial utilization of one GEMM (M, K, N) on a geometry, best mapping.
-///
-/// For the 3D array the K dimension is spatially unrolled 8-wide, so a
-/// ragged K under-fills the Dot-ProdUs; for the 2D array K is temporal
-/// and contributes no spatial loss.
+/// Spatial utilization of one GEMM (M, K, N) on a geometry under the
+/// legacy permutation-only mapping (no K-extension) — the analytic
+/// Fig. 6a formula. The searched quantity lives in
+/// [`crate::tiling::mapper`].
 pub fn spatial_utilization(geometry: ArrayGeometry, m: u64, k: u64, n: u64) -> f64 {
-    let mn = spatial_utilization_mapped(geometry, m, n, false)
-        .max(spatial_utilization_mapped(geometry, m, n, true));
-    match geometry {
-        ArrayGeometry::Spatial3D { k: ak, .. } => mn * fill(k, ak as u64),
-        ArrayGeometry::Spatial2D { .. } => mn,
-    }
+    Mapping::swap_only(geometry, m, n).spatial_utilization(m, k, n)
 }
 
-/// Ideal active compute cycles for a GEMM on a geometry (no stalls):
-/// every (am x an) output tile needs ceil(K / ak) steps.
+/// Ideal active compute cycles for a GEMM on a geometry under the legacy
+/// permutation-only mapping. Delegates to the resolved [`Mapping`] — the
+/// old version re-derived the orientation by min rounds, independently
+/// of the utilization-based swap choice (the split-authority bug).
 pub fn ideal_active_cycles(geometry: ArrayGeometry, m: u64, k: u64, n: u64) -> u64 {
-    let (am, an, ak) = match geometry {
-        ArrayGeometry::Spatial3D { m, n, k } => (m as u64, n as u64, k as u64),
-        ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64, 1),
-    };
-    // Best mapping (swap M/N if it reduces rounds).
-    let direct = m.div_ceil(am) * n.div_ceil(an);
-    let swapped = n.div_ceil(am) * m.div_ceil(an);
-    direct.min(swapped) * k.div_ceil(ak)
+    Mapping::swap_only(geometry, m, n).ideal_active_cycles(m, k, n)
 }
 
 /// The residue of `dim` in its `i`-th block of size `unroll`
@@ -197,18 +273,79 @@ mod tests {
         // swap; without swap it is (32/32)*(16/32) = 0.5.
         let u = spatial_utilization(A2, 32, 64, 16);
         assert!((u - 1.0).abs() < 1e-12);
-        let m = Mapping::choose(A2, 32, 16);
+        let m = Mapping::swap_only(A2, 32, 16);
         assert!(m.swapped);
     }
 
     #[test]
-    fn gemv_utilization_gap_is_bounded() {
-        // Single-token GEMV (M=1): 12.5% on 3D, 6.25% on 2D.
+    fn swapped_demand_exchanges_the_operand_channels() {
+        // Regression: `swapped: true` used to return the UNSWAPPED
+        // demand — tile_m/tile_n, input_channels and weight_words were
+        // never exchanged, so a consumer of a swapped 2D 16x32 mapping
+        // drove the streamers with the wrong channel counts.
+        let m = Mapping::swap_only(A2, 32, 16);
+        assert!(m.swapped);
+        let d = m.demand();
+        assert_eq!((d.tile_m, d.tile_n), (32, 16));
+        assert_eq!(d.input_channels, 4, "logical M rides the 32-wide side");
+        assert_eq!(d.weight_words, 2, "logical N rides the 16-wide side");
+        let unswapped = Mapping::identity(A2).demand();
+        assert_eq!((unswapped.tile_m, unswapped.tile_n), (16, 32));
+        assert_eq!(unswapped.input_channels, 2);
+        assert_eq!(unswapped.weight_words, 4);
+    }
+
+    #[test]
+    fn gemv_utilization_gap_is_bounded_without_folding() {
+        // Single-token GEMV (M=1), permutation-only: 12.5% on 3D, 6.25%
+        // on 2D. (The mapper's K-extension lifts the 3D case; see
+        // tests/mapper.rs.)
         let u3 = spatial_utilization(A3, 1, 3072, 3072);
         let u2 = spatial_utilization(A2, 1, 3072, 3072);
         assert!((u3 - 0.125).abs() < 1e-12);
         // 2D swaps to place N on the 32 side; M=1 on the 16 side.
         assert!((u2 - 1.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_extension_folds_idle_rows_onto_k() {
+        // GEMV, fold 8: one row, 64-deep spatial accumulation — full
+        // fill on an aligned K instead of 12.5%.
+        let m = Mapping {
+            geometry: A3,
+            swapped: false,
+            fold: 8,
+        };
+        assert_eq!(m.array_dims(), (1, 8, 64));
+        assert!((m.spatial_utilization(1, 3072, 3072) - 1.0).abs() < 1e-12);
+        // fold 4 on a batch-6 GEMM: 2 rows fill exactly (3 rounds of 2).
+        let m4 = Mapping {
+            geometry: A3,
+            swapped: false,
+            fold: 4,
+        };
+        assert_eq!(m4.array_dims(), (2, 8, 32));
+        assert!((m4.spatial_utilization(6, 3072, 3072) - 1.0).abs() < 1e-12);
+        assert_eq!(m4.ideal_active_cycles(6, 3072, 3072), 3 * 384 * 96);
+    }
+
+    #[test]
+    fn folded_demand_multiplies_weight_channels() {
+        let m = Mapping {
+            geometry: A3,
+            swapped: false,
+            fold: 8,
+        };
+        let d = m.demand();
+        // Input side: 1 row x 64 K-elems = 64 B = 8 words, unchanged.
+        assert_eq!(d.input_channels, 8);
+        // Weight side: 8 cols x 64 K-elems = 512 B = 8 super banks —
+        // folding destroys the weight reuse across the folded rows.
+        assert_eq!(d.weight_channels, 8);
+        assert_eq!(d.weight_words, 64);
+        assert!(d.weight_super_bank);
+        assert_eq!(d.k_per_step, 64);
+        assert_eq!((d.tile_m, d.tile_n), (1, 8));
     }
 
     #[test]
@@ -221,12 +358,68 @@ mod tests {
     }
 
     #[test]
+    fn ideal_cycles_follow_the_resolved_mapping() {
+        // Single-authority consistency sweep: the utilization-based swap
+        // choice and the old independent min-rounds derivation must
+        // agree in VALUE for every dim pair — i.e. the resolved mapping
+        // never costs more cycles than either orientation (ties and
+        // ragged dims were where the split authorities could diverge).
+        // The min over both orientations is the independent oracle (the
+        // pre-refactor free function's own formula).
+        for m in 1..=96u64 {
+            for n in 1..=96u64 {
+                for k in [1u64, 7, 64] {
+                    for geo in [A3, A2] {
+                        let direct = Mapping::identity(geo);
+                        let swapped = Mapping {
+                            swapped: true,
+                            ..direct
+                        };
+                        let oracle = direct
+                            .ideal_active_cycles(m, k, n)
+                            .min(swapped.ideal_active_cycles(m, k, n));
+                        let resolved = Mapping::swap_only(geo, m, n);
+                        assert_eq!(
+                            resolved.ideal_active_cycles(m, k, n),
+                            oracle,
+                            "geo {geo:?} m={m} n={n} k={k}: swap choice costs cycles"
+                        );
+                        assert_eq!(
+                            ideal_active_cycles(geo, m, k, n),
+                            oracle,
+                            "geo {geo:?} m={m} n={n} k={k}: free fn diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn step_demand_matches_paper_channels() {
         let d = step_demand(A3);
         assert_eq!(d.input_channels, 8); // 64-bit fine-grained channels
         assert!(d.weight_super_bank); // 512-bit coarse channel
         assert_eq!(d.weight_words, 8);
+        assert_eq!(d.weight_channels, 1);
         assert_eq!(d.tile_m * d.tile_n, 64);
+    }
+
+    #[test]
+    fn describe_is_compact() {
+        assert_eq!(Mapping::identity(A3).describe(), "8x8x8");
+        let f = Mapping {
+            geometry: A3,
+            swapped: false,
+            fold: 8,
+        };
+        assert_eq!(f.describe(), "1x8x64");
+        let s = Mapping {
+            geometry: A2,
+            swapped: true,
+            fold: 1,
+        };
+        assert_eq!(s.describe(), "32x16T");
     }
 
     #[test]

@@ -116,21 +116,48 @@ pub fn footprint(tm: u64, tk: u64, tn: u64, k_tiled: bool, double_buffer: bool) 
     }
 }
 
-/// Choose the minimum-traffic tiling that fits the memory organisation.
-///
-/// Preference order: less traffic, then larger `tk` (deeper
-/// output-stationary accumulation — the chip's own bias, Fig. 7d), then
-/// fewer tiles.
+/// Choose the minimum-traffic tiling that fits the memory organisation,
+/// with tile minima taken from the raw array geometry (the unfolded
+/// mapping). The mapper's searched path goes through
+/// [`choose_tiling_mapped`] with the mapping's effective unrolls.
 pub fn choose_tiling(cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling> {
-    // Tiles must not under-fill the spatial array: a tile narrower than
-    // the array's unroll wastes lanes in *every* cycle, which no mapper
-    // would choose. (Unless the layer dimension itself is smaller.)
     let (am, an) = match cfg.array {
         ArrayGeometry::Spatial3D { m, n, .. } => (m as u64, n as u64),
         ArrayGeometry::Spatial2D { m, n } => (m as u64, n as u64),
     };
-    let tm_min = am.min(m);
-    let tn_min = an.min(n);
+    choose_tiling_mapped(cfg, am, an, m, k, n)
+}
+
+/// Choose the minimum-traffic tiling that fits the memory organisation,
+/// for a GEMM already oriented onto the array (`m` rides the row axis).
+///
+/// `um`/`un` are the mapped array unrolls: tiles must not under-fill the
+/// spatial array — a tile narrower than the unroll wastes lanes in
+/// *every* cycle, which no mapper would choose (unless the layer
+/// dimension itself is smaller). A folded mapping lowers the row-axis
+/// minimum, widening the search space.
+///
+/// Preference order: less traffic, then double-buffered (the DMA
+/// overlap), then fewer tile launches, then larger `tk` (deeper
+/// output-stationary accumulation — the chip's own bias, Fig. 7d).
+pub fn choose_tiling_mapped(
+    cfg: &ChipConfig,
+    um: u64,
+    un: u64,
+    m: u64,
+    k: u64,
+    n: u64,
+) -> Option<Tiling> {
+    let tm_min = um.min(m);
+    let tn_min = un.min(n);
+    // Buffering options, deduplicated: with double buffering disabled
+    // the old `[cfg.double_buffer, false]` pair degenerated to
+    // `[false, false]` and probed every non-fitting footprint twice.
+    let buffering: &[bool] = if cfg.double_buffer {
+        &[true, false]
+    } else {
+        &[false]
+    };
     let mut best: Option<Tiling> = None;
     for &tk in &candidates(k) {
         for &tm in &candidates(m) {
@@ -143,7 +170,7 @@ pub fn choose_tiling(cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Tiling>
                 }
                 let k_tiled = tk < k;
                 // Try double-buffered first (overlap), fall back to single.
-                for db in [cfg.double_buffer, false] {
+                for &db in buffering {
                     let fp = footprint(tm, tk, tn, k_tiled, db);
                     if !fits(&cfg.memory, &fp) {
                         continue;
@@ -244,6 +271,38 @@ mod tests {
         assert_eq!(fp.psum, 4 * 64 * 64);
         let fp2 = footprint(64, 64, 64, false, false);
         assert_eq!(fp2.psum, 0);
+    }
+
+    #[test]
+    fn single_buffer_fallback_survives_a_double_buffer_config() {
+        // Regression companion to the `[cfg.double_buffer, false]`
+        // dedupe: under a double-buffer config, a GEMM whose best
+        // tiling only fits single-buffered must still be found via the
+        // per-candidate fallback.
+        let cfg = ChipConfig::voltra();
+        assert!(cfg.double_buffer);
+        let t = choose_tiling(&cfg, 512, 768, 768).unwrap();
+        assert!(
+            !t.double_buffered,
+            "fixture: 512x768x768 should not fit ping-pong in 128 KiB"
+        );
+        assert!(fits(&cfg.memory, &t.footprint));
+        // And a config with double buffering off reaches the same
+        // single-buffered answer through the deduplicated option list.
+        let mut off = ChipConfig::voltra();
+        off.double_buffer = false;
+        assert_eq!(choose_tiling(&off, 512, 768, 768).unwrap(), t);
+    }
+
+    #[test]
+    fn mapped_minima_follow_the_fold() {
+        // A folded mapping lowers the row-axis tile minimum; the search
+        // result stays legal for the mapped unrolls.
+        let cfg = ChipConfig::voltra();
+        let t = choose_tiling_mapped(&cfg, 1, 8, 1, 3072, 3072).unwrap();
+        assert_eq!(t.tm, 1);
+        assert!(t.tn >= 8);
+        assert!(fits(&cfg.memory, &t.footprint));
     }
 
     #[test]

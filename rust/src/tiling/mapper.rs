@@ -1,0 +1,375 @@
+//! The per-layer mapping search (DESIGN.md §11): choose how a GEMM is
+//! *placed* on the array — M/N permutation plus K-extension dimension
+//! folding — together with its tiling, under one cycle-domain objective.
+//!
+//! Before this module, the mapping and the tiling were chosen in two
+//! unconnected places: `Mapping::choose` maximized spatial fill with no
+//! view of cycles, and `choose_tiling` minimized off-chip traffic with
+//! no view of array under-fill — the pattern FlexNN (arXiv 2403.09026)
+//! and OpenGeMM (arXiv 2411.09543) both show costs real utilization on
+//! ragged layers. Here every legal [`Mapping`] candidate is scored with
+//! the tiling it induces:
+//!
+//! * **compute envelope** — the mapping's ideal active cycles
+//!   ([`Mapping::ideal_active_cycles`]), inflated by the bank pressure
+//!   its streamer demand puts on the shared memory: a step that needs
+//!   more bank grants than the fabric has sustains less than one fire
+//!   per cycle. Folded mappings are additionally surcharged a minimum
+//!   9/8 pressure — their extra weight super-bank channels contend with
+//!   the fine input channels even when the raw bank count fits, an
+//!   arbitration cost the closed form cannot see (calibrated against
+//!   the cycle engine; keeps marginal folds from winning on paper and
+//!   losing on cycles);
+//! * **DMA envelope** — the induced tiling's off-chip traffic
+//!   ([`Tiling::traffic_bytes`], from `traffic_parts`) over the DMA
+//!   bandwidth;
+//! * the two combine as the pipeline would run them: `max` when the
+//!   tiling ping-pongs (transfers hide behind compute), sum when it is
+//!   single-buffered.
+//!
+//! Ties resolve toward the bandwidth-adjusted compute envelope, then
+//! fewer ideal steps (= higher spatial utilization: all candidates
+//! offer the same 512 MACs per step), then the smaller fold, then the
+//! unswapped orientation, then less traffic — so the search never
+//! returns lower spatial utilization than the legacy swap-only choice
+//! (property-tested over every suite layer in `tests/mapper.rs`).
+//!
+//! Results are memoized in a sharded, process-wide [`MapperCache`]
+//! keyed by `(mapper fingerprint, M, K, N)` — the fingerprint covers
+//! the geometry, memory organisation and the cycle-model knobs the
+//! search reads — sitting beside [`crate::plan::PlanCache`] so suites,
+//! sweeps and `serve` threads resolve each distinct layer shape once
+//! per process.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+
+use crate::config::{ArrayGeometry, ChipConfig, MappingSearch, MemoryOrg};
+use crate::metrics::CacheStats;
+use crate::sim::gemm_core::Mapping;
+use crate::tiling::engine::{choose_tiling, choose_tiling_mapped, Tiling};
+
+/// A mapping resolved together with the tiling it induces.
+pub type Resolved = (Mapping, Tiling);
+
+/// Every legal mapping of a GEMM onto `geometry`: both permutations,
+/// and for the 3D array every K-extension fold that divides the row
+/// count (the 2D baseline has no spatial K axis to extend).
+pub fn candidate_mappings(geometry: ArrayGeometry) -> Vec<Mapping> {
+    let folds: Vec<u8> = match geometry {
+        ArrayGeometry::Spatial3D { m, .. } => (1..=m.min(u8::MAX as usize))
+            .filter(|f| m % f == 0)
+            .map(|f| f as u8)
+            .collect(),
+        ArrayGeometry::Spatial2D { .. } => vec![1],
+    };
+    let mut out = Vec::with_capacity(2 * folds.len());
+    for swapped in [false, true] {
+        for &fold in &folds {
+            out.push(Mapping {
+                geometry,
+                swapped,
+                fold,
+            });
+        }
+    }
+    out
+}
+
+/// Bank grants one compute step demands from the shared fabric under
+/// `mapping` (input words + weight banks), with the folded-mapping
+/// contention surcharge applied (see module docs).
+fn banks_per_step(cfg: &ChipConfig, mapping: &Mapping) -> u64 {
+    let bps = match cfg.array {
+        // Input words per step (um * uk = m * k values, fold-invariant)
+        // plus the folded weight fetch (un * uk = n * k * fold values,
+        // one bank per 8-byte word): 8 + 8 * fold on the 8x8x8 chip.
+        ArrayGeometry::Spatial3D { m, n, k } => {
+            let f = mapping.fold.max(1) as u64;
+            let (m, n, k) = (m as u64, n as u64, k as u64);
+            (m * k).div_ceil(8).max(1) + (n * k * f).div_ceil(8).max(1)
+        }
+        ArrayGeometry::Spatial2D { m, n } => {
+            let (ua_m, ua_n) = if mapping.swapped {
+                (n as u64, m as u64)
+            } else {
+                (m as u64, n as u64)
+            };
+            ua_m.div_ceil(8).max(1) + ua_n.div_ceil(8).max(1)
+        }
+    };
+    if mapping.fold > 1 {
+        let nb = cfg.num_banks as u64;
+        bps.max(nb + nb / 8)
+    } else {
+        bps
+    }
+}
+
+/// The cycle-domain score of one candidate: `(score, compute envelope,
+/// ideal steps, fold, swapped, traffic)`, compared lexicographically —
+/// smaller is better.
+type ScoreKey = (u64, u64, u64, u8, u8, u64);
+
+fn score(cfg: &ChipConfig, mapping: &Mapping, tiling: &Tiling, m: u64, k: u64, n: u64) -> ScoreKey {
+    let steps = mapping.ideal_active_cycles(m, k, n);
+    let nb = (cfg.num_banks as u64).max(1);
+    let compute_env = steps.max((steps * banks_per_step(cfg, mapping)).div_ceil(nb));
+    let dma_env = tiling.traffic_bytes.div_ceil(cfg.dma_bytes_per_cycle.max(1));
+    let total = if tiling.double_buffered {
+        compute_env.max(dma_env)
+    } else {
+        compute_env + dma_env
+    };
+    (
+        total,
+        compute_env,
+        steps,
+        mapping.fold,
+        mapping.swapped as u8,
+        tiling.traffic_bytes,
+    )
+}
+
+/// Search the mapping space for GEMM `(m, k, n)` under `cfg`, returning
+/// the winning mapping with its induced tiling. `None` only when no
+/// tiling fits the memory organisation (never for the shipped presets).
+///
+/// Under [`MappingSearch::SwapOnly`] this reproduces the legacy model
+/// exactly: the permutation-only choice, tiled with the raw geometry.
+pub fn search(cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
+    if cfg.mapping == MappingSearch::SwapOnly {
+        let mapping = Mapping::swap_only(cfg.array, m, n);
+        let (pm, pn) = if mapping.swapped { (n, m) } else { (m, n) };
+        let tiling = choose_tiling(cfg, pm, k, pn)?;
+        return Some((mapping, tiling));
+    }
+    let mut best: Option<Resolved> = None;
+    let mut best_key: ScoreKey = (u64::MAX, u64::MAX, u64::MAX, u8::MAX, u8::MAX, u64::MAX);
+    for mapping in candidate_mappings(cfg.array) {
+        // Orient the GEMM onto the array (the row side carries logical
+        // M, or N when swapped) and tile with the mapped unrolls.
+        let (um, un, _) = mapping.array_dims();
+        let (pm, pn) = if mapping.swapped { (n, m) } else { (m, n) };
+        let (ua_m, ua_n) = if mapping.swapped { (un, um) } else { (um, un) };
+        let Some(tiling) = choose_tiling_mapped(cfg, ua_m, ua_n, pm, k, pn) else {
+            continue;
+        };
+        let key = score(cfg, &mapping, &tiling, m, k, n);
+        if best.is_none() || key < best_key {
+            best = Some((mapping, tiling));
+            best_key = key;
+        }
+    }
+    best
+}
+
+/// Fingerprint of every config field the mapping search reads: the
+/// geometry, the memory organisation (tiling feasibility), the bank
+/// count (bank-pressure term), the DMA bandwidth (DMA envelope), the
+/// double-buffer grant (score combination) and the search mode itself.
+/// Deliberately narrower than the plan fingerprint — prefetch depth,
+/// SIMD width, latencies and the operating point do not change the
+/// search, so e.g. the `no-prefetch` ablation shares mapper entries
+/// with the full chip.
+pub fn fingerprint(cfg: &ChipConfig) -> u64 {
+    let mut h = DefaultHasher::new();
+    match cfg.array {
+        ArrayGeometry::Spatial3D { m, n, k } => {
+            0u8.hash(&mut h);
+            (m, n, k).hash(&mut h);
+        }
+        ArrayGeometry::Spatial2D { m, n } => {
+            1u8.hash(&mut h);
+            (m, n).hash(&mut h);
+        }
+    }
+    match cfg.memory {
+        MemoryOrg::Shared => 0u8.hash(&mut h),
+        MemoryOrg::Separated {
+            input,
+            weight,
+            output,
+            psum,
+        } => {
+            1u8.hash(&mut h);
+            (input, weight, output, psum).hash(&mut h);
+        }
+    }
+    cfg.num_banks.hash(&mut h);
+    cfg.dma_bytes_per_cycle.hash(&mut h);
+    cfg.double_buffer.hash(&mut h);
+    cfg.mapping.hash(&mut h);
+    h.finish()
+}
+
+/// Shard count: mapper entries are tiny and layer-shape keyed; sixteen
+/// shards keep sweep threads and serve connections off each other's
+/// locks (same sizing as the coordinator's tile cache).
+const MAPPER_SHARDS: usize = 16;
+
+type MapKey = (u64, u64, u64, u64);
+
+fn shard_of<K: Hash>(key: &K) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % MAPPER_SHARDS
+}
+
+/// Sharded, thread-safe memoization of [`search`] keyed by
+/// `(fingerprint, M, K, N)`. One process-wide instance serves every
+/// cache/plan/serve path via [`MapperCache::global`]; fresh instances
+/// exist only for cold-path benchmarking and tests.
+#[derive(Default)]
+pub struct MapperCache {
+    shards: [RwLock<HashMap<MapKey, Option<Resolved>>>; MAPPER_SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MapperCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide instance: every distinct layer shape is
+    /// searched once per process, whatever thread or cache asks.
+    pub fn global() -> &'static MapperCache {
+        static GLOBAL: OnceLock<MapperCache> = OnceLock::new();
+        GLOBAL.get_or_init(MapperCache::new)
+    }
+
+    /// Memoized [`search`], callable from any thread. Misses search
+    /// outside any lock (the search is pure; racing threads at worst
+    /// duplicate work and insert equal values — first insert wins).
+    pub fn resolve(&self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
+        let key: MapKey = (fingerprint(cfg), m, k, n);
+        let shard = &self.shards[shard_of(&key)];
+        if let Some(v) = shard.read().expect("mapper shard poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        let v = search(cfg, m, k, n);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        *shard
+            .write()
+            .expect("mapper shard poisoned")
+            .entry(key)
+            .or_insert(v)
+    }
+
+    /// Distinct layer shapes resolved so far (across all shards).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("mapper shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hit/miss counters since construction.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Resolve the mapping + tiling for one GEMM through the process-wide
+/// [`MapperCache`] — the planner's entry point.
+pub fn resolve(cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
+    MapperCache::global().resolve(cfg, m, k, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_cover_permutations_and_folds() {
+        let c3 = candidate_mappings(ChipConfig::voltra().array);
+        // 2 permutations x folds {1, 2, 4, 8}.
+        assert_eq!(c3.len(), 8);
+        assert!(c3.iter().any(|m| m.fold == 8 && !m.swapped));
+        let c2 = candidate_mappings(ChipConfig::array2d().array);
+        assert_eq!(c2.len(), 2);
+        assert!(c2.iter().all(|m| m.fold == 1));
+    }
+
+    #[test]
+    fn swap_only_mode_reproduces_the_legacy_choice() {
+        let cfg = ChipConfig::swap_only();
+        let (mapping, tiling) = search(&cfg, 512, 768, 3072).unwrap();
+        assert_eq!(mapping.fold, 1);
+        assert!(!mapping.swapped);
+        let legacy = choose_tiling(&cfg, 512, 768, 3072).unwrap();
+        assert_eq!(tiling, legacy);
+    }
+
+    #[test]
+    fn gemv_folds_all_rows_onto_k() {
+        // M = 1 on the 8x8x8 array: the search must K-extend instead of
+        // idling 7 of 8 rows (12.5% fill).
+        let cfg = ChipConfig::voltra();
+        let (mapping, _) = search(&cfg, 1, 3072, 3072).unwrap();
+        assert_eq!(mapping.fold, 8, "GEMV must fold fully: {mapping:?}");
+        assert!(mapping.spatial_utilization(1, 3072, 3072) > 0.99);
+    }
+
+    #[test]
+    fn aligned_gemm_keeps_the_identity_mapping() {
+        // Nothing to gain: folding only costs weight bandwidth.
+        let cfg = ChipConfig::voltra();
+        let (mapping, _) = search(&cfg, 512, 768, 768).unwrap();
+        assert_eq!(mapping.fold, 1);
+        assert!(!mapping.swapped);
+    }
+
+    #[test]
+    fn marginal_folds_lose_to_the_contention_surcharge() {
+        // M = 196 (14x14 feature map): fold 2 shaves ~2% of the ideal
+        // steps but costs real arbitration cycles — the surcharge must
+        // keep the identity mapping.
+        let cfg = ChipConfig::voltra();
+        let (mapping, _) = search(&cfg, 196, 512, 256).unwrap();
+        assert_eq!(mapping.fold, 1, "marginal fold must not win: {mapping:?}");
+    }
+
+    #[test]
+    fn global_cache_memoizes_across_calls() {
+        let cache = MapperCache::new();
+        let cfg = ChipConfig::voltra();
+        let a = cache.resolve(&cfg, 64, 64, 64);
+        let b = cache.resolve(&cfg, 64, 64, 64);
+        assert_eq!(a, b);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn fingerprint_splits_modes_and_geometries_not_prefetch() {
+        let v = fingerprint(&ChipConfig::voltra());
+        assert_ne!(v, fingerprint(&ChipConfig::swap_only()));
+        assert_ne!(v, fingerprint(&ChipConfig::array2d()));
+        assert_ne!(v, fingerprint(&ChipConfig::separated_memory()));
+        // The search never reads the prefetch knob: the ablation shares
+        // mapper entries with the full chip.
+        assert_eq!(v, fingerprint(&ChipConfig::no_prefetch()));
+    }
+
+    #[test]
+    fn resolved_search_is_deterministic() {
+        let cfg = ChipConfig::voltra();
+        for (m, k, n) in [(1, 128, 256), (6, 3072, 3072), (49, 4608, 512), (196, 64, 384)] {
+            assert_eq!(search(&cfg, m, k, n), search(&cfg, m, k, n));
+        }
+    }
+}

@@ -1,8 +1,12 @@
-//! Tiling & on-chip memory allocation: the PDMA mechanism (Sec. II-C)
-//! and the layer-wise tiling engine (Sec. III-A).
+//! Tiling & on-chip memory allocation: the PDMA mechanism (Sec. II-C),
+//! the layer-wise tiling engine (Sec. III-A) and the cycle-domain
+//! mapping search that chooses how each GEMM sits on the array
+//! (DESIGN.md §11).
 
 pub mod allocator;
 pub mod engine;
+pub mod mapper;
 
 pub use allocator::{fits, place, Footprint, Operand, Placement};
 pub use engine::{choose_tiling, compulsory_traffic, traffic_bytes, Tiling};
+pub use mapper::MapperCache;

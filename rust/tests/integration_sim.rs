@@ -45,9 +45,13 @@ fn fig6a_ordering_3d_beats_2d_in_aggregate() {
     }
     let g = geomean(&ratios);
     assert!(g > 1.1, "geomean 3D/2D spatial ratio too small: {g:.3}");
-    // "up to 2.0x" (Fig. 6a): the best case reaches ~2x, never wildly more.
+    // The paper's "up to 2.0x" (Fig. 6a) is the permutation-only
+    // dimension-mismatch regime (pinned in tests/mapper.rs). With the
+    // mapping search, the GEMV-heavy decode stage K-extends to ~full
+    // fill — something the 2D array (no spatial K axis) cannot follow —
+    // so the best case now lands at ~2.7x.
     let max = ratios.iter().cloned().fold(0.0, f64::max);
-    assert!((1.8..=2.3).contains(&max), "max ratio {max:.2}");
+    assert!((2.5..=2.9).contains(&max), "max ratio {max:.2}");
 }
 
 #[test]
@@ -107,9 +111,13 @@ fn fig6c_band_matches_paper_shape() {
 }
 
 #[test]
-fn decode_is_the_utilization_floor() {
-    // Fig. 6a: the LLM decode stage has the lowest spatial utilization
-    // (paper: 69.71%).
+fn k_extension_lifts_decode_off_the_utilization_floor() {
+    // Pre-mapper, the LLM decode stage was the suite's spatial floor:
+    // the paper-faithful ~0.70 (69.71%) that the swap-only baseline
+    // still reproduces. The mapping search K-extends decode's GEMV
+    // attention (M=1 -> 1x8x64) and folds the batch-6 projections
+    // (2x8x32), lifting the stage to ~full fill — the suite floor is
+    // now MobileNetV2's depthwise-heavy profile.
     let v = ChipConfig::voltra();
     let mut utils: Vec<(String, f64)> = evaluation_suite()
         .iter()
@@ -121,24 +129,48 @@ fn decode_is_the_utilization_floor() {
         })
         .collect();
     utils.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-    assert_eq!(utils[0].0, "LLaMA3.2-3B-decode");
+    let decode = utils
+        .iter()
+        .find(|(n, _)| n == "LLaMA3.2-3B-decode")
+        .unwrap()
+        .1;
+    assert!(decode > 0.99, "mapped decode should reach ~1.0: {decode:.3}");
+    assert_eq!(utils[0].0, "MobileNetV2");
     assert!(
-        (0.65..0.80).contains(&utils[0].1),
-        "decode floor {:.3} should be ~0.70 (paper 69.71%)",
+        (0.85..0.93).contains(&utils[0].1),
+        "floor {:.3} should be MobileNetV2 at ~0.90",
         utils[0].1
     );
-    // And everything else sits above it, up to 100%.
     assert!(utils.last().unwrap().1 > 0.96);
+
+    // The swap-only baseline still pins the paper's decode number.
+    let base = run_workload(&ChipConfig::swap_only(), &workloads::by_name("llama-decode").unwrap())
+        .metrics
+        .spatial_utilization();
+    assert!(
+        (0.65..0.80).contains(&base),
+        "swap-only decode {base:.3} should be ~0.70 (paper 69.71%)"
+    );
+    // The acceptance ratio: mapping search over swap-only on decode.
+    assert!(
+        decode / base > 1.3,
+        "decode spatial gain {:.2}x below the K-extension target",
+        decode / base
+    );
 }
 
 #[test]
 fn voltra_temporal_utilization_band() {
-    // Paper: 76.99 - 97.32% with MGDP across the suite.
+    // Paper: 76.99 - 97.32% with MGDP across the suite. Our floor is
+    // MobileNetV2 (~0.60): its skinny-K expand layers were already
+    // output-bound at ~0.69, and the mapper's K-extended depthwise
+    // layers trade a further slice of temporal utilization (the doubled
+    // weight fetch stalls) for 2x spatial fill and net-lower latency.
     let v = ChipConfig::voltra();
     for w in evaluation_suite() {
         let t = run_workload(&v, &w).metrics.temporal_utilization();
         assert!(
-            (0.60..=1.0).contains(&t),
+            (0.55..=1.0).contains(&t),
             "{}: temporal {t:.3} outside band",
             w.name
         );

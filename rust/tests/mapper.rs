@@ -1,0 +1,155 @@
+//! The mapping-search subsystem's acceptance tests (DESIGN.md §11):
+//!
+//! * the mapper never returns lower spatial utilization than the legacy
+//!   swap-only choice, on any GEMM of any of the eight suite workloads;
+//! * the Fig. 6a claim stays pinned: in the permutation-only regime the
+//!   3D/2D spatial-utilization ratio never exceeds 2.0x (+ ragged-N
+//!   slack) and reaches exactly 2.0x on a skinny-M layer;
+//! * GEMV K-extension: an M = 1 layer maps above the 12.5% row-idle
+//!   floor (to ~full fill);
+//! * the process-wide mapper cache is coherent under contention and
+//!   plan-cache warm hits stay bit-identical with mapping resolved at
+//!   plan time.
+
+use std::collections::BTreeSet;
+
+use voltra::config::{ArrayGeometry, ChipConfig};
+use voltra::sim::gemm_core::Mapping;
+use voltra::tiling::mapper::{self, MapperCache};
+use voltra::workloads::evaluation_suite;
+
+/// Every distinct GEMM shape the eight suite workloads dispatch.
+fn suite_gemm_shapes() -> Vec<(u64, u64, u64)> {
+    let mut shapes = BTreeSet::new();
+    for w in evaluation_suite() {
+        for l in &w.layers {
+            for g in l.gemms() {
+                shapes.insert((g.m, g.k, g.n));
+            }
+        }
+    }
+    shapes.into_iter().collect()
+}
+
+#[test]
+fn mapper_never_below_the_swap_only_choice_on_any_suite_layer() {
+    let cfg = ChipConfig::voltra();
+    for (m, k, n) in suite_gemm_shapes() {
+        let (mapping, _) = mapper::search(&cfg, m, k, n)
+            .unwrap_or_else(|| panic!("no mapping for {m}x{k}x{n}"));
+        let searched = mapping.spatial_utilization(m, k, n);
+        let legacy = Mapping::swap_only(cfg.array, m, n).spatial_utilization(m, k, n);
+        assert!(
+            searched >= legacy - 1e-12,
+            "{m}x{k}x{n}: searched {searched:.4} < swap-only {legacy:.4} ({mapping:?})"
+        );
+    }
+}
+
+#[test]
+fn fig6a_two_x_claim_is_pinned_in_the_permutation_regime() {
+    // The paper's "up to 2.0x over the 2D design" is a statement about
+    // M/N dimension mismatch: the 3D array's (8, 8) output tile
+    // under-fills at most half as much as the 2D's (16, 32). Pin it in
+    // the regime the formula describes — permutation-only mapping,
+    // 8-aligned dims (a ragged dim compounds on the 2D side's wider
+    // unroll and can push past 2.0x even without folding; K-extension,
+    // which the 2D array cannot follow, is the separate decode story).
+    let a3 = ChipConfig::voltra().array;
+    let a2 = ChipConfig::array2d().array;
+    for (m, k, n) in suite_gemm_shapes() {
+        if m % 8 != 0 || n % 8 != 0 || k % 8 != 0 {
+            continue;
+        }
+        let u3 = Mapping::swap_only(a3, m, n).spatial_utilization(m, k, n);
+        let u2 = Mapping::swap_only(a2, m, n).spatial_utilization(m, k, n);
+        let ratio = u3 / u2;
+        assert!(
+            ratio <= 2.0 + 1e-9,
+            "{m}x{k}x{n}: permutation-only 3D/2D ratio {ratio:.3} breaks the 2.0x claim"
+        );
+    }
+    // The skinny-M worst case lands exactly on 2.0x.
+    let u3 = Mapping::swap_only(a3, 8, 512).spatial_utilization(8, 512, 512);
+    let u2 = Mapping::swap_only(a2, 8, 512).spatial_utilization(8, 512, 512);
+    assert!((u3 / u2 - 2.0).abs() < 1e-12, "skinny-M ratio {:.3}", u3 / u2);
+}
+
+#[test]
+fn gemv_k_extension_beats_the_row_idle_floor() {
+    // M = 1 on the 8x8x8 array idles at 12.5% under any permutation;
+    // the mapper's K-extension folds the idle rows onto 64 K lanes.
+    let cfg = ChipConfig::voltra();
+    for (m, k, n) in [(1u64, 3072u64, 3072u64), (1, 128, 256), (1, 768, 1000)] {
+        let (mapping, _) = mapper::search(&cfg, m, k, n).unwrap();
+        let u = mapping.spatial_utilization(m, k, n);
+        assert!(u > 0.125, "GEMV {m}x{k}x{n} stuck at the floor: {u:.4}");
+        assert!(mapping.fold > 1, "GEMV must fold: {mapping:?}");
+    }
+}
+
+#[test]
+fn two_d_baseline_has_no_k_axis_to_extend() {
+    let cfg = ChipConfig::array2d();
+    let (mapping, _) = mapper::search(&cfg, 1, 3072, 3072).unwrap();
+    assert_eq!(mapping.fold, 1);
+    assert!(matches!(mapping.geometry, ArrayGeometry::Spatial2D { .. }));
+}
+
+#[test]
+fn mapper_cache_is_coherent_under_contention() {
+    // Racing threads resolving the same shapes must all read values
+    // equal to an uncached search, and populate each key exactly once.
+    let cfg = ChipConfig::voltra();
+    let cache = MapperCache::new();
+    let shapes: Vec<(u64, u64, u64)> = suite_gemm_shapes().into_iter().take(24).collect();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                for &(m, k, n) in &shapes {
+                    let got = cache.resolve(&cfg, m, k, n);
+                    assert_eq!(got, mapper::search(&cfg, m, k, n));
+                }
+            });
+        }
+    });
+    assert_eq!(cache.len(), shapes.len());
+    let stats = cache.stats();
+    assert_eq!(stats.lookups(), 8 * shapes.len() as u64);
+}
+
+#[test]
+fn suite_runs_resolve_each_shape_once_per_fingerprint() {
+    // Warm plan-cache hits never re-map: a second suite pass through the
+    // plan cache must not change any report (mapping resolved at plan
+    // time, memoized process-wide).
+    let cfg = ChipConfig::voltra();
+    let plans = voltra::PlanCache::new();
+    for w in evaluation_suite() {
+        let cold = plans.run(&cfg, &w);
+        let warm = plans.run(&cfg, &w);
+        assert_eq!(cold, warm, "{}: warm report diverged", w.name);
+        // Every GEMM layer reports its resolved mapping.
+        for l in &warm.metrics.layers {
+            if l.macs > 0 {
+                assert!(!l.mapping.is_empty(), "{}/{} lost its mapping", w.name, l.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_report_shows_k_extended_mappings() {
+    let cfg = ChipConfig::voltra();
+    let w = voltra::workloads::by_name("llama-decode").unwrap();
+    let r = voltra::coordinator::run_workload(&cfg, &w);
+    let scores = r
+        .metrics
+        .layers
+        .iter()
+        .find(|l| l.name == "scores")
+        .expect("decode has a scores layer");
+    assert_eq!(scores.mapping, "1x8x64", "GEMV attention must K-extend fully");
+    let q = r.metrics.layers.iter().find(|l| l.name == "q_proj").unwrap();
+    assert_eq!(q.mapping, "2x8x32", "batch-6 projections fold by 4");
+}

@@ -43,11 +43,14 @@ fn prop_simulated_tiles_conserve_macs() {
         let mut spec = TileSpec::simple(tm, tk, tn);
         spec.psum_in = rng.next() % 2 == 0;
         spec.spill_out = rng.next() % 2 == 0;
+        // K-extension folds must conserve work like any other tile.
+        spec.fold = [1u8, 2, 4, 8][(rng.next() % 4) as usize];
         let m = simulate_tile(&cfg, &spec);
         assert_eq!(
             m.useful_macs,
             tm * tk * tn,
-            "case {case}: tile {tm}x{tk}x{tn} (seed-reproducible)"
+            "case {case}: tile {tm}x{tk}x{tn} fold {} (seed-reproducible)",
+            spec.fold
         );
         assert!(m.active_cycles <= m.total_cycles);
         assert!(m.spatial_utilization() <= 1.0 + 1e-12);
