@@ -1,0 +1,642 @@
+"""Differential oracle for the Rust tile engine's steady-state fast path.
+
+This is a line-faithful Python port of ``rust/src/sim/engine.rs``
+(``simulate_tile``) plus the row-recurrence fast path that PR 6 adds to
+it: at each subtile-row boundary the engine captures a *relative* state
+key (FIFO fills, in-flight landing offsets, next-request bank phases,
+psum/output progress, the arbiter's round-robin pointer); when the same
+key recurs at a later row boundary the dynamics are provably periodic,
+so the walk jumps ``n`` whole periods at once by adding per-period
+deltas to every counter — bit-identical by construction, because the
+key captures the complete state of the machine relative to the row
+boundary and the per-cycle model is deterministic.
+
+The Rust implementation mirrors this file statement for statement; the
+CI-sized fuzz below (seeded PRNG, both memory organisations, folds,
+psum/spill variants, raw/blocked layouts) is the executable spec the
+Rust ``tests/differential.rs`` re-runs natively at larger sample sizes.
+
+Run ``python test_fastpath_differential.py N`` for an N-spec soak.
+"""
+
+import sys
+from collections import deque
+
+MAX_CHANNELS = 8
+MAX_WEIGHT_CHANNELS = 128
+SUPER_BANK_BANKS = 8
+DATA_MEM_BYTES = 128 * 1024
+UMAX = (1 << 64) - 1
+SNAPSHOT_CAP = 64
+
+
+def div_ceil(a, b):
+    return -(-a // b)
+
+
+def block_residue(dim, unroll, i):
+    full = dim // unroll
+    return unroll if i < full else dim - full * unroll
+
+
+class Cfg:
+    def __init__(
+        self,
+        array=("3d", 8, 8, 8),
+        separated=False,
+        prefetch=True,
+        stream_fifo_depth=8,
+        simd_lanes=8,
+        tmux_psum_output=True,
+        num_banks=32,
+        mem_latency=2,
+    ):
+        self.array = array
+        self.separated = separated
+        self.prefetch = prefetch
+        self.stream_fifo_depth = stream_fifo_depth
+        self.simd_lanes = simd_lanes
+        self.tmux_psum_output = tmux_psum_output
+        self.num_banks = num_banks
+        self.mem_latency = mem_latency
+
+    def macs(self):
+        if self.array[0] == "3d":
+            return self.array[1] * self.array[2] * self.array[3]
+        return self.array[1] * self.array[2]
+
+
+class Spec:
+    def __init__(
+        self,
+        tm,
+        tk,
+        tn,
+        psum_in=False,
+        spill_out=False,
+        input_blocked=True,
+        fold=1,
+        in_base=0,
+        w_base=8,
+        p_base=16,
+        o_base=24,
+    ):
+        self.tm, self.tk, self.tn = tm, tk, tn
+        self.psum_in, self.spill_out = psum_in, spill_out
+        self.input_blocked, self.fold = input_blocked, fold
+        self.in_base, self.w_base, self.p_base, self.o_base = in_base, w_base, p_base, o_base
+
+
+METRIC_FIELDS = (
+    "total_cycles",
+    "active_cycles",
+    "useful_macs",
+    "offered_macs",
+    "bank_reads",
+    "bank_writes",
+    "bank_conflicts",
+    "stall_cycles",
+    "simd_cycles",
+    "fifo_events",
+)
+
+
+class Channel:
+    __slots__ = ("issued", "fill", "ready")
+
+    def __init__(self):
+        self.issued = 0
+        self.fill = 0
+        self.ready = deque()
+
+    def arrive(self, cycle):
+        if self.ready and self.ready[0] == cycle:
+            self.ready.popleft()
+            self.fill += 1
+            return True
+        return False
+
+
+class TileSim:
+    """Port of the Rust TileSim: geometry derivation + per-cycle step."""
+
+    def __init__(self, cfg, spec):
+        self.cfg, self.spec = cfg, spec
+        self.macs = cfg.macs()
+        self.separate_ports = cfg.separated
+        if cfg.array[0] == "3d":
+            am_, an_, ak_ = cfg.array[1], cfg.array[2], cfg.array[3]
+            fold = min(max(spec.fold, 1), am_, MAX_WEIGHT_CHANNELS)
+            self.fold = fold
+            self.am = max(am_ // fold, 1)
+            self.an = an_
+            self.ak = ak_ * fold
+            self.n_in = min(am_, MAX_CHANNELS)
+            self.n_w_ch = fold
+            self.w_stride = 8
+            self.w_super = True
+        else:
+            am_, an_ = cfg.array[1], cfg.array[2]
+            self.fold = 1
+            self.am, self.an, self.ak = am_, an_, 1
+            self.n_in = min(max(am_ // 8, 1), MAX_CHANNELS)
+            self.n_w_ch = 1
+            self.w_stride = max(an_ // 8, 1)
+            self.w_super = False
+        self.sub_m = max(div_ceil(spec.tm, self.am), 1)
+        self.sub_n = max(div_ceil(spec.tn, self.an), 1)
+        self.ksteps = max(div_ceil(spec.tk, self.ak), 1)
+        self.n_sub = self.sub_m * self.sub_n
+        self.total_steps = self.n_sub * self.ksteps
+        self.outputs_per_sub = self.am * self.an
+        self.psum_words_per_sub = div_ceil(self.outputs_per_sub * 4, 8)
+        obr = 4 if spec.spill_out else 1
+        self.out_total_bytes = 0
+        for ti in range(self.sub_m):
+            for tj in range(self.sub_n):
+                mr = block_residue(spec.tm, self.am, ti)
+                nr = block_residue(spec.tn, self.an, tj)
+                self.out_total_bytes += mr * nr * obr
+        self.fifo_depth = cfg.stream_fifo_depth if cfg.prefetch else 1
+        self.nb = cfg.num_banks
+        self.mem_rr = 0
+        self.inputs = [Channel() for _ in range(MAX_CHANNELS)]
+        self.weights = [Channel() for _ in range(self.n_w_ch)]
+        self.psum_issued = 0
+        self.psum_fill = 0
+        self.psum_pending = UMAX
+        self.psum_total = self.n_sub * self.psum_words_per_sub if spec.psum_in else 0
+        self.simd_queue = 0
+        self.out_bytes = 0
+        self.out_written_bytes = 0
+        self.fired = 0
+        # Fire evaluations where psum_ready was false (fast-path guard:
+        # a jump over an active psum stream is only sound if the stream
+        # never gated the array during the observed period).
+        self.psum_unready = 0
+        self.m = dict.fromkeys(METRIC_FIELDS, 0)
+        self.cycle = 0
+        self.row_stride_words = self.ksteps
+        self.max_cycles = 1_000_000 + self.total_steps * 64
+        self.row_steps = self.sub_n * self.ksteps
+        self.psum_row = self.sub_n * self.psum_words_per_sub
+
+    def done(self):
+        return not (
+            self.fired < self.total_steps
+            or self.simd_queue > 0
+            or self.out_written_bytes < self.out_total_bytes
+        )
+
+    # -- bank arbitration (port of BankedMemory::arbitrate) ------------
+    def arbitrate(self, reqs):
+        # reqs: list of (addr, write, is_psum, super_bank)
+        granted, denied = [], []
+        reads = writes = 0
+        if not reqs:
+            return granted, denied, reads, writes
+        busy = [False] * self.nb
+
+        def try_grant(i):
+            nonlocal reads, writes
+            addr, write, _, sb = reqs[i]
+            if sb:
+                g = (addr % self.nb) // SUPER_BANK_BANKS
+                lo = g * SUPER_BANK_BANKS
+                if any(busy[lo : lo + SUPER_BANK_BANKS]):
+                    denied.append(i)
+                else:
+                    for b in range(lo, lo + SUPER_BANK_BANKS):
+                        busy[b] = True
+                    granted.append(i)
+                    if write:
+                        writes += SUPER_BANK_BANKS
+                    else:
+                        reads += SUPER_BANK_BANKS
+            else:
+                b = addr % self.nb
+                if busy[b]:
+                    denied.append(i)
+                else:
+                    busy[b] = True
+                    granted.append(i)
+                    if write:
+                        writes += 1
+                    else:
+                        reads += 1
+
+        n = len(reqs)
+        for i in range(n):
+            if reqs[i][2]:
+                try_grant(i)
+        for k in range(n):
+            i = (self.mem_rr + k) % n
+            if not reqs[i][2]:
+                try_grant(i)
+        self.mem_rr = (self.mem_rr + 1) % max(n, 1)
+        return granted, denied, reads, writes
+
+    # -- one loop body iteration (port of the Rust while body) ---------
+    def cycle_once(self):
+        spec, m = self.spec, self.m
+        # 1. arrivals
+        for r in range(self.n_in):
+            if self.inputs[r].arrive(self.cycle):
+                m["fifo_events"] += 1
+        for ch in self.weights:
+            if ch.arrive(self.cycle):
+                m["fifo_events"] += 1
+        if self.psum_pending == self.cycle:
+            self.psum_pending = UMAX
+            self.psum_fill += 1
+            m["fifo_events"] += 1
+
+        # 2. fire
+        if self.fired < self.total_steps:
+            sub = self.fired // self.ksteps
+            ks = self.fired % self.ksteps
+            ti = sub // self.sub_n
+            tj = sub % self.sub_n
+            inputs_ready = all(self.inputs[r].fill > 0 for r in range(self.n_in))
+            weight_ready = all(c.fill > 0 for c in self.weights)
+            psum_ready = (
+                not spec.psum_in
+                or self.psum_fill >= (sub + 1) * self.psum_words_per_sub
+                or self.psum_fill == self.psum_total
+            )
+            if not psum_ready:
+                self.psum_unready += 1
+            regs_free = ks < self.ksteps - 1 or self.simd_queue <= self.outputs_per_sub
+            if inputs_ready and weight_ready and psum_ready and regs_free:
+                for r in range(self.n_in):
+                    self.inputs[r].fill -= 1
+                    m["fifo_events"] += 1
+                for ch in self.weights:
+                    ch.fill -= 1
+                    m["fifo_events"] += 1
+                self.fired += 1
+                m["active_cycles"] += 1
+                mr = block_residue(spec.tm, self.am, ti)
+                nr = block_residue(spec.tn, self.an, tj)
+                kr = block_residue(spec.tk, self.ak, ks)
+                m["useful_macs"] += mr * nr * kr
+                m["offered_macs"] += self.macs
+                if self.fired % self.ksteps == 0:
+                    valid = mr * nr
+                    if spec.spill_out:
+                        self.out_bytes += valid * 4
+                    else:
+                        self.simd_queue += valid
+            else:
+                m["stall_cycles"] += 1
+
+        # 3. SIMD drain
+        if self.simd_queue > 0:
+            done = min(self.simd_queue, self.cfg.simd_lanes)
+            self.simd_queue -= done
+            m["simd_cycles"] += 1
+            if not spec.spill_out:
+                self.out_bytes += done
+
+        # 4. issue + arbitrate
+        reqs = []  # (addr, write, is_psum, super_bank)
+        kinds = []
+        for r in range(self.n_in):
+            ch = self.inputs[r]
+            if ch.issued < self.total_steps and ch.fill + len(ch.ready) < self.fifo_depth:
+                demand_ok = self.cfg.prefetch or (
+                    ch.fill == 0 and not ch.ready and ch.issued == self.fired
+                )
+                if demand_ok:
+                    reqs.append((self.in_addr(r, ch.issued), False, False, False))
+                    kinds.append(r)
+        for c, ch in enumerate(self.weights):
+            if ch.issued < self.total_steps and ch.fill + len(ch.ready) < self.fifo_depth:
+                demand_ok = self.cfg.prefetch or (
+                    ch.fill == 0 and not ch.ready and ch.issued == self.fired
+                )
+                if demand_ok:
+                    reqs.append((self.w_addr(c, ch.issued), False, False, self.w_super))
+                    kinds.append(100 + c)
+        psum_wants = spec.psum_in and self.psum_issued < self.psum_total and self.psum_pending == UMAX
+        drained = self.fired >= self.total_steps and self.simd_queue == 0
+        out_wants = self.out_bytes >= 8 or (drained and self.out_bytes > 0)
+        if self.cfg.tmux_psum_output:
+            psum_go, out_go = (True, False) if psum_wants else (False, out_wants)
+        else:
+            psum_go, out_go = psum_wants, out_wants
+        if psum_go:
+            reqs.append((spec.p_base + self.psum_issued, False, True, False))
+            kinds.append(250)
+        if out_go:
+            reqs.append((spec.o_base + self.out_written_bytes // 8, True, False, False))
+            kinds.append(251)
+
+        if self.separate_ports:
+            for i, (_, write, _, sb) in enumerate(reqs):
+                kind = kinds[i]
+                if kind <= 99:
+                    ch = self.inputs[kind]
+                    ch.issued += 1
+                    ch.ready.append(self.cycle + self.cfg.mem_latency)
+                elif kind <= 249:
+                    ch = self.weights[kind - 100]
+                    ch.issued += 1
+                    ch.ready.append(self.cycle + self.cfg.mem_latency)
+                elif kind == 250:
+                    self.psum_issued += 1
+                    self.psum_pending = self.cycle + self.cfg.mem_latency
+                else:
+                    chunk = min(self.out_bytes, 8)
+                    self.out_written_bytes += chunk
+                    self.out_bytes -= chunk
+                    m["bank_writes"] += 1
+                if not write:
+                    m["bank_reads"] += 8 if sb else 1
+        else:
+            granted, denied, reads, writes = self.arbitrate(reqs)
+            m["bank_reads"] += reads
+            m["bank_writes"] += writes
+            m["bank_conflicts"] += len(denied)
+            for gi in granted:
+                kind = kinds[gi]
+                if kind <= 99:
+                    ch = self.inputs[kind]
+                    ch.issued += 1
+                    ch.ready.append(self.cycle + self.cfg.mem_latency)
+                elif kind <= 249:
+                    ch = self.weights[kind - 100]
+                    ch.issued += 1
+                    ch.ready.append(self.cycle + self.cfg.mem_latency)
+                elif kind == 250:
+                    self.psum_issued += 1
+                    self.psum_pending = self.cycle + self.cfg.mem_latency
+                else:
+                    chunk = min(self.out_bytes, 8)
+                    self.out_written_bytes += chunk
+                    self.out_bytes -= chunk
+
+        self.cycle += 1
+
+    def in_addr(self, r, s):
+        if self.spec.input_blocked:
+            return self.spec.in_base + s * self.n_in + r
+        sub = s // self.ksteps
+        ks = s % self.ksteps
+        ti = sub // self.sub_n
+        return self.spec.in_base + (ti * self.am + r) * self.row_stride_words + ks
+
+    def w_addr(self, c, s):
+        sub = s // self.ksteps
+        ks = s % self.ksteps
+        tj = sub % self.sub_n
+        return self.spec.w_base + ((tj * self.ksteps + ks) * self.n_w_ch + c) * self.w_stride
+
+    def finish(self):
+        self.m["total_cycles"] = self.cycle
+        return dict(self.m)
+
+    # -- fast path -----------------------------------------------------
+    def state_key(self):
+        """Relative machine state at a subtile-row boundary."""
+        row = self.fired // self.row_steps
+        k = [self.mem_rr]
+        for r in range(self.n_in):
+            ch = self.inputs[r]
+            k.append(ch.fill)
+            k.append(ch.issued - self.fired)
+            k.append(len(ch.ready))
+            for t in ch.ready:
+                k.append(t - self.cycle)
+            k.append(-1 if ch.issued >= self.total_steps else self.in_addr(r, ch.issued) % self.nb)
+        for c in range(self.n_w_ch):
+            ch = self.weights[c]
+            k.append(ch.fill)
+            k.append(ch.issued - self.fired)
+            k.append(len(ch.ready))
+            for t in ch.ready:
+                k.append(t - self.cycle)
+            k.append(-1 if ch.issued >= self.total_steps else self.w_addr(c, ch.issued) % self.nb)
+        # Psum stream state. The stream is a deterministic ramp (one
+        # word per mem_latency cycles, always granted in arbitration
+        # pass 1), so its absolute progress is NOT translation-invariant
+        # across rows; instead of keying raw progress (which would only
+        # ever match a perfectly paced stream) the key distinguishes
+        # three regimes — absent, done, active — and `try_jump` proves
+        # an active-stream jump sound via the unready counter + slack.
+        if not self.spec.psum_in:
+            k += (0, 0, -1, -1)
+        elif self.psum_issued >= self.psum_total and self.psum_pending == UMAX:
+            k += (-2, -2, -1, -1)  # stream complete: inert forever
+        else:
+            k.append(-3)  # stream active
+            k.append(-1 if self.psum_pending == UMAX else self.psum_pending - self.cycle)
+            k.append((self.spec.p_base + self.psum_issued) % self.nb)
+            k.append(0)
+        k.append(self.simd_queue)
+        k.append(self.out_bytes)
+        k.append((self.spec.o_base + self.out_written_bytes // 8) % self.nb)
+        k.append(self.out_written_bytes % 8)
+        return tuple(k)
+
+    def marks(self, row):
+        return (
+            row,
+            self.cycle,
+            self.fired,
+            tuple(self.inputs[r].issued for r in range(self.n_in)),
+            tuple(c.issued for c in self.weights),
+            self.psum_issued,
+            self.psum_fill,
+            self.out_written_bytes,
+            tuple(self.m[f] for f in METRIC_FIELDS),
+            self.psum_unready,
+        )
+
+    def try_jump(self, prev, row):
+        p = row - prev[0]
+        margin = self.fifo_depth // self.row_steps + 1
+        landing_max = self.sub_m - margin
+        if landing_max <= row:
+            return 0
+        n = (landing_max - row) // p
+        if self.spec.psum_in and self.psum_issued < self.psum_total:
+            # Active psum stream (key matched, so both marks are in the
+            # active regime). The jump mirrors the observed period, so it
+            # is sound only if (a) the stream never gated a fire in that
+            # period, (b) its slack over the consumption threshold is
+            # non-decreasing (then it keeps not gating), and (c) it
+            # stays active through the whole jumped span (the ramp's
+            # issue guard must not flip inside it).
+            if self.psum_unready != prev[9]:
+                return 0
+            dpsum = self.psum_issued - prev[5]
+            if dpsum < p * self.psum_row:
+                return 0
+            if dpsum > 0:
+                n = min(n, (self.psum_total - 1 - self.psum_issued) // dpsum)
+        if n <= 0:
+            return 0
+        dc = self.cycle - prev[1]
+        self.cycle += n * dc
+        self.fired += n * (self.fired - prev[2])
+        for r in range(self.n_in):
+            ch = self.inputs[r]
+            ch.issued += n * (ch.issued - prev[3][r])
+            ch.ready = deque(t + n * dc for t in ch.ready)
+        for c, ch in enumerate(self.weights):
+            ch.issued += n * (ch.issued - prev[4][c])
+            ch.ready = deque(t + n * dc for t in ch.ready)
+        self.psum_issued += n * (self.psum_issued - prev[5])
+        self.psum_fill += n * (self.psum_fill - prev[6])
+        if self.psum_pending != UMAX:
+            self.psum_pending += n * dc
+        self.out_written_bytes += n * (self.out_written_bytes - prev[7])
+        for i, f in enumerate(METRIC_FIELDS):
+            self.m[f] += n * (self.m[f] - prev[8][i])
+        return n * p
+
+
+def fast_path_eligible(cfg, spec):
+    s = TileSim(cfg, spec)
+    margin_io = s.fifo_depth // s.row_steps + 1
+    return s.sub_m >= margin_io + 3
+
+
+def simulate_tile_reference(cfg, spec):
+    s = TileSim(cfg, spec)
+    while not s.done() and s.cycle < s.max_cycles:
+        s.cycle_once()
+    return s.finish()
+
+
+def simulate_tile_fast(cfg, spec):
+    """Reference walk + row-recurrence jump. Returns (metrics, jumped_rows)."""
+    s = TileSim(cfg, spec)
+    snaps = {}
+    last_marked = -1
+    jumped = 0
+    while not s.done() and s.cycle < s.max_cycles:
+        if not jumped and s.fired % s.row_steps == 0:
+            row = s.fired // s.row_steps
+            if row > last_marked and row + 2 <= s.sub_m:
+                last_marked = row
+                key = s.state_key()
+                prev = snaps.get(key)
+                if prev is not None:
+                    jumped = s.try_jump(prev, row)
+                elif len(snaps) < SNAPSHOT_CAP:
+                    snaps[key] = s.marks(row)
+        s.cycle_once()
+    return s.finish(), jumped
+
+
+def simulate_tile(cfg, spec):
+    if fast_path_eligible(cfg, spec):
+        return simulate_tile_fast(cfg, spec)[0]
+    return simulate_tile_reference(cfg, spec)
+
+
+# ---------------------------------------------------------------- fuzz
+
+class Lcg:
+    """The same deterministic PRNG rust/tests/differential.rs uses."""
+
+    def __init__(self, seed):
+        self.s = seed & UMAX
+
+    def next(self):
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & UMAX
+        return self.s >> 33
+
+    def below(self, n):
+        return self.next() % n
+
+
+def config_pool():
+    return [
+        ("voltra", Cfg()),
+        ("no_prefetch", Cfg(prefetch=False)),
+        ("separated", Cfg(separated=True)),
+        ("array2d", Cfg(array=("2d", 16, 32))),
+        ("simd64", Cfg(simd_lanes=64)),
+        ("full_crossbar", Cfg(tmux_psum_output=False)),
+        ("deep_fifo_slow_mem", Cfg(stream_fifo_depth=16, mem_latency=12)),
+        ("banks16", Cfg(num_banks=16)),
+    ]
+
+
+def random_spec(rng, dim_cap=256):
+    return Spec(
+        tm=1 + rng.below(dim_cap),
+        tk=1 + rng.below(dim_cap),
+        tn=1 + rng.below(dim_cap),
+        psum_in=rng.below(2) == 1,
+        spill_out=rng.below(2) == 1,
+        input_blocked=rng.below(4) != 0,
+        fold=1 << rng.below(4),
+        in_base=rng.below(2048),
+        w_base=rng.below(2048),
+        p_base=rng.below(2048),
+        o_base=rng.below(2048),
+    )
+
+
+def check_one(name, cfg, spec):
+    ref = simulate_tile_reference(cfg, spec)
+    fast, jumped = simulate_tile_fast(cfg, spec)
+    assert ref == fast, (
+        f"fast path diverged on {name} tm={spec.tm} tk={spec.tk} tn={spec.tn} "
+        f"psum={spec.psum_in} spill={spec.spill_out} blocked={spec.input_blocked} "
+        f"fold={spec.fold} bases=({spec.in_base},{spec.w_base},{spec.p_base},{spec.o_base}) "
+        f"jumped={jumped}\nref={ref}\nfast={fast}"
+    )
+    return jumped
+
+
+def run_fuzz(samples, dim_cap, seed=0xC0FFEE):
+    rng = Lcg(seed)
+    pool = config_pool()
+    jumped_total = specs_jumped = 0
+    for i in range(samples):
+        name, cfg = pool[rng.below(len(pool))]
+        spec = random_spec(rng, dim_cap)
+        j = check_one(name, cfg, spec)
+        jumped_total += j
+        specs_jumped += 1 if j else 0
+    return specs_jumped, jumped_total
+
+
+def test_fast_path_bit_identical_sample():
+    # CI-sized: the Rust differential test runs the large-sample version.
+    # dim_cap 128 is the smallest cap at which the random sample reliably
+    # contains steady tiles deep enough to jump (row count > warm-up margin).
+    jumped_specs, jumped_rows = run_fuzz(samples=120, dim_cap=128)
+    assert jumped_specs > 0, "sample never exercised a jump"
+    assert jumped_rows > 0
+
+
+def test_eligibility_gates_small_tiles():
+    cfg = Cfg()
+    # One subtile row: nothing to recur over.
+    assert not fast_path_eligible(cfg, Spec(8, 64, 64))
+    # GEMV fold-8 collapses to a single row: ineligible by construction.
+    assert not fast_path_eligible(cfg, Spec(1, 128, 256, fold=8))
+    # Many rows: eligible.
+    assert fast_path_eligible(cfg, Spec(64, 512, 64))
+
+
+def test_fast_path_actually_jumps_on_steady_tiles():
+    cfg = Cfg()
+    spec = Spec(128, 256, 64)
+    ref = simulate_tile_reference(cfg, spec)
+    fast, jumped = simulate_tile_fast(cfg, spec)
+    assert jumped > 0, "steady 16-row tile must find a recurrence"
+    assert ref == fast
+
+
+if __name__ == "__main__":
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 400
+    cap = int(sys.argv[2]) if len(sys.argv) > 2 else 128
+    js, jr = run_fuzz(samples=n, dim_cap=cap)
+    print(f"OK: {n} specs bit-identical; {js} specs jumped ({jr} rows skipped)")

@@ -1,15 +1,21 @@
 //! Hot-path performance tracking (the §Perf deliverable): timings of the
-//! simulator's inner loops and the full-workload pipeline, recorded
+//! simulator's inner loops and the planning/execution pipeline, recorded
 //! before/after each optimization in EXPERIMENTS.md §Perf.
+//!
+//! Workload-level sections go through the compile-once planning layer
+//! (`plan::build` + `plan::execute`, DESIGN.md §10) — the legacy
+//! `choose_tiling`/`run_workload` entry points this bench once timed are
+//! themselves thin wrappers over it now.
 
 #[path = "common.rs"]
 mod common;
 
 use voltra::config::ChipConfig;
-use voltra::coordinator::run_workload;
+use voltra::coordinator::TileCache;
+use voltra::plan;
 use voltra::sim::memory::{BankRequest, BankedMemory, Requester};
-use voltra::sim::{simulate_tile, TileSpec};
-use voltra::tiling::engine::choose_tiling;
+use voltra::sim::{simulate_tile, simulate_tile_reference, TileSpec};
+use voltra::tiling::mapper;
 use voltra::workloads::{evaluation_suite, resnet50::resnet50};
 
 fn main() {
@@ -33,30 +39,49 @@ fn main() {
         }
     });
 
-    // 2. One large tile, cycle by cycle.
-    common::report("simulate_tile 128x1024x128", 10, || {
-        let m = simulate_tile(&cfg, &TileSpec::simple(128, 1024, 128));
+    // 2. One large tile: the dispatcher (row-recurrence fast path,
+    //    DESIGN.md §12) against the per-cycle reference walk it must
+    //    match bit for bit.
+    let big = TileSpec::simple(128, 1024, 128);
+    common::report("simulate_tile 128x1024x128 (fast)", 10, || {
+        let m = simulate_tile(&cfg, &big);
+        std::hint::black_box(&m);
+    });
+    common::report("simulate_tile_reference 128x1024x128", 10, || {
+        let m = simulate_tile_reference(&cfg, &big);
         std::hint::black_box(&m);
     });
 
-    // 3. Tiling search for a transformer-scale layer.
-    common::report("choose_tiling 4096x4096x4096", 10, || {
-        let t = choose_tiling(&cfg, 4096, 4096, 4096);
-        std::hint::black_box(&t);
-    });
-
-    // 4. Full ResNet-50 workload through the coordinator (memoized).
-    let net = resnet50();
-    common::report("run_workload(ResNet50)", 10, || {
-        let r = run_workload(&cfg, &net);
+    // 3. Mapping + tiling search for a transformer-scale layer (the
+    //    planner's per-GEMM resolution, uncached).
+    common::report("mapper::search 4096x4096x4096", 10, || {
+        let r = mapper::search(&cfg, 4096, 4096, 4096);
         std::hint::black_box(&r);
     });
 
-    // 5. The whole Fig. 6 suite on one configuration.
-    common::report("evaluation suite (8 workloads)", 3, || {
+    // 4. Full ResNet-50: compile the plan cold (tiling search + tile
+    //    simulation + residency), then execute the compiled plan warm.
+    let net = resnet50();
+    common::report("plan::build(ResNet50) cold", 10, || {
+        let mut cache = TileCache::new();
+        let p = plan::build(&cfg, &net, &mut cache);
+        std::hint::black_box(&p);
+    });
+    let mut cache = TileCache::new();
+    let compiled = plan::build(&cfg, &net, &mut cache);
+    common::report("plan::execute(ResNet50) warm", 100, || {
+        let r = plan::execute(&compiled);
+        std::hint::black_box(&r);
+    });
+
+    // 5. The whole Fig. 6 suite, cold-compiled + executed per iteration
+    //    (private per-workload tile caches; see perf_suite_cold for the
+    //    gated walked-vs-fast comparison and perf_plan for warm plans).
+    common::report("suite build+execute (8 workloads)", 3, || {
         for w in evaluation_suite() {
-            let r = run_workload(&cfg, &w);
-            std::hint::black_box(&r);
+            let mut cache = TileCache::new();
+            let p = plan::build(&cfg, &w, &mut cache);
+            std::hint::black_box(plan::execute(&p));
         }
     });
 }

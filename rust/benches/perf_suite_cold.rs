@@ -1,0 +1,103 @@
+//! §Perf: whole-suite cold-plan wall clock — the PR 6 acceptance gate.
+//!
+//! Baseline ("walked"): every layer of all eight Fig. 6 workloads
+//! planned sequentially against the per-cycle reference walker
+//! (`simulate_tile_reference`), i.e. planning as it stood before the
+//! steady-state fast path and the parallel layer compile landed.
+//!
+//! Shipped ("fast"): `plan::build_parallel` — the exact cold path a
+//! `PlanCache` miss takes — over a fresh `SharedTileCache`, with the
+//! row-recurrence fast path dispatching every eligible tile
+//! (DESIGN.md §12).
+//!
+//! Both sides resolve mappings through warm, persistent mapper caches
+//! (the process-wide `MapperCache` predates this PR), and both rebuild
+//! all tile/plan state from scratch every iteration — that is the
+//! "cold plan". The measured ratio therefore isolates what PR 6 added,
+//! and must be at least 5x.
+
+#[path = "common.rs"]
+mod common;
+
+use std::collections::HashMap;
+
+use voltra::config::ChipConfig;
+use voltra::coordinator::{SharedTileCache, SimCache};
+use voltra::metrics::TileMetrics;
+use voltra::plan::{self, planner, residency};
+use voltra::sim::{simulate_tile_reference, TileSpec};
+use voltra::tiling::mapper::MapperCache;
+use voltra::tiling::IncrementalMapper;
+use voltra::workloads::evaluation_suite;
+
+/// The pre-fast-path tile store: memoized per-cycle reference walks
+/// (same memoization as `TileCache`, walked simulation instead of the
+/// dispatcher — so the comparison is fast path vs walk, not cache vs
+/// no cache).
+struct RefCache(HashMap<TileSpec, TileMetrics>);
+
+impl SimCache for RefCache {
+    fn simulate(&mut self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+        if let Some(m) = self.0.get(spec) {
+            return *m;
+        }
+        let m = simulate_tile_reference(cfg, spec);
+        self.0.insert(*spec, m);
+        m
+    }
+
+    fn unique_tiles(&self) -> usize {
+        self.0.len()
+    }
+}
+
+fn main() {
+    common::header("§Perf — whole-suite cold planning: reference walk vs fast path");
+    let cfg = ChipConfig::voltra();
+    let suite = evaluation_suite();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+
+    let walk_mapper = MapperCache::new();
+    let walked = common::time(3, || {
+        for w in &suite {
+            let mut tiles = RefCache(HashMap::new());
+            let mut mapper = IncrementalMapper::new(&walk_mapper);
+            let mut layers = Vec::with_capacity(w.layers.len());
+            for l in &w.layers {
+                layers.push(planner::plan_layer_mapped(&cfg, l, &mut tiles, &mut mapper));
+            }
+            residency::apply(&cfg, &w.layers, &mut layers);
+            std::hint::black_box(&layers);
+        }
+    });
+    common::show("suite x8, cold plan (reference walk, seq)", 3, walked);
+
+    let fast = common::time(5, || {
+        for w in &suite {
+            let tiles = SharedTileCache::new();
+            std::hint::black_box(plan::build_parallel(&cfg, w, &tiles, threads));
+        }
+    });
+    common::show(
+        &format!("suite x8, cold plan (fast path, {threads} thr)"),
+        5,
+        fast,
+    );
+
+    common::rule();
+    let (walk_mean, _, _) = walked;
+    let (fast_mean, _, _) = fast;
+    let speedup = walk_mean / fast_mean;
+    println!(
+        "cold suite planning is {speedup:.1}x faster on the shipped path \
+         (steady-state fast path + {threads}-thread compile; floor 5x)"
+    );
+    assert!(
+        speedup >= 5.0,
+        "PR 6 acceptance: cold suite planning must be >= 5x faster than the \
+         sequential reference walk (got {speedup:.2}x)"
+    );
+}

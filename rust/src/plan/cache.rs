@@ -138,8 +138,14 @@ impl PlanCache {
         }
         let w = resolve()?;
         let tiles = self.tile_cache_for(key.fingerprint);
-        let mut handle = &*tiles;
-        let built = Arc::new(super::build(cfg, &w, &mut handle));
+        // Cold plans compile their layers across a small scoped pool —
+        // bit-identical to the sequential build (see
+        // [`super::build_parallel`]), just faster on first touch.
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8);
+        let built = Arc::new(super::build_parallel(cfg, &w, &tiles, threads));
         self.misses.fetch_add(1, Ordering::Relaxed);
         // First insert wins: racing planners agree on one canonical plan.
         let mut map = shard.write().expect("plan shard poisoned");

@@ -34,11 +34,15 @@ pub mod residency;
 
 pub use cache::{fingerprint, PlanCache};
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use crate::config::ChipConfig;
-use crate::coordinator::{SimCache, WorkloadReport};
+use crate::coordinator::{SharedTileCache, SimCache, WorkloadReport};
 use crate::metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};
 use crate::sim::gemm_core::Mapping;
 use crate::sim::pipeline;
+use crate::tiling::mapper::IncrementalMapper;
 use crate::workloads::Workload;
 
 /// What the residency pass decided at this layer's input boundary.
@@ -192,6 +196,66 @@ pub fn build<C: SimCache>(cfg: &ChipConfig, w: &Workload, cache: &mut C) -> Work
     }
 }
 
+/// [`build`] with the per-layer planning fanned out over a scoped
+/// worker pool (the `sweep --threads` idiom, one level down): layers
+/// are claimed off an atomic index, planned into per-layer slots, and
+/// reassembled in workload order before the sequential residency pass.
+///
+/// Bit-identical to the sequential [`build`]: `plan_layer` is a pure
+/// function of `(cfg, layer)` (the tile and mapper caches only
+/// memoize, and each worker's [`IncrementalMapper`] hint only prunes),
+/// the residency pass runs after the barrier exactly as the sequential
+/// path runs it, and `unique_tiles` is read from the shared cache once
+/// planning is complete — pinned by `tests/plan_cache.rs`.
+pub fn build_parallel(
+    cfg: &ChipConfig,
+    w: &Workload,
+    tiles: &SharedTileCache,
+    threads: usize,
+) -> WorkloadPlan {
+    let n = w.layers.len();
+    let workers = threads.clamp(1, n.max(1));
+    if workers <= 1 {
+        let mut handle = tiles;
+        return build(cfg, w, &mut handle);
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<LayerPlan>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let mut handle = tiles;
+                let mut mapper = IncrementalMapper::global();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let p = planner::plan_layer_mapped(cfg, &w.layers[i], &mut handle, &mut mapper);
+                    *slots[i].lock().expect("plan slot poisoned") = Some(p);
+                }
+            });
+        }
+    });
+    let mut layers: Vec<LayerPlan> = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("plan slot poisoned")
+                .expect("plan worker skipped a layer")
+        })
+        .collect();
+    residency::apply(cfg, &w.layers, &mut layers);
+    let dispatched_tiles = layers.iter().map(|l| l.dispatched_tiles).sum();
+    WorkloadPlan {
+        workload: w.name.clone(),
+        fingerprint: cache::fingerprint(cfg),
+        layers,
+        unique_tiles: tiles.len(),
+        dispatched_tiles,
+    }
+}
+
 /// Execute a plan: resolve every layer's timeline through the pipeline
 /// scheduler and assemble the report. Deterministic — the same plan
 /// always yields a bit-identical [`WorkloadReport`].
@@ -234,6 +298,20 @@ mod tests {
         let a = execute(&plan);
         let b = execute(&plan);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_sequential() {
+        let cfg = ChipConfig::voltra();
+        let w = workloads::by_name("resnet50").unwrap();
+        let shared = crate::coordinator::SharedTileCache::new();
+        let mut handle = &shared;
+        let seq = build(&cfg, &w, &mut handle);
+        for threads in [1, 4] {
+            let tiles = crate::coordinator::SharedTileCache::new();
+            let par = build_parallel(&cfg, &w, &tiles, threads);
+            assert_eq!(par, seq, "threads={threads}");
+        }
     }
 
     #[test]

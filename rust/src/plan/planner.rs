@@ -25,7 +25,7 @@ use crate::sim::engine::TileSpec;
 use crate::sim::pipeline::{self, TilePlan, TileRun};
 use crate::sim::reshuffler::reshuffle_cycles;
 use crate::tiling::engine::traffic_parts;
-use crate::tiling::mapper;
+use crate::tiling::mapper::IncrementalMapper;
 use crate::workloads::{Layer, LayerKind};
 
 use super::{LayerPlan, ResidencyDecision};
@@ -76,8 +76,25 @@ fn attribute_dma(raw: &[(u64, u64, u64)], total_dma: u64) -> Vec<TileRun> {
 
 /// Plan one layer: tiling + memoized tile simulation + DMA attribution,
 /// emitted as an immutable [`LayerPlan`] (residency decision defaulted;
-/// the workload pass owns it).
+/// the workload pass owns it). Mapping resolutions go through a fresh
+/// incremental view of the process-wide mapper cache; callers planning
+/// many layers in sequence should hold their own [`IncrementalMapper`]
+/// and use [`plan_layer_mapped`] so the hint survives across layers.
 pub fn plan_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -> LayerPlan {
+    plan_layer_mapped(cfg, layer, cache, &mut IncrementalMapper::global())
+}
+
+/// [`plan_layer`] with an injected mapper handle: the hint chain of an
+/// [`IncrementalMapper`] spans layers, so a planner walking a workload
+/// seeds each layer's mapping search with the previous layer's winner
+/// (DESIGN.md §12). Results are identical to [`plan_layer`] — the
+/// seeding only prunes the search.
+pub fn plan_layer_mapped<C: SimCache>(
+    cfg: &ChipConfig,
+    layer: &Layer,
+    cache: &mut C,
+    mapper: &mut IncrementalMapper<'_>,
+) -> LayerPlan {
     let mut plan = LayerPlan {
         name: layer.name.clone(),
         tiles: Default::default(),
@@ -98,7 +115,7 @@ pub fn plan_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) -
         // Resolve how this GEMM sits on the array — permutation +
         // K-extension fold — together with the tiling that placement
         // induces, through the process-wide mapper cache (DESIGN.md §11).
-        let Some((mapping, tiling)) = mapper::resolve(cfg, g.m, g.k, g.n) else {
+        let Some((mapping, tiling)) = mapper.resolve(cfg, g.m, g.k, g.n) else {
             continue; // cannot fit: skipped (never happens: 8x8x8 always fits)
         };
         if mapping.swapped {

@@ -18,10 +18,32 @@
 //! With prefetching, the eight-deep FIFOs absorb bank-conflict jitter and
 //! access latency; without it, every conflict and every latency cycle
 //! lands on the array — the "severe bank contention" of Sec. I.
+//!
+//! # The steady-state fast path (DESIGN.md §12)
+//!
+//! Walking every cycle is exact but slow, and the mapper multiplied the
+//! walk by its candidate count. [`simulate_tile`] therefore dispatches
+//! eligible tiles to a *row-recurrence* fast path: at each subtile-row
+//! boundary it captures the machine's complete state **relative to the
+//! boundary** (FIFO fills, in-flight landing offsets, next-request bank
+//! phases, psum/output progress, the arbiter's round-robin pointer).
+//! When the same relative key recurs at a later row boundary, the
+//! dynamics between the two boundaries are provably periodic — the model
+//! is deterministic and time-invariant, and every address stream is
+//! linear or row-periodic, so equal bank phases at matched boundaries
+//! stay equal forever. The walk then jumps whole periods at once by
+//! adding the observed per-period deltas to every counter, landing far
+//! enough from the final rows that no end-of-tile guard can bind inside
+//! the jumped span. Bit-identity to the reference walk is pinned by the
+//! differential fuzz (`tests/differential.rs`, mirrored by the Python
+//! oracle `python/tests/test_fastpath_differential.py`) and by the unit
+//! tests below; ineligible tiles fall back to the per-cycle walk.
 
-use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
+use std::collections::HashMap;
+
+use crate::config::{ChipConfig, MemoryOrg};
 use crate::metrics::TileMetrics;
-use crate::sim::gemm_core::block_residue;
+use crate::sim::gemm_core::{block_residue, TileGeometry, MAX_INPUT_CHANNELS};
 use crate::sim::memory::{BankRequest, BankedMemory, Requester};
 
 /// Static description of one tile execution (the memoization key).
@@ -78,12 +100,11 @@ impl TileSpec {
     }
 }
 
-const MAX_CHANNELS: usize = 8;
-
-/// Weight-channel cap: bounds the folded super-bank fetch fan-out and
-/// keeps the per-request kind codes (inputs 0..=99, weights
-/// 100..=249, psum 250, output 251) collision-free for any `TileSpec`.
-const MAX_WEIGHT_CHANNELS: usize = 128;
+/// Row-boundary snapshots retained while hunting for a recurrence —
+/// a bound, not a tuning knob: distinct keys at successive boundaries
+/// mean the machine is still in a transient; 64 rows of transient means
+/// the tile is irregular enough that walking it is the honest answer.
+const SNAPSHOT_CAP: usize = 64;
 
 /// Per-channel streamer state (input lanes + weight lane). The MIC
 /// pipelines requests: it may have several accesses in flight (the bank
@@ -139,199 +160,204 @@ impl Channel {
     }
 }
 
-/// Simulate one tile on the configured array, under the tile's
-/// K-extension fold. Returns activity counters.
-pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
-    let macs = cfg.array.macs() as u64;
-    let separate_ports = matches!(cfg.memory, MemoryOrg::Separated { .. });
+/// Everything `marks()` freezes at a row boundary: the absolute
+/// counters whose per-period deltas `try_jump` replays, plus the
+/// psum-gating count that proves an active-stream jump sound.
+#[derive(Clone)]
+struct RowMark {
+    row: u64,
+    cycle: u64,
+    fired: u64,
+    in_issued: Vec<u64>,
+    w_issued: Vec<u64>,
+    psum_issued: u64,
+    psum_fill: u64,
+    out_written_bytes: u64,
+    metrics: TileMetrics,
+    psum_unready: u64,
+}
 
-    // Effective unrolls after folding `fold` array rows onto extra K
-    // lanes (3D only), plus the mapped streamer channel structure:
-    // `n_in` fine input fetches and `n_w_ch` weight fetches of
-    // `w_stride` words per step. Folding multiplies the weight fetches
-    // (each folded row group needs its own K-slice of the weights).
-    // The fold cannot exceed the physical row count, and the weight
-    // request encoding below reserves codes 100..=249 for the weight
-    // channels (psum/output live at 250/251) — clamp rather than let a
-    // hostile TileSpec alias another channel's code.
-    let fold = match cfg.array {
-        ArrayGeometry::Spatial3D { m, .. } => {
-            (spec.fold.max(1) as u64).min(m as u64).min(MAX_WEIGHT_CHANNELS as u64)
-        }
-        ArrayGeometry::Spatial2D { .. } => 1,
-    };
-    let (am, an, ak, n_in, n_w_ch, w_stride, w_super) = match cfg.array {
-        ArrayGeometry::Spatial3D { m, n, k } => (
-            (m as u64 / fold).max(1),
-            n as u64,
-            k as u64 * fold,
-            m.min(MAX_CHANNELS),
-            fold as usize,
-            8u64, // one aligned super bank per fetch
-            true,
-        ),
-        ArrayGeometry::Spatial2D { m, n } => (
-            m as u64,
-            n as u64,
-            1u64,
-            (m / 8).max(1).min(MAX_CHANNELS),
-            1usize,
-            (n / 8).max(1) as u64,
-            false,
-        ),
-    };
-    let sub_m = spec.tm.div_ceil(am).max(1);
-    let sub_n = spec.tn.div_ceil(an).max(1);
-    let ksteps = spec.tk.div_ceil(ak).max(1);
-    let n_sub = sub_m * sub_n;
-    let total_steps = n_sub * ksteps;
-    let outputs_per_sub = am * an;
-    // Psum words per subtile: int32 accumulators, 2 per 64-bit word.
-    let psum_words_per_sub = (outputs_per_sub * 4).div_ceil(8);
-    // Valid (non-padding) results per subtile and their output bytes
-    // (int8 after quantization, int32 if spilled): residue-aware — the
-    // SIMD and the output streamer only handle real results.
-    let out_bytes_per_result: u64 = if spec.spill_out { 4 } else { 1 };
-    let mut out_total_bytes: u64 = 0;
-    for ti in 0..sub_m {
-        for tj in 0..sub_n {
-            let mr = block_residue(spec.tm, am, ti);
-            let nr = block_residue(spec.tn, an, tj);
-            out_total_bytes += mr * nr * out_bytes_per_result;
+/// The per-tile cycle simulator, factored into explicit state so the
+/// steady-state fast path can snapshot, compare and advance it. The
+/// reference walk is `cycle_once` in a loop — the refactor changes no
+/// behavior (the pre-refactor unit tests below are untouched).
+struct TileSim<'a> {
+    cfg: &'a ChipConfig,
+    spec: TileSpec,
+    g: TileGeometry,
+    macs: u64,
+    separate_ports: bool,
+    nb: u64,
+    mem: BankedMemory,
+    inputs: Vec<Channel>,
+    weights: Vec<Channel>,
+    psum_issued: u64,
+    psum_fill: u64,
+    psum_pending: u64,
+    simd_queue: u64,
+    out_bytes: u64,
+    out_written_bytes: u64,
+    fired: u64,
+    /// Fire evaluations where `psum_ready` was false. Fast-path guard:
+    /// a jump over an *active* psum stream is only sound if the stream
+    /// never gated the array during the observed period.
+    psum_unready: u64,
+    m: TileMetrics,
+    cycle: u64,
+    // Reused request buffers: keep the hot loop allocation-free.
+    reqs: Vec<BankRequest>,
+    req_kind: Vec<u8>,
+}
+
+impl<'a> TileSim<'a> {
+    fn new(cfg: &'a ChipConfig, spec: &TileSpec) -> Self {
+        let g = TileGeometry::derive(cfg, spec);
+        TileSim {
+            cfg,
+            spec: *spec,
+            g,
+            macs: cfg.array.macs() as u64,
+            separate_ports: matches!(cfg.memory, MemoryOrg::Separated { .. }),
+            nb: cfg.num_banks as u64,
+            mem: BankedMemory::with_size(crate::arch::DATA_MEM_BYTES, cfg.num_banks),
+            inputs: (0..MAX_INPUT_CHANNELS)
+                .map(|_| Channel::new(g.fifo_depth as usize))
+                .collect(),
+            weights: (0..g.n_w_ch).map(|_| Channel::new(g.fifo_depth as usize)).collect(),
+            psum_issued: 0,
+            psum_fill: 0,
+            psum_pending: u64::MAX,
+            simd_queue: 0,
+            out_bytes: 0,
+            out_written_bytes: 0,
+            fired: 0,
+            psum_unready: 0,
+            m: TileMetrics::default(),
+            cycle: 0,
+            reqs: Vec::with_capacity(MAX_INPUT_CHANNELS + 4),
+            req_kind: Vec::with_capacity(MAX_INPUT_CHANNELS + 4),
         }
     }
 
-    let fifo_depth = if cfg.prefetch {
-        cfg.stream_fifo_depth as u64
-    } else {
-        1
-    };
+    fn done(&self) -> bool {
+        !(self.fired < self.g.total_steps
+            || self.simd_queue > 0
+            || self.out_written_bytes < self.g.out_total_bytes)
+    }
 
-    let mut mem = BankedMemory::with_size(crate::arch::DATA_MEM_BYTES, cfg.num_banks);
-    let mut inputs: Vec<Channel> =
-        (0..MAX_CHANNELS).map(|_| Channel::new(fifo_depth as usize)).collect();
-    let mut weights: Vec<Channel> =
-        (0..n_w_ch).map(|_| Channel::new(fifo_depth as usize)).collect();
-    // Psum prefetch progress (words delivered / issued).
-    let mut psum_issued: u64 = 0;
-    let mut psum_fill: u64 = 0;
-    let mut psum_pending: u64 = u64::MAX;
-    let psum_total = if spec.psum_in {
-        n_sub * psum_words_per_sub
-    } else {
-        0
-    };
+    fn in_addr(&self, r: usize, s: u64) -> u64 {
+        if self.spec.input_blocked {
+            self.spec.in_base + s * self.g.n_in as u64 + r as u64
+        } else {
+            let sub = s / self.g.ksteps;
+            let ks = s % self.g.ksteps;
+            let ti = sub / self.g.sub_n;
+            self.spec.in_base + (ti * self.g.am + r as u64) * self.g.row_stride_words + ks
+        }
+    }
 
-    // SIMD queue (results awaiting quantization) and output byte queue.
-    let mut simd_queue: u64 = 0;
-    let mut out_bytes: u64 = 0;
-    let mut out_written_bytes: u64 = 0;
+    fn w_addr(&self, c: usize, s: u64) -> u64 {
+        let sub = s / self.g.ksteps;
+        let ks = s % self.g.ksteps;
+        let tj = sub % self.g.sub_n;
+        self.spec.w_base + ((tj * self.g.ksteps + ks) * self.g.n_w_ch as u64 + c as u64) * self.g.w_stride
+    }
 
-    let mut fired: u64 = 0;
-    let mut m = TileMetrics::default();
-    let mut cycle: u64 = 0;
-    // Reused request buffer: keep the hot loop allocation-free.
-    let mut reqs: Vec<BankRequest> = Vec::with_capacity(MAX_CHANNELS + 4);
-    let mut req_kind: Vec<u8> = Vec::with_capacity(MAX_CHANNELS + 4);
+    /// One iteration of the reference loop body (unchanged semantics).
+    fn cycle_once(&mut self) {
+        let g = self.g;
+        let spec = self.spec;
+        let fifo_depth = g.fifo_depth;
 
-    let row_stride_words = ksteps; // raw row-major: one K-row per array row
-    let max_cycles = 1_000_000 + total_steps * 64;
-
-    while (fired < total_steps || simd_queue > 0 || out_written_bytes < out_total_bytes)
-        && cycle < max_cycles
-    {
         // ---- 1. arrivals ------------------------------------------------
-        for ch in inputs.iter_mut().take(n_in) {
-            if ch.arrive(cycle) {
-                m.fifo_events += 1;
+        for ch in self.inputs.iter_mut().take(g.n_in) {
+            if ch.arrive(self.cycle) {
+                self.m.fifo_events += 1;
             }
         }
-        for ch in weights.iter_mut() {
-            if ch.arrive(cycle) {
-                m.fifo_events += 1;
+        for ch in self.weights.iter_mut() {
+            if ch.arrive(self.cycle) {
+                self.m.fifo_events += 1;
             }
         }
-        if psum_pending == cycle {
-            psum_pending = u64::MAX;
-            psum_fill += 1;
-            m.fifo_events += 1;
+        if self.psum_pending == self.cycle {
+            self.psum_pending = u64::MAX;
+            self.psum_fill += 1;
+            self.m.fifo_events += 1;
         }
 
         // ---- 2. fire the array ------------------------------------------
-        if fired < total_steps {
-            let sub = fired / ksteps;
-            let ks = fired % ksteps;
-            let ti = sub / sub_n;
-            let tj = sub % sub_n;
-            let inputs_ready = inputs.iter().take(n_in).all(|c| c.fill > 0);
-            let weight_ready = weights.iter().all(|c| c.fill > 0);
-            let psum_ready = !spec.psum_in || psum_fill >= (sub + 1) * psum_words_per_sub
-                || psum_fill == psum_total; // degenerate tail
+        if self.fired < g.total_steps {
+            let sub = self.fired / g.ksteps;
+            let ks = self.fired % g.ksteps;
+            let ti = sub / g.sub_n;
+            let tj = sub % g.sub_n;
+            let inputs_ready = self.inputs.iter().take(g.n_in).all(|c| c.fill > 0);
+            let weight_ready = self.weights.iter().all(|c| c.fill > 0);
+            let psum_ready = !spec.psum_in
+                || self.psum_fill >= (sub + 1) * g.psum_words_per_sub
+                || self.psum_fill == g.psum_total; // degenerate tail
+            if !psum_ready {
+                self.psum_unready += 1;
+            }
             // Output registers are double-buffered: a subtile may finish
             // while the *previous* subtile's results still drain through
             // the SIMD, but not while two subtiles' worth are pending.
-            let regs_free = ks < ksteps - 1 || simd_queue <= outputs_per_sub;
+            let regs_free = ks < g.ksteps - 1 || self.simd_queue <= g.outputs_per_sub;
             if inputs_ready && weight_ready && psum_ready && regs_free {
-                for ch in inputs.iter_mut().take(n_in) {
+                for ch in self.inputs.iter_mut().take(g.n_in) {
                     ch.fill -= 1;
-                    m.fifo_events += 1;
+                    self.m.fifo_events += 1;
                 }
-                for ch in weights.iter_mut() {
+                for ch in self.weights.iter_mut() {
                     ch.fill -= 1;
-                    m.fifo_events += 1;
+                    self.m.fifo_events += 1;
                 }
-                fired += 1;
-                m.active_cycles += 1;
-                let mr = block_residue(spec.tm, am, ti);
-                let nr = block_residue(spec.tn, an, tj);
-                let kr = block_residue(spec.tk, ak, ks);
-                m.useful_macs += mr * nr * kr;
-                m.offered_macs += macs;
+                self.fired += 1;
+                self.m.active_cycles += 1;
+                let mr = block_residue(spec.tm, g.am, ti);
+                let nr = block_residue(spec.tn, g.an, tj);
+                let kr = block_residue(spec.tk, g.ak, ks);
+                self.m.useful_macs += mr * nr * kr;
+                self.m.offered_macs += self.macs;
                 // Subtile complete: valid results to the SIMD / spill path.
-                if fired % ksteps == 0 {
+                if self.fired % g.ksteps == 0 {
                     let valid = mr * nr;
                     if spec.spill_out {
-                        out_bytes += valid * 4;
+                        self.out_bytes += valid * 4;
                     } else {
-                        simd_queue += valid;
+                        self.simd_queue += valid;
                     }
                 }
             } else {
-                m.stall_cycles += 1;
+                self.m.stall_cycles += 1;
             }
         }
 
         // ---- 3. SIMD drain + output write -------------------------------
-        if simd_queue > 0 {
-            let done = simd_queue.min(cfg.simd_lanes as u64);
-            simd_queue -= done;
-            m.simd_cycles += 1;
+        if self.simd_queue > 0 {
+            let done = self.simd_queue.min(self.cfg.simd_lanes as u64);
+            self.simd_queue -= done;
+            self.m.simd_cycles += 1;
             if !spec.spill_out {
                 // Quantized int8 results pack into the output FIFO.
-                out_bytes += done;
+                self.out_bytes += done;
             }
         }
 
         // ---- 4. issue requests + arbitration -----------------------------
+        let mut reqs = std::mem::take(&mut self.reqs);
+        let mut req_kind = std::mem::take(&mut self.req_kind);
         reqs.clear();
         req_kind.clear();
         // Input channels (fine-grained 64-bit, Fig. 3a).
-        for (r, ch) in inputs.iter_mut().enumerate().take(n_in) {
-            if ch.issued < total_steps && ch.fill + ch.inflight() < fifo_depth {
-                let demand_ok =
-                    cfg.prefetch || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == fired);
+        for (r, ch) in self.inputs.iter().enumerate().take(g.n_in) {
+            if ch.issued < g.total_steps && ch.fill + ch.inflight() < fifo_depth {
+                let demand_ok = self.cfg.prefetch
+                    || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == self.fired);
                 if demand_ok {
-                    let s = ch.issued;
-                    let sub = s / ksteps;
-                    let ks = s % ksteps;
-                    let ti = sub / sub_n;
-                    let addr = if spec.input_blocked {
-                        spec.in_base + s * n_in as u64 + r as u64
-                    } else {
-                        spec.in_base + (ti * am + r as u64) * row_stride_words + ks
-                    };
                     reqs.push(BankRequest {
-                        word_addr: addr,
+                        word_addr: self.in_addr(r, ch.issued),
                         write: false,
                         requester: Requester::Input(r as u8),
                         super_bank: false,
@@ -342,22 +368,16 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         }
         // Weight channels (coarse-grained 512-bit super banks, Fig. 3b;
         // a folded mapping fetches `fold` parallel K-slices per step).
-        for (c, ch) in weights.iter_mut().enumerate() {
-            if ch.issued < total_steps && ch.fill + ch.inflight() < fifo_depth {
-                let demand_ok =
-                    cfg.prefetch || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == fired);
+        for (c, ch) in self.weights.iter().enumerate() {
+            if ch.issued < g.total_steps && ch.fill + ch.inflight() < fifo_depth {
+                let demand_ok = self.cfg.prefetch
+                    || (ch.fill == 0 && ch.inflight() == 0 && ch.issued == self.fired);
                 if demand_ok {
-                    let s = ch.issued;
-                    let sub = s / ksteps;
-                    let ks = s % ksteps;
-                    let tj = sub % sub_n;
-                    let addr =
-                        spec.w_base + ((tj * ksteps + ks) * n_w_ch as u64 + c as u64) * w_stride;
                     reqs.push(BankRequest {
-                        word_addr: addr,
+                        word_addr: self.w_addr(c, ch.issued),
                         write: false,
                         requester: Requester::Weight,
-                        super_bank: w_super,
+                        super_bank: g.w_super,
                     });
                     req_kind.push(100 + c as u8);
                 }
@@ -365,12 +385,13 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         }
         // Psum read & output write share a crossbar port when tmux'd;
         // psum has priority (Sec. II-D).
-        let psum_wants = spec.psum_in && psum_issued < psum_total && psum_pending == u64::MAX;
+        let psum_wants =
+            spec.psum_in && self.psum_issued < self.g.psum_total && self.psum_pending == u64::MAX;
         // Write a 64-bit word when one is full, or flush the tail once
         // compute has finished.
-        let drained = fired >= total_steps && simd_queue == 0;
-        let out_wants = out_bytes >= 8 || (drained && out_bytes > 0);
-        let (psum_go, out_go) = if cfg.tmux_psum_output {
+        let drained = self.fired >= g.total_steps && self.simd_queue == 0;
+        let out_wants = self.out_bytes >= 8 || (drained && self.out_bytes > 0);
+        let (psum_go, out_go) = if self.cfg.tmux_psum_output {
             if psum_wants {
                 (true, false)
             } else {
@@ -381,7 +402,7 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         };
         if psum_go {
             reqs.push(BankRequest {
-                word_addr: spec.p_base + psum_issued,
+                word_addr: spec.p_base + self.psum_issued,
                 write: false,
                 requester: Requester::Psum,
                 super_bank: false,
@@ -390,7 +411,7 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
         }
         if out_go {
             reqs.push(BankRequest {
-                word_addr: spec.o_base + out_written_bytes / 8,
+                word_addr: spec.o_base + self.out_written_bytes / 8,
                 write: true,
                 requester: Requester::Output,
                 super_bank: false,
@@ -398,75 +419,304 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
             req_kind.push(251);
         }
 
-        if separate_ports {
+        if self.separate_ports {
             // Dedicated per-operand buffers: every request is served by
             // its own SRAM — no cross-class arbitration (Fig. 1a).
             for (i, r) in reqs.iter().enumerate() {
                 let kind = req_kind[i];
                 match kind {
                     0..=99 => {
-                        let ch = &mut inputs[kind as usize];
+                        let ch = &mut self.inputs[kind as usize];
                         ch.issued += 1;
-                        ch.launch(cycle + cfg.mem_latency);
+                        ch.launch(self.cycle + self.cfg.mem_latency);
                     }
                     w @ 100..=249 => {
-                        let ch = &mut weights[(w - 100) as usize];
+                        let ch = &mut self.weights[(w - 100) as usize];
                         ch.issued += 1;
-                        ch.launch(cycle + cfg.mem_latency);
+                        ch.launch(self.cycle + self.cfg.mem_latency);
                     }
                     250 => {
-                        psum_issued += 1;
-                        psum_pending = cycle + cfg.mem_latency;
+                        self.psum_issued += 1;
+                        self.psum_pending = self.cycle + self.cfg.mem_latency;
                     }
                     251 => {
-                        let chunk = out_bytes.min(8);
-                        out_written_bytes += chunk;
-                        out_bytes -= chunk;
-                        m.bank_writes += 1;
+                        let chunk = self.out_bytes.min(8);
+                        self.out_written_bytes += chunk;
+                        self.out_bytes -= chunk;
+                        self.m.bank_writes += 1;
                     }
                     _ => unreachable!(),
                 }
                 if !r.write {
-                    m.bank_reads += if r.super_bank { 8 } else { 1 };
+                    self.m.bank_reads += if r.super_bank { 8 } else { 1 };
                 }
             }
         } else {
-            let res = mem.arbitrate(&reqs);
-            m.bank_reads += res.reads;
-            m.bank_writes += res.writes;
-            m.bank_conflicts += res.denied.len() as u64;
+            let res = self.mem.arbitrate(&reqs);
+            self.m.bank_reads += res.reads;
+            self.m.bank_writes += res.writes;
+            self.m.bank_conflicts += res.denied.len() as u64;
             for &gi in &res.granted {
                 match req_kind[gi] {
                     r @ 0..=99 => {
-                        let ch = &mut inputs[r as usize];
+                        let ch = &mut self.inputs[r as usize];
                         ch.issued += 1;
-                        ch.launch(cycle + cfg.mem_latency);
+                        ch.launch(self.cycle + self.cfg.mem_latency);
                     }
                     w @ 100..=249 => {
-                        let ch = &mut weights[(w - 100) as usize];
+                        let ch = &mut self.weights[(w - 100) as usize];
                         ch.issued += 1;
-                        ch.launch(cycle + cfg.mem_latency);
+                        ch.launch(self.cycle + self.cfg.mem_latency);
                     }
                     250 => {
-                        psum_issued += 1;
-                        psum_pending = cycle + cfg.mem_latency;
+                        self.psum_issued += 1;
+                        self.psum_pending = self.cycle + self.cfg.mem_latency;
                     }
                     251 => {
-                        let chunk = out_bytes.min(8);
-                        out_written_bytes += chunk;
-                        out_bytes -= chunk;
+                        let chunk = self.out_bytes.min(8);
+                        self.out_written_bytes += chunk;
+                        self.out_bytes -= chunk;
                     }
                     _ => unreachable!(),
                 }
             }
         }
+        self.reqs = reqs;
+        self.req_kind = req_kind;
 
-        cycle += 1;
+        self.cycle += 1;
     }
 
-    debug_assert!(cycle < max_cycles, "tile simulation did not converge");
-    m.total_cycles = cycle;
-    m
+    fn finish(mut self) -> TileMetrics {
+        debug_assert!(self.cycle < self.g.max_cycles, "tile simulation did not converge");
+        self.m.total_cycles = self.cycle;
+        self.m
+    }
+
+    // ---------------------------------------------------- fast path --
+
+    /// The machine's complete state *relative to the current row
+    /// boundary*: everything the per-cycle dynamics read, expressed so
+    /// that two boundaries with equal keys evolve identically. Absolute
+    /// progress counters enter only through their bank phases (the
+    /// address streams are linear or row-periodic, so phase equality at
+    /// matched boundaries propagates to every later request).
+    fn state_key(&self) -> Vec<i64> {
+        let mut k: Vec<i64> = Vec::with_capacity(8 + 12 * (self.g.n_in + self.g.n_w_ch));
+        k.push(self.mem.rr_phase() as i64);
+        for r in 0..self.g.n_in {
+            let ch = &self.inputs[r];
+            k.push(ch.fill as i64);
+            k.push((ch.issued - self.fired) as i64);
+            k.push(ch.ready.len() as i64);
+            for &t in &ch.ready {
+                k.push((t - self.cycle) as i64);
+            }
+            k.push(if ch.issued >= self.g.total_steps {
+                -1
+            } else {
+                (self.in_addr(r, ch.issued) % self.nb) as i64
+            });
+        }
+        for c in 0..self.g.n_w_ch {
+            let ch = &self.weights[c];
+            k.push(ch.fill as i64);
+            k.push((ch.issued - self.fired) as i64);
+            k.push(ch.ready.len() as i64);
+            for &t in &ch.ready {
+                k.push((t - self.cycle) as i64);
+            }
+            k.push(if ch.issued >= self.g.total_steps {
+                -1
+            } else {
+                (self.w_addr(c, ch.issued) % self.nb) as i64
+            });
+        }
+        // Psum stream state. The stream is a deterministic ramp (one
+        // word per mem_latency cycles, always granted in arbitration
+        // pass 1), so its absolute progress is NOT translation-invariant
+        // across rows; instead of keying raw progress (which would only
+        // ever match a perfectly paced stream) the key distinguishes
+        // three regimes — absent, done, active — and `try_jump` proves
+        // an active-stream jump sound via the unready counter + slack.
+        if !self.spec.psum_in {
+            k.extend_from_slice(&[0, 0, -1, -1]);
+        } else if self.psum_issued >= self.g.psum_total && self.psum_pending == u64::MAX {
+            k.extend_from_slice(&[-2, -2, -1, -1]); // stream complete: inert forever
+        } else {
+            k.push(-3); // stream active
+            k.push(if self.psum_pending == u64::MAX {
+                -1
+            } else {
+                (self.psum_pending - self.cycle) as i64
+            });
+            k.push(((self.spec.p_base + self.psum_issued) % self.nb) as i64);
+            k.push(0);
+        }
+        k.push(self.simd_queue as i64);
+        k.push(self.out_bytes as i64);
+        k.push(((self.spec.o_base + self.out_written_bytes / 8) % self.nb) as i64);
+        k.push((self.out_written_bytes % 8) as i64);
+        k
+    }
+
+    fn marks(&self, row: u64) -> RowMark {
+        RowMark {
+            row,
+            cycle: self.cycle,
+            fired: self.fired,
+            in_issued: self.inputs.iter().take(self.g.n_in).map(|c| c.issued).collect(),
+            w_issued: self.weights.iter().map(|c| c.issued).collect(),
+            psum_issued: self.psum_issued,
+            psum_fill: self.psum_fill,
+            out_written_bytes: self.out_written_bytes,
+            metrics: self.m,
+            psum_unready: self.psum_unready,
+        }
+    }
+
+    /// Jump as many whole periods as the landing margin allows; returns
+    /// the number of subtile rows skipped (0 = no jump, keep walking).
+    fn try_jump(&mut self, prev: &RowMark, row: u64) -> u64 {
+        let p = row - prev.row;
+        // Land at least `margin` rows before the last one: the final
+        // rows run ragged residues and the end-of-stream issue guards;
+        // the margin keeps every `issued < total_steps` guard strictly
+        // un-bound inside the jumped span (fifo_depth extra steps of
+        // lookahead per channel, amortized over row_steps).
+        let margin = self.g.fifo_depth / self.g.row_steps + 1;
+        if self.g.sub_m <= margin {
+            return 0;
+        }
+        let landing_max = self.g.sub_m - margin;
+        if landing_max <= row {
+            return 0;
+        }
+        let mut n = (landing_max - row) / p;
+        if self.spec.psum_in && self.psum_issued < self.g.psum_total {
+            // Active psum stream (key matched, so both marks are in the
+            // active regime). The jump mirrors the observed period, so
+            // it is sound only if (a) the stream never gated a fire in
+            // that period, (b) its slack over the consumption threshold
+            // is non-decreasing (then it keeps not gating), and (c) it
+            // stays active through the whole jumped span (the ramp's
+            // issue guard must not flip inside it).
+            if self.psum_unready != prev.psum_unready {
+                return 0;
+            }
+            let dpsum = self.psum_issued - prev.psum_issued;
+            if dpsum < p * self.g.psum_row {
+                return 0;
+            }
+            if dpsum > 0 {
+                n = n.min((self.g.psum_total - 1 - self.psum_issued) / dpsum);
+            }
+        }
+        if n == 0 {
+            return 0;
+        }
+        let dc = self.cycle - prev.cycle;
+        self.cycle += n * dc;
+        self.fired += n * (self.fired - prev.fired);
+        for r in 0..self.g.n_in {
+            let ch = &mut self.inputs[r];
+            ch.issued += n * (ch.issued - prev.in_issued[r]);
+            for t in ch.ready.iter_mut() {
+                *t += n * dc;
+            }
+        }
+        for (c, ch) in self.weights.iter_mut().enumerate() {
+            ch.issued += n * (ch.issued - prev.w_issued[c]);
+            for t in ch.ready.iter_mut() {
+                *t += n * dc;
+            }
+        }
+        self.psum_issued += n * (self.psum_issued - prev.psum_issued);
+        self.psum_fill += n * (self.psum_fill - prev.psum_fill);
+        if self.psum_pending != u64::MAX {
+            self.psum_pending += n * dc;
+        }
+        self.out_written_bytes += n * (self.out_written_bytes - prev.out_written_bytes);
+        add_scaled_delta(&mut self.m, &prev.metrics, n);
+        n * p
+    }
+}
+
+/// `m += n * (m - prev)` per metric field — replay `n` periods' deltas.
+fn add_scaled_delta(m: &mut TileMetrics, prev: &TileMetrics, n: u64) {
+    m.total_cycles += n * (m.total_cycles - prev.total_cycles);
+    m.active_cycles += n * (m.active_cycles - prev.active_cycles);
+    m.useful_macs += n * (m.useful_macs - prev.useful_macs);
+    m.offered_macs += n * (m.offered_macs - prev.offered_macs);
+    m.bank_reads += n * (m.bank_reads - prev.bank_reads);
+    m.bank_writes += n * (m.bank_writes - prev.bank_writes);
+    m.bank_conflicts += n * (m.bank_conflicts - prev.bank_conflicts);
+    m.stall_cycles += n * (m.stall_cycles - prev.stall_cycles);
+    m.simd_cycles += n * (m.simd_cycles - prev.simd_cycles);
+    m.fifo_events += n * (m.fifo_events - prev.fifo_events);
+}
+
+/// Whether the steady-state fast path may run for this tile: enough
+/// subtile rows that a recurrence can be observed AND a jump can land
+/// `margin` rows short of the ragged tail. Tiles below the threshold
+/// (including every GEMV fold-8 tile, whose row grid collapses to 1)
+/// take the per-cycle walk — `tests/differential.rs` asserts both sides.
+pub fn fast_path_eligible(cfg: &ChipConfig, spec: &TileSpec) -> bool {
+    let g = TileGeometry::derive(cfg, spec);
+    let margin_io = g.fifo_depth / g.row_steps + 1;
+    g.sub_m >= margin_io + 3
+}
+
+/// The per-cycle reference walk (the pre-PR-6 `simulate_tile`, verbatim
+/// semantics). Public so the differential tests and the cold-plan bench
+/// baseline can pin the fast path against it.
+pub fn simulate_tile_reference(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+    let mut s = TileSim::new(cfg, spec);
+    while !s.done() && s.cycle < s.g.max_cycles {
+        s.cycle_once();
+    }
+    s.finish()
+}
+
+/// The row-recurrence fast path: reference walk + analytic jump over
+/// the steady state. Returns the metrics and the number of subtile rows
+/// skipped (0 = the walk never found a sound recurrence — still exact,
+/// just not faster). Callers wanting plain metrics use
+/// [`simulate_tile`]; the split return is for the differential tests.
+pub fn simulate_tile_fast(cfg: &ChipConfig, spec: &TileSpec) -> (TileMetrics, u64) {
+    let mut s = TileSim::new(cfg, spec);
+    let mut snaps: HashMap<Vec<i64>, RowMark> = HashMap::new();
+    let mut last_marked: i64 = -1;
+    let mut jumped: u64 = 0;
+    while !s.done() && s.cycle < s.g.max_cycles {
+        if jumped == 0 && s.fired % s.g.row_steps == 0 {
+            let row = s.fired / s.g.row_steps;
+            if row as i64 > last_marked && row + 2 <= s.g.sub_m {
+                last_marked = row as i64;
+                let key = s.state_key();
+                if let Some(prev) = snaps.get(&key) {
+                    let prev = prev.clone();
+                    jumped = s.try_jump(&prev, row);
+                } else if snaps.len() < SNAPSHOT_CAP {
+                    snaps.insert(key, s.marks(row));
+                }
+            }
+        }
+        s.cycle_once();
+    }
+    (s.finish(), jumped)
+}
+
+/// Simulate one tile on the configured array, under the tile's
+/// K-extension fold. Returns activity counters. Dispatches eligible
+/// tiles to the steady-state fast path (bit-identical by construction
+/// and by differential test); everything else walks cycle by cycle.
+pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+    if fast_path_eligible(cfg, spec) {
+        simulate_tile_fast(cfg, spec).0
+    } else {
+        simulate_tile_reference(cfg, spec)
+    }
 }
 
 #[cfg(test)]
@@ -641,5 +891,60 @@ mod tests {
         // stays pipelined, nowhere near demand-fetch levels.
         let u = m.temporal_utilization();
         assert!(u > 0.5, "depth-16 pipelining collapsed: {u:.3}");
+    }
+
+    // ------------------------------------------------------ fast path
+
+    #[test]
+    fn fast_path_is_bit_identical_on_steady_tiles() {
+        // The planner-realistic shapes the cold-plan bench leans on.
+        let cfg = ChipConfig::voltra();
+        for (tm, tk, tn) in [(128, 256, 64), (128, 512, 64), (96, 256, 96), (64, 512, 64)] {
+            let spec = TileSpec::simple(tm, tk, tn);
+            let refm = simulate_tile_reference(&cfg, &spec);
+            let (fast, jumped) = simulate_tile_fast(&cfg, &spec);
+            assert_eq!(refm, fast, "{tm}x{tk}x{tn}");
+            assert!(jumped > 0, "{tm}x{tk}x{tn}: steady tile must jump");
+        }
+    }
+
+    #[test]
+    fn fast_path_is_bit_identical_on_psum_and_spill_variants() {
+        let cfg = ChipConfig::voltra();
+        for psum_in in [false, true] {
+            for spill_out in [false, true] {
+                let mut spec = TileSpec::simple(128, 512, 64);
+                spec.psum_in = psum_in;
+                spec.spill_out = spill_out;
+                let refm = simulate_tile_reference(&cfg, &spec);
+                let (fast, _) = simulate_tile_fast(&cfg, &spec);
+                assert_eq!(refm, fast, "psum={psum_in} spill={spill_out}");
+            }
+        }
+    }
+
+    #[test]
+    fn eligibility_gates_shallow_row_grids() {
+        let cfg = ChipConfig::voltra();
+        // One subtile row: nothing to recur over.
+        assert!(!fast_path_eligible(&cfg, &TileSpec::simple(8, 64, 64)));
+        // GEMV fold-8 collapses to a single row: ineligible by construction.
+        assert!(!fast_path_eligible(&cfg, &TileSpec::folded(1, 128, 256, 8)));
+        // Many rows: eligible.
+        assert!(fast_path_eligible(&cfg, &TileSpec::simple(64, 512, 64)));
+        // The dispatcher agrees with the reference on an ineligible spec.
+        let spec = TileSpec::simple(8, 64, 64);
+        assert_eq!(simulate_tile(&cfg, &spec), simulate_tile_reference(&cfg, &spec));
+    }
+
+    #[test]
+    fn fast_path_actually_saves_cycles() {
+        // Not just correct: the jump must skip most of a steady tile's
+        // rows, or the bench's >=5x cold-plan budget is fiction.
+        let cfg = ChipConfig::voltra();
+        let spec = TileSpec::simple(128, 256, 64);
+        let (_, jumped) = simulate_tile_fast(&cfg, &spec);
+        // 16 subtile rows; the jump must cover more than half of them.
+        assert!(jumped >= 8, "jumped only {jumped} of 16 rows");
     }
 }

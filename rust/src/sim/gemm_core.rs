@@ -29,7 +29,16 @@
 //! search in [`crate::tiling::mapper`]; this module only provides the
 //! mapping arithmetic.
 
-use crate::config::ArrayGeometry;
+use crate::config::{ArrayGeometry, ChipConfig};
+use crate::sim::engine::TileSpec;
+
+/// Fine-grained input streamer channels available to the tile engine.
+pub const MAX_INPUT_CHANNELS: usize = 8;
+
+/// Weight-channel cap: bounds the folded super-bank fetch fan-out and
+/// keeps the engine's per-request kind codes (inputs 0..=99, weights
+/// 100..=249, psum 250, output 251) collision-free for any `TileSpec`.
+pub const MAX_WEIGHT_CHANNELS: usize = 128;
 
 /// Per-compute-step operand demand of a mapped array, used by the
 /// cycle engine to drive the streamers.
@@ -231,6 +240,134 @@ pub fn block_residue(dim: u64, unroll: u64, i: u64) -> u64 {
         unroll
     } else {
         dim - full * unroll
+    }
+}
+
+/// Resolved streaming geometry of one tile on one chip config: the
+/// effective unrolls after K-extension folding, the streamer channel
+/// structure, the step/row counts and the derived totals the cycle
+/// engine iterates over. Factored out of `simulate_tile` so the
+/// steady-state fast path's eligibility predicate (DESIGN.md §12) can
+/// be evaluated without constructing a simulator, and so the engine and
+/// the fast path can never disagree on a derived quantity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGeometry {
+    /// Effective K-extension fold (clamped to the row count; 1 on 2D).
+    pub fold: u64,
+    /// Effective array unrolls (rows after folding, cols, K depth).
+    pub am: u64,
+    pub an: u64,
+    pub ak: u64,
+    /// Fine-grained input channels and weight channels per step.
+    pub n_in: usize,
+    pub n_w_ch: usize,
+    /// Weight request stride in words, and whether it is super-banked.
+    pub w_stride: u64,
+    pub w_super: bool,
+    /// Subtile grid and temporal K steps per subtile.
+    pub sub_m: u64,
+    pub sub_n: u64,
+    pub ksteps: u64,
+    pub n_sub: u64,
+    pub total_steps: u64,
+    pub outputs_per_sub: u64,
+    /// Psum words per subtile (int32 accumulators, 2 per 64-bit word).
+    pub psum_words_per_sub: u64,
+    /// Total psum words streamed in (0 unless a continuation tile).
+    pub psum_total: u64,
+    /// Residue-aware output bytes the streamer must write back.
+    pub out_total_bytes: u64,
+    pub fifo_depth: u64,
+    /// Raw row-major input row stride (one K-row per array row).
+    pub row_stride_words: u64,
+    pub max_cycles: u64,
+    /// Compute steps per subtile row (`sub_n * ksteps`) — the period
+    /// unit of the fast path's row recurrence.
+    pub row_steps: u64,
+    /// Psum words consumed per subtile row.
+    pub psum_row: u64,
+}
+
+impl TileGeometry {
+    pub fn derive(cfg: &ChipConfig, spec: &TileSpec) -> TileGeometry {
+        // The fold cannot exceed the physical row count, and the weight
+        // request encoding reserves codes 100..=249 for the weight
+        // channels — clamp rather than let a hostile TileSpec alias
+        // another channel's code.
+        let fold = match cfg.array {
+            ArrayGeometry::Spatial3D { m, .. } => {
+                (spec.fold.max(1) as u64).min(m as u64).min(MAX_WEIGHT_CHANNELS as u64)
+            }
+            ArrayGeometry::Spatial2D { .. } => 1,
+        };
+        let (am, an, ak, n_in, n_w_ch, w_stride, w_super) = match cfg.array {
+            ArrayGeometry::Spatial3D { m, n, k } => (
+                (m as u64 / fold).max(1),
+                n as u64,
+                k as u64 * fold,
+                m.min(MAX_INPUT_CHANNELS),
+                fold as usize,
+                8u64, // one aligned super bank per fetch
+                true,
+            ),
+            ArrayGeometry::Spatial2D { m, n } => (
+                m as u64,
+                n as u64,
+                1u64,
+                (m / 8).max(1).min(MAX_INPUT_CHANNELS),
+                1usize,
+                (n / 8).max(1) as u64,
+                false,
+            ),
+        };
+        let sub_m = spec.tm.div_ceil(am).max(1);
+        let sub_n = spec.tn.div_ceil(an).max(1);
+        let ksteps = spec.tk.div_ceil(ak).max(1);
+        let n_sub = sub_m * sub_n;
+        let total_steps = n_sub * ksteps;
+        let outputs_per_sub = am * an;
+        let psum_words_per_sub = (outputs_per_sub * 4).div_ceil(8);
+        let out_bytes_per_result: u64 = if spec.spill_out { 4 } else { 1 };
+        let mut out_total_bytes: u64 = 0;
+        for ti in 0..sub_m {
+            for tj in 0..sub_n {
+                let mr = block_residue(spec.tm, am, ti);
+                let nr = block_residue(spec.tn, an, tj);
+                out_total_bytes += mr * nr * out_bytes_per_result;
+            }
+        }
+        TileGeometry {
+            fold,
+            am,
+            an,
+            ak,
+            n_in,
+            n_w_ch,
+            w_stride,
+            w_super,
+            sub_m,
+            sub_n,
+            ksteps,
+            n_sub,
+            total_steps,
+            outputs_per_sub,
+            psum_words_per_sub,
+            psum_total: if spec.psum_in {
+                n_sub * psum_words_per_sub
+            } else {
+                0
+            },
+            out_total_bytes,
+            fifo_depth: if cfg.prefetch {
+                cfg.stream_fifo_depth as u64
+            } else {
+                1
+            },
+            row_stride_words: ksteps,
+            max_cycles: 1_000_000 + total_steps * 64,
+            row_steps: sub_n * ksteps,
+            psum_row: sub_n * psum_words_per_sub,
+        }
     }
 }
 

@@ -89,6 +89,13 @@ impl BankedMemory {
         self.num_banks
     }
 
+    /// Current round-robin priority phase. Part of the tile engine's
+    /// fast-path state key (DESIGN.md §12): two machine states can only
+    /// evolve identically if the arbiter favors the same request slot.
+    pub fn rr_phase(&self) -> usize {
+        self.rr
+    }
+
     pub fn size_bytes(&self) -> usize {
         self.data.len()
     }

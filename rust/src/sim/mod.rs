@@ -30,5 +30,7 @@ pub mod simd;
 pub mod snitch;
 pub mod streamer;
 
-pub use engine::{simulate_tile, TileSpec};
+pub use engine::{
+    fast_path_eligible, simulate_tile, simulate_tile_fast, simulate_tile_reference, TileSpec,
+};
 pub use pipeline::{LayerPlan, Schedule, TilePlan, TileRun};

@@ -134,6 +134,24 @@ fn score(cfg: &ChipConfig, mapping: &Mapping, tiling: &Tiling, m: u64, k: u64, n
     )
 }
 
+/// Score one candidate mapping: orient the GEMM onto the array (the row
+/// side carries logical M, or N when swapped), tile with the mapped
+/// unrolls, and attach the [`ScoreKey`]. `None` when no tiling fits.
+fn evaluate(
+    cfg: &ChipConfig,
+    mapping: Mapping,
+    m: u64,
+    k: u64,
+    n: u64,
+) -> Option<(ScoreKey, Resolved)> {
+    let (um, un, _) = mapping.array_dims();
+    let (pm, pn) = if mapping.swapped { (n, m) } else { (m, n) };
+    let (ua_m, ua_n) = if mapping.swapped { (un, um) } else { (um, un) };
+    let tiling = choose_tiling_mapped(cfg, ua_m, ua_n, pm, k, pn)?;
+    let key = score(cfg, &mapping, &tiling, m, k, n);
+    Some((key, (mapping, tiling)))
+}
+
 /// Search the mapping space for GEMM `(m, k, n)` under `cfg`, returning
 /// the winning mapping with its induced tiling. `None` only when no
 /// tiling fits the memory organisation (never for the shipped presets).
@@ -141,30 +159,64 @@ fn score(cfg: &ChipConfig, mapping: &Mapping, tiling: &Tiling, m: u64, k: u64, n
 /// Under [`MappingSearch::SwapOnly`] this reproduces the legacy model
 /// exactly: the permutation-only choice, tiled with the raw geometry.
 pub fn search(cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
+    search_seeded(cfg, m, k, n, None)
+}
+
+/// [`search`] seeded with a hint mapping (typically the winner of an
+/// adjacent layer shape in the same workload). Returns the *identical*
+/// result to the unseeded search — the seeding is purely a pruning
+/// accelerator, never a heuristic:
+///
+/// * the hint is evaluated first (tiling search included), establishing
+///   an incumbent [`ScoreKey`] before the candidate sweep;
+/// * each candidate's tiling-free compute envelope is a lower bound on
+///   the first component of its eventual key (`total ≥ compute_env`
+///   whether the envelopes combine by `max` or by sum), so a candidate
+///   whose envelope strictly exceeds the incumbent's total can be
+///   skipped without running its tiling search;
+/// * distinct candidates can never tie on the full key — it ends in
+///   `(fold, swapped, …)` which identifies the candidate — so the
+///   minimum is unique and evaluation order (hint first, possibly
+///   re-evaluating the hint inside the sweep) cannot change the winner.
+pub fn search_seeded(
+    cfg: &ChipConfig,
+    m: u64,
+    k: u64,
+    n: u64,
+    hint: Option<Mapping>,
+) -> Option<Resolved> {
     if cfg.mapping == MappingSearch::SwapOnly {
         let mapping = Mapping::swap_only(cfg.array, m, n);
         let (pm, pn) = if mapping.swapped { (n, m) } else { (m, n) };
         let tiling = choose_tiling(cfg, pm, k, pn)?;
         return Some((mapping, tiling));
     }
-    let mut best: Option<Resolved> = None;
-    let mut best_key: ScoreKey = (u64::MAX, u64::MAX, u64::MAX, u8::MAX, u8::MAX, u64::MAX);
-    for mapping in candidate_mappings(cfg.array) {
-        // Orient the GEMM onto the array (the row side carries logical
-        // M, or N when swapped) and tile with the mapped unrolls.
-        let (um, un, _) = mapping.array_dims();
-        let (pm, pn) = if mapping.swapped { (n, m) } else { (m, n) };
-        let (ua_m, ua_n) = if mapping.swapped { (un, um) } else { (um, un) };
-        let Some(tiling) = choose_tiling_mapped(cfg, ua_m, ua_n, pm, k, pn) else {
-            continue;
-        };
-        let key = score(cfg, &mapping, &tiling, m, k, n);
-        if best.is_none() || key < best_key {
-            best = Some((mapping, tiling));
-            best_key = key;
+    let mut best: Option<(ScoreKey, Resolved)> = None;
+    if let Some(hint) = hint {
+        if hint.geometry == cfg.array {
+            best = evaluate(cfg, hint, m, k, n);
         }
     }
-    best
+    let nb = (cfg.num_banks as u64).max(1);
+    for mapping in candidate_mappings(cfg.array) {
+        if let Some((bk, _)) = &best {
+            // Tiling-free lower bound on the candidate's score: strictly
+            // above the incumbent total ⇒ it cannot win; skip the
+            // expensive tiling enumeration.
+            let steps = mapping.ideal_active_cycles(m, k, n);
+            let env = steps.max((steps * banks_per_step(cfg, &mapping)).div_ceil(nb));
+            if env > bk.0 {
+                continue;
+            }
+        }
+        if let Some(cand) = evaluate(cfg, mapping, m, k, n) {
+            match &best {
+                Some((bk, _)) if cand.0 >= *bk => {}
+                _ => best = Some(cand),
+            }
+        }
+    }
+    best.map(|(_, r)| r)
 }
 
 /// Fingerprint of every config field the mapping search reads: the
@@ -246,13 +298,28 @@ impl MapperCache {
     /// outside any lock (the search is pure; racing threads at worst
     /// duplicate work and insert equal values — first insert wins).
     pub fn resolve(&self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
+        self.resolve_seeded(cfg, m, k, n, None)
+    }
+
+    /// [`MapperCache::resolve`] with a seed mapping forwarded to
+    /// [`search_seeded`] on a miss. Cache contents are hint-independent
+    /// (the seeded search returns the identical winner), so hits and
+    /// seeded misses interleave safely across threads.
+    pub fn resolve_seeded(
+        &self,
+        cfg: &ChipConfig,
+        m: u64,
+        k: u64,
+        n: u64,
+        hint: Option<Mapping>,
+    ) -> Option<Resolved> {
         let key: MapKey = (fingerprint(cfg), m, k, n);
         let shard = &self.shards[shard_of(&key)];
         if let Some(v) = shard.read().expect("mapper shard poisoned").get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *v;
         }
-        let v = search(cfg, m, k, n);
+        let v = search_seeded(cfg, m, k, n, hint);
         self.misses.fetch_add(1, Ordering::Relaxed);
         *shard
             .write()
@@ -286,6 +353,44 @@ impl MapperCache {
 /// [`MapperCache`] — the planner's entry point.
 pub fn resolve(cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
     MapperCache::global().resolve(cfg, m, k, n)
+}
+
+/// A mapper handle that remembers the last winning [`Mapping`] and seeds
+/// the next resolution with it (DESIGN.md §12). Adjacent layer shapes
+/// within one workload overwhelmingly share their winner — transformer
+/// blocks repeat three or four GEMM shapes, ResNet stages drift slowly
+/// in (M, K, N) — so the seeded search usually establishes a tight
+/// incumbent on its first evaluation and prunes most of the remaining
+/// candidates' tiling enumerations.
+///
+/// Purely an accelerator: results are bit-identical to the unseeded
+/// search (see [`search_seeded`]), so per-worker instances with
+/// different traversal orders still produce one canonical plan.
+pub struct IncrementalMapper<'a> {
+    cache: &'a MapperCache,
+    hint: Option<Mapping>,
+}
+
+impl<'a> IncrementalMapper<'a> {
+    pub fn new(cache: &'a MapperCache) -> Self {
+        IncrementalMapper { cache, hint: None }
+    }
+
+    /// An incremental view of the process-wide cache.
+    pub fn global() -> IncrementalMapper<'static> {
+        IncrementalMapper::new(MapperCache::global())
+    }
+
+    /// Memoized seeded resolution; updates the hint from the winner
+    /// (cache hits included — a hit is still the shape's true winner
+    /// and the best available seed for the next shape).
+    pub fn resolve(&mut self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
+        let r = self.cache.resolve_seeded(cfg, m, k, n, self.hint);
+        if let Some((mapping, _)) = r {
+            self.hint = Some(mapping);
+        }
+        r
+    }
 }
 
 #[cfg(test)]
@@ -371,5 +476,48 @@ mod tests {
         for (m, k, n) in [(1, 128, 256), (6, 3072, 3072), (49, 4608, 512), (196, 64, 384)] {
             assert_eq!(search(&cfg, m, k, n), search(&cfg, m, k, n));
         }
+    }
+
+    #[test]
+    fn seeded_search_matches_canonical_for_every_hint() {
+        // The seeding must be a pure accelerator: whatever mapping is
+        // offered as the hint — right, wrong, or geometry-mismatched —
+        // the winner is the canonical one.
+        for cfg in [ChipConfig::voltra(), ChipConfig::array2d()] {
+            for (m, k, n) in [(1, 3072, 3072), (196, 512, 256), (512, 768, 768), (7, 7, 7)] {
+                let canonical = search(&cfg, m, k, n);
+                assert_eq!(search_seeded(&cfg, m, k, n, None), canonical);
+                for hint in candidate_mappings(ChipConfig::voltra().array) {
+                    assert_eq!(
+                        search_seeded(&cfg, m, k, n, Some(hint)),
+                        canonical,
+                        "hint {hint:?} changed the winner for ({m},{k},{n})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_mapper_agrees_with_plain_resolution() {
+        // Walk a ResNet-ish shape drift through one incremental handle;
+        // every resolution must equal the unseeded search, and the cache
+        // must fill exactly once per distinct shape.
+        let cache = MapperCache::new();
+        let cfg = ChipConfig::voltra();
+        let mut inc = IncrementalMapper::new(&cache);
+        let shapes = [
+            (3136u64, 64u64, 64u64),
+            (3136, 576, 64),
+            (784, 128, 128),
+            (784, 1152, 128),
+            (3136, 64, 64), // revisit: cache hit, hint still updates
+        ];
+        for &(m, k, n) in &shapes {
+            assert_eq!(inc.resolve(&cfg, m, k, n), search(&cfg, m, k, n));
+        }
+        assert_eq!(cache.len(), 4);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 4));
     }
 }

@@ -9,4 +9,4 @@ pub mod mapper;
 
 pub use allocator::{fits, place, Footprint, Operand, Placement};
 pub use engine::{choose_tiling, compulsory_traffic, traffic_bytes, Tiling};
-pub use mapper::MapperCache;
+pub use mapper::{IncrementalMapper, MapperCache};

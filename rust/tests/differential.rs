@@ -1,0 +1,172 @@
+//! Differential fuzz of the steady-state fast path (DESIGN.md §12).
+//!
+//! The row-recurrence jump in `sim::engine` must be *bit-identical* to
+//! the per-cycle reference walk — not approximately right, identical in
+//! every `TileMetrics` field — wherever the eligibility predicate lets
+//! it run, and ineligible specs must take the reference fallback. The
+//! generator, PRNG and config pool mirror the Python oracle
+//! (`python/tests/test_fastpath_differential.py`) line for line, so the
+//! same seed exercises the same `(config, spec)` stream in both
+//! languages.
+
+use voltra::config::ChipConfig;
+use voltra::sim::{
+    fast_path_eligible, simulate_tile, simulate_tile_fast, simulate_tile_reference, TileSpec,
+};
+
+/// The deterministic PRNG shared with the Python oracle: a 64-bit LCG
+/// (Knuth's MMIX multiplier) whose top bits are the output.
+struct Lcg {
+    s: u64,
+}
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        Lcg { s: seed }
+    }
+
+    fn next(&mut self) -> u64 {
+        self.s = self
+            .s
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.s >> 33
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Every config axis the tile engine reads: memory org, array geometry,
+/// prefetch, SIMD width, crossbar discipline, FIFO depth x latency and
+/// bank count.
+fn config_pool() -> Vec<(&'static str, ChipConfig)> {
+    let mut deep_fifo_slow_mem = ChipConfig::voltra();
+    deep_fifo_slow_mem.stream_fifo_depth = 16;
+    deep_fifo_slow_mem.mem_latency = 12;
+    let mut banks16 = ChipConfig::voltra();
+    banks16.num_banks = 16;
+    vec![
+        ("voltra", ChipConfig::voltra()),
+        ("no_prefetch", ChipConfig::no_prefetch()),
+        ("separated", ChipConfig::separated_memory()),
+        ("array2d", ChipConfig::array2d()),
+        ("simd64", ChipConfig::simd64()),
+        ("full_crossbar", ChipConfig::full_crossbar()),
+        ("deep_fifo_slow_mem", deep_fifo_slow_mem),
+        ("banks16", banks16),
+    ]
+}
+
+/// Random spec: dims 1..=dim_cap, every psum/spill/layout combination,
+/// folds 1/2/4/8, arbitrary region bases (bank alignment is part of the
+/// search space — collisions change the arbitration pattern).
+fn random_spec(rng: &mut Lcg, dim_cap: u64) -> TileSpec {
+    TileSpec {
+        tm: 1 + rng.below(dim_cap),
+        tk: 1 + rng.below(dim_cap),
+        tn: 1 + rng.below(dim_cap),
+        psum_in: rng.below(2) == 1,
+        spill_out: rng.below(2) == 1,
+        input_blocked: rng.below(4) != 0,
+        fold: 1u8 << rng.below(4),
+        in_base: rng.below(2048),
+        w_base: rng.below(2048),
+        p_base: rng.below(2048),
+        o_base: rng.below(2048),
+    }
+}
+
+/// One differential probe; returns the rows the fast path jumped.
+fn check_one(name: &str, cfg: &ChipConfig, spec: &TileSpec) -> u64 {
+    let refm = simulate_tile_reference(cfg, spec);
+    let (fast, jumped) = simulate_tile_fast(cfg, spec);
+    assert_eq!(
+        refm, fast,
+        "fast path diverged on {name} spec={spec:?} jumped={jumped}"
+    );
+    // The dispatcher must agree with both sides of its own branch.
+    assert_eq!(simulate_tile(cfg, spec), refm, "{name} dispatcher diverged");
+    jumped
+}
+
+/// Shared fuzz driver (the Python oracle's `run_fuzz`, same sampling
+/// order): returns (specs that jumped, total rows jumped, ineligible
+/// specs seen).
+fn run_fuzz(samples: u64, dim_cap: u64, seed: u64) -> (u64, u64, u64) {
+    let mut rng = Lcg::new(seed);
+    let pool = config_pool();
+    let mut specs_jumped = 0u64;
+    let mut rows_jumped = 0u64;
+    let mut ineligible = 0u64;
+    for _ in 0..samples {
+        let (name, cfg) = &pool[rng.below(pool.len() as u64) as usize];
+        let spec = random_spec(&mut rng, dim_cap);
+        let j = check_one(name, cfg, &spec);
+        rows_jumped += j;
+        if j > 0 {
+            specs_jumped += 1;
+        }
+        // Ineligible specs are counted, not asserted jump-free: the
+        // predicate is deliberately one row more conservative than the
+        // jump's own landing guard. What matters — the dispatcher taking
+        // the reference walk for them — is pinned inside `check_one`.
+        if !fast_path_eligible(cfg, &spec) {
+            ineligible += 1;
+        }
+    }
+    (specs_jumped, rows_jumped, ineligible)
+}
+
+#[test]
+fn fast_path_is_bit_identical_under_fuzz() {
+    // Debug builds (the plain CI test leg) run the Python-oracle-sized
+    // sample; release builds (the `--release` CI leg) run the full
+    // dims-to-256 soak. dim_cap 128 is the smallest cap at which the
+    // random sample reliably contains steady tiles deep enough to jump.
+    let (samples, dim_cap) = if cfg!(debug_assertions) {
+        (120, 128)
+    } else {
+        (400, 256)
+    };
+    let (specs_jumped, rows_jumped, ineligible) = run_fuzz(samples, dim_cap, 0xC0FFEE);
+    assert!(specs_jumped > 0, "sample never exercised a jump");
+    assert!(rows_jumped > 0);
+    assert!(
+        ineligible > 0,
+        "sample never exercised the ineligible fallback"
+    );
+}
+
+#[test]
+fn eligibility_gates_and_fallback_agree() {
+    let cfg = ChipConfig::voltra();
+    // One subtile row: nothing to recur over.
+    assert!(!fast_path_eligible(&cfg, &TileSpec::simple(8, 64, 64)));
+    // GEMV fold-8 collapses to a single row: ineligible by construction.
+    assert!(!fast_path_eligible(&cfg, &TileSpec::folded(1, 128, 256, 8)));
+    // Many rows: eligible.
+    assert!(fast_path_eligible(&cfg, &TileSpec::simple(64, 512, 64)));
+    for spec in [TileSpec::simple(8, 64, 64), TileSpec::folded(1, 128, 256, 8)] {
+        assert_eq!(
+            simulate_tile(&cfg, &spec),
+            simulate_tile_reference(&cfg, &spec),
+            "ineligible spec must take the reference walk"
+        );
+    }
+}
+
+#[test]
+fn steady_suite_tiles_jump_and_match() {
+    // The planner-realistic shapes the cold-plan bench budget leans on:
+    // these must not silently regress to the walked path.
+    let cfg = ChipConfig::voltra();
+    for (tm, tk, tn) in [(128, 256, 64), (128, 512, 64), (128, 1024, 128)] {
+        let spec = TileSpec::simple(tm, tk, tn);
+        let refm = simulate_tile_reference(&cfg, &spec);
+        let (fast, jumped) = simulate_tile_fast(&cfg, &spec);
+        assert_eq!(refm, fast, "{tm}x{tk}x{tn}");
+        assert!(jumped > 0, "{tm}x{tk}x{tn}: steady tile must jump");
+    }
+}

@@ -1,0 +1,243 @@
+//! Golden per-layer snapshots of the planning + scheduling model.
+//!
+//! Every layer of all eight Fig. 6 suite workloads, planned and executed
+//! under three presets (the full chip, the separated-memory baseline and
+//! the swap-only mapper ablation), is serialized field-exactly to
+//! `tests/golden/<preset>.json` and compared against the checked-in
+//! snapshot through the runtime's own JSON parser. Any model change that
+//! shifts a single cycle, byte or MAC in any layer shows up as a diff of
+//! the specific field — the safety net under refactors like the
+//! steady-state fast path (DESIGN.md §12), which must change *nothing*
+//! here.
+//!
+//! Bless protocol: a missing snapshot file is written and the test
+//! passes (bootstrap); set `GOLDEN_BLESS=1` to intentionally regenerate
+//! after a reviewed model change. Mismatches print the first divergent
+//! workload/layer/field.
+
+use std::path::PathBuf;
+
+use voltra::config::ChipConfig;
+use voltra::metrics::LayerMetrics;
+use voltra::plan::PlanCache;
+use voltra::runtime::json::{self, Json};
+use voltra::workloads::evaluation_suite;
+
+fn presets() -> Vec<(&'static str, ChipConfig)> {
+    vec![
+        ("voltra", ChipConfig::voltra()),
+        ("separated", ChipConfig::separated_memory()),
+        ("swap_only", ChipConfig::swap_only()),
+    ]
+}
+
+fn num(v: u64) -> Json {
+    // Json numbers are f64: every counter in the model stays far below
+    // 2^53, so the round trip is exact (guarded here).
+    assert!(v < (1u64 << 53), "counter {v} would lose precision in JSON");
+    Json::Num(v as f64)
+}
+
+fn layer_json(l: &LayerMetrics) -> Json {
+    let mut tiles = std::collections::BTreeMap::new();
+    tiles.insert("total_cycles".into(), num(l.tiles.total_cycles));
+    tiles.insert("active_cycles".into(), num(l.tiles.active_cycles));
+    tiles.insert("useful_macs".into(), num(l.tiles.useful_macs));
+    tiles.insert("offered_macs".into(), num(l.tiles.offered_macs));
+    tiles.insert("bank_reads".into(), num(l.tiles.bank_reads));
+    tiles.insert("bank_writes".into(), num(l.tiles.bank_writes));
+    tiles.insert("bank_conflicts".into(), num(l.tiles.bank_conflicts));
+    tiles.insert("stall_cycles".into(), num(l.tiles.stall_cycles));
+    tiles.insert("simd_cycles".into(), num(l.tiles.simd_cycles));
+    tiles.insert("fifo_events".into(), num(l.tiles.fifo_events));
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("name".into(), Json::Str(l.name.clone()));
+    m.insert("mapping".into(), Json::Str(l.mapping.clone()));
+    m.insert("tiles".into(), Json::Obj(tiles));
+    m.insert("dma_bytes".into(), num(l.dma_bytes));
+    m.insert("dma_cycles".into(), num(l.dma_cycles));
+    m.insert("latency_cycles".into(), num(l.latency_cycles));
+    m.insert("overlap_cycles".into(), num(l.overlap_cycles));
+    m.insert("aux_cycles".into(), num(l.aux_cycles));
+    m.insert("chained_bytes".into(), num(l.chained_bytes));
+    m.insert("tile_footprint_bytes".into(), num(l.tile_footprint_bytes));
+    m.insert("macs".into(), num(l.macs));
+    Json::Obj(m)
+}
+
+/// Serialize with stable key order (BTreeMap) and integer-exact numbers
+/// — the writer half the runtime's parser never needed until now.
+fn write_json(j: &Json, out: &mut String, indent: usize) {
+    let pad = "  ".repeat(indent);
+    match j {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < (1u64 << 53) as f64 {
+                out.push_str(&format!("{}", *n as i64));
+            } else {
+                out.push_str(&format!("{n}"));
+            }
+        }
+        Json::Str(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '\r' => out.push_str("\\r"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Json::Arr(a) => {
+            if a.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push_str("[\n");
+            for (i, v) in a.iter().enumerate() {
+                out.push_str(&pad);
+                out.push_str("  ");
+                write_json(v, out, indent + 1);
+                if i + 1 < a.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&pad);
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            if m.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push_str("{\n");
+            for (i, (k, v)) in m.iter().enumerate() {
+                out.push_str(&pad);
+                out.push_str(&format!("  \"{k}\": "));
+                write_json(v, out, indent + 1);
+                if i + 1 < m.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&pad);
+            out.push('}');
+        }
+    }
+}
+
+fn render(j: &Json) -> String {
+    let mut s = String::new();
+    write_json(j, &mut s, 0);
+    s.push('\n');
+    s
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Compare two Json trees, reporting the path of the first divergence.
+fn diff(path: &str, a: &Json, b: &Json) -> Option<String> {
+    match (a, b) {
+        (Json::Obj(ma), Json::Obj(mb)) => {
+            for k in ma.keys().chain(mb.keys()) {
+                match (ma.get(k), mb.get(k)) {
+                    (Some(va), Some(vb)) => {
+                        if let Some(d) = diff(&format!("{path}.{k}"), va, vb) {
+                            return Some(d);
+                        }
+                    }
+                    _ => return Some(format!("{path}.{k}: present on one side only")),
+                }
+            }
+            None
+        }
+        (Json::Arr(aa), Json::Arr(ab)) => {
+            if aa.len() != ab.len() {
+                return Some(format!("{path}: length {} vs {}", aa.len(), ab.len()));
+            }
+            for (i, (va, vb)) in aa.iter().zip(ab).enumerate() {
+                if let Some(d) = diff(&format!("{path}[{i}]"), va, vb) {
+                    return Some(d);
+                }
+            }
+            None
+        }
+        _ => {
+            if a == b {
+                None
+            } else {
+                Some(format!("{path}: golden {a:?} vs current {b:?}"))
+            }
+        }
+    }
+}
+
+#[test]
+fn per_layer_metrics_match_golden_snapshots() {
+    let plans = PlanCache::new();
+    for (preset, cfg) in presets() {
+        let mut workloads = std::collections::BTreeMap::new();
+        for w in evaluation_suite() {
+            let report = plans.run(&cfg, &w);
+            let layers: Vec<Json> = report.metrics.layers.iter().map(layer_json).collect();
+            workloads.insert(w.name.clone(), Json::Arr(layers));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("config".into(), Json::Str(preset.into()));
+        doc.insert("workloads".into(), Json::Obj(workloads));
+        let current = Json::Obj(doc);
+
+        let path = golden_dir().join(format!("{preset}.json"));
+        let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
+        if bless || !path.exists() {
+            std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
+            std::fs::write(&path, render(&current)).expect("write golden snapshot");
+            eprintln!("blessed golden snapshot {}", path.display());
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).expect("read golden snapshot");
+        let golden = json::parse(&text).unwrap_or_else(|e| {
+            panic!("golden snapshot {} is not valid JSON: {e}", path.display())
+        });
+        if let Some(d) = diff(preset, &golden, &current) {
+            panic!(
+                "golden snapshot mismatch ({}): {d}\n\
+                 If the model change is intentional and reviewed, regenerate with \
+                 GOLDEN_BLESS=1 cargo test --test golden_snapshots",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_writer_round_trips_through_the_parser() {
+    // The snapshot only protects what the parser can faithfully read
+    // back: pin the writer/parser round trip on a representative layer.
+    let l = LayerMetrics {
+        name: "conv_1x1 \"edge\"".into(),
+        mapping: "8x8x8+1x8x64T".into(),
+        tiles: Default::default(),
+        dma_bytes: 123_456_789_012,
+        dma_cycles: 42,
+        latency_cycles: 7,
+        overlap_cycles: 0,
+        aux_cycles: 9,
+        chained_bytes: 1,
+        tile_footprint_bytes: 131072,
+        macs: u64::MAX >> 12,
+    };
+    let j = layer_json(&l);
+    let parsed = json::parse(&render(&j)).expect("writer output must parse");
+    assert_eq!(parsed, j);
+    assert!(diff("layer", &j, &parsed).is_none());
+}

@@ -12,8 +12,9 @@
 use std::sync::Arc;
 
 use voltra::config::ChipConfig;
-use voltra::coordinator::{run_suite_planned, run_workload, TileCache};
+use voltra::coordinator::{run_suite_planned, run_workload, SharedTileCache, TileCache};
 use voltra::plan::{self, PlanCache};
+use voltra::tiling::mapper::MapperCache;
 use voltra::workloads::evaluation_suite;
 
 #[test]
@@ -105,6 +106,103 @@ fn concurrent_planners_agree_on_one_canonical_plan() {
     let again = plans.plan(&cfg, &w);
     assert!(Arc::ptr_eq(&canonical, &again));
     assert_eq!(plans.len(), 1);
+}
+
+#[test]
+fn parallel_compiled_plans_are_byte_equal_to_sequential_for_the_suite() {
+    // PR 6 tentpole acceptance: fanning layer planning over a scoped
+    // pool (what `PlanCache::plan_named` now does on every cold plan)
+    // must change nothing — the WorkloadPlan IR, field for field, run
+    // for run, residency decision for residency decision, compares
+    // equal to the sequential build at every thread count.
+    for cfg in [ChipConfig::voltra(), ChipConfig::separated_memory()] {
+        for w in evaluation_suite() {
+            let seq_tiles = SharedTileCache::new();
+            let mut handle = &seq_tiles;
+            let seq = plan::build(&cfg, &w, &mut handle);
+            for threads in [1usize, 2, 8] {
+                let tiles = SharedTileCache::new();
+                let par = plan::build_parallel(&cfg, &w, &tiles, threads);
+                assert_eq!(par, seq, "{}: threads={threads} diverged", w.name);
+                assert_eq!(
+                    tiles.len(),
+                    seq_tiles.len(),
+                    "{}: parallel build simulated a different tile set",
+                    w.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_tile_cache_stats_stay_coherent_under_parallel_builds() {
+    // Hits + misses must equal the total simulate() calls the planner
+    // made, and the distinct-spec count can never exceed the misses
+    // (racing threads may duplicate a miss, never invent one).
+    let cfg = ChipConfig::voltra();
+    let w = voltra::workloads::by_name("resnet50").unwrap();
+    let tiles = SharedTileCache::new();
+    let par = plan::build_parallel(&cfg, &w, &tiles, 8);
+    let s = tiles.stats();
+    assert!(s.misses >= tiles.len() as u64, "misses {} < distinct {}", s.misses, tiles.len());
+    assert!(!tiles.is_empty(), "resnet50 must simulate tiles");
+    assert_eq!(par.unique_tiles, tiles.len());
+    // A second, warm build touches no new specs: misses stay flat.
+    let warm = plan::build_parallel(&cfg, &w, &tiles, 8);
+    assert_eq!(warm, par);
+    assert_eq!(tiles.stats().misses, s.misses, "warm build must re-simulate nothing");
+    assert!(tiles.stats().hits > s.hits);
+}
+
+#[test]
+fn mapper_cache_stats_stay_coherent_under_parallel_builds() {
+    // The per-worker IncrementalMapper seeds go through one shared
+    // MapperCache: every distinct (fingerprint, shape) resolves at most
+    // once per miss, warm resolutions only add hits, and the resolved
+    // winners match the unseeded search.
+    let cfg = ChipConfig::voltra();
+    let w = voltra::workloads::by_name("resnet50").unwrap();
+    let mapper = MapperCache::new();
+    let mut shapes: Vec<(u64, u64, u64)> = Vec::new();
+    for l in &w.layers {
+        for g in l.gemms() {
+            shapes.push((g.m, g.k, g.n));
+        }
+    }
+    std::thread::scope(|s| {
+        for worker in 0..4usize {
+            let shapes = &shapes;
+            let mapper = &mapper;
+            let cfg = &cfg;
+            s.spawn(move || {
+                let mut inc = voltra::tiling::IncrementalMapper::new(mapper);
+                // Different traversal orders → different hint chains.
+                let iter: Box<dyn Iterator<Item = &(u64, u64, u64)>> = if worker % 2 == 0 {
+                    Box::new(shapes.iter())
+                } else {
+                    Box::new(shapes.iter().rev())
+                };
+                for &(m, k, n) in iter {
+                    let got = inc.resolve(cfg, m, k, n);
+                    assert_eq!(
+                        got,
+                        voltra::tiling::mapper::search(cfg, m, k, n),
+                        "seeded winner diverged on ({m},{k},{n})"
+                    );
+                }
+            });
+        }
+    });
+    let s = mapper.stats();
+    let distinct: std::collections::HashSet<_> = shapes.iter().collect();
+    assert!(mapper.len() <= distinct.len());
+    assert!(s.misses >= mapper.len() as u64);
+    assert_eq!(
+        s.hits + s.misses,
+        4 * shapes.len() as u64,
+        "every resolve must count exactly one hit or miss"
+    );
 }
 
 #[test]
