@@ -213,7 +213,7 @@ pub fn run_layer<C: SimCache>(cfg: &ChipConfig, layer: &Layer, cache: &mut C) ->
 }
 
 /// Like [`run_layer`], also returning the number of dispatched tiles.
-pub fn run_layer_counted<C: SimCache>(
+pub(crate) fn run_layer_counted<C: SimCache>(
     cfg: &ChipConfig,
     layer: &Layer,
     cache: &mut C,

@@ -4,10 +4,12 @@
 //! Wire protocol (line-oriented, one request per line):
 //!     GEMM <m> <k> <n> <seed>\n
 //!     WORKLOAD <name>\n
+//!     LINT <name>\n
 //! Responses:
 //!     OK checksum=<u64> us=<micros> sim_cycles=<u64> sim_us=<f64>\n
 //!     OK workload=<name> latency_cycles=<u64> compute_cycles=<u64>
 //!        dma_cycles=<u64> dma_kb=<u64> tiles=<u64> sim_ms=<f64>\n
+//!     OK lint workload=<name> findings=<u64>\n
 //! A GEMM request executes the request's numerics (deterministic
 //! operands from the seed) and, in parallel, reports what the chip model
 //! says the same GEMM would cost on silicon. A WORKLOAD request answers
@@ -87,8 +89,15 @@ enum Parsed {
     Workload {
         name: String,
     },
+    Lint {
+        name: String,
+    },
     Quit,
 }
+
+/// The usage line sent back for any request the parser cannot shape.
+const USAGE: &str =
+    "ERR expected: GEMM <m> <k> <n> <seed> | WORKLOAD <name> | LINT <name> | QUIT";
 
 /// Parse one request line; `Err` carries the full `ERR ...` response.
 fn parse_request(line: &str) -> std::result::Result<Parsed, String> {
@@ -109,8 +118,11 @@ fn parse_request(line: &str) -> std::result::Result<Parsed, String> {
         ["WORKLOAD", name] => Ok(Parsed::Workload {
             name: (*name).to_string(),
         }),
+        ["LINT", name] => Ok(Parsed::Lint {
+            name: (*name).to_string(),
+        }),
         ["QUIT"] => Ok(Parsed::Quit),
-        _ => Err("ERR expected: GEMM <m> <k> <n> <seed> | WORKLOAD <name> | QUIT".to_string()),
+        _ => Err(USAGE.to_string()),
     }
 }
 
@@ -158,7 +170,7 @@ fn run_numerics(
 
 /// What the chip would cost for this GEMM (memoized cycle model; safe to
 /// call from many threads at once).
-pub fn sim_cost(
+pub(crate) fn sim_cost(
     cfg: &ChipConfig,
     cache: &SharedTileCache,
     m: usize,
@@ -180,7 +192,7 @@ pub fn sim_cost(
 }
 
 /// Execute one GEMM request end to end: numerics + chip-model timing.
-pub fn serve_gemm(
+pub(crate) fn serve_gemm(
     backend: &mut impl GemmBackend,
     cfg: &ChipConfig,
     cache: &SharedTileCache,
@@ -236,6 +248,26 @@ fn serve_workload(cfg: &ChipConfig, plans: &PlanCache, name: &str) -> String {
     }
 }
 
+/// Resolve one LINT request: plan (or reuse) the named workload, then
+/// run the static verifier (`plan::verify`, DESIGN.md §13) against it.
+/// The response is deterministic: a clean plan always answers
+/// `OK lint workload=<name> findings=0`; a corrupt plan would enumerate
+/// its findings as `rule@layer` pairs after the count.
+fn serve_lint(cfg: &ChipConfig, plans: &PlanCache, name: &str) -> String {
+    let Some(w) = workloads::by_name(name) else {
+        return format!("ERR unknown workload {name:?}");
+    };
+    let plan = plans
+        .plan_named(cfg, name, || Some(w.clone()))
+        .expect("resolver always yields the workload");
+    let findings = crate::plan::verify(cfg, &w, &plan);
+    let mut resp = format!("OK lint workload={} findings={}", name, findings.len());
+    for f in &findings {
+        resp.push_str(&format!(" {}@{}", f.rule, f.layer));
+    }
+    resp
+}
+
 /// Serve one connection with the backend on the current thread.
 fn handle_sequential(
     stream: TcpStream,
@@ -257,6 +289,9 @@ fn handle_sequential(
             }
             Ok(Parsed::Workload { name }) => {
                 writeln!(out, "{}", serve_workload(cfg, plans, &name))?;
+            }
+            Ok(Parsed::Lint { name }) => {
+                writeln!(out, "{}", serve_lint(cfg, plans, &name))?;
             }
             Ok(Parsed::Quit) => break,
             Err(resp) => writeln!(out, "{resp}")?,
@@ -327,6 +362,9 @@ fn handle_concurrent(
             }
             Ok(Parsed::Workload { name }) => {
                 writeln!(out, "{}", serve_workload(cfg, plans, &name))?;
+            }
+            Ok(Parsed::Lint { name }) => {
+                writeln!(out, "{}", serve_lint(cfg, plans, &name))?;
             }
             Ok(Parsed::Quit) => break,
             Err(resp) => writeln!(out, "{resp}")?,
@@ -528,6 +566,12 @@ mod tests {
                 name: "bert".to_string()
             })
         );
+        assert_eq!(
+            parse_request("LINT bert"),
+            Ok(Parsed::Lint {
+                name: "bert".to_string()
+            })
+        );
         let e = parse_request("GEMM a b c 1").unwrap_err();
         assert!(e.starts_with("ERR bad integer"), "{e}");
         let e = parse_request("GEMM 8 8 8").unwrap_err();
@@ -535,6 +579,8 @@ mod tests {
         let e = parse_request("NONSENSE").unwrap_err();
         assert!(e.starts_with("ERR expected"), "{e}");
         let e = parse_request("WORKLOAD").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        let e = parse_request("LINT").unwrap_err();
         assert!(e.starts_with("ERR expected"), "{e}");
         // A negative dimension is a bad integer for usize, not a usage error.
         let e = parse_request("GEMM -8 8 8 1").unwrap_err();
@@ -577,6 +623,21 @@ mod tests {
         assert_eq!(s.misses, 1, "second request must reuse the plan");
         assert!(s.hits >= 1);
         let e = serve_workload(&cfg, &plans, "nope");
+        assert!(e.starts_with("ERR unknown workload"), "{e}");
+    }
+
+    #[test]
+    fn serve_lint_reports_clean_plans_and_unknown_names() {
+        let cfg = ChipConfig::voltra();
+        let plans = PlanCache::new();
+        let r = serve_lint(&cfg, &plans, "lstm");
+        assert_eq!(r, "OK lint workload=lstm findings=0");
+        // Answered from the same cache: linting after serving replans nothing.
+        let before = plans.stats().misses;
+        let again = serve_lint(&cfg, &plans, "lstm");
+        assert_eq!(r, again);
+        assert_eq!(plans.stats().misses, before);
+        let e = serve_lint(&cfg, &plans, "nope");
         assert!(e.starts_with("ERR unknown workload"), "{e}");
     }
 }

@@ -29,6 +29,13 @@
 //!   numerics through the PJRT CPU client behind the pluggable
 //!   [`runtime::GemmBackend`] seam; Python never runs at runtime.
 
+// Static-analysis posture (DESIGN.md §13): the model is pure safe Rust —
+// any future `unsafe` must arrive as a deliberate, reviewed exception —
+// and every `pub` item must actually be reachable from outside the
+// crate, so the public API surface stays the one DESIGN.md documents.
+#![forbid(unsafe_code)]
+#![deny(unreachable_pub)]
+
 pub mod arch;
 pub mod config;
 pub mod coordinator;

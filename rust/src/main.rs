@@ -24,6 +24,13 @@ COMMANDS:
     info                         print the chip specification (Fig. 5)
     run --workload <name>        run one workload through the simulator
     suite                        run the full Fig. 6 evaluation suite
+    lint                         statically verify compiled plans against
+                                 the hardware invariant catalog
+                                 (DESIGN.md §13); exits 1 on findings.
+                                 Default: all eight suite workloads;
+                                 --workload <name> checks one,
+                                 --json prints machine-readable findings,
+                                 --selftest corrupts a plan on purpose
     sweep                        run all eight networks across a thread
                                  pool sharing one tile cache
     shmoo                        print the Fig. 7a shmoo grid
@@ -395,6 +402,82 @@ fn cmd_artifacts(dir: &str) {
     }
 }
 
+/// `voltra lint`: build each requested workload's plan and statically
+/// verify it against the invariant catalog (DESIGN.md §13). Stdout is
+/// deterministic (no timings, no cache counters), so the plumbing
+/// itself is golden-tested in `tests/lint_cli.rs`; exit code 1 when any
+/// finding surfaces.
+fn cmd_lint(cfg: &ChipConfig, flags: &HashMap<String, String>) {
+    if flags.contains_key("selftest") {
+        lint_selftest(cfg);
+    }
+    let suite: Vec<workloads::Workload> = match flags.get("workload") {
+        Some(name) => match workloads::by_name(name) {
+            Some(w) => vec![w],
+            None => {
+                eprintln!("unknown workload {name:?}");
+                usage();
+            }
+        },
+        None => workloads::evaluation_suite(),
+    };
+    let json = flags.contains_key("json");
+    let plans = voltra::PlanCache::new();
+    let mut all = Vec::new();
+    for w in &suite {
+        let plan = plans.plan(cfg, w);
+        let findings = voltra::plan::verify(cfg, w, &plan);
+        if !json {
+            if findings.is_empty() {
+                println!(
+                    "lint {:<22} clean ({} layers, {} tiles dispatched)",
+                    w.name,
+                    plan.layers.len(),
+                    plan.dispatched_tiles
+                );
+            } else {
+                println!("lint {:<22} {} finding(s)", w.name, findings.len());
+                for f in &findings {
+                    println!("  {f}");
+                }
+            }
+        }
+        all.extend(findings);
+    }
+    if json {
+        println!("{}", voltra::plan::verify::findings_json(&all).render());
+    } else {
+        println!("lint: {} workload(s), {} finding(s)", suite.len(), all.len());
+    }
+    if !all.is_empty() {
+        std::process::exit(1);
+    }
+}
+
+/// `voltra lint --selftest`: deliberately corrupt a freshly built plan
+/// and prove the verifier catches it — the CLI-level nonzero-exit path,
+/// exercised end to end by `tests/lint_cli.rs`. Exits 1 when the
+/// corruption is caught (findings exist), 2 if the verifier missed it.
+fn lint_selftest(cfg: &ChipConfig) -> ! {
+    let w = workloads::by_name("lstm").expect("lstm is a suite workload");
+    let mut cache = voltra::TileCache::new();
+    let mut plan = voltra::plan::build(cfg, &w, &mut cache);
+    plan.layers[0].macs += 1; // seeded single-field corruption
+    let findings = voltra::plan::verify(cfg, &w, &plan);
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("lint selftest: verifier MISSED the seeded corruption");
+        std::process::exit(2);
+    }
+    println!(
+        "lint selftest: verifier caught the seeded corruption ({} finding(s))",
+        findings.len()
+    );
+    std::process::exit(1);
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
@@ -412,6 +495,10 @@ fn main() {
         "suite" => {
             let cfg = config_from(&flags);
             cmd_suite(&cfg);
+        }
+        "lint" => {
+            let cfg = config_from(&flags);
+            cmd_lint(&cfg, &flags);
         }
         "sweep" => {
             let cfg = config_from(&flags);
@@ -458,7 +545,7 @@ fn main() {
                     }
                 };
             println!(
-                "voltra serving on {} — protocol: GEMM <m> <k> <n> <seed> | WORKLOAD <name>",
+                "voltra serving on {} — protocol: GEMM <m> <k> <n> <seed> | WORKLOAD <name> | LINT <name>",
                 listener.local_addr().unwrap()
             );
             // The backend is constructed on the dedicated numerics worker

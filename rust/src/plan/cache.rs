@@ -146,6 +146,12 @@ impl PlanCache {
             .unwrap_or(1)
             .min(8);
         let built = Arc::new(super::build_parallel(cfg, &w, &tiles, threads));
+        // Debug/test builds statically verify every plan before it can
+        // be cached (DESIGN.md §13) — any invariant violation panics at
+        // the insert instead of surfacing as a wrong number downstream.
+        if cfg!(debug_assertions) {
+            super::verify::assert_clean(cfg, &w, &built);
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
         // First insert wins: racing planners agree on one canonical plan.
         let mut map = shard.write().expect("plan shard poisoned");

@@ -31,8 +31,10 @@
 pub mod cache;
 pub mod planner;
 pub mod residency;
+pub mod verify;
 
 pub use cache::{fingerprint, PlanCache};
+pub use verify::{verify, LintFinding, Severity};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

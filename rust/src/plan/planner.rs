@@ -31,7 +31,7 @@ use crate::workloads::{Layer, LayerKind};
 use super::{LayerPlan, ResidencyDecision};
 
 /// Bytes of feature map a conv layer must reshuffle (HWC -> C/8HWC8).
-fn reshuffle_bytes(layer: &Layer) -> u64 {
+pub(crate) fn reshuffle_bytes(layer: &Layer) -> u64 {
     match layer.kind {
         LayerKind::Conv2d {
             h, w, cin, kh, kw, ..
@@ -49,6 +49,32 @@ fn edge(d: u64, t: u64) -> (u64, u64, u64) {
         (full, 0, 0)
     } else {
         (full, 1, rem)
+    }
+}
+
+/// Off-chip traffic bytes one GEMM moves under its resolved tiling —
+/// the planner's DMA byte envelope and the single authority the static
+/// verifier re-derives ([`super::verify`], rule `dma-byte-conservation`).
+/// `g` is the *post-swap* GEMM (the orientation the tiling was sized
+/// for). PDMA weight residency: if the whole weight operand fits in the
+/// memory the organisation can give it, recurrent repeats stream the
+/// weights once instead of every step. The separated baseline is capped
+/// by its fixed weight buffer.
+pub(crate) fn gemm_traffic_bytes(
+    cfg: &ChipConfig,
+    g: &crate::workloads::GemmOp,
+    tiling: &crate::tiling::Tiling,
+) -> u64 {
+    let parts = traffic_parts(g.m, g.k, g.n, tiling.tm, tiling.tk, tiling.tn);
+    let weight_budget = match cfg.memory {
+        crate::config::MemoryOrg::Shared => 3 * cfg.memory.total_bytes() as u64 / 4,
+        crate::config::MemoryOrg::Separated { weight, .. } => weight as u64,
+    };
+    let w_groups = g.repeat / g.weight_reuse.max(1);
+    if g.weight_reuse > 1 && g.k * g.n <= weight_budget {
+        (parts.input + parts.psum + parts.output) * g.repeat + parts.weight * w_groups
+    } else {
+        parts.total() * g.repeat
     }
 }
 
@@ -224,21 +250,7 @@ pub fn plan_layer_mapped<C: SimCache>(
 
         plan.dispatched_tiles += dispatched;
         plan.aux_cycles += dispatched * csr_cycles;
-        // PDMA weight residency: if the whole weight operand fits in the
-        // memory the organisation can give it, recurrent repeats stream
-        // the weights once instead of every step. The separated baseline
-        // is capped by its fixed weight buffer.
-        let parts = traffic_parts(g.m, g.k, g.n, tiling.tm, tiling.tk, tiling.tn);
-        let weight_budget = match cfg.memory {
-            crate::config::MemoryOrg::Shared => 3 * cfg.memory.total_bytes() as u64 / 4,
-            crate::config::MemoryOrg::Separated { weight, .. } => weight as u64,
-        };
-        let w_groups = g.repeat / g.weight_reuse.max(1);
-        let gemm_traffic = if g.weight_reuse > 1 && g.k * g.n <= weight_budget {
-            (parts.input + parts.psum + parts.output) * g.repeat + parts.weight * w_groups
-        } else {
-            parts.total() * g.repeat
-        };
+        let gemm_traffic = gemm_traffic_bytes(cfg, &g, &tiling);
         plan.dma_bytes += gemm_traffic;
         plan.tile_footprint_bytes = plan.tile_footprint_bytes.max(tiling.footprint.total() as u64);
         plan.macs += g.macs();
@@ -279,7 +291,7 @@ pub fn plan_layer_mapped<C: SimCache>(
 /// convenience APIs and the server's per-request sim cost.
 ///
 /// [`run_layer`]: crate::coordinator::run_layer
-pub fn plan_layer_metrics<C: SimCache>(
+pub(crate) fn plan_layer_metrics<C: SimCache>(
     cfg: &ChipConfig,
     layer: &Layer,
     cache: &mut C,

@@ -41,7 +41,7 @@ use super::LayerPlan;
 /// Mirror of the [`activation_in_bytes`] fused rule: only the LAST GEMM
 /// of a fused bundle produces the activation the successor reads — the
 /// earlier outputs are on-chip intermediates consumed inside the layer.
-pub fn activation_out_bytes(layer: &Layer) -> u64 {
+pub(crate) fn activation_out_bytes(layer: &Layer) -> u64 {
     if let LayerKind::Fused(ref gemms) = layer.kind {
         return gemms.last().map(|&(m, _, n)| m * n).unwrap_or(0);
     }
@@ -58,7 +58,7 @@ pub fn activation_out_bytes(layer: &Layer) -> u64 {
 /// activation — the later GEMMs of the bundle consume on-chip
 /// intermediates produced inside the layer — so chaining must not count
 /// their inputs (summing every `m * k` overcounted the savings).
-pub fn activation_in_bytes(layer: &Layer) -> u64 {
+pub(crate) fn activation_in_bytes(layer: &Layer) -> u64 {
     match layer.kind {
         LayerKind::Conv2d { h, w, cin, .. } => h * w * cin,
         LayerKind::DepthwiseConv { h, w, c, .. } => h * w * c,
@@ -67,6 +67,64 @@ pub fn activation_in_bytes(layer: &Layer) -> u64 {
         LayerKind::Fused(ref gemms) => gemms.first().map(|&(m, k, _)| m * k).unwrap_or(0),
         LayerKind::Pool { h, w, c, .. } => h * w * c,
     }
+}
+
+/// The activation region's capacity: whatever the two-region allocator
+/// does not hold back for live tiles + ping-pong grants.
+pub(crate) fn activation_region_bytes(cfg: &ChipConfig) -> u64 {
+    let capacity = cfg.memory.total_bytes() as u64;
+    capacity - capacity / 2
+}
+
+/// The pure per-layer chaining decision: given the activation bytes the
+/// predecessor left resident and this layer's planned DMA envelope,
+/// return the [`ResidencyDecision`] plus the trimmed `(dma_bytes,
+/// dma_cycles)` totals. This is the single authority replayed by the
+/// static verifier ([`super::verify`], rule `residency-legality`), so
+/// [`apply`] must stay a thin driver around it.
+///
+/// Saved bytes: the predecessor's output write + our input read, once
+/// per layer invocation (not per repeat: recurrent steps re-chain every
+/// iteration), capped at half the layer's off-chip traffic — weights and
+/// psum spills still move. The product saturates: a pathological repeat
+/// count must degrade to the cap, never wrap back into a small savings.
+pub(crate) fn decide(
+    cfg: &ChipConfig,
+    layer: &Layer,
+    resident_in: u64,
+    dma_bytes: u64,
+    dma_cycles: u64,
+) -> (ResidencyDecision, u64, u64) {
+    let activation_region = activation_region_bytes(cfg);
+    let a_in = activation_in_bytes(layer);
+    let chained = resident_in.min(a_in);
+    // The eviction rule below already bounds what stays resident, so a
+    // chained region can never exceed the activation region.
+    debug_assert!(chained <= activation_region);
+    let saved = 2u64
+        .saturating_mul(chained)
+        .saturating_mul(layer.repeat)
+        .min(dma_bytes / 2);
+    let mut decision = ResidencyDecision::default();
+    let mut new_bytes = dma_bytes;
+    let mut new_cycles = dma_cycles;
+    // A chain is only recorded when it removes actual traffic — a
+    // zero-DMA layer (e.g. Pool) passing its input through must not
+    // inflate the chained-bytes metric.
+    if saved > 0 {
+        let saved_cycles = saved.div_ceil(cfg.dma_bytes_per_cycle.max(1));
+        new_cycles = dma_cycles.saturating_sub(saved_cycles);
+        decision.chained_bytes = chained;
+        decision.saved_dma_bytes = saved;
+        decision.saved_dma_cycles = dma_cycles - new_cycles;
+        new_bytes = dma_bytes - saved;
+    }
+    // What this layer leaves behind: its output stays resident only if
+    // the activation region can hold it (next to the successor's working
+    // set); otherwise it is evicted to DRAM.
+    let out = activation_out_bytes(layer);
+    decision.resident_out_bytes = if out <= activation_region { out } else { 0 };
+    (decision, new_bytes, new_cycles)
 }
 
 /// Run the residency pass over a planned layer sequence, recording the
@@ -80,48 +138,26 @@ pub fn apply(cfg: &ChipConfig, layers: &[Layer], plans: &mut [LayerPlan]) {
         return;
     }
     debug_assert_eq!(layers.len(), plans.len());
-    let capacity = cfg.memory.total_bytes() as u64;
-    // The allocator's floor for live tiles + ping-pong grants; the
-    // activation region gets the rest.
-    let working_reserve = capacity / 2;
-    let activation_region = capacity - working_reserve;
-
     // Activation bytes currently resident from the previous layer.
     let mut resident: u64 = 0;
     for (layer, plan) in layers.iter().zip(plans.iter_mut()) {
-        let a_in = activation_in_bytes(layer);
-        let chained = resident.min(a_in);
-        // The eviction rule below already bounds what stays resident, so
-        // a chained region can never exceed the activation region.
-        debug_assert!(chained <= activation_region);
-        // Saved: the predecessor's output write + our input read, once
-        // per layer invocation (not per repeat: recurrent steps re-chain
-        // every iteration). A chain is only recorded when it removes
-        // actual traffic — a zero-DMA layer (e.g. Pool) passing its
-        // input through must not inflate the chained-bytes metric.
-        let saved = (2 * chained * layer.repeat).min(plan.dma_bytes / 2);
-        if saved > 0 {
-            let saved_cycles = saved.div_ceil(cfg.dma_bytes_per_cycle.max(1));
-            let new_dma = plan.dma_cycles.saturating_sub(saved_cycles);
+        let (decision, new_bytes, new_cycles) =
+            decide(cfg, layer, resident, plan.dma_bytes, plan.dma_cycles);
+        if decision.saved_dma_bytes > 0 {
             // Trim the per-tile DMA attribution to the new total —
             // chaining shortens the transfers, it does not change the
             // overlap rules (each GEMM keeps its own ping-pong grant).
-            pipeline::scale_dma(&mut plan.timeline.gemms, new_dma);
-            plan.residency.chained_bytes = chained;
-            plan.residency.saved_dma_bytes = saved;
-            plan.residency.saved_dma_cycles = plan.dma_cycles - new_dma;
-            plan.dma_bytes -= saved;
-            plan.dma_cycles = new_dma;
+            pipeline::scale_dma(&mut plan.timeline.gemms, new_cycles);
+            plan.dma_bytes = new_bytes;
+            plan.dma_cycles = new_cycles;
+            plan.residency = decision;
             // The trimmed timeline resolves to a new latency; refresh
             // the plan's stored schedule.
             plan.reschedule();
+        } else {
+            plan.residency = decision;
         }
-        // What this layer leaves behind: its output stays resident only
-        // if the activation region can hold it (next to the successor's
-        // working set); otherwise it is evicted to DRAM.
-        let out = activation_out_bytes(layer);
-        resident = if out <= activation_region { out } else { 0 };
-        plan.residency.resident_out_bytes = resident;
+        resident = decision.resident_out_bytes;
     }
 }
 
@@ -233,6 +269,23 @@ mod tests {
         let mut cache = TileCache::new();
         let p = plan::build(&cfg, &w, &mut cache);
         assert!(p.layers.iter().all(|l| l.residency == ResidencyDecision::default()));
+    }
+
+    #[test]
+    fn pathological_repeat_saturates_to_the_traffic_cap() {
+        // Overflow audit (DESIGN.md §13): 2 * chained * repeat with
+        // repeat = u64::MAX must saturate and then degrade to the
+        // half-traffic cap — wrapping arithmetic would fold it back into
+        // a tiny (wrong, and exploitable) savings instead.
+        let cfg = ChipConfig::voltra();
+        let mut l = gemm_layer("r", 64, 64, 64);
+        l.repeat = u64::MAX;
+        let (d, new_bytes, new_cycles) = decide(&cfg, &l, 4096, 1_000_000, 500_000);
+        assert_eq!(d.chained_bytes, 4096);
+        assert_eq!(d.saved_dma_bytes, 500_000, "must clamp at dma_bytes / 2");
+        assert_eq!(new_bytes, 500_000);
+        assert_eq!(new_cycles + d.saved_dma_cycles, 500_000);
+        assert!(new_cycles < 500_000, "the trim must remove DMA cycles");
     }
 
     #[test]

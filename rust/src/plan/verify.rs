@@ -1,0 +1,906 @@
+//! Static verification of [`WorkloadPlan`]s (DESIGN.md §13).
+//!
+//! Every claim the model makes rests on the compiled plan IR respecting
+//! the paper's hardware contracts — the 8x8x8 array geometry, the
+//! 32-bank shared memory, the two-region dynamic allocator, the stream
+//! FIFO discipline. Until now those contracts were enforced only by
+//! pinned end-to-end numbers; this pass proves them *structurally*,
+//! without running the cycle engine, by re-deriving each layer's
+//! envelope from the same single-authority helpers the planner used
+//! ([`planner::gemm_traffic_bytes`], [`residency::decide`],
+//! [`mapper::resolve`], [`allocator::place`],
+//! [`pipeline::schedule_layer`]) and checking the stored plan against
+//! them field by field.
+//!
+//! Each violation is a structured [`LintFinding`] with a stable rule id
+//! (the full catalog is [`RULES`]; rule id → paper constraint →
+//! enforcement site is tabulated in DESIGN.md §13). Wired in three
+//! places:
+//!
+//! * the `voltra lint` CLI (exit nonzero on findings);
+//! * a debug-build hook at [`super::PlanCache`] insert, so every plan
+//!   ever cached is verified in debug/test builds;
+//! * the mutation rig `tests/verifier_mutations.rs`, which corrupts
+//!   single fields of valid plans and asserts each invariant class
+//!   catches its seeded corruption — a verifier never tested against
+//!   broken plans is just comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::config::{ArrayGeometry, ChipConfig, MappingSearch, MemoryOrg};
+use crate::coordinator::tile_csr_cycles;
+use crate::runtime::json::Json;
+use crate::sim::dma::transfer_cost;
+use crate::sim::gemm_core::{MAX_INPUT_CHANNELS, MAX_WEIGHT_CHANNELS};
+use crate::sim::pipeline;
+use crate::sim::reshuffler::reshuffle_cycles;
+use crate::tiling::allocator;
+use crate::tiling::mapper;
+use crate::workloads::{Layer, Workload};
+
+use super::{cache, planner, residency, LayerPlan, ResidencyDecision, WorkloadPlan};
+
+/// Finding severity. Every rule in the current catalog is an error —
+/// the enum exists so advisory rules can join without an API break.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One verified-invariant violation: which rule, where, and why.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LintFinding {
+    /// Stable rule id from [`RULES`].
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Layer (optionally `layer/gemm[i]`) the violation anchors to;
+    /// empty for plan-level rules.
+    pub layer: String,
+    pub detail: String,
+}
+
+impl fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.layer.is_empty() {
+            write!(f, "{}[{}]: {}", self.severity, self.rule, self.detail)
+        } else {
+            write!(
+                f,
+                "{}[{}] {}: {}",
+                self.severity, self.rule, self.layer, self.detail
+            )
+        }
+    }
+}
+
+impl LintFinding {
+    /// Structured form for machine consumers (the CLI's `--json` mode
+    /// and the serving engine), through the runtime's own [`Json`].
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let severity = self.severity.to_string();
+        m.insert("rule".to_string(), Json::Str(self.rule.to_string()));
+        m.insert("severity".to_string(), Json::Str(severity));
+        m.insert("layer".to_string(), Json::Str(self.layer.clone()));
+        m.insert("detail".to_string(), Json::Str(self.detail.clone()));
+        Json::Obj(m)
+    }
+}
+
+/// The invariant catalog. One entry per rule id a [`LintFinding`] can
+/// carry; DESIGN.md §13 maps each to the paper constraint it encodes.
+pub const RULES: &[&str] = &[
+    "plan-fingerprint",
+    "plan-shape",
+    "config-legality",
+    "fifo-depth",
+    "mac-conservation",
+    "tile-activity",
+    "tile-population",
+    "dma-cycle-attribution",
+    "dma-byte-conservation",
+    "dma-cycle-envelope",
+    "footprint-capacity",
+    "mapping-legality",
+    "pingpong-exclusivity",
+    "schedule-consistency",
+    "residency-legality",
+    "aux-accounting",
+    "stream-demand-bounds",
+];
+
+/// Render findings as the lint report body, one line per finding.
+pub fn render(findings: &[LintFinding]) -> String {
+    findings
+        .iter()
+        .map(|f| f.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Structured report: a JSON array of findings.
+pub fn findings_json(findings: &[LintFinding]) -> Json {
+    Json::Arr(findings.iter().map(|f| f.to_json()).collect())
+}
+
+fn push(out: &mut Vec<LintFinding>, rule: &'static str, layer: &str, detail: String) {
+    out.push(LintFinding {
+        rule,
+        severity: Severity::Error,
+        layer: layer.to_string(),
+        detail,
+    });
+}
+
+/// Statically verify `plan` against the workload it claims to compile
+/// and the config it claims to compile under. Returns every violation
+/// found; an empty vec is a machine-checked proof that the plan
+/// satisfies the full invariant catalog.
+pub fn verify(cfg: &ChipConfig, w: &Workload, plan: &WorkloadPlan) -> Vec<LintFinding> {
+    let mut out = Vec::new();
+
+    // -- config-legality / fifo-depth: the config itself must describe
+    // realizable hardware before any plan check is meaningful.
+    if cfg.array.macs() == 0 {
+        push(
+            &mut out,
+            "config-legality",
+            "",
+            "array geometry offers zero MACs".to_string(),
+        );
+    }
+    if cfg.num_banks == 0 {
+        push(
+            &mut out,
+            "config-legality",
+            "",
+            "shared memory has zero banks".to_string(),
+        );
+    }
+    if cfg.dma_bytes_per_cycle == 0 {
+        push(
+            &mut out,
+            "config-legality",
+            "",
+            "DMA bandwidth is zero bytes/cycle".to_string(),
+        );
+    }
+    if cfg.stream_fifo_depth == 0 || cfg.psum_fifo_depth == 0 {
+        push(
+            &mut out,
+            "fifo-depth",
+            "",
+            format!(
+                "stream/psum FIFO depths must be >= 1 (got {}/{}): the \
+                 streamer in-flight queue is sized from them",
+                cfg.stream_fifo_depth, cfg.psum_fifo_depth
+            ),
+        );
+    }
+
+    // -- plan-fingerprint: the plan must carry the fingerprint of the
+    // config it is being executed under (a cross-config plan reuse is
+    // exactly the bug the PlanCache keying exists to prevent).
+    let fp = cache::fingerprint(cfg);
+    if plan.fingerprint != fp {
+        push(
+            &mut out,
+            "plan-fingerprint",
+            "",
+            format!(
+                "plan fingerprint {:#x} != config fingerprint {:#x}",
+                plan.fingerprint, fp
+            ),
+        );
+    }
+
+    // -- plan-shape: layer sequence parallel to the workload.
+    if plan.workload != w.name {
+        push(
+            &mut out,
+            "plan-shape",
+            "",
+            format!("plan names workload '{}', got '{}'", plan.workload, w.name),
+        );
+    }
+    if plan.layers.len() != w.layers.len() {
+        push(
+            &mut out,
+            "plan-shape",
+            "",
+            format!(
+                "plan has {} layers, workload has {}",
+                plan.layers.len(),
+                w.layers.len()
+            ),
+        );
+        // Nothing below can be aligned layer-by-layer.
+        return out;
+    }
+    let total_dispatched: u64 = plan.layers.iter().map(|l| l.dispatched_tiles).sum();
+    if plan.dispatched_tiles != total_dispatched {
+        push(
+            &mut out,
+            "plan-shape",
+            "",
+            format!(
+                "plan dispatched_tiles {} != sum of layer counts {}",
+                plan.dispatched_tiles, total_dispatched
+            ),
+        );
+    }
+
+    for (layer, lp) in w.layers.iter().zip(plan.layers.iter()) {
+        verify_layer(cfg, layer, lp, &mut out);
+    }
+
+    verify_residency(cfg, w, plan, &mut out);
+    out
+}
+
+/// Re-derive one layer's envelope from the planner's own authorities
+/// and check every stored aggregate against it.
+fn verify_layer(cfg: &ChipConfig, layer: &Layer, lp: &LayerPlan, out: &mut Vec<LintFinding>) {
+    let at = layer.name.as_str();
+    if lp.name != layer.name {
+        push(
+            out,
+            "plan-shape",
+            at,
+            format!("plan layer named '{}'", lp.name),
+        );
+        return;
+    }
+
+    // Canonical re-resolution of every GEMM, mirroring the planner:
+    // original orientation into the mapper, swap applied to the dims the
+    // tiling was sized for, unresolvable GEMMs skipped.
+    let mut resolved = Vec::new();
+    for mut g in layer.gemms() {
+        let Some((mapping, tiling)) = mapper::resolve(cfg, g.m, g.k, g.n) else {
+            continue;
+        };
+        if mapping.swapped {
+            std::mem::swap(&mut g.m, &mut g.n);
+        }
+        resolved.push((g, mapping, tiling));
+    }
+    if lp.mappings.len() != resolved.len() || lp.timeline.gemms.len() != resolved.len() {
+        push(
+            out,
+            "mapping-legality",
+            at,
+            format!(
+                "layer lowers to {} mappable GEMMs but the plan records {} \
+                 mappings / {} timeline GEMMs",
+                resolved.len(),
+                lp.mappings.len(),
+                lp.timeline.gemms.len()
+            ),
+        );
+        // Per-GEMM alignment is gone; skip the rest of this layer.
+        return;
+    }
+
+    // -- mac-conservation: layer MACs equal the workload's analytic
+    // count, and the aggregated tile activity performed exactly them.
+    let expected_macs: u64 = resolved.iter().map(|(g, _, _)| g.macs()).sum();
+    if lp.macs != expected_macs {
+        push(
+            out,
+            "mac-conservation",
+            at,
+            format!("plan macs {} != workload macs {}", lp.macs, expected_macs),
+        );
+    }
+    if lp.tiles.useful_macs != lp.macs {
+        push(
+            out,
+            "mac-conservation",
+            at,
+            format!(
+                "dispatched tiles performed {} useful MACs, layer accounts {}",
+                lp.tiles.useful_macs, lp.macs
+            ),
+        );
+    }
+
+    // -- tile-activity: the aggregated tile counters must describe a
+    // physically possible array occupancy.
+    let array_macs = cfg.array.macs() as u64;
+    if lp.tiles.useful_macs > lp.tiles.offered_macs {
+        push(
+            out,
+            "tile-activity",
+            at,
+            format!(
+                "useful MACs {} exceed offered MACs {}",
+                lp.tiles.useful_macs, lp.tiles.offered_macs
+            ),
+        );
+    }
+    if lp.tiles.offered_macs != array_macs * lp.tiles.active_cycles {
+        push(
+            out,
+            "tile-activity",
+            at,
+            format!(
+                "offered MACs {} != array macs {} x active cycles {}",
+                lp.tiles.offered_macs, array_macs, lp.tiles.active_cycles
+            ),
+        );
+    }
+    if lp.tiles.active_cycles > lp.tiles.total_cycles {
+        push(
+            out,
+            "tile-activity",
+            at,
+            format!(
+                "active cycles {} exceed total cycles {}",
+                lp.tiles.active_cycles, lp.tiles.total_cycles
+            ),
+        );
+    }
+
+    let mut dispatched_sum = 0u64;
+    let mut traffic_sum = 0u64;
+    let mut dma_env = 0u64;
+    let mut aux_expected = 0u64;
+    let mut fp_max = 0u64;
+    for (gi, (g, mapping, tiling)) in resolved.iter().enumerate() {
+        let gat = format!("{at}/gemm[{gi}]");
+        let stored = &lp.mappings[gi];
+
+        // -- mapping-legality: the stored mapping must be structurally
+        // legal for the geometry/search mode AND equal the canonical
+        // search winner (the mapper is the single mapping authority).
+        verify_mapping_shape(cfg, stored, &gat, out);
+        if stored != mapping {
+            push(
+                out,
+                "mapping-legality",
+                &gat,
+                format!(
+                    "stored mapping {} != canonical search winner {}",
+                    stored.describe(),
+                    mapping.describe()
+                ),
+            );
+        }
+
+        // -- stream-demand-bounds: the stored mapping's per-step operand
+        // demand must fit the streamer fabric (8 fine input channels,
+        // 128-channel weight id space) and claim at least the two bank
+        // grants any step needs (one input-side, one weight-side).
+        let d = stored.demand();
+        if d.input_channels > MAX_INPUT_CHANNELS {
+            push(
+                out,
+                "stream-demand-bounds",
+                &gat,
+                format!(
+                    "mapping demands {} input channels, fabric has {}",
+                    d.input_channels, MAX_INPUT_CHANNELS
+                ),
+            );
+        }
+        if d.weight_channels > MAX_WEIGHT_CHANNELS {
+            push(
+                out,
+                "stream-demand-bounds",
+                &gat,
+                format!(
+                    "mapping demands {} weight channels, id space has {}",
+                    d.weight_channels, MAX_WEIGHT_CHANNELS
+                ),
+            );
+        }
+        if mapper::banks_per_step(cfg, stored) < 2 {
+            push(
+                out,
+                "stream-demand-bounds",
+                &gat,
+                "a compute step must claim at least two bank grants".to_string(),
+            );
+        }
+
+        // -- tile-population: closed-form dispatch count per GEMM.
+        let expected_tiles = g.m.div_ceil(tiling.tm)
+            * g.k.div_ceil(tiling.tk)
+            * g.n.div_ceil(tiling.tn)
+            * g.repeat;
+        let run_tiles: u64 = lp.timeline.gemms[gi].runs.iter().map(|r| r.count).sum();
+        if run_tiles != expected_tiles {
+            push(
+                out,
+                "tile-population",
+                &gat,
+                format!(
+                    "timeline dispatches {run_tiles} tiles, tiling requires {expected_tiles}"
+                ),
+            );
+        }
+        let csr = tile_csr_cycles(tiling.tk);
+        for (ri, run) in lp.timeline.gemms[gi].runs.iter().enumerate() {
+            if run.count == 0 {
+                push(
+                    out,
+                    "tile-population",
+                    &gat,
+                    format!("run[{ri}] has count 0 (the planner never emits empty runs)"),
+                );
+            }
+            if run.compute_cycles < csr {
+                push(
+                    out,
+                    "tile-population",
+                    &gat,
+                    format!(
+                        "run[{ri}] compute {} below the {} CSR programming floor",
+                        run.compute_cycles, csr
+                    ),
+                );
+            }
+        }
+        dispatched_sum += expected_tiles;
+        aux_expected += expected_tiles * csr;
+
+        // -- dma-byte-conservation inputs (summed after the loop).
+        let traffic = planner::gemm_traffic_bytes(cfg, g, tiling);
+        traffic_sum += traffic;
+        dma_env += transfer_cost(cfg, traffic).cycles + expected_tiles * cfg.dma_burst_latency;
+
+        // -- footprint-capacity: the induced tiling must fit the memory
+        // organisation and its placement must re-derive exactly (the
+        // allocator's packing is what keeps operand regions disjoint).
+        verify_footprint(cfg, tiling, &gat, out);
+        fp_max = fp_max.max(tiling.footprint.total() as u64);
+
+        // -- pingpong-exclusivity: a ping-pong grant exists only when
+        // the allocator held double-buffer space for THIS GEMM and the
+        // config enables overlap at all.
+        let expected_db = tiling.double_buffered && cfg.double_buffer;
+        if lp.timeline.gemms[gi].double_buffered != expected_db {
+            push(
+                out,
+                "pingpong-exclusivity",
+                &gat,
+                format!(
+                    "ping-pong grant {} but allocator grant x config allow = {}",
+                    lp.timeline.gemms[gi].double_buffered, expected_db
+                ),
+            );
+        }
+    }
+
+    if lp.dispatched_tiles != dispatched_sum {
+        push(
+            out,
+            "tile-population",
+            at,
+            format!(
+                "layer dispatched_tiles {} != tiling requirement {}",
+                lp.dispatched_tiles, dispatched_sum
+            ),
+        );
+    }
+
+    // -- dma-cycle-attribution: the per-run DMA shares must sum exactly
+    // to the layer's accounted DMA busy time (residency trim included —
+    // `scale_dma` preserves the total by construction).
+    let run_dma: u64 = lp
+        .timeline
+        .gemms
+        .iter()
+        .flat_map(|g| g.runs.iter())
+        .map(|r| r.count * r.dma_cycles)
+        .sum();
+    if run_dma != lp.dma_cycles {
+        push(
+            out,
+            "dma-cycle-attribution",
+            at,
+            format!(
+                "run DMA shares sum to {}, layer accounts {}",
+                run_dma, lp.dma_cycles
+            ),
+        );
+    }
+
+    // -- dma-byte-conservation / dma-cycle-envelope: stored totals plus
+    // whatever the residency pass removed must equal the re-derived
+    // traffic envelope.
+    let orig_bytes = lp.dma_bytes + lp.residency.saved_dma_bytes;
+    if orig_bytes != traffic_sum {
+        push(
+            out,
+            "dma-byte-conservation",
+            at,
+            format!(
+                "dma_bytes {} + chained savings {} != traffic envelope {}",
+                lp.dma_bytes, lp.residency.saved_dma_bytes, traffic_sum
+            ),
+        );
+    }
+    let orig_cycles = lp.dma_cycles + lp.residency.saved_dma_cycles;
+    if orig_cycles != dma_env {
+        push(
+            out,
+            "dma-cycle-envelope",
+            at,
+            format!(
+                "dma_cycles {} + chained savings {} != transfer-cost envelope {}",
+                lp.dma_cycles, lp.residency.saved_dma_cycles, dma_env
+            ),
+        );
+    }
+
+    // -- footprint-capacity: the stored peak footprint is the max over
+    // the layer's induced tilings.
+    if lp.tile_footprint_bytes != fp_max {
+        push(
+            out,
+            "footprint-capacity",
+            at,
+            format!(
+                "tile_footprint_bytes {} != max induced footprint {}",
+                lp.tile_footprint_bytes, fp_max
+            ),
+        );
+    }
+
+    // -- aux-accounting: CSR programming per dispatched tile plus the
+    // reshuffler pass, both re-derived.
+    let rb = planner::reshuffle_bytes(layer);
+    let expected_reshuffle = if rb > 0 {
+        reshuffle_cycles(rb) * layer.repeat
+    } else {
+        0
+    };
+    if lp.timeline.reshuffle_cycles != expected_reshuffle {
+        push(
+            out,
+            "aux-accounting",
+            at,
+            format!(
+                "timeline reshuffle {} != reshuffler model {}",
+                lp.timeline.reshuffle_cycles, expected_reshuffle
+            ),
+        );
+    }
+    aux_expected += expected_reshuffle;
+    if lp.aux_cycles != aux_expected {
+        push(
+            out,
+            "aux-accounting",
+            at,
+            format!(
+                "aux_cycles {} != CSR + reshuffle accounting {}",
+                lp.aux_cycles, aux_expected
+            ),
+        );
+    }
+
+    // -- schedule-consistency: the stored latency/overlap must be the
+    // pipeline scheduler's fixed point over the stored timeline, inside
+    // the overlap envelope, with the compute side cross-linked to the
+    // tile activity + aux accounting.
+    let s = pipeline::schedule_layer(&lp.timeline);
+    if lp.latency_cycles != s.latency_cycles || lp.overlap_cycles != s.hidden_cycles() {
+        push(
+            out,
+            "schedule-consistency",
+            at,
+            format!(
+                "stored latency/overlap {}/{} != scheduler fixed point {}/{}",
+                lp.latency_cycles,
+                lp.overlap_cycles,
+                s.latency_cycles,
+                s.hidden_cycles()
+            ),
+        );
+    }
+    let lower = s.compute_cycles.max(s.dma_cycles);
+    let upper = s.compute_cycles + s.dma_cycles;
+    if s.latency_cycles < lower || s.latency_cycles > upper {
+        push(
+            out,
+            "schedule-consistency",
+            at,
+            format!(
+                "latency {} outside the overlap envelope [{}, {}]",
+                s.latency_cycles, lower, upper
+            ),
+        );
+    }
+    if s.compute_cycles != lp.tiles.total_cycles + lp.aux_cycles {
+        push(
+            out,
+            "schedule-consistency",
+            at,
+            format!(
+                "scheduled compute {} != tile cycles {} + aux {}",
+                s.compute_cycles, lp.tiles.total_cycles, lp.aux_cycles
+            ),
+        );
+    }
+}
+
+/// Structural legality of one stored mapping: right geometry, legal
+/// fold for the geometry and search mode.
+fn verify_mapping_shape(
+    cfg: &ChipConfig,
+    m: &crate::sim::gemm_core::Mapping,
+    at: &str,
+    out: &mut Vec<LintFinding>,
+) {
+    if m.geometry != cfg.array {
+        push(
+            out,
+            "mapping-legality",
+            at,
+            format!("mapping geometry {:?} != config array {:?}", m.geometry, cfg.array),
+        );
+        return;
+    }
+    let fold = m.fold as usize;
+    match cfg.array {
+        ArrayGeometry::Spatial3D { m: rows, .. } => {
+            if fold == 0 || fold > rows || rows % fold != 0 {
+                push(
+                    out,
+                    "mapping-legality",
+                    at,
+                    format!("fold {fold} does not divide the {rows}-row array"),
+                );
+            }
+            if cfg.mapping == MappingSearch::SwapOnly && fold != 1 {
+                push(
+                    out,
+                    "mapping-legality",
+                    at,
+                    format!("fold {fold} under SwapOnly search (folding disabled)"),
+                );
+            }
+        }
+        ArrayGeometry::Spatial2D { .. } => {
+            if fold != 1 {
+                push(
+                    out,
+                    "mapping-legality",
+                    at,
+                    format!("fold {fold} on the 2D baseline (no spatial K axis)"),
+                );
+            }
+        }
+    }
+}
+
+/// Capacity + placement legality of one induced tiling: it must fit the
+/// organisation, place exactly where the allocator packs it, and keep
+/// the four operand regions disjoint.
+fn verify_footprint(
+    cfg: &ChipConfig,
+    tiling: &crate::tiling::Tiling,
+    at: &str,
+    out: &mut Vec<LintFinding>,
+) {
+    let fp = &tiling.footprint;
+    if !allocator::fits(&cfg.memory, fp) {
+        push(
+            out,
+            "footprint-capacity",
+            at,
+            format!(
+                "footprint {} B does not fit the memory organisation",
+                fp.total()
+            ),
+        );
+        return;
+    }
+    match allocator::place(&cfg.memory, fp) {
+        None => push(
+            out,
+            "footprint-capacity",
+            at,
+            "footprint fits but the allocator refuses to place it".to_string(),
+        ),
+        Some(pl) => {
+            if pl != tiling.placement {
+                push(
+                    out,
+                    "footprint-capacity",
+                    at,
+                    format!(
+                        "stored placement {:?} != allocator packing {:?}",
+                        tiling.placement, pl
+                    ),
+                );
+            }
+            // Region disjointness in word space (8-byte words): each
+            // region's occupied words must end at or before the next
+            // region's base.
+            let words = |bytes: usize| -> u64 { (bytes as u64).div_ceil(8) };
+            let spans = [
+                ("input", pl.input_base, words(fp.input), pl.weight_base),
+                ("weight", pl.weight_base, words(fp.weight), pl.psum_base),
+                ("psum", pl.psum_base, words(fp.psum), pl.output_base),
+            ];
+            for (name, base, len, next) in spans {
+                if base + len > next {
+                    push(
+                        out,
+                        "footprint-capacity",
+                        at,
+                        format!(
+                            "{name} region [{base}, {}) overlaps the next base {next}",
+                            base + len
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Replay the residency pass over the whole layer sequence with
+/// [`residency::decide`] (the pass's own decision authority) and check
+/// every stored [`ResidencyDecision`] and trimmed DMA total against the
+/// canonical replay.
+fn verify_residency(
+    cfg: &ChipConfig,
+    w: &Workload,
+    plan: &WorkloadPlan,
+    out: &mut Vec<LintFinding>,
+) {
+    if !matches!(cfg.memory, MemoryOrg::Shared) {
+        // Separated buffers never chain: every decision must be default.
+        for lp in &plan.layers {
+            if lp.residency != ResidencyDecision::default() {
+                push(
+                    out,
+                    "residency-legality",
+                    &lp.name,
+                    "separated memory cannot chain activations".to_string(),
+                );
+            }
+        }
+        return;
+    }
+    let region = residency::activation_region_bytes(cfg);
+    let mut resident = 0u64;
+    for (layer, lp) in w.layers.iter().zip(plan.layers.iter()) {
+        // Reconstruct the pre-trim envelope the pass saw, replay its
+        // decision, and compare. The replay advances on the *canonical*
+        // resident bytes so one corrupted layer cannot cascade into
+        // phantom findings downstream.
+        let orig_bytes = lp.dma_bytes + lp.residency.saved_dma_bytes;
+        let orig_cycles = lp.dma_cycles + lp.residency.saved_dma_cycles;
+        let (expect, new_bytes, new_cycles) =
+            residency::decide(cfg, layer, resident, orig_bytes, orig_cycles);
+        if lp.residency != expect || lp.dma_bytes != new_bytes || lp.dma_cycles != new_cycles {
+            push(
+                out,
+                "residency-legality",
+                &lp.name,
+                format!(
+                    "stored decision {:?} (dma {}/{}) != replayed decision {:?} (dma {}/{})",
+                    lp.residency, lp.dma_bytes, lp.dma_cycles, expect, new_bytes, new_cycles
+                ),
+            );
+        }
+        // Two-region allocator bounds: nothing chained or left resident
+        // may exceed the activation region next to the working reserve.
+        if lp.residency.chained_bytes > region || lp.residency.resident_out_bytes > region {
+            push(
+                out,
+                "residency-legality",
+                &lp.name,
+                format!(
+                    "chained {} / resident-out {} exceed the {} B activation region",
+                    lp.residency.chained_bytes, lp.residency.resident_out_bytes, region
+                ),
+            );
+        }
+        resident = expect.resident_out_bytes;
+    }
+}
+
+/// Debug-build gate: panic with the rendered report if `plan` violates
+/// any invariant. Wired at the [`super::PlanCache`] insert so every
+/// plan ever cached is verified in debug/test builds.
+pub fn assert_clean(cfg: &ChipConfig, w: &Workload, plan: &WorkloadPlan) {
+    let findings = verify(cfg, w, plan);
+    assert!(
+        findings.is_empty(),
+        "plan verifier found {} violation(s) in '{}':\n{}",
+        findings.len(),
+        plan.workload,
+        render(&findings)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TileCache;
+    use crate::plan;
+    use crate::workloads;
+
+    fn built(cfg: &ChipConfig, name: &str) -> (Workload, WorkloadPlan) {
+        let w = workloads::by_name(name).unwrap();
+        let mut cache = TileCache::new();
+        let p = plan::build(cfg, &w, &mut cache);
+        (w, p)
+    }
+
+    #[test]
+    fn clean_plans_verify_clean() {
+        for cfg in [
+            ChipConfig::voltra(),
+            ChipConfig::separated_memory(),
+            ChipConfig::swap_only(),
+        ] {
+            let (w, p) = built(&cfg, "lstm");
+            let f = verify(&cfg, &w, &p);
+            assert!(f.is_empty(), "lstm findings: {}", render(&f));
+        }
+    }
+
+    #[test]
+    fn corrupted_macs_are_caught() {
+        let cfg = ChipConfig::voltra();
+        let (w, mut p) = built(&cfg, "lstm");
+        p.layers[0].macs += 1;
+        let f = verify(&cfg, &w, &p);
+        assert!(f.iter().any(|x| x.rule == "mac-conservation"), "{}", render(&f));
+    }
+
+    #[test]
+    fn cross_config_plan_reuse_is_caught() {
+        let voltra = ChipConfig::voltra();
+        let (w, p) = built(&voltra, "lstm");
+        let other = ChipConfig::no_prefetch();
+        let f = verify(&other, &w, &p);
+        assert!(f.iter().any(|x| x.rule == "plan-fingerprint"), "{}", render(&f));
+    }
+
+    #[test]
+    fn findings_render_and_serialize() {
+        let f = LintFinding {
+            rule: "mac-conservation",
+            severity: Severity::Error,
+            layer: "fc1".to_string(),
+            detail: "plan macs 2 != workload macs 1".to_string(),
+        };
+        assert_eq!(
+            f.to_string(),
+            "error[mac-conservation] fc1: plan macs 2 != workload macs 1"
+        );
+        let j = f.to_json();
+        assert_eq!(j.get("rule").unwrap().as_str(), Some("mac-conservation"));
+        assert_eq!(j.get("severity").unwrap().as_str(), Some("error"));
+        let rendered = findings_json(&[f]).render();
+        let round = crate::runtime::json::parse(&rendered).unwrap();
+        assert_eq!(round.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn rule_catalog_is_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for r in RULES {
+            assert!(seen.insert(r), "duplicate rule id {r}");
+        }
+    }
+}

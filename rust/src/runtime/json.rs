@@ -57,6 +57,70 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Canonical compact serialization: stable key order (objects are
+    /// `BTreeMap`s), integer-exact numbers for every counter below 2^53,
+    /// full string escaping. `parse(render(j)) == j` for any value this
+    /// crate produces — the writer half of the parser, used by the lint
+    /// CLI's `--json` report and the serving engine.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < (1u64 << 53) as f64 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[derive(Debug)]
@@ -326,6 +390,30 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("1 2").is_err());
         assert!(parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let docs = [
+            r#"{"a":[1,2.5,-3],"b":{"c":"x\ny","d":null},"e":true}"#,
+            "[]",
+            "{}",
+            r#""quote \" slash \\""#,
+        ];
+        for d in docs {
+            let j = parse(d).unwrap();
+            let r = j.render();
+            assert_eq!(parse(&r).unwrap(), j, "round trip of {d}");
+        }
+        // Canonical form is exactly reproduced for compact input.
+        assert_eq!(parse(docs[0]).unwrap().render(), docs[0]);
+    }
+
+    #[test]
+    fn render_keeps_counters_integer_exact() {
+        let big = (1u64 << 52) as f64;
+        assert_eq!(Json::Num(big).render(), format!("{}", 1u64 << 52));
+        assert_eq!(Json::Num(0.5).render(), "0.5");
     }
 
     #[test]

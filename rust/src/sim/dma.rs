@@ -31,10 +31,16 @@ pub fn transfer_cost(cfg: &ChipConfig, bytes: u64) -> DmaTransfer {
     }
     let bursts = bytes.div_ceil(BURST_BYTES);
     let bw_cycles = bytes.div_ceil(cfg.dma_bytes_per_cycle.max(1));
+    // Checked accumulation: a hostile (bytes, burst-latency) pair must
+    // fail loudly, not wrap into a plausible-looking short transfer.
+    let cycles = bursts
+        .checked_mul(cfg.dma_burst_latency)
+        .and_then(|b| b.checked_add(bw_cycles))
+        .expect("DMA transfer cycle count overflows u64");
     DmaTransfer {
         bytes,
         bursts,
-        cycles: bw_cycles + bursts * cfg.dma_burst_latency,
+        cycles,
     }
 }
 
@@ -131,6 +137,16 @@ mod tests {
         let t = transfer_cost(&cfg, bytes);
         let expect = (1u64 << 50) + 1 + bytes.div_ceil(1024) * cfg.dma_burst_latency;
         assert_eq!(t.cycles, expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows u64")]
+    fn hostile_burst_latency_fails_loudly() {
+        // Overflow audit (DESIGN.md §13): bursts * burst_latency on a
+        // pathologically large transfer must panic, never wrap.
+        let mut cfg = ChipConfig::voltra();
+        cfg.dma_burst_latency = u64::MAX;
+        transfer_cost(&cfg, u64::MAX);
     }
 
     #[test]

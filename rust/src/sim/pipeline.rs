@@ -84,7 +84,9 @@ impl Schedule {
     /// Cycles the schedule hid by overlapping the two resources:
     /// `compute + dma - latency` (zero when fully serialized).
     pub fn hidden_cycles(&self) -> u64 {
-        (self.compute_cycles + self.dma_cycles).saturating_sub(self.latency_cycles)
+        self.compute_cycles
+            .saturating_add(self.dma_cycles)
+            .saturating_sub(self.latency_cycles)
     }
 }
 
@@ -130,6 +132,16 @@ impl Timeline {
 /// are provably constant (see the case analysis in the unit tests).
 const WARMUP_TILES: u64 = 3;
 
+/// Checked `total + count * per_tile`: a hostile tile run (count or
+/// per-tile cost near `u64::MAX`) must fail loudly, never wrap the
+/// schedule into a plausible-looking short latency.
+fn acc(total: u64, count: u64, per_tile: u64) -> u64 {
+    count
+        .checked_mul(per_tile)
+        .and_then(|c| total.checked_add(c))
+        .expect("schedule cycle accumulation overflows u64")
+}
+
 /// Resolve the event timeline of a GEMM sequence. The timeline is
 /// continuous across GEMM boundaries: a double-buffered GEMM's first
 /// transfer may overlap the previous GEMM's tail compute, a
@@ -143,8 +155,8 @@ pub fn schedule(plans: &[TilePlan]) -> Schedule {
             if run.count == 0 {
                 continue;
             }
-            compute += run.count * run.compute_cycles;
-            dma += run.count * run.dma_cycles;
+            compute = acc(compute, run.count, run.compute_cycles);
+            dma = acc(dma, run.count, run.dma_cycles);
             let explicit = run.count.min(WARMUP_TILES);
             for _ in 0..explicit {
                 t.step(run.compute_cycles, run.dma_cycles, plan.double_buffered);
@@ -154,9 +166,11 @@ pub fn schedule(plans: &[TilePlan]) -> Schedule {
                 let delta = if plan.double_buffered {
                     run.compute_cycles.max(run.dma_cycles)
                 } else {
-                    run.compute_cycles + run.dma_cycles
+                    run.compute_cycles
+                        .checked_add(run.dma_cycles)
+                        .expect("per-tile serial cycles overflow u64")
                 };
-                t.shift(rest * delta);
+                t.shift(acc(0, rest, delta));
             }
         }
     }
@@ -364,6 +378,15 @@ mod tests {
             let slow = schedule(&expand(&plans));
             assert_eq!(fast, slow, "case {case}: {plans:?}");
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows u64")]
+    fn hostile_run_totals_fail_loudly() {
+        // Overflow audit (DESIGN.md §13): a pathologically large
+        // synthetic run must panic in the accumulator, never wrap into a
+        // short schedule.
+        schedule(&[plan(false, &[(u64::MAX, 3, 5)])]);
     }
 
     #[test]

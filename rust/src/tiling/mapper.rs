@@ -81,8 +81,10 @@ pub fn candidate_mappings(geometry: ArrayGeometry) -> Vec<Mapping> {
 
 /// Bank grants one compute step demands from the shared fabric under
 /// `mapping` (input words + weight banks), with the folded-mapping
-/// contention surcharge applied (see module docs).
-fn banks_per_step(cfg: &ChipConfig, mapping: &Mapping) -> u64 {
+/// contention surcharge applied (see module docs). Shared with the
+/// static verifier ([`crate::plan::verify`], rule `stream-demand-bounds`)
+/// as the single bank-pressure authority.
+pub(crate) fn banks_per_step(cfg: &ChipConfig, mapping: &Mapping) -> u64 {
     let bps = match cfg.array {
         // Input words per step (um * uk = m * k values, fold-invariant)
         // plus the folded weight fetch (un * uk = n * k * fold values,

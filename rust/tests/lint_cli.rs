@@ -1,0 +1,78 @@
+//! End-to-end plumbing tests for `voltra lint` (DESIGN.md §13).
+//!
+//! The lint command's stdout is deliberately deterministic — no
+//! timings, no cache counters — so its shape can be asserted exactly:
+//! one `clean` line per workload plus a summary, exit 0; and the
+//! `--selftest` path proves the nonzero-exit wiring end to end by
+//! corrupting a plan on purpose.
+
+use std::process::{Command, Output};
+
+fn voltra(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_voltra"))
+        .args(args)
+        .output()
+        .expect("spawn voltra binary")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Clean sweep across the three memory/mapping presets: every suite
+/// workload verifies clean, stdout keeps the golden shape, exit is 0.
+#[test]
+fn lint_all_presets_clean() {
+    for preset in ["voltra", "separated", "swap-only"] {
+        let out = voltra(&["lint", "--config", preset]);
+        let text = stdout(&out);
+        assert!(out.status.success(), "{preset} exit: {out:?}");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 9, "{preset}: 8 workloads + summary:\n{text}");
+        for line in &lines[..8] {
+            assert!(line.starts_with("lint "), "{preset}: {line}");
+            assert!(line.contains(" clean ("), "{preset}: {line}");
+            assert!(line.contains(" tiles dispatched)"), "{preset}: {line}");
+        }
+        assert_eq!(lines[8], "lint: 8 workload(s), 0 finding(s)", "{preset}");
+    }
+}
+
+/// One-workload mode plans (and verifies) exactly that workload.
+#[test]
+fn lint_single_workload() {
+    let out = voltra(&["lint", "--workload", "lstm"]);
+    assert!(out.status.success(), "{out:?}");
+    let text = stdout(&out);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "{text}");
+    assert!(lines[0].contains(" clean ("), "{text}");
+    assert_eq!(lines[1], "lint: 1 workload(s), 0 finding(s)");
+}
+
+/// Machine-readable mode: a clean run is exactly the empty JSON array.
+#[test]
+fn lint_json_clean_is_empty_array() {
+    let out = voltra(&["lint", "--workload", "lstm", "--json"]);
+    assert!(out.status.success(), "{out:?}");
+    assert_eq!(stdout(&out).trim(), "[]");
+}
+
+/// The nonzero-exit path, end to end: `--selftest` corrupts a plan on
+/// purpose and must exit 1 with the seeded rule on stdout. Exit 2 would
+/// mean the verifier MISSED the corruption — the rig's worst outcome.
+#[test]
+fn lint_selftest_exits_nonzero_with_findings() {
+    let out = voltra(&["lint", "--selftest"]);
+    assert_eq!(out.status.code(), Some(1), "{out:?}");
+    let text = stdout(&out);
+    assert!(text.contains("mac-conservation"), "{text}");
+    assert!(text.contains("caught the seeded corruption"), "{text}");
+}
+
+/// Unknown workloads are a usage error (exit 2), not a lint finding.
+#[test]
+fn lint_unknown_workload_is_a_usage_error() {
+    let out = voltra(&["lint", "--workload", "nope"]);
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+}

@@ -1,0 +1,188 @@
+//! Mutation rig for the plan verifier (`plan::verify`, DESIGN.md §13).
+//!
+//! A static verifier that has never seen a broken plan is just comments:
+//! this rig seeds single-field corruptions into known-good plans and
+//! asserts every one is caught with its expected rule id — plus the dual
+//! obligation, zero false positives on every clean plan the evaluation
+//! suite can produce (8 workloads x 3 memory/mapping presets).
+
+use std::collections::BTreeSet;
+
+use voltra::config::{ArrayGeometry, ChipConfig};
+use voltra::plan::{self, verify, WorkloadPlan};
+use voltra::workloads::{self, Workload};
+use voltra::TileCache;
+
+fn built(cfg: &ChipConfig, name: &str) -> (Workload, WorkloadPlan) {
+    let w = workloads::by_name(name).expect("suite workload");
+    let mut cache = TileCache::new();
+    let p = plan::build(cfg, &w, &mut cache);
+    (w, p)
+}
+
+/// Every plan the suite can produce must verify clean: a verifier that
+/// cries wolf on valid plans would turn the CI gate into noise.
+#[test]
+fn suite_plans_have_zero_false_positives() {
+    let presets = [
+        ("voltra", ChipConfig::voltra()),
+        ("separated", ChipConfig::separated_memory()),
+        ("swap-only", ChipConfig::swap_only()),
+    ];
+    for (preset, cfg) in presets {
+        for w in workloads::evaluation_suite() {
+            let mut cache = TileCache::new();
+            let p = plan::build(&cfg, &w, &mut cache);
+            let f = verify(&cfg, &w, &p);
+            assert!(
+                f.is_empty(),
+                "false positive(s) on {preset}/{}:\n{}",
+                w.name,
+                plan::verify::render(&f)
+            );
+        }
+    }
+}
+
+/// Seed ~20 single-field corruptions into a clean plan and assert each
+/// one surfaces its expected rule — and that together they exercise at
+/// least 12 distinct invariant classes.
+#[test]
+fn every_seeded_corruption_is_caught() {
+    let cfg = ChipConfig::voltra();
+    // llama-decode: many layers, folded GEMV mappings, and (asserted in
+    // the residency unit tests) chained projection layers — every rule
+    // in the catalog has something real to bite on.
+    let (w, base) = built(&cfg, "llama-decode");
+    assert!(
+        verify(&cfg, &w, &base).is_empty(),
+        "the mutation base plan must start clean"
+    );
+
+    let mut caught: BTreeSet<&'static str> = BTreeSet::new();
+    let mut check = |label: &str, rule: &'static str, mutate: fn(&mut WorkloadPlan)| {
+        let mut p = base.clone();
+        mutate(&mut p);
+        let f = verify(&cfg, &w, &p);
+        assert!(!f.is_empty(), "{label}: seeded corruption went undetected");
+        assert!(
+            f.iter().any(|x| x.rule == rule),
+            "{label}: expected rule '{rule}', got:\n{}",
+            plan::verify::render(&f)
+        );
+        caught.insert(rule);
+    };
+
+    // Plan-level identity.
+    check("fingerprint-xor", "plan-fingerprint", |p| p.fingerprint ^= 1);
+    check("workload-rename", "plan-shape", |p| p.workload.push('x'));
+    check("layer-rename", "plan-shape", |p| p.layers[0].name.push('x'));
+    check("plan-total-tiles", "plan-shape", |p| p.dispatched_tiles += 1);
+    check("layer-dropped", "plan-shape", |p| {
+        p.layers.pop();
+    });
+
+    // MAC + tile-activity conservation.
+    check("macs-plus-one", "mac-conservation", |p| p.layers[0].macs += 1);
+    check("useful-macs", "mac-conservation", |p| {
+        p.layers[0].tiles.useful_macs += 1
+    });
+    check("offered-macs", "tile-activity", |p| {
+        p.layers[0].tiles.offered_macs += 1
+    });
+    check("active-cycles", "tile-activity", |p| {
+        p.layers[0].tiles.active_cycles += 1
+    });
+
+    // Tile population + DMA accounting.
+    check("run-count", "tile-population", |p| {
+        p.layers[0].timeline.gemms[0].runs[0].count += 1
+    });
+    check("layer-tiles", "tile-population", |p| {
+        p.layers[0].dispatched_tiles += 1
+    });
+    check("run-dma-share", "dma-cycle-attribution", |p| {
+        p.layers[0].timeline.gemms[0].runs[0].dma_cycles += 1
+    });
+    check("dma-bytes", "dma-byte-conservation", |p| {
+        p.layers[0].dma_bytes += 1
+    });
+    check("dma-cycles", "dma-cycle-envelope", |p| p.layers[0].dma_cycles += 1);
+
+    // Footprint + mapping legality.
+    check("footprint", "footprint-capacity", |p| {
+        p.layers[0].tile_footprint_bytes += 1
+    });
+    check("fold-illegal", "mapping-legality", |p| {
+        p.layers[0].mappings[0].fold = 3
+    });
+    check("swap-flip", "mapping-legality", |p| {
+        p.layers[0].mappings[0].swapped = !p.layers[0].mappings[0].swapped
+    });
+    check("geometry-inflated", "stream-demand-bounds", |p| {
+        // 64 array rows demand 64 fine input channels; the fabric has 8.
+        p.layers[0].mappings[0].geometry = ArrayGeometry::Spatial3D { m: 64, n: 8, k: 8 }
+    });
+
+    // Pipeline schedule + aux accounting.
+    check("pingpong-flip", "pingpong-exclusivity", |p| {
+        let db = &mut p.layers[0].timeline.gemms[0].double_buffered;
+        *db = !*db;
+    });
+    check("latency", "schedule-consistency", |p| {
+        p.layers[0].latency_cycles += 1
+    });
+    check("overlap", "schedule-consistency", |p| {
+        p.layers[0].overlap_cycles += 1
+    });
+    check("tile-cycles", "schedule-consistency", |p| {
+        p.layers[0].tiles.total_cycles += 1
+    });
+    check("aux-cycles", "aux-accounting", |p| p.layers[0].aux_cycles += 1);
+    check("reshuffle", "aux-accounting", |p| {
+        p.layers[0].timeline.reshuffle_cycles += 1
+    });
+
+    // Residency replay (llama-decode chains its projection layers).
+    check("chained-bytes", "residency-legality", |p| {
+        p.layers[1].residency.chained_bytes += 1
+    });
+    check("saved-bytes", "residency-legality", |p| {
+        p.layers[1].residency.saved_dma_bytes += 1
+    });
+    check("resident-out", "residency-legality", |p| {
+        p.layers[0].residency.resident_out_bytes += 1
+    });
+
+    assert!(
+        caught.len() >= 12,
+        "mutations must exercise >= 12 invariant classes, got {}: {caught:?}",
+        caught.len()
+    );
+}
+
+/// The config-side rules: a plan presented under a config it was not
+/// compiled for, or under a config describing unrealizable hardware,
+/// must be rejected before any layer math is trusted.
+#[test]
+fn config_corruptions_are_caught() {
+    let cfg = ChipConfig::voltra();
+    let (w, p) = built(&cfg, "lstm");
+
+    let mut zero_fifo = ChipConfig::voltra();
+    zero_fifo.stream_fifo_depth = 0;
+    let f = verify(&zero_fifo, &w, &p);
+    assert!(f.iter().any(|x| x.rule == "fifo-depth"), "{f:?}");
+    // A different config also means a different fingerprint.
+    assert!(f.iter().any(|x| x.rule == "plan-fingerprint"), "{f:?}");
+
+    let mut zero_dma = ChipConfig::voltra();
+    zero_dma.dma_bytes_per_cycle = 0;
+    let f = verify(&zero_dma, &w, &p);
+    assert!(f.iter().any(|x| x.rule == "config-legality"), "{f:?}");
+
+    // Cross-preset plan reuse: the exact bug PlanCache keying prevents.
+    let separated = ChipConfig::separated_memory();
+    let f = verify(&separated, &w, &p);
+    assert!(f.iter().any(|x| x.rule == "plan-fingerprint"), "{f:?}");
+}
