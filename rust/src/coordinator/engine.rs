@@ -1,0 +1,596 @@
+//! The pure request engine of the serving stack (DESIGN.md §14): parse
+//! one protocol line, execute the verb against the process-wide caches,
+//! format the response. Both serve modes route every verb through
+//! [`Engine::handle`], so `serve_blocking` and `serve_threaded` answer
+//! from the same code and cannot drift — the only mode-specific choice
+//! left is *where numerics run*, abstracted as a [`NumericsLane`]:
+//!
+//! * [`InlineLane`] — numerics on the calling thread (the sequential
+//!   reference engine);
+//! * [`WorkerLane`] — numerics shipped to the dedicated backend worker
+//!   over a *bounded* channel, with the chip-model sim cost resolved on
+//!   the calling thread while the worker crunches (the overlap the
+//!   concurrent engine has always had).
+//!
+//! The engine itself is a bundle of shared references ([`Engine`] is
+//! `Copy`): the chip config, the tile cache, the plan cache, and the
+//! serving-tier counters. Handlers are pure with respect to connection
+//! state — everything they touch is process-wide — which is what lets
+//! the dispatch layer run them from any worker thread.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ChipConfig;
+use crate::coordinator::stats::{RequestStats, Verb};
+use crate::coordinator::{run_layer, SharedTileCache};
+use crate::plan::{PlanCache, WorkloadPlan};
+use crate::runtime::{GemmBackend, MatI32};
+use crate::workloads::{self, Layer, LayerKind};
+
+/// Deterministic operand generator (SplitMix64 -> int8 range).
+fn gen_mat(seed: u64, rows: usize, cols: usize) -> MatI32 {
+    let mut s = seed;
+    MatI32::from_fn(rows, cols, |_, _| {
+        s = s.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        ((z ^ (z >> 31)) % 255) as i32 - 127
+    })
+}
+
+/// One GEMM request's results.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct GemmResponse {
+    pub(crate) checksum: u64,
+    pub(crate) wall_us: u128,
+    pub(crate) sim_cycles: u64,
+    pub(crate) sim_us: f64,
+}
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum Parsed {
+    Gemm {
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+    },
+    Workload {
+        name: String,
+    },
+    Lint {
+        name: String,
+    },
+    Stats,
+    Quit,
+}
+
+impl Parsed {
+    /// The verb this request counts under in [`RequestStats`].
+    pub(crate) fn verb(&self) -> Verb {
+        match self {
+            Parsed::Gemm { .. } => Verb::Gemm,
+            Parsed::Workload { .. } => Verb::Workload,
+            Parsed::Lint { .. } => Verb::Lint,
+            Parsed::Stats => Verb::Stats,
+            // QUIT is connection control, never recorded: the transport
+            // closes the connection before any counter is touched.
+            Parsed::Quit => Verb::Error,
+        }
+    }
+}
+
+/// The usage line sent back for any request the parser cannot shape.
+const USAGE: &str =
+    "ERR expected: GEMM <m> <k> <n> <seed> | WORKLOAD <name> | LINT <name> | STATS | QUIT";
+
+/// Parse one request line; `Err` carries the full `ERR ...` response.
+pub(crate) fn parse_request(line: &str) -> std::result::Result<Parsed, String> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["GEMM", m, k, n, seed] => {
+            fn int<T: std::str::FromStr>(tok: &str) -> std::result::Result<T, String> {
+                tok.parse()
+                    .map_err(|_| format!("ERR bad integer {tok:?}"))
+            }
+            Ok(Parsed::Gemm {
+                m: int(m)?,
+                k: int(k)?,
+                n: int(n)?,
+                seed: int(seed)?,
+            })
+        }
+        ["WORKLOAD", name] => Ok(Parsed::Workload {
+            name: (*name).to_string(),
+        }),
+        ["LINT", name] => Ok(Parsed::Lint {
+            name: (*name).to_string(),
+        }),
+        ["STATS"] => Ok(Parsed::Stats),
+        ["QUIT"] => Ok(Parsed::Quit),
+        _ => Err(USAGE.to_string()),
+    }
+}
+
+/// Reject degenerate or memory-hostile requests before any work happens
+/// (u128 arithmetic: a hostile request must not overflow the check).
+fn check_size(m: usize, k: usize, n: usize) -> Result<()> {
+    // Bound every allocation the request forces: x (m*k), w (k*n), and
+    // the m*n-sized psum/quantized/accumulator outputs — a thin-K
+    // request like 50000x1x50000 is output-hostile, not operand-hostile.
+    let xw = (m as u128) * (k as u128);
+    let ww = (k as u128) * (n as u128);
+    let out = (m as u128) * (n as u128);
+    let too_big = match xw.checked_add(ww).and_then(|e| e.checked_add(out)) {
+        Some(elems) => elems > 64 << 20,
+        None => true,
+    };
+    if m == 0 || k == 0 || n == 0 || too_big {
+        bail!("unreasonable GEMM size {m}x{k}x{n}");
+    }
+    Ok(())
+}
+
+/// Execute one request's numerics on the backend: deterministic operands
+/// from the seed, returning (checksum, wall_us).
+pub(crate) fn run_numerics(
+    backend: &mut impl GemmBackend,
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Result<(u64, u128)> {
+    check_size(m, k, n)?;
+    let x = gen_mat(seed, m, k);
+    let w = gen_mat(seed ^ 0xABCD_EF01, k, n);
+    let p = MatI32::zeros(m, n);
+    let t0 = Instant::now();
+    let (q, _acc) = backend.gemm(&x, &w, &p, 0.002)?;
+    let wall_us = t0.elapsed().as_micros();
+    let checksum = q
+        .data
+        .iter()
+        .fold(0u64, |h, &v| h.wrapping_mul(31).wrapping_add(v as u8 as u64));
+    Ok((checksum, wall_us))
+}
+
+/// What the chip would cost for this GEMM (memoized cycle model; safe to
+/// call from many threads at once).
+pub(crate) fn sim_cost(
+    cfg: &ChipConfig,
+    cache: &SharedTileCache,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> (u64, f64) {
+    let layer = Layer::new(
+        "req",
+        LayerKind::Gemm {
+            m: m as u64,
+            k: k as u64,
+            n: n as u64,
+        },
+    );
+    let mut handle = cache;
+    let lm = run_layer(cfg, &layer, &mut handle);
+    let sim_cycles = lm.latency_cycles;
+    (sim_cycles, sim_cycles as f64 / cfg.operating_point.freq_mhz)
+}
+
+fn format_ok(r: &GemmResponse) -> String {
+    format!(
+        "OK checksum={} us={} sim_cycles={} sim_us={:.2}",
+        r.checksum, r.wall_us, r.sim_cycles, r.sim_us
+    )
+}
+
+/// Answer a WORKLOAD request from the plan cache. Every field is a pure
+/// function of the memoized plan, so the response bytes are identical
+/// across engines, connections and cache temperature — the differential
+/// tests rely on this.
+fn format_workload(cfg: &ChipConfig, name: &str, p: &WorkloadPlan) -> String {
+    let latency = p.total_latency_cycles();
+    format!(
+        "OK workload={} latency_cycles={} compute_cycles={} dma_cycles={} dma_kb={} tiles={} sim_ms={:.3}",
+        name,
+        latency,
+        p.total_compute_cycles(),
+        p.total_dma_cycles(),
+        p.total_dma_bytes() / 1024,
+        p.dispatched_tiles,
+        latency as f64 / (cfg.operating_point.freq_mhz * 1e3),
+    )
+}
+
+/// Resolve one WORKLOAD request (shared by both engines) to its full
+/// response line: plan-cache lookup, plan-once-answer-many. Warm
+/// requests never materialize the layer graph or a report — the plan
+/// cache is probed by the request's name before `by_name` runs, and the
+/// response is formatted from the immutable plan's aggregates.
+pub(crate) fn serve_workload(cfg: &ChipConfig, plans: &PlanCache, name: &str) -> String {
+    match plans.plan_named(cfg, name, || workloads::by_name(name)) {
+        Some(p) => format_workload(cfg, name, &p),
+        None => format!("ERR unknown workload {name:?}"),
+    }
+}
+
+/// Resolve one LINT request: plan (or reuse) the named workload, then
+/// run the static verifier (`plan::verify`, DESIGN.md §13) against it.
+/// The response is deterministic: a clean plan always answers
+/// `OK lint workload=<name> findings=0`; a corrupt plan would enumerate
+/// its findings as `rule@layer` pairs after the count.
+pub(crate) fn serve_lint(cfg: &ChipConfig, plans: &PlanCache, name: &str) -> String {
+    let Some(w) = workloads::by_name(name) else {
+        return format!("ERR unknown workload {name:?}");
+    };
+    let plan = plans
+        .plan_named(cfg, name, || Some(w.clone()))
+        .expect("resolver always yields the workload");
+    let findings = crate::plan::verify(cfg, &w, &plan);
+    let mut resp = format!("OK lint workload={} findings={}", name, findings.len());
+    for f in &findings {
+        resp.push_str(&format!(" {}@{}", f.rule, f.layer));
+    }
+    resp
+}
+
+/// One numerics request in flight to the dedicated worker thread.
+pub(crate) struct NumericsJob {
+    pub(crate) m: usize,
+    pub(crate) k: usize,
+    pub(crate) n: usize,
+    pub(crate) seed: u64,
+    pub(crate) reply: mpsc::Sender<Result<(u64, u128)>>,
+}
+
+/// Where a GEMM request's numerics execute. `overlap` is the engine's
+/// sim-cost computation: a lane calls it exactly once per successful
+/// `exec`, positioned wherever it overlaps best with the numerics.
+pub(crate) trait NumericsLane {
+    fn exec(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+        overlap: &mut dyn FnMut(),
+    ) -> Result<(u64, u128)>;
+}
+
+/// Numerics on the calling thread (the sequential reference engine).
+pub(crate) struct InlineLane<'a, B: GemmBackend> {
+    pub(crate) backend: &'a mut B,
+}
+
+impl<B: GemmBackend> NumericsLane for InlineLane<'_, B> {
+    fn exec(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+        overlap: &mut dyn FnMut(),
+    ) -> Result<(u64, u128)> {
+        // No worker to overlap with: resolve the sim cost, then run
+        // numerics on this same thread.
+        overlap();
+        run_numerics(self.backend, m, k, n, seed)
+    }
+}
+
+/// Numerics shipped to the dedicated backend worker over a bounded
+/// channel. The blocking `send` is the satellite's backpressure: when
+/// the worker falls behind, engine workers queue *here* (at most one
+/// outstanding job each) instead of growing an unbounded buffer.
+pub(crate) struct WorkerLane {
+    pub(crate) jobs: mpsc::SyncSender<NumericsJob>,
+}
+
+impl NumericsLane for WorkerLane {
+    fn exec(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+        overlap: &mut dyn FnMut(),
+    ) -> Result<(u64, u128)> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.jobs
+            .send(NumericsJob {
+                m,
+                k,
+                n,
+                seed,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("numerics worker is gone"))?;
+        // Overlap: the chip-model cost resolves on this thread while the
+        // worker crunches the numerics.
+        overlap();
+        match reply_rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("numerics worker is gone")),
+        }
+    }
+}
+
+/// The shared-state bundle every handler needs: pure references, so the
+/// engine is `Copy` and any worker thread can hold one.
+#[derive(Clone, Copy)]
+pub(crate) struct Engine<'a> {
+    pub(crate) cfg: &'a ChipConfig,
+    pub(crate) tiles: &'a SharedTileCache,
+    pub(crate) plans: &'a PlanCache,
+    pub(crate) stats: &'a RequestStats,
+}
+
+impl Engine<'_> {
+    /// Execute one parsed request to its full response line. QUIT never
+    /// reaches the engine (the transport drains and closes first).
+    pub(crate) fn handle(&self, req: &Parsed, lane: &mut dyn NumericsLane) -> String {
+        match req {
+            Parsed::Gemm { m, k, n, seed } => {
+                let (m, k, n, seed) = (*m, *k, *n, *seed);
+                // Cheap validation here so malformed sizes never occupy
+                // the (serialized) numerics worker.
+                if let Err(e) = check_size(m, k, n) {
+                    return format!("ERR {e}");
+                }
+                let mut sim = None;
+                let result = lane.exec(m, k, n, seed, &mut || {
+                    sim = Some(sim_cost(self.cfg, self.tiles, m, k, n));
+                });
+                match result {
+                    Ok((checksum, wall_us)) => {
+                        let (sim_cycles, sim_us) =
+                            sim.unwrap_or_else(|| sim_cost(self.cfg, self.tiles, m, k, n));
+                        format_ok(&GemmResponse {
+                            checksum,
+                            wall_us,
+                            sim_cycles,
+                            sim_us,
+                        })
+                    }
+                    Err(e) => format!("ERR {e}"),
+                }
+            }
+            Parsed::Workload { name } => serve_workload(self.cfg, self.plans, name),
+            Parsed::Lint { name } => serve_lint(self.cfg, self.plans, name),
+            Parsed::Stats => self.render_stats(),
+            Parsed::Quit => String::new(),
+        }
+    }
+
+    /// Format the STATS response from the serving counters and both
+    /// cache tiers. The request being answered is not yet recorded, so
+    /// a STATS line never counts itself.
+    pub(crate) fn render_stats(&self) -> String {
+        let s = self.stats;
+        let p = self.plans.plan_stats();
+        let t = self.tiles.stats();
+        format!(
+            "OK stats served={} gemm={} workload={} lint={} stats={} errors={} busy={} \
+             plan_hits={} plan_misses={} plan_waits={} tile_hits={} tile_misses={} \
+             tile_waits={} p50_us={} p99_us={} max_us={}",
+            s.served(),
+            s.count(Verb::Gemm),
+            s.count(Verb::Workload),
+            s.count(Verb::Lint),
+            s.count(Verb::Stats),
+            s.count(Verb::Error),
+            s.rejected(),
+            p.hits,
+            p.misses,
+            p.coalesced,
+            t.hits,
+            t.misses,
+            self.tiles.coalesced_waits(),
+            s.percentile_us(50.0),
+            s.percentile_us(99.0),
+            s.max_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostBackend;
+
+    #[test]
+    fn generated_operands_are_deterministic_and_int8() {
+        let a = gen_mat(7, 16, 16);
+        let b = gen_mat(7, 16, 16);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|&v| (-127..=127).contains(&v)));
+        let c = gen_mat(8, 16, 16);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn checksum_is_order_sensitive() {
+        let h = |v: &[i32]| {
+            v.iter()
+                .fold(0u64, |h, &x| h.wrapping_mul(31).wrapping_add(x as u8 as u64))
+        };
+        assert_ne!(h(&[1, 2, 3]), h(&[3, 2, 1]));
+    }
+
+    #[test]
+    fn parser_distinguishes_bad_integers_from_bad_commands() {
+        assert_eq!(
+            parse_request("GEMM 8 8 8 1"),
+            Ok(Parsed::Gemm {
+                m: 8,
+                k: 8,
+                n: 8,
+                seed: 1
+            })
+        );
+        assert_eq!(parse_request("QUIT"), Ok(Parsed::Quit));
+        assert_eq!(parse_request("STATS"), Ok(Parsed::Stats));
+        assert_eq!(
+            parse_request("WORKLOAD bert"),
+            Ok(Parsed::Workload {
+                name: "bert".to_string()
+            })
+        );
+        assert_eq!(
+            parse_request("LINT bert"),
+            Ok(Parsed::Lint {
+                name: "bert".to_string()
+            })
+        );
+        let e = parse_request("GEMM a b c 1").unwrap_err();
+        assert!(e.starts_with("ERR bad integer"), "{e}");
+        let e = parse_request("GEMM 8 8 8").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        let e = parse_request("NONSENSE").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        let e = parse_request("WORKLOAD").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        let e = parse_request("LINT").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        let e = parse_request("STATS now").unwrap_err();
+        assert!(e.starts_with("ERR expected"), "{e}");
+        // A negative dimension is a bad integer for usize, not a usage error.
+        let e = parse_request("GEMM -8 8 8 1").unwrap_err();
+        assert!(e.starts_with("ERR bad integer"), "{e}");
+    }
+
+    #[test]
+    fn size_check_rejects_degenerate_and_huge() {
+        assert!(check_size(0, 0, 0).is_err());
+        assert!(check_size(8, 8, 8).is_ok());
+        // Thin-K: tiny operands, gigabyte outputs — must be rejected.
+        assert!(check_size(50_000, 1, 50_000).is_err());
+        // Would overflow naive usize arithmetic; must be cleanly rejected.
+        assert!(check_size(usize::MAX, usize::MAX, usize::MAX).is_err());
+    }
+
+    /// Drop the wall-clock `us=` token, the protocol's only
+    /// nondeterministic bytes.
+    fn sans_wall(resp: &str) -> String {
+        resp.split(' ')
+            .filter(|t| !t.starts_with("us="))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    #[test]
+    fn gemm_is_deterministic_and_identical_across_lanes() {
+        let cfg = ChipConfig::voltra();
+        let tiles = SharedTileCache::new();
+        let plans = PlanCache::new();
+        let stats = RequestStats::new();
+        let engine = Engine {
+            cfg: &cfg,
+            tiles: &tiles,
+            plans: &plans,
+            stats: &stats,
+        };
+        let req = parse_request("GEMM 64 64 64 1").unwrap();
+        let mut backend = HostBackend;
+        let mut inline = InlineLane {
+            backend: &mut backend,
+        };
+        let a = engine.handle(&req, &mut inline);
+        let b = engine.handle(&req, &mut inline);
+        assert!(a.starts_with("OK checksum="), "{a}");
+        assert_eq!(sans_wall(&a), sans_wall(&b));
+        // A different seed changes the checksum.
+        let other = parse_request("GEMM 64 64 64 2").unwrap();
+        let c = engine.handle(&other, &mut inline);
+        assert_ne!(sans_wall(&a), sans_wall(&c));
+        // The worker lane answers byte-identically (modulo wall clock):
+        // the same engine handler, a different numerics placement.
+        let (job_tx, job_rx) = mpsc::sync_channel::<NumericsJob>(1);
+        let worker = std::thread::spawn(move || {
+            let mut backend = HostBackend;
+            while let Ok(job) = job_rx.recv() {
+                let r = run_numerics(&mut backend, job.m, job.k, job.n, job.seed);
+                let _ = job.reply.send(r);
+            }
+        });
+        let mut lane = WorkerLane { jobs: job_tx };
+        let d = engine.handle(&req, &mut lane);
+        assert_eq!(sans_wall(&a), sans_wall(&d));
+        drop(lane);
+        worker.join().unwrap();
+        // Oversized and degenerate requests never reach a lane.
+        let huge = parse_request("GEMM 50000 1 50000 1").unwrap();
+        let e = engine.handle(&huge, &mut inline);
+        assert!(e.starts_with("ERR unreasonable GEMM size"), "{e}");
+    }
+
+    #[test]
+    fn serve_workload_answers_from_the_plan_cache() {
+        let cfg = ChipConfig::voltra();
+        let plans = PlanCache::new();
+        let cold = serve_workload(&cfg, &plans, "lstm");
+        let warm = serve_workload(&cfg, &plans, "lstm");
+        // Byte-identical response, one plan compiled.
+        assert_eq!(cold, warm);
+        assert!(cold.starts_with("OK workload=lstm latency_cycles="), "{cold}");
+        let s = plans.stats();
+        assert_eq!(s.misses, 1, "second request must reuse the plan");
+        assert!(s.hits >= 1);
+        let e = serve_workload(&cfg, &plans, "nope");
+        assert!(e.starts_with("ERR unknown workload"), "{e}");
+    }
+
+    #[test]
+    fn serve_lint_reports_clean_plans_and_unknown_names() {
+        let cfg = ChipConfig::voltra();
+        let plans = PlanCache::new();
+        let r = serve_lint(&cfg, &plans, "lstm");
+        assert_eq!(r, "OK lint workload=lstm findings=0");
+        // Answered from the same cache: linting after serving replans nothing.
+        let before = plans.stats().misses;
+        let again = serve_lint(&cfg, &plans, "lstm");
+        assert_eq!(r, again);
+        assert_eq!(plans.stats().misses, before);
+        let e = serve_lint(&cfg, &plans, "nope");
+        assert!(e.starts_with("ERR unknown workload"), "{e}");
+    }
+
+    #[test]
+    fn stats_verb_reports_counters_without_counting_itself() {
+        let cfg = ChipConfig::voltra();
+        let tiles = SharedTileCache::new();
+        let plans = PlanCache::new();
+        let stats = RequestStats::new();
+        let engine = Engine {
+            cfg: &cfg,
+            tiles: &tiles,
+            plans: &plans,
+            stats: &stats,
+        };
+        let mut backend = HostBackend;
+        let mut lane = InlineLane {
+            backend: &mut backend,
+        };
+        let empty = engine.handle(&Parsed::Stats, &mut lane);
+        assert_eq!(
+            empty,
+            "OK stats served=0 gemm=0 workload=0 lint=0 stats=0 errors=0 busy=0 \
+             plan_hits=0 plan_misses=0 plan_waits=0 tile_hits=0 tile_misses=0 \
+             tile_waits=0 p50_us=0 p99_us=0 max_us=0"
+        );
+        // Counters are the server's job (recorded after each response);
+        // simulate two served requests and one rejection.
+        stats.record(Verb::Workload, 7);
+        stats.record(Verb::Gemm, 3);
+        stats.reject();
+        let r = engine.handle(&Parsed::Stats, &mut lane);
+        assert!(r.starts_with("OK stats served=2 gemm=1 workload=1 "), "{r}");
+        assert!(r.contains(" busy=1 "), "{r}");
+        assert!(r.ends_with(" max_us=7"), "{r}");
+    }
+}

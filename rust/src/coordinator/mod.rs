@@ -21,7 +21,12 @@
 //!   whole-workload planning ([`crate::plan::PlanCache`]) across
 //!   connections and workers.
 
+pub(crate) mod dispatch;
+pub(crate) mod engine;
 pub mod server;
+pub(crate) mod singleflight;
+pub(crate) mod stats;
+pub(crate) mod transport;
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -30,6 +35,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, RwLock};
 
 use crate::config::ChipConfig;
+use crate::coordinator::singleflight::{FlightGroup, Role};
 use crate::metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
 use crate::plan::{self, PlanCache};
 use crate::sim::agu::LoopDim;
@@ -121,9 +127,11 @@ const CACHE_SHARDS: usize = 16;
 /// Design:
 /// * sharded by key hash so unrelated lookups never contend;
 /// * `RwLock` per shard — the steady state is read-mostly (hits);
-/// * misses simulate *outside* any lock: the simulation is pure, so two
-///   racing threads at worst duplicate work and insert identical values
-///   (last write wins, both results are equal by construction).
+/// * misses simulate *outside* any lock, coalesced through a
+///   [`FlightGroup`] (DESIGN.md §14): the first thread to miss a spec
+///   simulates it, every concurrent requester of the same spec blocks
+///   on that one simulation and shares its result — a burst of
+///   identical cold requests costs one simulation, not N.
 ///
 /// The cache is keyed by [`TileSpec`] only, so it must not be shared
 /// across *different* [`ChipConfig`]s — same contract as [`TileCache`],
@@ -132,8 +140,10 @@ const CACHE_SHARDS: usize = 16;
 #[derive(Default)]
 pub struct SharedTileCache {
     tiles: [RwLock<HashMap<TileSpec, TileMetrics>>; CACHE_SHARDS],
+    flights: FlightGroup<TileSpec, TileMetrics>,
     hits: AtomicU64,
     misses: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 fn shard_of<K: Hash>(key: &K) -> usize {
@@ -147,18 +157,39 @@ impl SharedTileCache {
         Self::default()
     }
 
-    /// Memoized tile simulation, callable from any thread.
+    /// Memoized tile simulation, callable from any thread. Concurrent
+    /// misses on the same spec coalesce onto one simulation.
     pub fn simulate(&self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
-        let shard = &self.tiles[shard_of(spec)];
-        if let Some(m) = shard.read().expect("tile shard poisoned").get(spec) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return *m;
+        loop {
+            let shard = &self.tiles[shard_of(spec)];
+            if let Some(m) = shard.read().expect("tile shard poisoned").get(spec) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return *m;
+            }
+            match self.flights.join(spec, || {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+            }) {
+                Role::Leader(lead) => {
+                    // A racing leader may have published and retired its
+                    // flight between our shard read and our join.
+                    if let Some(m) = shard.read().expect("tile shard poisoned").get(spec) {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        lead.publish(*m);
+                        return *m;
+                    }
+                    // Miss: simulate without holding any lock (pure).
+                    let m = simulate_tile(cfg, spec);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    shard.write().expect("tile shard poisoned").insert(*spec, m);
+                    lead.publish(m);
+                    return m;
+                }
+                Role::Waited(Some(m)) => return m,
+                // The leader aborted (it cannot here — simulation is
+                // total — but the protocol demands a retry arm).
+                Role::Waited(None) => continue,
+            }
         }
-        // Miss: simulate without holding the lock (pure + idempotent).
-        let m = simulate_tile(cfg, spec);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        shard.write().expect("tile shard poisoned").insert(*spec, m);
-        m
     }
 
     /// Distinct tile specs simulated so far (across all shards).
@@ -179,6 +210,13 @@ impl SharedTileCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
         }
+    }
+
+    /// Requests that coalesced onto another thread's in-flight
+    /// simulation instead of simulating (or reading a completed entry)
+    /// themselves.
+    pub fn coalesced_waits(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
     }
 }
 
@@ -529,5 +567,13 @@ mod tests {
             }
         });
         assert_eq!(cache.len(), specs.len());
+        // Single-flight makes the miss count exact: each spec simulated
+        // once, every other lookup a hit or a coalesced wait.
+        let s = cache.stats();
+        assert_eq!(s.misses, specs.len() as u64);
+        assert_eq!(
+            s.hits + s.misses + cache.coalesced_waits(),
+            (8 * specs.len()) as u64
+        );
     }
 }

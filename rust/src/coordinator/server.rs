@@ -1,72 +1,54 @@
-//! The coordinator's serving engine: GEMM and workload requests over
-//! TCP, served concurrently against process-wide shared caches.
+//! The coordinator's serving entry points: GEMM, workload, lint and
+//! stats requests over TCP, served against process-wide shared caches.
 //!
-//! Wire protocol (line-oriented, one request per line):
-//!     GEMM <m> <k> <n> <seed>\n
-//!     WORKLOAD <name>\n
-//!     LINT <name>\n
-//! Responses:
-//!     OK checksum=<u64> us=<micros> sim_cycles=<u64> sim_us=<f64>\n
-//!     OK workload=<name> latency_cycles=<u64> compute_cycles=<u64>
-//!        dma_cycles=<u64> dma_kb=<u64> tiles=<u64> sim_ms=<f64>\n
-//!     OK lint workload=<name> findings=<u64>\n
-//! A GEMM request executes the request's numerics (deterministic
-//! operands from the seed) and, in parallel, reports what the chip model
-//! says the same GEMM would cost on silicon. A WORKLOAD request answers
-//! entirely from the [`PlanCache`]: the first request for a network
-//! compiles its plan, every later request (from any connection) executes
-//! the memoized plan — zero tiling searches, zero tile simulations.
+//! Since the serving-stack split (DESIGN.md §14) this file only
+//! *composes* the layers; the work lives below it:
 //!
-//! Concurrency model (DESIGN.md §Concurrency):
-//! * every accepted connection gets its own handler thread;
-//! * the chip-model cost lookup runs *on the handler thread*, answered
-//!   from the [`SharedTileCache`] / [`PlanCache`] — many connections
-//!   resolve sim costs concurrently, and a tile or plan any connection
-//!   ever computed is never computed again for the server's lifetime;
-//! * the numerics backend is confined to ONE dedicated worker thread
-//!   fed over an mpsc channel (PJRT handles are not `Send`; the
-//!   [`GemmBackend`] factory runs on that thread), with per-request
-//!   reply channels. While the worker crunches a request's numerics the
-//!   handler overlaps the sim-cost computation for the same request.
+//! * [`transport`](crate::coordinator::transport) — connection framing:
+//!   the line protocol, response writing, graceful drain on QUIT;
+//! * [`dispatch`](crate::coordinator::dispatch) — the bounded worker
+//!   pool with admission control (`ERR busy` past `queue_depth`);
+//! * [`engine`](crate::coordinator::engine) — the verb handlers both
+//!   modes share, answering from the [`SharedTileCache`] and
+//!   [`PlanCache`];
+//! * [`stats`](crate::coordinator::stats) — per-verb counters and the
+//!   latency histogram behind the `STATS` verb.
 //!
-//! [`serve_blocking`] remains as the single-threaded reference engine:
-//! byte-identical responses (modulo the wall-clock `us=` field, the
-//! protocol's only nondeterministic bytes), used by the differential
-//! tests in `tests/concurrent_server.rs`.
+//! Wire protocol (line-oriented, one request per line): `GEMM`,
+//! `WORKLOAD`, `LINT`, `STATS`, `QUIT` — the complete grammar with
+//! response forms is in DESIGN.md §14.
+//!
+//! Two serve modes remain, and they answer byte-identically (modulo the
+//! wall-clock `us=` field) because every verb routes through the same
+//! [`Engine::handle`]:
+//!
+//! * [`serve_blocking`] — the single-threaded reference engine:
+//!   connections in arrival order, numerics inline on the calling
+//!   thread. The differential tests in `tests/concurrent_server.rs`
+//!   compare everything else against it.
+//! * [`serve_threaded`] — the concurrent engine: one transport thread
+//!   per connection, a bounded dispatch queue, [`ServeOptions::workers`]
+//!   engine workers, and ONE dedicated numerics worker (PJRT handles
+//!   are not `Send`; the backend factory runs on that thread) fed over
+//!   a *bounded* channel so slow numerics backpressure the pool instead
+//!   of buffering unboundedly.
 
-use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::ChipConfig;
-use crate::coordinator::{run_layer, SharedTileCache};
-use crate::plan::{PlanCache, WorkloadPlan};
-use crate::runtime::{GemmBackend, MatI32};
-use crate::workloads::{self, Layer, LayerKind};
-
-/// Deterministic operand generator (SplitMix64 -> int8 range).
-fn gen_mat(seed: u64, rows: usize, cols: usize) -> MatI32 {
-    let mut s = seed;
-    MatI32::from_fn(rows, cols, |_, _| {
-        s = s.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = s;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        ((z ^ (z >> 31)) % 255) as i32 - 127
-    })
-}
-
-/// One GEMM request's results.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct GemmResponse {
-    pub checksum: u64,
-    pub wall_us: u128,
-    pub sim_cycles: u64,
-    pub sim_us: f64,
-}
+use crate::coordinator::dispatch::{self, Dispatcher};
+use crate::coordinator::engine::{
+    parse_request, run_numerics, Engine, InlineLane, NumericsJob, Parsed,
+};
+use crate::coordinator::stats::{RequestStats, Verb};
+use crate::coordinator::transport::{self, Reply};
+use crate::coordinator::SharedTileCache;
+use crate::plan::PlanCache;
+use crate::runtime::GemmBackend;
 
 /// Serving counters returned by both engines.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -77,300 +59,94 @@ pub struct ServerStats {
     pub failed: usize,
 }
 
-/// A parsed request line.
-#[derive(Clone, Debug, PartialEq, Eq)]
-enum Parsed {
-    Gemm {
-        m: usize,
-        k: usize,
-        n: usize,
-        seed: u64,
-    },
-    Workload {
-        name: String,
-    },
-    Lint {
-        name: String,
-    },
-    Quit,
+/// Tuning for [`serve_threaded`]'s dispatch layer.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Accepted-connection cap (`None` = serve forever).
+    pub max_conns: Option<usize>,
+    /// Engine worker threads draining the dispatch queue.
+    pub workers: usize,
+    /// Requests allowed to WAIT in the dispatch queue (beyond the one
+    /// each worker is executing); a submit past this answers
+    /// `ERR busy` instead of queueing.
+    pub queue_depth: usize,
 }
 
-/// The usage line sent back for any request the parser cannot shape.
-const USAGE: &str =
-    "ERR expected: GEMM <m> <k> <n> <seed> | WORKLOAD <name> | LINT <name> | QUIT";
-
-/// Parse one request line; `Err` carries the full `ERR ...` response.
-fn parse_request(line: &str) -> std::result::Result<Parsed, String> {
-    let parts: Vec<&str> = line.split_whitespace().collect();
-    match parts.as_slice() {
-        ["GEMM", m, k, n, seed] => {
-            fn int<T: std::str::FromStr>(tok: &str) -> std::result::Result<T, String> {
-                tok.parse()
-                    .map_err(|_| format!("ERR bad integer {tok:?}"))
-            }
-            Ok(Parsed::Gemm {
-                m: int(m)?,
-                k: int(k)?,
-                n: int(n)?,
-                seed: int(seed)?,
-            })
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_conns: None,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(8),
+            queue_depth: 64,
         }
-        ["WORKLOAD", name] => Ok(Parsed::Workload {
-            name: (*name).to_string(),
-        }),
-        ["LINT", name] => Ok(Parsed::Lint {
-            name: (*name).to_string(),
-        }),
-        ["QUIT"] => Ok(Parsed::Quit),
-        _ => Err(USAGE.to_string()),
     }
 }
 
-/// Reject degenerate or memory-hostile requests before any work happens
-/// (u128 arithmetic: a hostile request must not overflow the check).
-fn check_size(m: usize, k: usize, n: usize) -> Result<()> {
-    // Bound every allocation the request forces: x (m*k), w (k*n), and
-    // the m*n-sized psum/quantized/accumulator outputs — a thin-K
-    // request like 50000x1x50000 is output-hostile, not operand-hostile.
-    let xw = (m as u128) * (k as u128);
-    let ww = (k as u128) * (n as u128);
-    let out = (m as u128) * (n as u128);
-    let too_big = match xw.checked_add(ww).and_then(|e| e.checked_add(out)) {
-        Some(elems) => elems > 64 << 20,
-        None => true,
-    };
-    if m == 0 || k == 0 || n == 0 || too_big {
-        bail!("unreasonable GEMM size {m}x{k}x{n}");
-    }
-    Ok(())
-}
-
-/// Execute one request's numerics on the backend: deterministic operands
-/// from the seed, returning (checksum, wall_us).
-fn run_numerics(
-    backend: &mut impl GemmBackend,
-    m: usize,
-    k: usize,
-    n: usize,
-    seed: u64,
-) -> Result<(u64, u128)> {
-    check_size(m, k, n)?;
-    let x = gen_mat(seed, m, k);
-    let w = gen_mat(seed ^ 0xABCD_EF01, k, n);
-    let p = MatI32::zeros(m, n);
+/// One protocol line through parse -> execute -> record: the per-line
+/// step both serve modes share. `run` executes the parsed request
+/// however the mode likes (inline, or through the dispatch queue);
+/// `None` means the request was refused at admission (`ERR busy`).
+fn handle_line(
+    stats: &RequestStats,
+    line: &str,
+    run: &mut dyn FnMut(Parsed) -> Option<String>,
+) -> Reply {
     let t0 = Instant::now();
-    let (q, _acc) = backend.gemm(&x, &w, &p, 0.002)?;
-    let wall_us = t0.elapsed().as_micros();
-    let checksum = q
-        .data
-        .iter()
-        .fold(0u64, |h, &v| h.wrapping_mul(31).wrapping_add(v as u8 as u64));
-    Ok((checksum, wall_us))
-}
-
-/// What the chip would cost for this GEMM (memoized cycle model; safe to
-/// call from many threads at once).
-pub(crate) fn sim_cost(
-    cfg: &ChipConfig,
-    cache: &SharedTileCache,
-    m: usize,
-    k: usize,
-    n: usize,
-) -> (u64, f64) {
-    let layer = Layer::new(
-        "req",
-        LayerKind::Gemm {
-            m: m as u64,
-            k: k as u64,
-            n: n as u64,
-        },
-    );
-    let mut handle = cache;
-    let lm = run_layer(cfg, &layer, &mut handle);
-    let sim_cycles = lm.latency_cycles;
-    (sim_cycles, sim_cycles as f64 / cfg.operating_point.freq_mhz)
-}
-
-/// Execute one GEMM request end to end: numerics + chip-model timing.
-pub(crate) fn serve_gemm(
-    backend: &mut impl GemmBackend,
-    cfg: &ChipConfig,
-    cache: &SharedTileCache,
-    m: usize,
-    k: usize,
-    n: usize,
-    seed: u64,
-) -> Result<GemmResponse> {
-    let (checksum, wall_us) = run_numerics(backend, m, k, n, seed)?;
-    let (sim_cycles, sim_us) = sim_cost(cfg, cache, m, k, n);
-    Ok(GemmResponse {
-        checksum,
-        wall_us,
-        sim_cycles,
-        sim_us,
-    })
-}
-
-fn format_ok(r: &GemmResponse) -> String {
-    format!(
-        "OK checksum={} us={} sim_cycles={} sim_us={:.2}",
-        r.checksum, r.wall_us, r.sim_cycles, r.sim_us
-    )
-}
-
-/// Answer a WORKLOAD request from the plan cache. Every field is a pure
-/// function of the memoized plan, so the response bytes are identical
-/// across engines, connections and cache temperature — the differential
-/// tests rely on this.
-fn format_workload(cfg: &ChipConfig, name: &str, p: &WorkloadPlan) -> String {
-    let latency = p.total_latency_cycles();
-    format!(
-        "OK workload={} latency_cycles={} compute_cycles={} dma_cycles={} dma_kb={} tiles={} sim_ms={:.3}",
-        name,
-        latency,
-        p.total_compute_cycles(),
-        p.total_dma_cycles(),
-        p.total_dma_bytes() / 1024,
-        p.dispatched_tiles,
-        latency as f64 / (cfg.operating_point.freq_mhz * 1e3),
-    )
-}
-
-/// Resolve one WORKLOAD request (shared by both engines) to its full
-/// response line: plan-cache lookup, plan-once-answer-many. Warm
-/// requests never materialize the layer graph or a report — the plan
-/// cache is probed by the request's name before `by_name` runs, and the
-/// response is formatted from the immutable plan's aggregates.
-fn serve_workload(cfg: &ChipConfig, plans: &PlanCache, name: &str) -> String {
-    match plans.plan_named(cfg, name, || workloads::by_name(name)) {
-        Some(p) => format_workload(cfg, name, &p),
-        None => format!("ERR unknown workload {name:?}"),
+    match parse_request(line) {
+        Ok(Parsed::Quit) => Reply::Quit,
+        Ok(req) => {
+            let verb = req.verb();
+            match run(req) {
+                Some(resp) => {
+                    stats.record(verb, t0.elapsed().as_micros() as u64);
+                    Reply::Line(resp)
+                }
+                None => {
+                    stats.reject();
+                    Reply::Line("ERR busy".to_string())
+                }
+            }
+        }
+        Err(resp) => {
+            stats.record(Verb::Error, t0.elapsed().as_micros() as u64);
+            Reply::Line(resp)
+        }
     }
 }
 
-/// Resolve one LINT request: plan (or reuse) the named workload, then
-/// run the static verifier (`plan::verify`, DESIGN.md §13) against it.
-/// The response is deterministic: a clean plan always answers
-/// `OK lint workload=<name> findings=0`; a corrupt plan would enumerate
-/// its findings as `rule@layer` pairs after the count.
-fn serve_lint(cfg: &ChipConfig, plans: &PlanCache, name: &str) -> String {
-    let Some(w) = workloads::by_name(name) else {
-        return format!("ERR unknown workload {name:?}");
-    };
-    let plan = plans
-        .plan_named(cfg, name, || Some(w.clone()))
-        .expect("resolver always yields the workload");
-    let findings = crate::plan::verify(cfg, &w, &plan);
-    let mut resp = format!("OK lint workload={} findings={}", name, findings.len());
-    for f in &findings {
-        resp.push_str(&format!(" {}@{}", f.rule, f.layer));
-    }
-    resp
-}
-
-/// Serve one connection with the backend on the current thread.
+/// Serve one connection with the backend inline on the current thread.
 fn handle_sequential(
     stream: TcpStream,
     backend: &mut impl GemmBackend,
-    cfg: &ChipConfig,
-    cache: &SharedTileCache,
-    plans: &PlanCache,
+    engine: Engine<'_>,
 ) -> Result<()> {
-    let mut out = stream.try_clone().context("clone stream")?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        match parse_request(&line) {
-            Ok(Parsed::Gemm { m, k, n, seed }) => {
-                match serve_gemm(backend, cfg, cache, m, k, n, seed) {
-                    Ok(r) => writeln!(out, "{}", format_ok(&r))?,
-                    Err(e) => writeln!(out, "ERR {e}")?,
-                }
-            }
-            Ok(Parsed::Workload { name }) => {
-                writeln!(out, "{}", serve_workload(cfg, plans, &name))?;
-            }
-            Ok(Parsed::Lint { name }) => {
-                writeln!(out, "{}", serve_lint(cfg, plans, &name))?;
-            }
-            Ok(Parsed::Quit) => break,
-            Err(resp) => writeln!(out, "{resp}")?,
-        }
-    }
-    Ok(())
+    transport::serve_lines(stream, |line| {
+        let mut lane = InlineLane {
+            backend: &mut *backend,
+        };
+        handle_line(engine.stats, line, &mut |req| {
+            Some(engine.handle(&req, &mut lane))
+        })
+    })
 }
 
-/// One numerics request in flight to the dedicated worker thread.
-struct NumericsJob {
-    m: usize,
-    k: usize,
-    n: usize,
-    seed: u64,
-    reply: mpsc::Sender<Result<(u64, u128)>>,
-}
-
-/// Serve one connection, overlapping numerics (worker thread) with the
-/// shared-cache sim-cost lookup (this thread). WORKLOAD requests never
-/// touch the numerics worker — they are pure plan-cache reads.
-fn handle_concurrent(
-    stream: TcpStream,
-    cfg: &ChipConfig,
-    cache: &SharedTileCache,
-    plans: &PlanCache,
-    jobs: &mpsc::Sender<NumericsJob>,
-) -> Result<()> {
-    let mut out = stream.try_clone().context("clone stream")?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        match parse_request(&line) {
-            Ok(Parsed::Gemm { m, k, n, seed }) => {
-                // Cheap validation here so malformed sizes never occupy
-                // the (serialized) numerics worker.
-                if let Err(e) = check_size(m, k, n) {
-                    writeln!(out, "ERR {e}")?;
-                    continue;
-                }
-                let (reply_tx, reply_rx) = mpsc::channel();
-                jobs.send(NumericsJob {
-                    m,
-                    k,
-                    n,
-                    seed,
-                    reply: reply_tx,
-                })
-                .map_err(|_| anyhow!("numerics worker is gone"))?;
-                // Overlap: the chip-model cost resolves here while the
-                // worker crunches the numerics.
-                let (sim_cycles, sim_us) = sim_cost(cfg, cache, m, k, n);
-                match reply_rx.recv() {
-                    Ok(Ok((checksum, wall_us))) => {
-                        let r = GemmResponse {
-                            checksum,
-                            wall_us,
-                            sim_cycles,
-                            sim_us,
-                        };
-                        writeln!(out, "{}", format_ok(&r))?;
-                    }
-                    Ok(Err(e)) => writeln!(out, "ERR {e}")?,
-                    Err(_) => {
-                        writeln!(out, "ERR numerics worker is gone")?;
-                        bail!("numerics worker is gone");
-                    }
-                }
-            }
-            Ok(Parsed::Workload { name }) => {
-                writeln!(out, "{}", serve_workload(cfg, plans, &name))?;
-            }
-            Ok(Parsed::Lint { name }) => {
-                writeln!(out, "{}", serve_lint(cfg, plans, &name))?;
-            }
-            Ok(Parsed::Quit) => break,
-            Err(resp) => writeln!(out, "{resp}")?,
-        }
-    }
-    Ok(())
+/// Serve one connection in threaded mode: parse on this thread, admit
+/// into the dispatch queue, relay the worker's response. STATS bypasses
+/// the queue — a saturated server must stay observable, and the verb is
+/// a handful of atomic reads.
+fn handle_dispatched(stream: TcpStream, engine: Engine<'_>, d: &Dispatcher) -> Result<()> {
+    transport::serve_lines(stream, |line| {
+        handle_line(engine.stats, line, &mut |req| match req {
+            Parsed::Stats => Some(engine.render_stats()),
+            req => d.submit(req).map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| "ERR internal: worker lost".to_string())
+            }),
+        })
+    })
 }
 
 /// Bind the listener (so the caller learns the port before blocking).
@@ -390,6 +166,13 @@ pub fn serve_blocking(
     cache: &SharedTileCache,
     plans: &PlanCache,
 ) -> Result<ServerStats> {
+    let req_stats = RequestStats::new();
+    let engine = Engine {
+        cfg,
+        tiles: cache,
+        plans,
+        stats: &req_stats,
+    };
     let mut stats = ServerStats::default();
     for stream in listener.incoming() {
         let stream = match stream {
@@ -400,7 +183,7 @@ pub fn serve_blocking(
             }
         };
         let peer = stream.peer_addr().ok();
-        match handle_sequential(stream, backend, cfg, cache, plans) {
+        match handle_sequential(stream, backend, engine) {
             Ok(()) => stats.served += 1,
             Err(e) => {
                 stats.failed += 1;
@@ -416,19 +199,22 @@ pub fn serve_blocking(
     Ok(stats)
 }
 
-/// The concurrent serving engine: one handler thread per connection, one
-/// dedicated numerics worker, one shared tile cache, one plan cache.
+/// The concurrent serving engine: one transport thread per connection,
+/// a bounded dispatch queue drained by [`ServeOptions::workers`] engine
+/// workers, one dedicated numerics worker, one shared tile cache, one
+/// plan cache.
 ///
-/// `backend_factory` runs ON the worker thread (PJRT handles are not
-/// `Send`, so the backend must be born where it lives). `max_conns`
-/// counts *accepted* connections — with parallel handlers the engine
-/// cannot know success before completion; per-connection failures are
-/// still logged and reported in the returned [`ServerStats`].
+/// `backend_factory` runs ON the numerics worker thread (PJRT handles
+/// are not `Send`, so the backend must be born where it lives).
+/// `opts.max_conns` counts *accepted* connections — with parallel
+/// handlers the engine cannot know success before completion;
+/// per-connection failures are still logged and reported in the
+/// returned [`ServerStats`].
 pub fn serve_threaded<B, F>(
     backend_factory: F,
     cfg: &ChipConfig,
     listener: TcpListener,
-    max_conns: Option<usize>,
+    opts: ServeOptions,
     cache: &SharedTileCache,
     plans: &PlanCache,
 ) -> Result<ServerStats>
@@ -436,7 +222,11 @@ where
     B: GemmBackend + 'static,
     F: FnOnce() -> Result<B> + Send + 'static,
 {
-    let (job_tx, job_rx) = mpsc::channel::<NumericsJob>();
+    // Bounded numerics queue (at most one outstanding job per engine
+    // worker): when the backend falls behind, WorkerLane's blocking
+    // send stalls the pool — backpressure — instead of growing an
+    // unbounded buffer.
+    let (job_tx, job_rx) = mpsc::sync_channel::<NumericsJob>(opts.workers.max(1));
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
     let worker = std::thread::Builder::new()
         .name("voltra-numerics".to_string())
@@ -480,8 +270,17 @@ where
         }
     }
 
+    let req_stats = RequestStats::new();
     let mut stats = ServerStats::default();
     std::thread::scope(|s| {
+        let engine = Engine {
+            cfg,
+            tiles: cache,
+            plans,
+            stats: &req_stats,
+        };
+        let numerics = job_tx.clone();
+        let dispatcher = dispatch::start(s, engine, numerics, opts.workers, opts.queue_depth);
         let mut accepted = 0usize;
         let mut handles = Vec::new();
         for stream in listener.incoming() {
@@ -503,13 +302,13 @@ where
                     i += 1;
                 }
             }
-            let jobs = job_tx.clone();
+            let d = dispatcher.clone();
             handles.push(s.spawn(move || {
                 let peer = stream.peer_addr().ok();
-                handle_concurrent(stream, cfg, cache, plans, &jobs).map_err(|e| (peer, e))
+                handle_dispatched(stream, engine, &d).map_err(|e| (peer, e))
             }));
             accepted += 1;
-            if let Some(max) = max_conns {
+            if let Some(max) = opts.max_conns {
                 if accepted >= max {
                     break;
                 }
@@ -518,6 +317,9 @@ where
         for h in handles {
             tally(h.join(), &mut stats);
         }
+        // Every handler's dispatcher clone is gone once they join; drop
+        // ours so the pool drains and the scope can join its workers.
+        drop(dispatcher);
     });
     drop(job_tx);
     let _ = worker.join();
@@ -527,117 +329,12 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::HostBackend;
 
     #[test]
-    fn generated_operands_are_deterministic_and_int8() {
-        let a = gen_mat(7, 16, 16);
-        let b = gen_mat(7, 16, 16);
-        assert_eq!(a, b);
-        assert!(a.data.iter().all(|&v| (-127..=127).contains(&v)));
-        let c = gen_mat(8, 16, 16);
-        assert_ne!(a, c);
-    }
-
-    #[test]
-    fn checksum_is_order_sensitive() {
-        let h = |v: &[i32]| {
-            v.iter()
-                .fold(0u64, |h, &x| h.wrapping_mul(31).wrapping_add(x as u8 as u64))
-        };
-        assert_ne!(h(&[1, 2, 3]), h(&[3, 2, 1]));
-    }
-
-    #[test]
-    fn parser_distinguishes_bad_integers_from_bad_commands() {
-        assert_eq!(
-            parse_request("GEMM 8 8 8 1"),
-            Ok(Parsed::Gemm {
-                m: 8,
-                k: 8,
-                n: 8,
-                seed: 1
-            })
-        );
-        assert_eq!(parse_request("QUIT"), Ok(Parsed::Quit));
-        assert_eq!(
-            parse_request("WORKLOAD bert"),
-            Ok(Parsed::Workload {
-                name: "bert".to_string()
-            })
-        );
-        assert_eq!(
-            parse_request("LINT bert"),
-            Ok(Parsed::Lint {
-                name: "bert".to_string()
-            })
-        );
-        let e = parse_request("GEMM a b c 1").unwrap_err();
-        assert!(e.starts_with("ERR bad integer"), "{e}");
-        let e = parse_request("GEMM 8 8 8").unwrap_err();
-        assert!(e.starts_with("ERR expected"), "{e}");
-        let e = parse_request("NONSENSE").unwrap_err();
-        assert!(e.starts_with("ERR expected"), "{e}");
-        let e = parse_request("WORKLOAD").unwrap_err();
-        assert!(e.starts_with("ERR expected"), "{e}");
-        let e = parse_request("LINT").unwrap_err();
-        assert!(e.starts_with("ERR expected"), "{e}");
-        // A negative dimension is a bad integer for usize, not a usage error.
-        let e = parse_request("GEMM -8 8 8 1").unwrap_err();
-        assert!(e.starts_with("ERR bad integer"), "{e}");
-    }
-
-    #[test]
-    fn size_check_rejects_degenerate_and_huge() {
-        assert!(check_size(0, 0, 0).is_err());
-        assert!(check_size(8, 8, 8).is_ok());
-        // Thin-K: tiny operands, gigabyte outputs — must be rejected.
-        assert!(check_size(50_000, 1, 50_000).is_err());
-        // Would overflow naive usize arithmetic; must be cleanly rejected.
-        assert!(check_size(usize::MAX, usize::MAX, usize::MAX).is_err());
-    }
-
-    #[test]
-    fn serve_gemm_on_host_backend_is_deterministic() {
-        let cfg = ChipConfig::voltra();
-        let cache = SharedTileCache::new();
-        let mut b = HostBackend;
-        let r1 = serve_gemm(&mut b, &cfg, &cache, 64, 64, 64, 1).unwrap();
-        let r2 = serve_gemm(&mut b, &cfg, &cache, 64, 64, 64, 1).unwrap();
-        assert_eq!(r1.checksum, r2.checksum);
-        assert_eq!(r1.sim_cycles, r2.sim_cycles);
-        let r3 = serve_gemm(&mut b, &cfg, &cache, 64, 64, 64, 2).unwrap();
-        assert_ne!(r1.checksum, r3.checksum);
-    }
-
-    #[test]
-    fn serve_workload_answers_from_the_plan_cache() {
-        let cfg = ChipConfig::voltra();
-        let plans = PlanCache::new();
-        let cold = serve_workload(&cfg, &plans, "lstm");
-        let warm = serve_workload(&cfg, &plans, "lstm");
-        // Byte-identical response, one plan compiled.
-        assert_eq!(cold, warm);
-        assert!(cold.starts_with("OK workload=lstm latency_cycles="), "{cold}");
-        let s = plans.stats();
-        assert_eq!(s.misses, 1, "second request must reuse the plan");
-        assert!(s.hits >= 1);
-        let e = serve_workload(&cfg, &plans, "nope");
-        assert!(e.starts_with("ERR unknown workload"), "{e}");
-    }
-
-    #[test]
-    fn serve_lint_reports_clean_plans_and_unknown_names() {
-        let cfg = ChipConfig::voltra();
-        let plans = PlanCache::new();
-        let r = serve_lint(&cfg, &plans, "lstm");
-        assert_eq!(r, "OK lint workload=lstm findings=0");
-        // Answered from the same cache: linting after serving replans nothing.
-        let before = plans.stats().misses;
-        let again = serve_lint(&cfg, &plans, "lstm");
-        assert_eq!(r, again);
-        assert_eq!(plans.stats().misses, before);
-        let e = serve_lint(&cfg, &plans, "nope");
-        assert!(e.starts_with("ERR unknown workload"), "{e}");
+    fn serve_options_default_to_a_bounded_pool() {
+        let o = ServeOptions::default();
+        assert!(o.max_conns.is_none());
+        assert!((1..=8).contains(&o.workers));
+        assert_eq!(o.queue_depth, 64);
     }
 }

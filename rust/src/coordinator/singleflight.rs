@@ -1,0 +1,235 @@
+//! Single-flight coalescing: at most one thread computes any given key
+//! at a time, everyone else blocks on that computation and shares its
+//! result (DESIGN.md §14).
+//!
+//! This is the thundering-herd guard the serving stack wraps around its
+//! memoization stores: a burst of identical cold requests used to race
+//! N planners/simulators at the same key (pure work, so merely wasted —
+//! but N copies of a multi-millisecond plan compile is exactly the load
+//! spike that sinks tail latency). With a [`FlightGroup`] in front, the
+//! first caller becomes the *leader* and computes; every concurrent
+//! caller for the same key registers as a *follower*, blocks on the
+//! flight's condvar, and wakes with the leader's published value.
+//!
+//! Protocol:
+//! * [`FlightGroup::join`] — the first caller for a key gets
+//!   [`Role::Leader`] and MUST eventually [`Leader::publish`] a value;
+//!   later callers get [`Role::Waited`] with the published value.
+//! * A leader that drops without publishing (resolve failure, panic
+//!   unwind) *aborts* the flight: followers wake with `Waited(None)`
+//!   and retry the whole lookup — no caller can deadlock on a leader
+//!   that died.
+//! * The flight entry is removed from the in-flight map *before* the
+//!   value is published, so a caller arriving after completion never
+//!   waits on a finished flight — it re-reads its cache (callers always
+//!   check their memoization store first) or leads a fresh flight.
+//!
+//! The group stores nothing but in-flight state: completed values live
+//! in the caller's own store ([`SharedTileCache`] shards, [`PlanCache`]
+//! shards), keeping this primitive policy-free.
+//!
+//! [`SharedTileCache`]: crate::coordinator::SharedTileCache
+//! [`PlanCache`]: crate::plan::PlanCache
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One in-flight computation. The slot holds `None` while the leader
+/// computes, `Some(Some(v))` once published, `Some(None)` if the leader
+/// aborted (followers retry).
+struct Flight<V> {
+    slot: Mutex<Option<Option<V>>>,
+    cv: Condvar,
+}
+
+impl<V> Flight<V> {
+    fn new() -> Self {
+        Flight {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// The in-flight computations for one keyed store.
+pub(crate) struct FlightGroup<K, V> {
+    inflight: Mutex<HashMap<K, Arc<Flight<V>>>>,
+}
+
+impl<K, V> Default for FlightGroup<K, V> {
+    fn default() -> Self {
+        FlightGroup {
+            inflight: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+/// What [`FlightGroup::join`] made of this caller.
+pub(crate) enum Role<'g, K: Eq + Hash + Clone, V: Clone> {
+    /// First caller for the key: compute, then [`Leader::publish`].
+    /// Dropping without publishing aborts the flight (followers retry).
+    Leader(Leader<'g, K, V>),
+    /// Another caller led this key: its published value, or `None` if
+    /// it aborted — re-check the cache and join again.
+    Waited(Option<V>),
+}
+
+/// The leader's obligation token (see [`Role::Leader`]).
+pub(crate) struct Leader<'g, K: Eq + Hash + Clone, V: Clone> {
+    group: &'g FlightGroup<K, V>,
+    key: K,
+    flight: Arc<Flight<V>>,
+    finished: bool,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> FlightGroup<K, V> {
+    /// Join the flight for `key`. `on_coalesce` fires exactly when this
+    /// caller becomes a follower — after registering on the flight,
+    /// *before* blocking — so a leader can observe (through whatever
+    /// counter the callback bumps) how many callers it is serving while
+    /// it is still computing.
+    pub(crate) fn join<F: FnOnce()>(&self, key: &K, on_coalesce: F) -> Role<'_, K, V> {
+        let flight = {
+            let mut map = self.inflight.lock().expect("flight map poisoned");
+            match map.get(key) {
+                Some(f) => Arc::clone(f),
+                None => {
+                    let f = Arc::new(Flight::new());
+                    map.insert(key.clone(), Arc::clone(&f));
+                    return Role::Leader(Leader {
+                        group: self,
+                        key: key.clone(),
+                        flight: f,
+                        finished: false,
+                    });
+                }
+            }
+        };
+        on_coalesce();
+        let mut slot = flight.slot.lock().expect("flight slot poisoned");
+        while slot.is_none() {
+            slot = flight.cv.wait(slot).expect("flight slot poisoned");
+        }
+        Role::Waited((*slot).clone().expect("loop exits only when published"))
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Leader<'_, K, V> {
+    /// Publish the computed value to every follower and retire the
+    /// flight.
+    pub(crate) fn publish(mut self, value: V) {
+        self.finish(Some(value));
+    }
+
+    fn finish(&mut self, value: Option<V>) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        // Retire the flight BEFORE publishing: a caller that arrives
+        // after this point must lead a fresh flight (after re-checking
+        // its cache), never wait on a completed one.
+        self.group
+            .inflight
+            .lock()
+            .expect("flight map poisoned")
+            .remove(&self.key);
+        *self.flight.slot.lock().expect("flight slot poisoned") = Some(value);
+        self.flight.cv.notify_all();
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Drop for Leader<'_, K, V> {
+    fn drop(&mut self) {
+        // Abort path: unwinds (or forgotten leaders) wake followers
+        // empty-handed instead of deadlocking them.
+        self.finish(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::time::{Duration, Instant};
+
+    /// Spin until `cond` holds (bounded so a regression fails loudly
+    /// instead of hanging the suite).
+    fn await_true(cond: impl Fn() -> bool, what: &str) {
+        let t0 = Instant::now();
+        while !cond() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "timed out: {what}");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn followers_share_the_leaders_value() {
+        let group: FlightGroup<u32, u64> = FlightGroup::default();
+        let registered = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            let Role::Leader(lead) = group.join(&7, || unreachable!("first caller leads")) else {
+                panic!("first caller must lead");
+            };
+            let followers: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        let role = group.join(&7, || {
+                            registered.fetch_add(1, Ordering::SeqCst);
+                        });
+                        match role {
+                            Role::Leader(_) => panic!("flight already led"),
+                            Role::Waited(v) => v,
+                        }
+                    })
+                })
+                .collect();
+            // Every follower registers (callback fires pre-block), THEN
+            // the leader publishes — proving waiters really waited.
+            await_true(|| registered.load(Ordering::SeqCst) == 4, "followers registering");
+            lead.publish(42);
+            for f in followers {
+                assert_eq!(f.join().unwrap(), Some(42));
+            }
+        });
+        // The flight retired: the next caller leads afresh.
+        assert!(matches!(group.join(&7, || ()), Role::Leader(_)));
+    }
+
+    #[test]
+    fn aborted_leader_wakes_followers_for_retry() {
+        let group: FlightGroup<u32, u64> = FlightGroup::default();
+        let registered = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let Role::Leader(lead) = group.join(&1, || ()) else {
+                panic!("first caller must lead");
+            };
+            let follower = s.spawn(|| {
+                let role = group.join(&1, || registered.store(true, Ordering::SeqCst));
+                match role {
+                    Role::Leader(_) => panic!("flight already led"),
+                    Role::Waited(v) => v,
+                }
+            });
+            await_true(|| registered.load(Ordering::SeqCst), "follower registering");
+            drop(lead); // abort without publishing
+            assert_eq!(follower.join().unwrap(), None, "abort must wake with None");
+        });
+        assert!(matches!(group.join(&1, || ()), Role::Leader(_)));
+    }
+
+    #[test]
+    fn distinct_keys_fly_independently() {
+        let group: FlightGroup<u32, u64> = FlightGroup::default();
+        let a = group.join(&1, || ());
+        let b = group.join(&2, || ());
+        match (a, b) {
+            (Role::Leader(la), Role::Leader(lb)) => {
+                la.publish(1);
+                lb.publish(2);
+            }
+            _ => panic!("distinct keys must both lead"),
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Serving-tier SLO metrics (DESIGN.md §14): per-verb request counts,
+//! admission rejections, and a lock-free latency histogram, surfaced
+//! over the wire by the `STATS` protocol verb.
+//!
+//! Everything is atomics — recording a request is a handful of relaxed
+//! increments, cheap enough to sit on every request path of both serve
+//! engines. Latencies are bucketed at power-of-two microsecond
+//! boundaries (31 buckets cover >35 minutes, far beyond any sane
+//! request), so percentiles come from a 32-word cumulative walk with no
+//! locks and no allocation; the reported percentile is the bucket's
+//! inclusive upper bound, i.e. a conservative (never understated)
+//! estimate. `max_us` is tracked exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Request classification for the per-verb counters. `Error` covers
+/// lines the parser rejected (usage / bad-integer responses); verbs
+/// that parse but answer `ERR ...` (unknown workload, unreasonable
+/// size) still count under their verb — the server did that work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Verb {
+    Gemm,
+    Workload,
+    Lint,
+    Stats,
+    Error,
+}
+
+const VERBS: usize = 5;
+
+/// Power-of-two latency buckets: bucket `i` holds requests whose
+/// microsecond latency has bit-length `i` (bucket 0 = 0 us, bucket 1 =
+/// 1 us, bucket 2 = 2-3 us, ...), saturating at the last bucket.
+const HIST_BUCKETS: usize = 32;
+
+fn bucket_of(us: u64) -> usize {
+    ((u64::BITS - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` in microseconds.
+fn bucket_ceiling(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// The serving tier's request counters and latency histogram. One
+/// instance per serve engine invocation, shared by every connection
+/// handler and dispatch worker of that server.
+pub(crate) struct RequestStats {
+    counts: [AtomicU64; VERBS],
+    /// Requests refused at admission (`ERR busy`): never entered the
+    /// dispatch queue, never recorded a latency.
+    rejected: AtomicU64,
+    hist: [AtomicU64; HIST_BUCKETS],
+    max_us: AtomicU64,
+}
+
+impl RequestStats {
+    pub(crate) fn new() -> Self {
+        RequestStats {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            rejected: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one completed request: counted under its verb; answered
+    /// (non-`Error`) requests also enter the latency histogram.
+    pub(crate) fn record(&self, verb: Verb, us: u64) {
+        self.counts[verb as usize].fetch_add(1, Ordering::Relaxed);
+        if verb != Verb::Error {
+            self.hist[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+            self.max_us.fetch_max(us, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one admission rejection (`ERR busy`).
+    pub(crate) fn reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count(&self, verb: Verb) -> u64 {
+        self.counts[verb as usize].load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered under a verb (everything but parse errors).
+    pub(crate) fn served(&self) -> u64 {
+        self.count(Verb::Gemm)
+            + self.count(Verb::Workload)
+            + self.count(Verb::Lint)
+            + self.count(Verb::Stats)
+    }
+
+    /// The `p`-th latency percentile in microseconds (conservative:
+    /// the matching bucket's upper bound). 0 when nothing is recorded.
+    pub(crate) fn percentile_us(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self.hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_ceiling(i);
+            }
+        }
+        self.max_us()
+    }
+
+    pub(crate) fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_the_microsecond_axis() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // Ceilings are consistent with membership.
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_ceiling(i)), i, "ceiling of bucket {i}");
+            assert_eq!(bucket_of(bucket_ceiling(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn percentiles_walk_the_histogram_conservatively() {
+        let s = RequestStats::new();
+        assert_eq!(s.percentile_us(99.0), 0, "empty histogram reports 0");
+        // 99 fast requests (1 us) and one slow outlier (~1 ms).
+        for _ in 0..99 {
+            s.record(Verb::Gemm, 1);
+        }
+        s.record(Verb::Workload, 1000);
+        assert_eq!(s.percentile_us(50.0), 1);
+        assert_eq!(s.percentile_us(99.0), 1);
+        // The 100th-percentile request is the outlier; its bucket's
+        // ceiling bounds it from above.
+        assert_eq!(s.percentile_us(100.0), 1023);
+        assert_eq!(s.max_us(), 1000);
+    }
+
+    #[test]
+    fn verbs_count_independently_and_errors_skip_the_histogram() {
+        let s = RequestStats::new();
+        s.record(Verb::Gemm, 5);
+        s.record(Verb::Gemm, 5);
+        s.record(Verb::Lint, 5);
+        s.record(Verb::Error, 5);
+        s.reject();
+        assert_eq!(s.count(Verb::Gemm), 2);
+        assert_eq!(s.count(Verb::Lint), 1);
+        assert_eq!(s.count(Verb::Error), 1);
+        assert_eq!(s.count(Verb::Workload), 0);
+        assert_eq!(s.served(), 3, "errors are not served requests");
+        assert_eq!(s.rejected(), 1);
+        // Three histogram entries (the error is excluded).
+        let total: u64 = s.hist.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, 3);
+    }
+}

@@ -1,0 +1,83 @@
+//! The transport layer of the serving stack (DESIGN.md §14): framing
+//! and connection lifetime, nothing else. It reads the line-oriented
+//! protocol off a [`TcpStream`], hands each line to a caller-supplied
+//! handler, writes the handler's response line back, and drains the
+//! connection gracefully when the handler signals close (QUIT) or the
+//! peer disconnects.
+//!
+//! Keeping this layer verb-blind is the point of the split: both serve
+//! modes (and any future fleet transport) share one framing
+//! implementation, while everything that *interprets* a line lives in
+//! the engine/dispatch layers above.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+/// What the per-line handler wants done with its line.
+pub(crate) enum Reply {
+    /// Write this response line and keep serving the connection.
+    Line(String),
+    /// Drain and close the connection (QUIT): everything already
+    /// written is flushed before the socket drops.
+    Quit,
+}
+
+/// Serve one connection's line protocol: read request lines, write the
+/// handler's response lines, until QUIT or EOF. The final flush is the
+/// graceful-drain guarantee — a client that sends QUIT sees every
+/// response to the requests it already sent.
+pub(crate) fn serve_lines(
+    stream: TcpStream,
+    mut handle: impl FnMut(&str) -> Reply,
+) -> Result<()> {
+    let mut out = stream.try_clone().context("clone stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        match handle(&line?) {
+            Reply::Line(resp) => writeln!(out, "{resp}")?,
+            Reply::Quit => break,
+        }
+    }
+    out.flush().context("flush on close")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn lines_round_trip_and_quit_drains() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut seen = Vec::new();
+            serve_lines(stream, |line| {
+                seen.push(line.to_string());
+                if line == "QUIT" {
+                    Reply::Quit
+                } else {
+                    Reply::Line(format!("echo {line}"))
+                }
+            })
+            .unwrap();
+            seen
+        });
+        let client = TcpStream::connect(addr).unwrap();
+        let mut w = client.try_clone().unwrap();
+        writeln!(w, "alpha").unwrap();
+        writeln!(w, "beta").unwrap();
+        writeln!(w, "QUIT").unwrap();
+        let replies: Vec<String> = BufReader::new(client)
+            .lines()
+            .map(|l| l.unwrap())
+            .collect();
+        // Both responses arrive before the QUIT-triggered close.
+        assert_eq!(replies, vec!["echo alpha", "echo beta"]);
+        assert_eq!(server.join().unwrap(), vec!["alpha", "beta", "QUIT"]);
+    }
+}

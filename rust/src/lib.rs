@@ -53,5 +53,5 @@ pub use coordinator::{
     SimCache, TileCache, WorkloadReport,
 };
 pub use metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
-pub use plan::{PlanCache, WorkloadPlan};
+pub use plan::{PlanCache, PlanCacheStats, WorkloadPlan};
 pub use tiling::MapperCache;

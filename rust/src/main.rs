@@ -37,8 +37,12 @@ COMMANDS:
     artifacts                    list + smoke-test the AOT artifacts
     serve --port <p>             concurrent serving over TCP: GEMM
                                  numerics (PJRT when artifacts load,
-                                 host-oracle fallback) and WORKLOAD
-                                 requests answered from the plan cache
+                                 host-oracle fallback), WORKLOAD/LINT
+                                 answered from the plan cache, STATS
+                                 for serving counters; --workers <n>
+                                 engine workers (default: cores, max 8),
+                                 --queue-depth <d> waiting requests
+                                 before ERR busy (default: 64)
     report --workload <name>     per-layer table + energy breakdown
 
 OPTIONS:
@@ -535,6 +539,13 @@ fn main() {
                 .get("port")
                 .map(|p| p.parse::<u16>().expect("--port"))
                 .unwrap_or(0);
+            let mut opts = voltra::coordinator::server::ServeOptions::default();
+            if let Some(w) = flags.get("workers") {
+                opts.workers = w.parse().expect("--workers must be an integer");
+            }
+            if let Some(d) = flags.get("queue-depth") {
+                opts.queue_depth = d.parse().expect("--queue-depth must be an integer");
+            }
             let cfg = config_from(&flags);
             let listener =
                 match voltra::coordinator::server::bind(&format!("127.0.0.1:{port}")) {
@@ -545,8 +556,11 @@ fn main() {
                     }
                 };
             println!(
-                "voltra serving on {} — protocol: GEMM <m> <k> <n> <seed> | WORKLOAD <name> | LINT <name>",
-                listener.local_addr().unwrap()
+                "voltra serving on {} ({} workers, queue depth {}) — protocol: \
+                 GEMM <m> <k> <n> <seed> | WORKLOAD <name> | LINT <name> | STATS | QUIT",
+                listener.local_addr().unwrap(),
+                opts.workers,
+                opts.queue_depth
             );
             // The backend is constructed on the dedicated numerics worker
             // thread (PJRT handles are not Send): real artifacts when they
@@ -571,7 +585,7 @@ fn main() {
                 factory,
                 &cfg,
                 listener,
-                None,
+                opts,
                 cache.as_ref(),
                 &plans,
             ) {

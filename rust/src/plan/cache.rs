@@ -4,9 +4,11 @@
 //!
 //! Modeled on the coordinator's `SharedTileCache`:
 //! * sharded `RwLock` maps so unrelated lookups never contend;
-//! * misses plan *outside* any lock (planning is pure, so two racing
-//!   threads at worst duplicate work); the first insert wins and every
-//!   later lookup returns that exact `Arc` — warm hits are therefore
+//! * misses plan *outside* any lock and single-flighted (DESIGN.md
+//!   §14): concurrent requests for the same key block on ONE planner
+//!   and share its plan — a thundering herd of identical cold requests
+//!   compiles exactly once; the first insert wins and every later
+//!   lookup returns that exact `Arc` — warm hits are therefore
 //!   bit-identical forever;
 //! * tile-simulation memoization is scoped per config fingerprint (one
 //!   `SharedTileCache` per fingerprint), so one `PlanCache` can safely
@@ -25,6 +27,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
+use crate::coordinator::singleflight::{FlightGroup, Role};
 use crate::coordinator::{SharedTileCache, WorkloadReport};
 use crate::metrics::CacheStats;
 use crate::workloads::Workload;
@@ -89,6 +92,19 @@ fn shard_of<K: Hash>(key: &K) -> usize {
     (h.finish() as usize) % PLAN_SHARDS
 }
 
+/// Plan-level counters including single-flight coalescing. For a burst
+/// of N concurrent requests at one cold key: `misses == 1` (the
+/// leader's compile), `coalesced == N - 1` (everyone who blocked on it)
+/// — the thundering-herd acceptance invariant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Calls that blocked on another thread's in-flight compile and
+    /// shared its plan instead of compiling their own.
+    pub coalesced: u64,
+}
+
 /// Process-wide, thread-safe plan memoization (see module docs).
 #[derive(Default)]
 pub struct PlanCache {
@@ -96,8 +112,11 @@ pub struct PlanCache {
     /// One tile-simulation cache per config fingerprint: tiles are keyed
     /// by `TileSpec` alone, so they must never be shared across configs.
     tiles: RwLock<HashMap<u64, Arc<SharedTileCache>>>,
+    /// In-flight compiles: one planner per key, everyone else waits.
+    flights: FlightGroup<PlanKey, Arc<WorkloadPlan>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl PlanCache {
@@ -118,6 +137,11 @@ impl PlanCache {
     /// the layer graph — the serving engine's steady state is a pure
     /// shard read. Returns `None` (counting neither hit nor miss) when
     /// `resolve` cannot produce the workload.
+    ///
+    /// Cold keys are single-flighted: the first caller compiles (the
+    /// shard's one `miss`), every concurrent caller for the same key
+    /// blocks on that compile and shares the canonical `Arc` (counted
+    /// in `coalesced`) — a thundering herd plans exactly once.
     pub fn plan_named<F>(
         &self,
         cfg: &ChipConfig,
@@ -132,30 +156,63 @@ impl PlanCache {
             workload: name.to_string(),
         };
         let shard = &self.plans[shard_of(&key)];
-        if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Some(Arc::clone(p));
+        // The resolver is FnOnce but the flight protocol can loop (an
+        // aborted leader sends its waiters around again); a caller
+        // leads at most one flight, so it is taken at most once.
+        let mut resolve = Some(resolve);
+        loop {
+            if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(Arc::clone(p));
+            }
+            match self.flights.join(&key, || {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+            }) {
+                Role::Leader(lead) => {
+                    // A racing leader may have published and retired its
+                    // flight between our shard read and our join.
+                    if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        let p = Arc::clone(p);
+                        lead.publish(Arc::clone(&p));
+                        return Some(p);
+                    }
+                    let resolve = resolve.take().expect("a caller leads at most one flight");
+                    // An unknown name drops the leader, aborting the
+                    // flight: waiters wake, retry, and fail their own
+                    // resolve. Counts neither hit nor miss.
+                    let w = resolve()?;
+                    let tiles = self.tile_cache_for(key.fingerprint);
+                    // Cold plans compile their layers across a small
+                    // scoped pool — bit-identical to the sequential
+                    // build (see [`super::build_parallel`]), just
+                    // faster on first touch.
+                    let threads = std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                        .min(8);
+                    let built = Arc::new(super::build_parallel(cfg, &w, &tiles, threads));
+                    // Debug/test builds statically verify every plan
+                    // before it can be cached (DESIGN.md §13) — any
+                    // invariant violation panics at the insert instead
+                    // of surfacing as a wrong number downstream.
+                    if cfg!(debug_assertions) {
+                        super::verify::assert_clean(cfg, &w, &built);
+                    }
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    // First insert wins: racing planners agree on one
+                    // canonical plan.
+                    let canonical = {
+                        let mut map = shard.write().expect("plan shard poisoned");
+                        Arc::clone(map.entry(key.clone()).or_insert(built))
+                    };
+                    lead.publish(Arc::clone(&canonical));
+                    return Some(canonical);
+                }
+                Role::Waited(Some(p)) => return Some(p),
+                Role::Waited(None) => continue,
+            }
         }
-        let w = resolve()?;
-        let tiles = self.tile_cache_for(key.fingerprint);
-        // Cold plans compile their layers across a small scoped pool —
-        // bit-identical to the sequential build (see
-        // [`super::build_parallel`]), just faster on first touch.
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(8);
-        let built = Arc::new(super::build_parallel(cfg, &w, &tiles, threads));
-        // Debug/test builds statically verify every plan before it can
-        // be cached (DESIGN.md §13) — any invariant violation panics at
-        // the insert instead of surfacing as a wrong number downstream.
-        if cfg!(debug_assertions) {
-            super::verify::assert_clean(cfg, &w, &built);
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        // First insert wins: racing planners agree on one canonical plan.
-        let mut map = shard.write().expect("plan shard poisoned");
-        Some(Arc::clone(map.entry(key).or_insert(built)))
     }
 
     /// Plan (or reuse) and execute in one call — the serving/suite path.
@@ -199,6 +256,17 @@ impl PlanCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Like [`PlanCache::stats`], extended with the single-flight
+    /// coalesced-wait counter (the serving tier's STATS verb reports
+    /// all three).
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
         }
     }
 

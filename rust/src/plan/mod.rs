@@ -33,7 +33,7 @@ pub mod planner;
 pub mod residency;
 pub mod verify;
 
-pub use cache::{fingerprint, PlanCache};
+pub use cache::{fingerprint, PlanCache, PlanCacheStats};
 pub use verify::{verify, LintFinding, Severity};
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -12,34 +12,61 @@ use std::sync::Arc;
 use std::thread;
 
 use voltra::config::ChipConfig;
-use voltra::coordinator::server::{bind, serve_blocking, serve_threaded};
+use voltra::coordinator::server::{bind, serve_blocking, serve_threaded, ServeOptions};
 use voltra::coordinator::SharedTileCache;
 use voltra::plan::PlanCache;
 use voltra::runtime::HostBackend;
 
+/// Default dispatch tuning with an accepted-connection cap.
+fn opts(max_conns: usize) -> ServeOptions {
+    ServeOptions {
+        max_conns: Some(max_conns),
+        ..ServeOptions::default()
+    }
+}
+
 /// The request script every client plays (mix of cached-shape repeats,
-/// ragged shapes, plan-cache workload queries, rejects and parse
-/// errors). WORKLOAD responses carry no wall-clock token, so they must
-/// compare byte-identical across engines and cache temperature.
-const REQS: [&str; 10] = [
+/// ragged shapes, plan-cache workload/lint queries, a stats probe,
+/// rejects and parse errors). WORKLOAD and LINT responses carry no
+/// wall-clock token, so they must compare byte-identical across engines
+/// and cache temperature.
+const REQS: [&str; 12] = [
     "GEMM 64 64 64 1",
     "GEMM 96 96 96 2",
     "GEMM 40 64 72 3",
     "WORKLOAD lstm",
     "GEMM 64 64 64 1",
     "WORKLOAD lstm",
+    "LINT lstm",
     "WORKLOAD nope",
     "GEMM 0 0 0 0",
     "GEMM 1x 2 3 4",
+    "STATS",
     "QUIT",
 ];
 
 /// Strip the wall-clock token so responses compare byte-identically.
+/// STATS counters depend on how requests interleave across clients and
+/// engines; the script only checks the verb answers.
 fn normalize(resp: &str) -> String {
+    if resp.starts_with("OK stats ") {
+        return "OK stats".to_string();
+    }
     resp.split_whitespace()
         .filter(|t| !t.starts_with("us="))
         .collect::<Vec<_>>()
         .join(" ")
+}
+
+/// One request, one response, over a fresh connection.
+fn one_shot(addr: SocketAddr, req: &str) -> String {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    writeln!(conn, "{req}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    writeln!(conn, "QUIT").unwrap();
+    line.trim().to_string()
 }
 
 /// Play the request script over one connection; normalized responses.
@@ -86,7 +113,7 @@ fn concurrent_clients_match_sequential_responses() {
         thread::spawn(move || {
             let cfg = ChipConfig::voltra();
             let plans = PlanCache::new();
-            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(4), &cache, &plans).unwrap()
+            serve_threaded(|| Ok(HostBackend), &cfg, listener, opts(4), &cache, &plans).unwrap()
         })
     };
     let clients: Vec<_> = (0..4).map(|_| thread::spawn(move || client(addr))).collect();
@@ -113,7 +140,7 @@ fn shared_cache_survives_across_connections() {
         let plans = Arc::clone(&plans);
         thread::spawn(move || {
             let cfg = ChipConfig::voltra();
-            serve_threaded(|| Ok(HostBackend), &cfg, listener, Some(3), &cache, &plans).unwrap()
+            serve_threaded(|| Ok(HostBackend), &cfg, listener, opts(3), &cache, &plans).unwrap()
         })
     };
 
@@ -162,10 +189,152 @@ fn backend_factory_failure_surfaces_at_startup() {
         || Err(anyhow::anyhow!("backend deliberately unavailable")),
         &cfg,
         listener,
-        Some(1),
+        opts(1),
         &cache,
         &plans,
     );
     let e = r.expect_err("factory failure must abort serving");
     assert!(format!("{e}").contains("deliberately unavailable"));
+}
+
+#[test]
+fn cold_workload_herd_plans_once_with_identical_responses() {
+    // Sequential reference answer for a cold WORKLOAD.
+    let listener = bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = thread::spawn(move || {
+        let cfg = ChipConfig::voltra();
+        let cache = SharedTileCache::new();
+        let plans = PlanCache::new();
+        serve_blocking(&mut HostBackend, &cfg, listener, Some(1), &cache, &plans).unwrap()
+    });
+    let reference = one_shot(addr, "WORKLOAD bert");
+    server.join().unwrap();
+    assert!(reference.starts_with("OK workload=bert "), "{reference}");
+
+    // The herd: 32 connected clients fire the same cold WORKLOAD at a
+    // barrier, into a pool wide enough to admit all of them at once.
+    const HERD: usize = 32;
+    let listener = bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let plans = Arc::new(PlanCache::new());
+    let server = {
+        let plans = Arc::clone(&plans);
+        thread::spawn(move || {
+            let cfg = ChipConfig::voltra();
+            let cache = SharedTileCache::new();
+            serve_threaded(
+                || Ok(HostBackend),
+                &cfg,
+                listener,
+                ServeOptions {
+                    max_conns: Some(HERD),
+                    workers: HERD,
+                    queue_depth: HERD,
+                },
+                &cache,
+                &plans,
+            )
+            .unwrap()
+        })
+    };
+    let barrier = Arc::new(std::sync::Barrier::new(HERD));
+    let clients: Vec<_> = (0..HERD)
+        .map(|_| {
+            let barrier = Arc::clone(&barrier);
+            thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                barrier.wait();
+                writeln!(conn, "WORKLOAD bert").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                writeln!(conn, "QUIT").unwrap();
+                line.trim().to_string()
+            })
+        })
+        .collect();
+    for c in clients {
+        assert_eq!(
+            c.join().unwrap(),
+            reference,
+            "a herd response diverged from the sequential answer"
+        );
+    }
+    let stats = server.join().unwrap();
+    assert_eq!((stats.served, stats.failed), (HERD, 0));
+    // The thundering-herd invariant: ONE compile for the whole burst.
+    // Every other request either coalesced onto the in-flight compile
+    // or arrived after it published (a plain hit); nobody re-planned.
+    // (The exact 1-miss/31-coalesced split is pinned deterministically
+    // in tests/plan_cache.rs, where the compile can be held open.)
+    let p = plans.plan_stats();
+    assert_eq!(p.misses, 1, "{p:?}");
+    assert_eq!(p.hits + p.coalesced, (HERD - 1) as u64, "{p:?}");
+}
+
+#[test]
+fn saturated_queue_answers_busy_and_stats_reports_it() {
+    let listener = bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = thread::spawn(move || {
+        let cfg = ChipConfig::voltra();
+        let cache = SharedTileCache::new();
+        let plans = PlanCache::new();
+        serve_threaded(
+            || Ok(HostBackend),
+            &cfg,
+            listener,
+            // One worker, zero queue slots: a submit is admitted only
+            // at the rendezvous with the idle worker — any overlap is
+            // refused, never parked.
+            ServeOptions {
+                max_conns: Some(3),
+                workers: 1,
+                queue_depth: 0,
+            },
+            &cache,
+            &plans,
+        )
+        .unwrap()
+    });
+    // Two clients hammer small GEMMs concurrently: whenever both have
+    // a request in flight, one is executing and the other is refused.
+    let hammer = |addr: SocketAddr| {
+        thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut busy = 0u64;
+            for i in 0..100 {
+                writeln!(conn, "GEMM 8 8 8 {i}").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let line = line.trim();
+                if line == "ERR busy" {
+                    busy += 1;
+                } else {
+                    assert!(line.starts_with("OK checksum="), "{line}");
+                }
+            }
+            writeln!(conn, "QUIT").unwrap();
+            busy
+        })
+    };
+    let a = hammer(addr);
+    let b = hammer(addr);
+    let busy = a.join().unwrap() + b.join().unwrap();
+    assert!(
+        busy >= 1,
+        "200 racing requests against a rendezvous queue never collided"
+    );
+    // STATS bypasses the dispatch queue, so a saturated server stays
+    // observable; its busy tally matches what the clients saw (every
+    // response was recorded before it was written).
+    let stats_line = one_shot(addr, "STATS");
+    let server_stats = server.join().unwrap();
+    assert_eq!((server_stats.served, server_stats.failed), (3, 0));
+    assert!(
+        stats_line.contains(&format!(" busy={busy} ")),
+        "{stats_line} (clients observed busy={busy})"
+    );
 }

@@ -32,6 +32,8 @@ fn serves_gemm_requests_over_tcp() {
             "GEMM 0 0 0 0",     // must be rejected
             "GEMM a b c 1",     // malformed numbers -> distinct parse error
             "NONSENSE",
+            "LINT lstm",        // verifier over the already-cached plan
+            "STATS",            // serving counters for everything above
             "QUIT",
         ] {
             writeln!(conn, "{req}").unwrap();
@@ -54,7 +56,7 @@ fn serves_gemm_requests_over_tcp() {
 
     assert_eq!(stats.served, 1);
     assert_eq!(stats.failed, 0);
-    assert_eq!(responses.len(), 9);
+    assert_eq!(responses.len(), 11);
     assert!(responses[0].starts_with("OK checksum="), "{}", responses[0]);
     assert!(responses[1].starts_with("OK checksum="), "{}", responses[1]);
     // Determinism: same request, same checksum.
@@ -73,6 +75,21 @@ fn serves_gemm_requests_over_tcp() {
     assert!(responses[6].starts_with("ERR unreasonable"), "{}", responses[6]);
     assert!(responses[7].starts_with("ERR bad integer"), "{}", responses[7]);
     assert!(responses[8].starts_with("ERR expected"), "{}", responses[8]);
+    // LINT answers from the same plan cache; the suite plans are clean.
+    assert_eq!(responses[9], "OK lint workload=lstm findings=0");
+    // STATS reports every request above it, deterministically: 4 GEMM
+    // verbs (the rejected size parsed fine), 3 WORKLOAD (unknown names
+    // parsed fine), 1 LINT, 2 parse errors, no admissions refused; the
+    // plan cache compiled lstm once and answered the repeat WORKLOAD
+    // and the LINT from it. A STATS response never counts itself.
+    assert!(
+        responses[10].starts_with(
+            "OK stats served=8 gemm=4 workload=3 lint=1 stats=0 errors=2 busy=0 \
+             plan_hits=2 plan_misses=1 plan_waits=0 tile_hits="
+        ),
+        "{}",
+        responses[10]
+    );
     // The chip-model estimate rides along.
     assert!(responses[0].contains("sim_cycles="));
     // The serving caches were populated by the connection and survive it.

@@ -109,6 +109,62 @@ fn concurrent_planners_agree_on_one_canonical_plan() {
 }
 
 #[test]
+fn thundering_herd_compiles_once_and_coalesces_the_rest() {
+    // ISSUE 8 acceptance, pinned deterministically: under 32 concurrent
+    // identical cold requests the cache records exactly 1 miss/compile
+    // and 31 coalesced waits. The flight leader's resolver HOLDS the
+    // compile open until every other thread has registered on the
+    // flight, so the split cannot depend on scheduling.
+    const HERD: usize = 32;
+    let cfg = ChipConfig::voltra();
+    let plans = PlanCache::new();
+    let barrier = std::sync::Barrier::new(HERD);
+    let got: Vec<Arc<plan::WorkloadPlan>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..HERD)
+            .map(|_| {
+                let plans = &plans;
+                let cfg = &cfg;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    plans
+                        .plan_named(cfg, "bert", || {
+                            // Only the flight leader runs this. Refuse
+                            // to produce the workload until all 31
+                            // followers are blocked on the flight
+                            // (bounded, so a coalescing regression
+                            // fails loudly instead of hanging).
+                            let t0 = std::time::Instant::now();
+                            while plans.plan_stats().coalesced < (HERD - 1) as u64 {
+                                assert!(
+                                    t0.elapsed() < std::time::Duration::from_secs(10),
+                                    "followers never coalesced: {:?}",
+                                    plans.plan_stats()
+                                );
+                                std::thread::yield_now();
+                            }
+                            voltra::workloads::by_name("bert")
+                        })
+                        .expect("bert resolves")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for p in &got[1..] {
+        assert!(
+            Arc::ptr_eq(&got[0], p),
+            "every herd caller must share the one compiled plan"
+        );
+    }
+    let s = plans.plan_stats();
+    assert_eq!((s.hits, s.misses, s.coalesced), (0, 1, (HERD - 1) as u64));
+    // The herd's answer is the canonical cached plan for later callers.
+    let w = voltra::workloads::by_name("bert").unwrap();
+    assert!(Arc::ptr_eq(&got[0], &plans.plan(&cfg, &w)));
+}
+
+#[test]
 fn parallel_compiled_plans_are_byte_equal_to_sequential_for_the_suite() {
     // PR 6 tentpole acceptance: fanning layer planning over a scoped
     // pool (what `PlanCache::plan_named` now does on every cold plan)
