@@ -1,0 +1,87 @@
+//! §Perf: architecture/mapping co-search wall clock — the PR 9
+//! acceptance gate (DESIGN.md §15).
+//!
+//! Baseline ("isolated"): the fixed 32-point grid scored serially, one
+//! point at a time, each with its OWN fresh `PlanCache`, `MapperCache`
+//! and mapper seed — i.e. a sweep that treats every config as a
+//! standalone cold run, the way `voltra suite --config ...` in a shell
+//! loop would.
+//!
+//! Shipped ("shared"): `search::run_grid` — the work-stealing search
+//! pool over ONE structurally-keyed cache stack. Grid points that share
+//! a tile-structural class (32 points collapse to 16) reuse each
+//! other's tile simulations; points sharing a mapper class (16) reuse
+//! resolved mappings; each pool worker's `IncrementalMapper` seed
+//! persists across the adjacent points it claims.
+//!
+//! Both sides run the identical per-point scoring (plan the full
+//! eight-workload suite, execute, fold energy/area), so the measured
+//! ratio isolates exactly what this PR added: structural cache sharing
+//! plus the parallel search pool. The gate is 4x.
+
+#[path = "common.rs"]
+mod common;
+
+use voltra::search;
+use voltra::tiling::mapper::MapperCache;
+use voltra::tiling::IncrementalMapper;
+use voltra::workloads::evaluation_suite;
+use voltra::PlanCache;
+
+fn main() {
+    common::header("§Perf — 32-point co-search: isolated serial vs shared-cache pool");
+    let grid = search::full_grid();
+    let suite = evaluation_suite();
+    let threads = search::default_threads();
+
+    let isolated = common::time(2, || {
+        let mut points = Vec::with_capacity(grid.len());
+        for (label, cfg) in &grid {
+            let plans = PlanCache::new();
+            let mappers = MapperCache::new();
+            let mut im = IncrementalMapper::new(&mappers);
+            points.push(search::score_config(label, cfg, &suite, &plans, &mut im));
+        }
+        std::hint::black_box(points);
+    });
+    common::show("search x32, isolated caches (serial)", 2, isolated);
+
+    let shared = common::time(3, || {
+        std::hint::black_box(search::run_grid(&grid, threads));
+    });
+    common::show(
+        &format!("search x32, shared caches ({threads} thr pool)"),
+        3,
+        shared,
+    );
+
+    // Telemetry from one more run: the structural collapse the speedup
+    // comes from.
+    let r = search::run_grid(&grid, threads);
+    let s = r.stats;
+    println!(
+        "structural sharing: {} tile classes / {} mapper classes across {} configs; \
+         tiles {:.1}% hit rate, mapper {} hits / {} misses",
+        s.tile_classes,
+        s.mapper_classes,
+        r.points.len(),
+        100.0 * s.tiles.hit_rate(),
+        s.mapper.hits,
+        s.mapper.misses,
+    );
+
+    common::rule();
+    let (iso_mean, _, _) = isolated;
+    let (shr_mean, _, _) = shared;
+    let speedup = iso_mean / shr_mean;
+    println!(
+        "shared-cache parallel search is {speedup:.1}x faster than the isolated \
+         serial sweep ({threads} workers; floor 4x)"
+    );
+    assert!(
+        speedup >= 4.0,
+        "PR 9 acceptance: shared-cache parallel search must be >= 4x faster than \
+         the isolated-cache serial baseline on the fixed 32-point grid \
+         (got {speedup:.2}x)"
+    );
+}

@@ -374,10 +374,16 @@ impl Engine<'_> {
         let s = self.stats;
         let p = self.plans.plan_stats();
         let t = self.tiles.stats();
+        // The mapper tier is process-global (every plan path resolves
+        // through MapperCache::global()), so its counters are reported
+        // from there — the serving engine has no private mapper state.
+        let mc = crate::tiling::MapperCache::global();
+        let m = mc.stats();
         format!(
             "OK stats served={} gemm={} workload={} lint={} stats={} errors={} busy={} \
              plan_hits={} plan_misses={} plan_waits={} tile_hits={} tile_misses={} \
-             tile_waits={} p50_us={} p99_us={} max_us={}",
+             tile_waits={} mapper_hits={} mapper_misses={} mapper_waits={} \
+             p50_us={} p99_us={} max_us={}",
             s.served(),
             s.count(Verb::Gemm),
             s.count(Verb::Workload),
@@ -391,6 +397,9 @@ impl Engine<'_> {
             t.hits,
             t.misses,
             self.tiles.coalesced_waits(),
+            m.hits,
+            m.misses,
+            mc.coalesced_waits(),
             s.percentile_us(50.0),
             s.percentile_us(99.0),
             s.max_us(),
@@ -577,12 +586,20 @@ mod tests {
             backend: &mut backend,
         };
         let empty = engine.handle(&Parsed::Stats, &mut lane);
-        assert_eq!(
-            empty,
-            "OK stats served=0 gemm=0 workload=0 lint=0 stats=0 errors=0 busy=0 \
-             plan_hits=0 plan_misses=0 plan_waits=0 tile_hits=0 tile_misses=0 \
-             tile_waits=0 p50_us=0 p99_us=0 max_us=0"
+        // Engine-scoped counters are exactly zero on a fresh engine;
+        // the mapper_* fields read the process-GLOBAL MapperCache, so
+        // under parallel test execution they are only shape-checked.
+        assert!(
+            empty.starts_with(
+                "OK stats served=0 gemm=0 workload=0 lint=0 stats=0 errors=0 busy=0 \
+                 plan_hits=0 plan_misses=0 plan_waits=0 tile_hits=0 tile_misses=0 \
+                 tile_waits=0 mapper_hits="
+            ),
+            "{empty}"
         );
+        assert!(empty.contains(" mapper_misses="), "{empty}");
+        assert!(empty.contains(" mapper_waits="), "{empty}");
+        assert!(empty.ends_with(" p50_us=0 p99_us=0 max_us=0"), "{empty}");
         // Counters are the server's job (recorded after each response);
         // simulate two served requests and one rejection.
         stats.record(Verb::Workload, 7);

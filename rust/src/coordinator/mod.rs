@@ -31,8 +31,8 @@ pub(crate) mod transport;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use crate::config::ChipConfig;
 use crate::coordinator::singleflight::{FlightGroup, Role};
@@ -318,31 +318,9 @@ fn run_suite_indexed<F>(workloads: &[Workload], threads: usize, run: F) -> Vec<W
 where
     F: Fn(&Workload) -> WorkloadReport + Sync,
 {
-    let n = workloads.len();
-    let workers = threads.clamp(1, n.max(1));
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<WorkloadReport>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = run(&workloads[i]);
-                *slots[i].lock().expect("sweep slot poisoned") = Some(r);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("sweep slot poisoned")
-                .expect("sweep worker skipped a workload")
-        })
-        .collect()
+    crate::runtime::pool::scoped_indexed(workloads.len(), threads, || (), |_, i| {
+        run(&workloads[i])
+    })
 }
 
 #[cfg(test)]

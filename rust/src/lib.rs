@@ -28,6 +28,11 @@
 //! * [`runtime`] — loads AOT artifacts (HLO text) and executes the real
 //!   numerics through the PJRT CPU client behind the pluggable
 //!   [`runtime::GemmBackend`] seam; Python never runs at runtime.
+//! * [`search`] — parallel architecture/mapping co-search (DESIGN.md
+//!   §15): enumerates joint array/bank/FIFO/memory design points, plans
+//!   each over the full suite through the shared caches with structural
+//!   keying, and emits the TOPS/W vs TOPS/mm² vs latency Pareto
+//!   frontier with the shipped chip as one point.
 
 // Static-analysis posture (DESIGN.md §13): the model is pure safe Rust —
 // any future `unsafe` must arrive as a deliberate, reviewed exception —
@@ -43,6 +48,7 @@ pub mod metrics;
 pub mod plan;
 pub mod power;
 pub mod runtime;
+pub mod search;
 pub mod sim;
 pub mod tiling;
 pub mod workloads;
@@ -54,4 +60,5 @@ pub use coordinator::{
 };
 pub use metrics::{CacheStats, LayerMetrics, TileMetrics, WorkloadMetrics};
 pub use plan::{PlanCache, PlanCacheStats, WorkloadPlan};
+pub use search::{DesignPoint, SearchResult};
 pub use tiling::MapperCache;

@@ -44,6 +44,15 @@ COMMANDS:
                                  --queue-depth <d> waiting requests
                                  before ERR busy (default: 64)
     report --workload <name>     per-layer table + energy breakdown
+    search                       architecture/mapping co-search: score a
+                                 joint array/bank/FIFO/memory grid over
+                                 the full suite through shared
+                                 structurally-keyed caches and print the
+                                 TOPS/W vs TOPS/mm^2 vs latency Pareto
+                                 frontier (the shipped chip is one dot);
+                                 --grid full|quick (default: full),
+                                 --threads <n> pool width (default:
+                                 cores, max 8), --json machine output
 
 OPTIONS:
     --workload <name>   mobilenetv2|resnet50|vit|pointnext|lstm|bert|
@@ -240,6 +249,92 @@ fn cmd_report(cfg: &ChipConfig, name: &str) {
         let bar = "#".repeat((pct / 2.0).round() as usize);
         println!("  {name:<26} {:>7.3} mJ {pct:>5.1}%  {bar}", j * 1e3);
     }
+    // Mapping-search telemetry: `run_workload` resolves layer mappings
+    // through the process-wide MapperCache, so these counters cover
+    // exactly the report above.
+    let mc = voltra::MapperCache::global();
+    let ms = mc.stats();
+    println!(
+        "\nmapper cache: {} layer shapes resolved ({} hits / {} misses / {} coalesced waits)",
+        mc.len(),
+        ms.hits,
+        ms.misses,
+        mc.coalesced_waits()
+    );
+}
+
+/// `voltra search`: parallel architecture/mapping co-search (DESIGN.md
+/// §15). Scores every grid point over the eight-workload suite through
+/// one shared structurally-keyed cache stack and prints the three-axis
+/// Pareto frontier. `--json` output is deterministic (no timings) and
+/// golden-tested in `tests/search_cli.rs`.
+fn cmd_search(flags: &HashMap<String, String>) {
+    let grid_name = flags.get("grid").map(String::as_str).unwrap_or("full");
+    let grid = match grid_name {
+        "full" => voltra::search::full_grid(),
+        "quick" => voltra::search::quick_grid(),
+        other => {
+            eprintln!("unknown grid {other:?} (expected full|quick)");
+            usage();
+        }
+    };
+    let threads = flags
+        .get("threads")
+        .map(|v| v.parse::<usize>().expect("--threads must be an integer"))
+        .unwrap_or_else(voltra::search::default_threads);
+    let t0 = std::time::Instant::now();
+    let result = voltra::search::run_grid(&grid, threads);
+    let dt = t0.elapsed();
+    if flags.contains_key("json") {
+        println!(
+            "{}",
+            voltra::search::result_json(grid_name, &result).render()
+        );
+        return;
+    }
+    let shipped = voltra::search::shipped_label(&result.points).map(str::to_string);
+    println!(
+        "{:<26} {:>9} {:>14} {:>9} {:>10}",
+        "design point", "mm^2", "latency cyc", "TOPS/W", "TOPS/mm^2"
+    );
+    for p in &result.points {
+        let mark = match (p.pareto, shipped.as_deref() == Some(p.label.as_str())) {
+            (true, true) => "  * shipped",
+            (true, false) => "  *",
+            (false, true) => "    shipped",
+            (false, false) => "",
+        };
+        println!(
+            "{:<26} {:>9.3} {:>14} {:>9.3} {:>10.3}{mark}",
+            p.label, p.area_mm2, p.suite_latency_cycles, p.tops_per_watt, p.tops_per_mm2
+        );
+    }
+    let s = &result.stats;
+    let frontier = result.points.iter().filter(|p| p.pareto).count();
+    println!(
+        "\nsearch: {} points on {} threads in {:.2}s — {} on the Pareto frontier (*)",
+        result.points.len(),
+        threads,
+        dt.as_secs_f64(),
+        frontier
+    );
+    println!(
+        "structural sharing: {} tile classes, {} mapper classes across {} configs",
+        s.tile_classes,
+        s.mapper_classes,
+        result.points.len()
+    );
+    println!(
+        "caches: plans {} hits / {} misses ({} waits); tiles {:.1}% hit rate; \
+         mapper {} hits / {} misses ({} waits)",
+        s.plan.hits,
+        s.plan.misses,
+        s.plan.coalesced,
+        100.0 * s.tiles.hit_rate(),
+        s.mapper.hits,
+        s.mapper.misses,
+        s.mapper_waits
+    );
 }
 
 fn cmd_run(cfg: &ChipConfig, name: &str) {
@@ -515,6 +610,7 @@ fn main() {
             cmd_sweep(&cfg, threads);
         }
         "shmoo" => cmd_shmoo(),
+        "search" => cmd_search(&flags),
         "artifacts" => {
             let dir = flags
                 .get("artifacts")

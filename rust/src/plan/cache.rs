@@ -10,15 +10,22 @@
 //!   compiles exactly once; the first insert wins and every later
 //!   lookup returns that exact `Arc` — warm hits are therefore
 //!   bit-identical forever;
-//! * tile-simulation memoization is scoped per config fingerprint (one
-//!   `SharedTileCache` per fingerprint), so one `PlanCache` can safely
-//!   serve many presets at once — tile caches must never mix configs.
+//! * tile-simulation memoization is scoped per *tile-structural*
+//!   fingerprint ([`crate::sim::tile_fingerprint`]) — the minimal
+//!   config slice the tile engine actually reads — so one `PlanCache`
+//!   safely serves many presets at once AND configs differing only in
+//!   planner-side knobs (DMA bandwidth, double buffering, mapping mode,
+//!   separated split sizes) share one tile cache: an architecture
+//!   search pays cold tile-simulation cost once per *equivalence
+//!   class*, not once per grid point.
 //!
 //! Keying: [`fingerprint`] hashes every `ChipConfig` field the planner
 //! reads — array geometry, memory organisation, prefetch/FIFO/SIMD/
 //! crossbar knobs, bank count, latencies, DMA parameters, double
 //! buffering — and deliberately EXCLUDES the operating point: plans are
 //! cycle-domain, so every (V, f) point of a DVFS sweep shares one plan.
+//! Plans stay keyed by this full fingerprint (they depend on all of
+//! it); only the tile tier uses the narrower structural key.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -30,6 +37,8 @@ use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
 use crate::coordinator::singleflight::{FlightGroup, Role};
 use crate::coordinator::{SharedTileCache, WorkloadReport};
 use crate::metrics::CacheStats;
+use crate::sim::tile_fingerprint;
+use crate::tiling::mapper::IncrementalMapper;
 use crate::workloads::Workload;
 
 use super::WorkloadPlan;
@@ -109,8 +118,10 @@ pub struct PlanCacheStats {
 #[derive(Default)]
 pub struct PlanCache {
     plans: [RwLock<HashMap<PlanKey, Arc<WorkloadPlan>>>; PLAN_SHARDS],
-    /// One tile-simulation cache per config fingerprint: tiles are keyed
-    /// by `TileSpec` alone, so they must never be shared across configs.
+    /// One tile-simulation cache per *tile-structural* fingerprint
+    /// ([`tile_fingerprint`]): tiles are keyed by `TileSpec` alone, so
+    /// a cache may only be shared between configs whose structural
+    /// slices agree — which is exactly what the key guarantees.
     tiles: RwLock<HashMap<u64, Arc<SharedTileCache>>>,
     /// In-flight compiles: one planner per key, everyone else waits.
     flights: FlightGroup<PlanKey, Arc<WorkloadPlan>>,
@@ -182,7 +193,7 @@ impl PlanCache {
                     // flight: waiters wake, retry, and fail their own
                     // resolve. Counts neither hit nor miss.
                     let w = resolve()?;
-                    let tiles = self.tile_cache_for(key.fingerprint);
+                    let tiles = self.tile_cache_for(tile_fingerprint(cfg));
                     // Cold plans compile their layers across a small
                     // scoped pool — bit-identical to the sequential
                     // build (see [`super::build_parallel`]), just
@@ -215,20 +226,85 @@ impl PlanCache {
         }
     }
 
+    /// Like [`PlanCache::plan`], but the cold path compiles layers
+    /// *sequentially* with the caller's persistent [`IncrementalMapper`]
+    /// instead of fanning out a nested worker pool — the search driver's
+    /// entry point (DESIGN.md §15): each search worker is already one
+    /// lane of an outer pool (nesting pools would oversubscribe), and a
+    /// mapper handle that survives across adjacent grid points carries
+    /// its last winning mapping from one config to its neighbors, where
+    /// it keeps pruning (seeding is exact — see
+    /// [`crate::tiling::mapper::search_seeded`]).
+    ///
+    /// Same single-flight protocol and counters as [`PlanCache::plan`];
+    /// the resulting plan is bit-identical to the parallel build.
+    pub fn plan_seeded(
+        &self,
+        cfg: &ChipConfig,
+        w: &Workload,
+        mapper: &mut IncrementalMapper<'_>,
+    ) -> Arc<WorkloadPlan> {
+        let key = PlanKey {
+            fingerprint: fingerprint(cfg),
+            workload: w.name.clone(),
+        };
+        let shard = &self.plans[shard_of(&key)];
+        loop {
+            if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(p);
+            }
+            match self.flights.join(&key, || {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+            }) {
+                Role::Leader(lead) => {
+                    if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        let p = Arc::clone(p);
+                        lead.publish(Arc::clone(&p));
+                        return p;
+                    }
+                    let tiles = self.tile_cache_for(tile_fingerprint(cfg));
+                    let built = Arc::new(super::build_seeded(cfg, w, &tiles, mapper));
+                    if cfg!(debug_assertions) {
+                        super::verify::assert_clean(cfg, w, &built);
+                    }
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let canonical = {
+                        let mut map = shard.write().expect("plan shard poisoned");
+                        Arc::clone(map.entry(key.clone()).or_insert(built))
+                    };
+                    lead.publish(Arc::clone(&canonical));
+                    return canonical;
+                }
+                Role::Waited(Some(p)) => return p,
+                Role::Waited(None) => continue,
+            }
+        }
+    }
+
     /// Plan (or reuse) and execute in one call — the serving/suite path.
     pub fn run(&self, cfg: &ChipConfig, w: &Workload) -> WorkloadReport {
         super::execute(&self.plan(cfg, w))
     }
 
     /// The shared tile-simulation cache this plan cache uses for `cfg`'s
-    /// fingerprint. Callers serving the same config (e.g. the server's
-    /// per-GEMM sim-cost path) can adopt it so a tile any path ever
-    /// simulated — planning or serving — is never simulated twice.
+    /// *structural* slice. Callers serving the same config (e.g. the
+    /// server's per-GEMM sim-cost path) can adopt it so a tile any path
+    /// ever simulated — planning or serving — is never simulated twice;
+    /// configs in the same structural class receive the same cache.
     pub fn tile_cache(&self, cfg: &ChipConfig) -> Arc<SharedTileCache> {
-        self.tile_cache_for(fingerprint(cfg))
+        self.tile_cache_for(tile_fingerprint(cfg))
     }
 
-    /// The tile-simulation cache backing one config fingerprint.
+    /// Distinct tile-structural equivalence classes this cache has
+    /// touched — the search's "cold tile cost paid once per class"
+    /// telemetry.
+    pub fn tile_cache_count(&self) -> usize {
+        self.tiles.read().expect("tile map poisoned").len()
+    }
+
+    /// The tile-simulation cache backing one structural fingerprint.
     fn tile_cache_for(&self, fp: u64) -> Arc<SharedTileCache> {
         if let Some(c) = self.tiles.read().expect("tile map poisoned").get(&fp) {
             return Arc::clone(c);
@@ -366,6 +442,8 @@ mod tests {
 
     #[test]
     fn distinct_configs_get_distinct_tile_caches() {
+        // voltra and separated differ in the memory *kind* — a
+        // tile-structural field — so they must not share a tile cache.
         let pc = PlanCache::new();
         let w = workloads::by_name("lstm").unwrap();
         pc.plan(&ChipConfig::voltra(), &w);
@@ -377,5 +455,39 @@ mod tests {
             "separated preset must simulate into its own tile cache"
         );
         assert_eq!(pc.len(), 2);
+        assert_eq!(pc.tile_cache_count(), 2);
+    }
+
+    #[test]
+    fn structural_class_shares_one_tile_cache() {
+        // swap-only differs from voltra ONLY in planner-side fields
+        // (mapping mode): distinct plans, one shared tile cache.
+        let pc = PlanCache::new();
+        let voltra = ChipConfig::voltra();
+        let swap = ChipConfig::swap_only();
+        assert!(Arc::ptr_eq(&pc.tile_cache(&voltra), &pc.tile_cache(&swap)));
+        let w = workloads::by_name("lstm").unwrap();
+        let a = pc.plan(&voltra, &w);
+        let b = pc.plan(&swap, &w);
+        assert!(!Arc::ptr_eq(&a, &b), "plans stay keyed by full fingerprint");
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc.tile_cache_count(), 1);
+    }
+
+    #[test]
+    fn plan_seeded_matches_parallel_plan_bit_identically() {
+        let cfg = ChipConfig::voltra();
+        let w = workloads::by_name("pointnext").unwrap();
+        let canonical = PlanCache::new().plan(&cfg, &w);
+        let pc = PlanCache::new();
+        let mappers = crate::tiling::MapperCache::new();
+        let mut im = IncrementalMapper::new(&mappers);
+        let seeded = pc.plan_seeded(&cfg, &w, &mut im);
+        assert_eq!(*seeded, *canonical);
+        // Warm: same Arc, hit counted, mapper untouched.
+        let warm = pc.plan_seeded(&cfg, &w, &mut im);
+        assert!(Arc::ptr_eq(&seeded, &warm));
+        let s = pc.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
     }
 }

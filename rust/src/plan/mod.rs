@@ -36,9 +36,6 @@ pub mod verify;
 pub use cache::{fingerprint, PlanCache, PlanCacheStats};
 pub use verify::{verify, LintFinding, Severity};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
 use crate::config::ChipConfig;
 use crate::coordinator::{SharedTileCache, SimCache, WorkloadReport};
 use crate::metrics::{LayerMetrics, TileMetrics, WorkloadMetrics};
@@ -198,10 +195,11 @@ pub fn build<C: SimCache>(cfg: &ChipConfig, w: &Workload, cache: &mut C) -> Work
     }
 }
 
-/// [`build`] with the per-layer planning fanned out over a scoped
-/// worker pool (the `sweep --threads` idiom, one level down): layers
-/// are claimed off an atomic index, planned into per-layer slots, and
-/// reassembled in workload order before the sequential residency pass.
+/// [`build`] with the per-layer planning fanned out over the shared
+/// scoped worker pool ([`crate::runtime::pool::scoped_indexed`], the
+/// `sweep --threads` idiom, one level down): layers are claimed off an
+/// atomic index, planned into per-layer slots, and reassembled in
+/// workload order before the sequential residency pass.
 ///
 /// Bit-identical to the sequential [`build`]: `plan_layer` is a pure
 /// function of `(cfg, layer)` (the tile and mapper caches only
@@ -216,37 +214,49 @@ pub fn build_parallel(
     threads: usize,
 ) -> WorkloadPlan {
     let n = w.layers.len();
-    let workers = threads.clamp(1, n.max(1));
-    if workers <= 1 {
+    if threads.clamp(1, n.max(1)) <= 1 {
         let mut handle = tiles;
         return build(cfg, w, &mut handle);
     }
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<LayerPlan>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| {
-                let mut handle = tiles;
-                let mut mapper = IncrementalMapper::global();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let p = planner::plan_layer_mapped(cfg, &w.layers[i], &mut handle, &mut mapper);
-                    *slots[i].lock().expect("plan slot poisoned") = Some(p);
-                }
-            });
-        }
-    });
-    let mut layers: Vec<LayerPlan> = slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("plan slot poisoned")
-                .expect("plan worker skipped a layer")
-        })
-        .collect();
+    let mut layers = crate::runtime::pool::scoped_indexed(
+        n,
+        threads,
+        IncrementalMapper::global,
+        |mapper, i| {
+            let mut handle = tiles;
+            planner::plan_layer_mapped(cfg, &w.layers[i], &mut handle, mapper)
+        },
+    );
+    residency::apply(cfg, &w.layers, &mut layers);
+    let dispatched_tiles = layers.iter().map(|l| l.dispatched_tiles).sum();
+    WorkloadPlan {
+        workload: w.name.clone(),
+        fingerprint: cache::fingerprint(cfg),
+        layers,
+        unique_tiles: tiles.len(),
+        dispatched_tiles,
+    }
+}
+
+/// [`build`] against a shared tile cache with a caller-persistent
+/// [`IncrementalMapper`] — the search driver's per-worker build
+/// (DESIGN.md §15). Strictly sequential over layers: each search
+/// worker is already one lane of the outer config pool, and the
+/// surviving mapper hint seeds the first layer of the *next* grid
+/// point (adjacent points usually share their mapper equivalence
+/// class, so the incumbent prunes immediately). Bit-identical to
+/// [`build`] / [`build_parallel`] — the hint only prunes.
+pub fn build_seeded(
+    cfg: &ChipConfig,
+    w: &Workload,
+    tiles: &SharedTileCache,
+    mapper: &mut IncrementalMapper<'_>,
+) -> WorkloadPlan {
+    let mut handle = tiles;
+    let mut layers: Vec<LayerPlan> = Vec::with_capacity(w.layers.len());
+    for l in &w.layers {
+        layers.push(planner::plan_layer_mapped(cfg, l, &mut handle, mapper));
+    }
     residency::apply(cfg, &w.layers, &mut layers);
     let dispatched_tiles = layers.iter().map(|l| l.dispatched_tiles).sum();
     WorkloadPlan {

@@ -4,6 +4,7 @@
 //!   * crossbar area ~ ports^1.3: 32 ports cost 1.46x the 24-port
 //!     time-multiplexed design.
 
+use crate::config::ChipConfig;
 use crate::sim::crossbar::crossbar_ports;
 
 /// Fixed module areas (mm^2) for the fabricated configuration
@@ -75,6 +76,42 @@ impl AreaModel {
     pub fn area_efficiency(&self, tops: f64, simd_lanes: usize, tmux: bool) -> f64 {
         tops / self.total(simd_lanes, tmux)
     }
+
+    /// Total core area for an arbitrary [`ChipConfig`] — the search's
+    /// area axis (DESIGN.md §15). Extends the Sec. II-D scaling laws to
+    /// the searched knobs; every scale factor is exactly 1.0 at the
+    /// fabricated design point, so
+    /// `config_area(&ChipConfig::voltra()) == total(8, true)` bit-for-bit.
+    ///
+    /// * MAC array — linear in MAC count (all shipped presets keep the
+    ///   512-MAC budget, so this is 1.0 across Fig. 6);
+    /// * shared memory — capacity-dominated SRAM macros plus per-bank
+    ///   periphery (sense amps, arbitration): 15% of the module is
+    ///   bank-proportional at the shipped 32 banks;
+    /// * streamers — control plus the FIFO register files: 20% of the
+    ///   module is depth-proportional at the shipped depth 8;
+    /// * crossbar — the ports^1.3 law times a sqrt bank-radix term
+    ///   (more banks widen the memory-side fan-out);
+    /// * SIMD / fixed blocks — the existing laws, unchanged.
+    pub fn config_area(&self, cfg: &ChipConfig) -> f64 {
+        let shipped_macs = crate::arch::MACS as f64;
+        let array = self.gemm_array * cfg.array.macs() as f64 / shipped_macs;
+        let mem = self.shared_mem
+            * (0.85 + 0.15 * cfg.num_banks as f64 / crate::arch::NUM_BANKS as f64);
+        let streamers = self.streamers
+            * (0.80 + 0.20 * cfg.stream_fifo_depth as f64 / crate::arch::STREAM_FIFO_DEPTH as f64);
+        let xbar = self.crossbar_area(cfg.tmux_psum_output)
+            * (cfg.num_banks as f64 / crate::arch::NUM_BANKS as f64).sqrt();
+        array
+            + mem
+            + streamers
+            + xbar
+            + self.reshuffler
+            + self.maxpool
+            + self.snitch
+            + self.dma
+            + self.simd_area(cfg.simd_lanes)
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +155,34 @@ mod tests {
         let a = AreaModel::default();
         assert!(a.total(64, true) > a.total(8, true));
         assert!(a.total(8, false) > a.total(8, true));
+    }
+
+    #[test]
+    fn config_area_is_exact_at_the_shipped_point() {
+        // Every search-axis scale factor must be exactly 1.0 at the
+        // fabricated values, so the search scores the shipped config
+        // with the same die area the spec sheet prints.
+        let a = AreaModel::default();
+        let cfg = crate::config::ChipConfig::voltra();
+        assert_eq!(a.config_area(&cfg), a.total(8, true));
+    }
+
+    #[test]
+    fn config_area_responds_to_every_search_axis() {
+        let a = AreaModel::default();
+        let base = a.config_area(&crate::config::ChipConfig::voltra());
+        let mut banks = crate::config::ChipConfig::voltra();
+        banks.num_banks = 64;
+        assert!(a.config_area(&banks) > base, "more banks cost area");
+        let mut fifo = crate::config::ChipConfig::voltra();
+        fifo.stream_fifo_depth = 16;
+        assert!(a.config_area(&fifo) > base, "deeper FIFOs cost area");
+        let mut fewer = crate::config::ChipConfig::voltra();
+        fewer.num_banks = 16;
+        fewer.stream_fifo_depth = 4;
+        assert!(a.config_area(&fewer) < base, "trimmed fabric saves area");
+        // Memory-org splits and DVFS points are area-neutral.
+        let sep = crate::config::ChipConfig::separated_memory();
+        assert_eq!(a.config_area(&sep), base);
     }
 }

@@ -5,6 +5,7 @@ pub mod artifacts;
 pub mod backend;
 pub mod executor;
 pub mod json;
+pub mod pool;
 
 pub use artifacts::{default_dir, ArtifactLib, DType, TensorSpec};
 pub use backend::{GemmBackend, HostBackend, PjrtBackend};

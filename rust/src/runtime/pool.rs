@@ -1,0 +1,134 @@
+//! The scoped worker-pool idiom, extracted (DESIGN.md §15): N indexed
+//! work items claimed off one atomic counter by a small set of scoped
+//! threads, each carrying private per-worker state, results landing in
+//! per-item slots so output order is item order regardless of claim
+//! order.
+//!
+//! This shape was hand-rolled three times — `plan::build_parallel`
+//! (per-worker `IncrementalMapper` state), the sweep/suite path
+//! (`coordinator::run_suite_indexed`, stateless), and now the
+//! architecture-search driver (per-worker mapper handle spanning grid
+//! points) — so it lives here once. Work stealing is the atomic index
+//! itself: a worker that finishes early simply claims the next
+//! unclaimed item; no queues, no rebalancing, no idle tail while any
+//! item remains.
+//!
+//! Determinism contract: `work` must be pure in `(item index, shared
+//! caches)` up to memoization — per-worker state may accelerate (e.g.
+//! a mapper hint that only prunes) but never change results. Under
+//! that contract the returned vector is bit-identical for every
+//! `threads` value, which is what lets callers pin parallel == serial
+//! in tests.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `work(state, i)` for every `i in 0..n` across up to `threads`
+/// scoped workers, returning results in index order. `init` constructs
+/// each worker's private state (once per worker, on that worker's
+/// thread). `threads <= 1` (or `n <= 1`) runs inline on the caller's
+/// thread with a single state — no spawn cost on the degenerate path.
+///
+/// Panics in `work` propagate: the scope joins all workers, and a
+/// poisoned slot (worker panicked mid-item) fails loudly rather than
+/// returning a partial result vector.
+pub fn scoped_indexed<S, T, I, F>(n: usize, threads: usize, init: I, work: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let workers = threads.clamp(1, n.max(1));
+    if workers <= 1 {
+        let mut state = init();
+        return (0..n).map(|i| work(&mut state, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = work(&mut state, i);
+                    *slots[i].lock().expect("pool slot poisoned") = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("pool slot poisoned")
+                .expect("pool worker skipped an item")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_are_in_index_order_for_any_thread_count() {
+        for threads in [0, 1, 2, 4, 16] {
+            let out = scoped_indexed(10, threads, || (), |_, i| i * i);
+            assert_eq!(out, (0..10).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_input_spawns_nothing() {
+        let inits = AtomicUsize::new(0);
+        let out: Vec<usize> = scoped_indexed(
+            0,
+            8,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+            },
+            |_, i| i,
+        );
+        assert!(out.is_empty());
+        assert_eq!(inits.load(Ordering::Relaxed), 1, "degenerate path: one inline state");
+    }
+
+    #[test]
+    fn per_worker_state_is_private_and_bounded() {
+        // Each worker gets exactly one state; every item sees some
+        // worker's state, and total inits never exceed the worker count.
+        let inits = AtomicUsize::new(0);
+        let out = scoped_indexed(
+            64,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |count, _| {
+                *count += 1;
+                *count
+            },
+        );
+        assert_eq!(out.len(), 64);
+        let spawned = inits.load(Ordering::Relaxed);
+        assert!(spawned <= 4, "got {spawned} states for 4 workers");
+        // Per-worker counters partition the items: each worker that
+        // claimed anything contributes exactly one first-claim (c == 1),
+        // and every item was claimed by someone.
+        let first_claims = out.iter().filter(|&&c| c == 1).count();
+        assert!((1..=spawned).contains(&first_claims), "{first_claims} vs {spawned}");
+        assert!(out.iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn single_item_runs_inline() {
+        let out = scoped_indexed(1, 8, || 41, |s, i| *s + 1 + i);
+        assert_eq!(out, vec![42]);
+    }
+}

@@ -1,0 +1,514 @@
+//! Architecture/mapping co-search over the `ChipConfig` space
+//! (DESIGN.md §15) — `voltra search`.
+//!
+//! `shmoo` walks one axis at a time; real design-space exploration
+//! searches the axes *jointly* — the Timeloop-style factor sweeps of
+//! focus_scheduler, and what FlexNN (arXiv 2403.09026) argues flexible
+//! accelerators need. This module enumerates joint (array geometry,
+//! bank count, stream-FIFO depth, memory organisation) design points,
+//! plans each over the full eight-workload suite through the existing
+//! `PlanCache` / `MapperCache` / `SharedTileCache` stack, scores every
+//! point with the in-tree `power/` area/energy models, and emits a
+//! three-axis Pareto frontier (TOPS/W vs TOPS/mm² vs suite latency)
+//! that reproduces the shipped 16 nm config as one dot on the curve.
+//!
+//! Feasibility rests on two mechanisms this PR added underneath:
+//!
+//! * **structural cache keying** — tile-simulation caches are keyed by
+//!   [`crate::sim::tile_fingerprint`] (the slice the tile engine reads)
+//!   and mapper entries by the mapper's own narrow fingerprint, so
+//!   near-identical grid neighbors share cold work: the 32-point grid
+//!   collapses to 16 tile-structural and 16 mapper equivalence classes,
+//!   and a point whose class was already visited pays only plan
+//!   assembly, not tile simulation or mapping search;
+//! * **a work-stealing search pool** — grid points are claimed off the
+//!   shared scoped pool ([`crate::runtime::pool::scoped_indexed`]) by
+//!   `min(cores, 8)` workers, each carrying one [`IncrementalMapper`]
+//!   whose hint survives *across* adjacent grid points (the
+//!   seeded-neighborhood mode): consecutive points usually share their
+//!   mapper class, so the incumbent prunes immediately. Workers plan
+//!   through [`PlanCache::plan_seeded`] — sequential per point, since
+//!   the pool is already saturated at the config level and nesting the
+//!   per-layer pool would oversubscribe.
+//!
+//! The `perf_search` bench gates the whole construction: shared-cache
+//! parallel search must beat the isolated-cache serial baseline ≥4x on
+//! the fixed 32-point grid.
+
+use std::collections::BTreeMap;
+use std::collections::HashSet;
+
+use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg, OperatingPoint};
+use crate::metrics::CacheStats;
+use crate::plan::{self, PlanCache, PlanCacheStats};
+use crate::power::energy::workload_energy_j;
+use crate::power::{Activity, AreaModel, EnergyParams};
+use crate::runtime::json::Json;
+use crate::runtime::pool;
+use crate::tiling::mapper::{self, IncrementalMapper, MapperCache};
+use crate::workloads::{self, Workload};
+
+/// One enumerated design point, scored over the full workload suite.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    /// `<geometry>/b<banks>/f<fifo>/<memory>` — unique within a grid.
+    pub label: String,
+    pub config: ChipConfig,
+    /// Die area from [`AreaModel::config_area`] (mm²).
+    pub area_mm2: f64,
+    /// Suite latency, summed over the eight workloads (cycle-domain,
+    /// frequency-independent).
+    pub suite_latency_cycles: u64,
+    /// Suite energy at the efficiency point 0.6 V / 300 MHz (mJ).
+    pub suite_energy_mj: f64,
+    /// Effective suite TOPS/W at the efficiency point: total useful
+    /// ops over total energy.
+    pub tops_per_watt: f64,
+    /// Peak TOPS (performance point) per die mm².
+    pub tops_per_mm2: f64,
+    /// On the three-axis Pareto frontier of its grid.
+    pub pareto: bool,
+}
+
+/// Cache telemetry of one search run — the evidence that structural
+/// keying collapsed the grid into equivalence classes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchStats {
+    /// Distinct tile-structural classes the grid touched (tile caches
+    /// materialized by the plan cache).
+    pub tile_classes: usize,
+    /// Distinct mapper fingerprints across the grid.
+    pub mapper_classes: usize,
+    pub plan: PlanCacheStats,
+    pub tiles: CacheStats,
+    pub mapper: CacheStats,
+    pub mapper_waits: u64,
+}
+
+/// The outcome of [`run_grid`]: scored points (grid order) + telemetry.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub points: Vec<DesignPoint>,
+    pub stats: SearchStats,
+}
+
+fn geometry_axis() -> [(&'static str, ArrayGeometry); 2] {
+    [
+        ("3d8x8x8", ArrayGeometry::Spatial3D { m: 8, n: 8, k: 8 }),
+        ("2d16x32", ArrayGeometry::Spatial2D { m: 16, n: 32 }),
+    ]
+}
+
+/// Memory-organisation axis. Every separated split keeps the proven
+/// 24 KB output / 8 KB psum regions of the Fig. 6c baseline and varies
+/// only the input/weight partition, so all points stay feasible for
+/// every suite layer; `sep-weight` is bit-identical to
+/// [`ChipConfig::separated_memory`]'s organisation.
+fn memory_axis() -> [(&'static str, MemoryOrg); 4] {
+    let sep = |input: usize, weight: usize| MemoryOrg::Separated {
+        input: input * 1024,
+        weight: weight * 1024,
+        output: 24 * 1024,
+        psum: 8 * 1024,
+    };
+    [
+        ("shared", MemoryOrg::Shared),
+        ("sep-weight", sep(40, 56)),
+        ("sep-even", sep(48, 48)),
+        ("sep-input", sep(56, 40)),
+    ]
+}
+
+/// One grid/neighbor config: the shipped chip with the four searched
+/// axes overridden. Separated points drop double buffering — fixed
+/// per-operand buffers cannot ping-pong (the Fig. 6c argument), and
+/// keeping the physics consistent makes the `sep-weight/b32/f8` point
+/// coincide exactly with the `separated` preset.
+fn grid_config(geom: ArrayGeometry, banks: usize, fifo: usize, memory: MemoryOrg) -> ChipConfig {
+    let mut cfg = ChipConfig::voltra();
+    cfg.array = geom;
+    cfg.num_banks = banks;
+    cfg.stream_fifo_depth = fifo;
+    cfg.memory = memory;
+    if matches!(memory, MemoryOrg::Separated { .. }) {
+        cfg.double_buffer = false;
+    }
+    cfg
+}
+
+fn label(geom: &str, banks: usize, fifo: usize, mem: &str) -> String {
+    format!("{geom}/b{banks}/f{fifo}/{mem}")
+}
+
+/// The fixed 32-point search grid: 2 geometries × {16, 32} banks ×
+/// stream-FIFO depth {4, 8} × 4 memory organisations, memory innermost
+/// so the three separated splits of each cell sit adjacently (they
+/// share one tile-structural class). The shipped config is the
+/// `3d8x8x8/b32/f8/shared` point.
+pub fn full_grid() -> Vec<(String, ChipConfig)> {
+    let mut out = Vec::with_capacity(32);
+    for (gname, geom) in geometry_axis() {
+        for banks in [16usize, 32] {
+            for fifo in [4usize, 8] {
+                for (mname, mem) in memory_axis() {
+                    out.push((
+                        label(gname, banks, fifo, mname),
+                        grid_config(geom, banks, fifo, mem),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A 6-point subgrid covering every axis once (banks, FIFO depth,
+/// geometry, memory kind) around the shipped point — what the golden
+/// CLI test and debug builds drive, cheap enough for the debug-build
+/// verifier to check every compiled plan.
+pub fn quick_grid() -> Vec<(String, ChipConfig)> {
+    let g3 = geometry_axis()[0].1;
+    let g2 = geometry_axis()[1].1;
+    let sep = memory_axis()[1].1;
+    vec![
+        (
+            label("3d8x8x8", 16, 8, "shared"),
+            grid_config(g3, 16, 8, MemoryOrg::Shared),
+        ),
+        (
+            label("3d8x8x8", 32, 4, "shared"),
+            grid_config(g3, 32, 4, MemoryOrg::Shared),
+        ),
+        (
+            label("3d8x8x8", 32, 8, "shared"),
+            grid_config(g3, 32, 8, MemoryOrg::Shared),
+        ),
+        (
+            label("3d8x8x8", 32, 8, "sep-weight"),
+            grid_config(g3, 32, 8, sep),
+        ),
+        (
+            label("3d8x8x8", 16, 4, "shared"),
+            grid_config(g3, 16, 4, MemoryOrg::Shared),
+        ),
+        (
+            label("2d16x32", 32, 8, "shared"),
+            grid_config(g2, 32, 8, MemoryOrg::Shared),
+        ),
+    ]
+}
+
+/// Every one-step move along a single search axis away from the
+/// shipped config — the neighborhood the Pareto-optimality test pins
+/// (`tests/search_pareto.rs`): none of these may dominate the shipped
+/// point on all three score axes.
+pub fn one_step_neighbors() -> Vec<(String, ChipConfig)> {
+    let v = ChipConfig::voltra();
+    let mut out: Vec<(String, ChipConfig)> = Vec::new();
+    for banks in [16usize, 64] {
+        let mut c = v.clone();
+        c.num_banks = banks;
+        out.push((label("3d8x8x8", banks, 8, "shared"), c));
+    }
+    for fifo in [4usize, 16] {
+        let mut c = v.clone();
+        c.stream_fifo_depth = fifo;
+        out.push((label("3d8x8x8", 32, fifo, "shared"), c));
+    }
+    out.push((
+        label("2d16x32", 32, 8, "shared"),
+        grid_config(geometry_axis()[1].1, 32, 8, MemoryOrg::Shared),
+    ));
+    out.push((
+        label("3d8x8x8", 32, 8, "sep-weight"),
+        grid_config(geometry_axis()[0].1, 32, 8, memory_axis()[1].1),
+    ));
+    out
+}
+
+/// Score one design point over `suite`: plan every workload through
+/// the shared caches (seeded, sequential — see module docs), then
+/// fold latency, energy-point efficiency and area efficiency.
+pub fn score_config(
+    label: &str,
+    cfg: &ChipConfig,
+    suite: &[Workload],
+    plans: &PlanCache,
+    mapper: &mut IncrementalMapper<'_>,
+) -> DesignPoint {
+    let params = EnergyParams::default();
+    let act = Activity::default();
+    let op = OperatingPoint::efficiency();
+    let mut latency: u64 = 0;
+    let mut macs: u64 = 0;
+    let mut energy_j: f64 = 0.0;
+    for w in suite {
+        let plan = plans.plan_seeded(cfg, w, mapper);
+        let report = plan::execute(&plan);
+        latency += plan.total_latency_cycles();
+        macs += plan.total_macs();
+        energy_j += workload_energy_j(&params, &report.metrics, &act, op);
+    }
+    let area_mm2 = AreaModel::default().config_area(cfg);
+    DesignPoint {
+        label: label.to_string(),
+        config: cfg.clone(),
+        area_mm2,
+        suite_latency_cycles: latency,
+        suite_energy_mj: energy_j * 1e3,
+        tops_per_watt: 2.0 * macs as f64 / energy_j / 1e12,
+        tops_per_mm2: cfg.peak_tops() / area_mm2,
+        pareto: false,
+    }
+}
+
+/// Three-axis Pareto dominance: `a` dominates `b` when it is no worse
+/// on suite latency, TOPS/W and TOPS/mm², and strictly better on at
+/// least one.
+pub fn dominates(a: &DesignPoint, b: &DesignPoint) -> bool {
+    let no_worse = a.suite_latency_cycles <= b.suite_latency_cycles
+        && a.tops_per_watt >= b.tops_per_watt
+        && a.tops_per_mm2 >= b.tops_per_mm2;
+    let better = a.suite_latency_cycles < b.suite_latency_cycles
+        || a.tops_per_watt > b.tops_per_watt
+        || a.tops_per_mm2 > b.tops_per_mm2;
+    no_worse && better
+}
+
+/// Mark each point's frontier membership: on the frontier iff no other
+/// point dominates it.
+pub fn mark_pareto(points: &mut [DesignPoint]) {
+    let on: Vec<bool> = points
+        .iter()
+        .map(|p| !points.iter().any(|o| dominates(o, p)))
+        .collect();
+    for (p, keep) in points.iter_mut().zip(on) {
+        p.pareto = keep;
+    }
+}
+
+/// The search pool width: `min(cores, 8)` — the plan-compile sizing,
+/// one level up.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Run the co-search over `grid` on `threads` pool workers with fresh
+/// shared caches, mark the Pareto frontier, and collect telemetry.
+/// Deterministic for a fixed grid: every point's score is a pure
+/// function of its config (caches memoize, seeds prune), so thread
+/// count and claim order never change the output.
+pub fn run_grid(grid: &[(String, ChipConfig)], threads: usize) -> SearchResult {
+    let suite = workloads::evaluation_suite();
+    let plans = PlanCache::new();
+    let mappers = MapperCache::new();
+    let mut points = pool::scoped_indexed(
+        grid.len(),
+        threads,
+        || IncrementalMapper::new(&mappers),
+        |im, i| score_config(&grid[i].0, &grid[i].1, &suite, &plans, im),
+    );
+    mark_pareto(&mut points);
+    let mapper_classes = grid
+        .iter()
+        .map(|(_, c)| mapper::fingerprint(c))
+        .collect::<HashSet<u64>>()
+        .len();
+    let stats = SearchStats {
+        tile_classes: plans.tile_cache_count(),
+        mapper_classes,
+        plan: plans.plan_stats(),
+        tiles: plans.tile_stats(),
+        mapper: mappers.stats(),
+        mapper_waits: mappers.coalesced_waits(),
+    };
+    SearchResult { points, stats }
+}
+
+/// The label of the grid point that is plan-identical to the shipped
+/// chip (same full plan fingerprint as [`ChipConfig::voltra`]), if the
+/// grid contains one.
+pub fn shipped_label(points: &[DesignPoint]) -> Option<&str> {
+    let shipped = plan::fingerprint(&ChipConfig::voltra());
+    points
+        .iter()
+        .find(|p| plan::fingerprint(&p.config) == shipped)
+        .map(|p| p.label.as_str())
+}
+
+fn memory_name(m: MemoryOrg) -> String {
+    match m {
+        MemoryOrg::Shared => "shared".to_string(),
+        MemoryOrg::Separated {
+            input,
+            weight,
+            output,
+            psum,
+        } => format!(
+            "separated-{}-{}-{}-{}",
+            input / 1024,
+            weight / 1024,
+            output / 1024,
+            psum / 1024
+        ),
+    }
+}
+
+fn geometry_name(g: ArrayGeometry) -> String {
+    match g {
+        ArrayGeometry::Spatial3D { m, n, k } => format!("3d{m}x{n}x{k}"),
+        ArrayGeometry::Spatial2D { m, n } => format!("2d{m}x{n}"),
+    }
+}
+
+/// Machine-readable search output (`voltra search --json`), schema in
+/// DESIGN.md §15. Deterministic — no timings, no cache counters that
+/// depend on interleaving; golden-tested in `tests/search_cli.rs`.
+pub fn result_json(grid_name: &str, r: &SearchResult) -> Json {
+    let shipped = shipped_label(&r.points);
+    let shipped_json = match shipped {
+        Some(label) => Json::Str(label.to_string()),
+        None => Json::Null,
+    };
+    let mut frontier = Vec::new();
+    for p in &r.points {
+        if p.pareto {
+            frontier.push(Json::Str(p.label.clone()));
+        }
+    }
+    let mut results = Vec::new();
+    for p in &r.points {
+        results.push(point_json(p, shipped == Some(p.label.as_str())));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("grid".to_string(), Json::Str(grid_name.to_string()));
+    doc.insert("points".to_string(), Json::Num(r.points.len() as f64));
+    doc.insert(
+        "tile_classes".to_string(),
+        Json::Num(r.stats.tile_classes as f64),
+    );
+    doc.insert(
+        "mapper_classes".to_string(),
+        Json::Num(r.stats.mapper_classes as f64),
+    );
+    doc.insert("shipped".to_string(), shipped_json);
+    doc.insert("frontier".to_string(), Json::Arr(frontier));
+    doc.insert("results".to_string(), Json::Arr(results));
+    Json::Obj(doc)
+}
+
+fn point_json(p: &DesignPoint, is_shipped: bool) -> Json {
+    let geometry = Json::Str(geometry_name(p.config.array));
+    let memory = Json::Str(memory_name(p.config.memory));
+    let fifo = Json::Num(p.config.stream_fifo_depth as f64);
+    let latency = Json::Num(p.suite_latency_cycles as f64);
+    let energy = Json::Num(p.suite_energy_mj);
+    let mut o = BTreeMap::new();
+    o.insert("label".to_string(), Json::Str(p.label.clone()));
+    o.insert("geometry".to_string(), geometry);
+    o.insert("banks".to_string(), Json::Num(p.config.num_banks as f64));
+    o.insert("fifo_depth".to_string(), fifo);
+    o.insert("memory".to_string(), memory);
+    o.insert("area_mm2".to_string(), Json::Num(p.area_mm2));
+    o.insert("suite_latency_cycles".to_string(), latency);
+    o.insert("suite_energy_mj".to_string(), energy);
+    o.insert("tops_per_watt".to_string(), Json::Num(p.tops_per_watt));
+    o.insert("tops_per_mm2".to_string(), Json::Num(p.tops_per_mm2));
+    o.insert("pareto".to_string(), Json::Bool(p.pareto));
+    o.insert("shipped".to_string(), Json::Bool(is_shipped));
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::tile_fingerprint;
+
+    #[test]
+    fn full_grid_is_32_unique_points_with_the_shipped_one() {
+        let grid = full_grid();
+        assert_eq!(grid.len(), 32);
+        let labels: HashSet<&str> = grid.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels.len(), 32, "labels must be unique");
+        let fps: HashSet<u64> = grid.iter().map(|(_, c)| plan::fingerprint(c)).collect();
+        assert_eq!(fps.len(), 32, "configs must be pairwise distinct");
+        assert!(
+            fps.contains(&plan::fingerprint(&ChipConfig::voltra())),
+            "the shipped chip must be one grid point"
+        );
+        // The separated preset is also a grid point, bit-identically.
+        assert!(fps.contains(&plan::fingerprint(&ChipConfig::separated_memory())));
+    }
+
+    #[test]
+    fn grid_collapses_into_the_advertised_equivalence_classes() {
+        let grid = full_grid();
+        let tile: HashSet<u64> = grid.iter().map(|(_, c)| tile_fingerprint(c)).collect();
+        assert_eq!(tile.len(), 16, "3 separated splits share each tile class");
+        let map: HashSet<u64> = grid.iter().map(|(_, c)| mapper::fingerprint(c)).collect();
+        assert_eq!(map.len(), 16, "FIFO depth is mapper-invariant");
+    }
+
+    #[test]
+    fn quick_grid_is_a_subgrid_containing_the_shipped_point() {
+        let quick = quick_grid();
+        assert_eq!(quick.len(), 6);
+        let full: HashSet<String> = full_grid().iter().map(|(l, _)| l.clone()).collect();
+        for (l, _) in &quick {
+            assert!(full.contains(l), "{l} is not a full-grid point");
+        }
+        let fps: HashSet<u64> = quick.iter().map(|(_, c)| plan::fingerprint(c)).collect();
+        assert!(fps.contains(&plan::fingerprint(&ChipConfig::voltra())));
+    }
+
+    #[test]
+    fn neighbors_move_exactly_one_axis() {
+        let shipped = plan::fingerprint(&ChipConfig::voltra());
+        let n = one_step_neighbors();
+        assert_eq!(n.len(), 6);
+        for (l, c) in &n {
+            assert_ne!(plan::fingerprint(c), shipped, "{l} must differ");
+            let v = ChipConfig::voltra();
+            let moved = [
+                c.num_banks != v.num_banks,
+                c.stream_fifo_depth != v.stream_fifo_depth,
+                c.array != v.array,
+                c.memory != v.memory,
+            ]
+            .iter()
+            .filter(|&&b| b)
+            .count();
+            assert_eq!(moved, 1, "{l} must move exactly one axis");
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_pareto_marks_the_frontier() {
+        let mk = |lat: u64, tw: f64, tm: f64| DesignPoint {
+            label: format!("{lat}-{tw}-{tm}"),
+            config: ChipConfig::voltra(),
+            area_mm2: 1.0,
+            suite_latency_cycles: lat,
+            suite_energy_mj: 1.0,
+            tops_per_watt: tw,
+            tops_per_mm2: tm,
+            pareto: false,
+        };
+        let a = mk(100, 2.0, 2.0);
+        let b = mk(200, 1.0, 1.0); // dominated by a
+        let c = mk(50, 0.5, 3.0); // trades latency/TOPS-W against a
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+        assert!(!dominates(&a, &a), "equal points never dominate");
+        let mut pts = vec![a, b, c];
+        mark_pareto(&mut pts);
+        assert_eq!(
+            pts.iter().map(|p| p.pareto).collect::<Vec<_>>(),
+            vec![true, false, true]
+        );
+    }
+}

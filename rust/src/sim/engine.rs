@@ -41,7 +41,7 @@
 
 use std::collections::HashMap;
 
-use crate::config::{ChipConfig, MemoryOrg};
+use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
 use crate::metrics::TileMetrics;
 use crate::sim::gemm_core::{block_residue, TileGeometry, MAX_INPUT_CHANNELS};
 use crate::sim::memory::{BankRequest, BankedMemory, Requester};
@@ -719,6 +719,49 @@ pub fn simulate_tile(cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
     }
 }
 
+/// Fingerprint of the *tile-structural* config slice: exactly the
+/// fields [`simulate_tile`] reads. Two configs with equal tile
+/// fingerprints produce bit-identical [`TileMetrics`] for every
+/// [`TileSpec`], so tile-simulation caches keyed by this fingerprint
+/// can be shared across configs that differ only in planner-side knobs
+/// (DMA bandwidth/burst, psum FIFO depth, double buffering, mapping
+/// mode, separated buffer *sizes*, operating point).
+///
+/// The slice, field by field (kept in lockstep with the `TileSim`
+/// constructor above — `tests/structural_keys.rs` property-tests the
+/// correspondence in both directions):
+/// * array geometry — firing pattern, subtile grid, fold legality;
+/// * memory *kind* only — the engine models separated buffers as
+///   conflict-free dedicated ports (`separate_ports`); the split sizes
+///   constrain tiling at plan time, never the per-tile walk;
+/// * `prefetch`, `stream_fifo_depth` — MGDP streamer behavior;
+/// * `simd_lanes`, `tmux_psum_output` — output drain rate and the
+///   psum/output port discipline;
+/// * `num_banks`, `mem_latency` — bank arbitration and response timing.
+pub fn tile_fingerprint(cfg: &ChipConfig) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    match cfg.array {
+        ArrayGeometry::Spatial3D { m, n, k } => {
+            0u8.hash(&mut h);
+            (m, n, k).hash(&mut h);
+        }
+        ArrayGeometry::Spatial2D { m, n } => {
+            1u8.hash(&mut h);
+            (m, n).hash(&mut h);
+        }
+    }
+    matches!(cfg.memory, MemoryOrg::Separated { .. }).hash(&mut h);
+    cfg.prefetch.hash(&mut h);
+    cfg.stream_fifo_depth.hash(&mut h);
+    cfg.simd_lanes.hash(&mut h);
+    cfg.tmux_psum_output.hash(&mut h);
+    cfg.num_banks.hash(&mut h);
+    cfg.mem_latency.hash(&mut h);
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -726,6 +769,24 @@ mod tests {
 
     fn total_useful(tm: u64, tk: u64, tn: u64) -> u64 {
         tm * tk * tn
+    }
+
+    #[test]
+    fn tile_fingerprint_tracks_only_engine_inputs() {
+        let v = tile_fingerprint(&ChipConfig::voltra());
+        // Planner-side knobs are invisible to the tile engine.
+        let mut dma = ChipConfig::voltra();
+        dma.dma_bytes_per_cycle = 16;
+        dma.dma_burst_latency = 8;
+        dma.double_buffer = false;
+        assert_eq!(v, tile_fingerprint(&dma));
+        assert_eq!(v, tile_fingerprint(&ChipConfig::swap_only()));
+        // Engine-visible knobs split the key.
+        assert_ne!(v, tile_fingerprint(&ChipConfig::no_prefetch()));
+        assert_ne!(v, tile_fingerprint(&ChipConfig::array2d()));
+        assert_ne!(v, tile_fingerprint(&ChipConfig::simd64()));
+        assert_ne!(v, tile_fingerprint(&ChipConfig::full_crossbar()));
+        assert_ne!(v, tile_fingerprint(&ChipConfig::separated_memory()));
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod snitch;
 pub mod streamer;
 
 pub use engine::{
-    fast_path_eligible, simulate_tile, simulate_tile_fast, simulate_tile_reference, TileSpec,
+    fast_path_eligible, simulate_tile, simulate_tile_fast, simulate_tile_reference,
+    tile_fingerprint, TileSpec,
 };
 pub use pipeline::{LayerPlan, Schedule, TilePlan, TileRun};

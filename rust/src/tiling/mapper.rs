@@ -48,6 +48,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{OnceLock, RwLock};
 
 use crate::config::{ArrayGeometry, ChipConfig, MappingSearch, MemoryOrg};
+use crate::coordinator::singleflight::{FlightGroup, Role};
 use crate::metrics::CacheStats;
 use crate::sim::gemm_core::Mapping;
 use crate::tiling::engine::{choose_tiling, choose_tiling_mapped, Tiling};
@@ -277,11 +278,21 @@ fn shard_of<K: Hash>(key: &K) -> usize {
 /// `(fingerprint, M, K, N)`. One process-wide instance serves every
 /// cache/plan/serve path via [`MapperCache::global`]; fresh instances
 /// exist only for cold-path benchmarking and tests.
+///
+/// Misses are single-flighted (DESIGN.md §14, same protocol as the
+/// plan and tile tiers): a search herd hitting one hot GEMM shape runs
+/// the mapping search exactly once — the first caller leads, everyone
+/// else blocks on that search and shares its result, counted in
+/// `coalesced`. The invariant `hits + misses + coalesced == calls`
+/// holds for every interleaving.
 #[derive(Default)]
 pub struct MapperCache {
     shards: [RwLock<HashMap<MapKey, Option<Resolved>>>; MAPPER_SHARDS],
+    /// In-flight searches: one searcher per key, everyone else waits.
+    flights: FlightGroup<MapKey, Option<Resolved>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl MapperCache {
@@ -297,16 +308,18 @@ impl MapperCache {
     }
 
     /// Memoized [`search`], callable from any thread. Misses search
-    /// outside any lock (the search is pure; racing threads at worst
-    /// duplicate work and insert equal values — first insert wins).
+    /// outside any lock and single-flighted: concurrent callers for
+    /// one cold key block on the leader's search and share its result.
     pub fn resolve(&self, cfg: &ChipConfig, m: u64, k: u64, n: u64) -> Option<Resolved> {
         self.resolve_seeded(cfg, m, k, n, None)
     }
 
     /// [`MapperCache::resolve`] with a seed mapping forwarded to
     /// [`search_seeded`] on a miss. Cache contents are hint-independent
-    /// (the seeded search returns the identical winner), so hits and
-    /// seeded misses interleave safely across threads.
+    /// (the seeded search returns the identical winner), so hits,
+    /// seeded misses and coalesced waits interleave safely across
+    /// threads — whichever caller leads the flight, the published
+    /// value is the canonical one.
     pub fn resolve_seeded(
         &self,
         cfg: &ChipConfig,
@@ -317,17 +330,38 @@ impl MapperCache {
     ) -> Option<Resolved> {
         let key: MapKey = (fingerprint(cfg), m, k, n);
         let shard = &self.shards[shard_of(&key)];
-        if let Some(v) = shard.read().expect("mapper shard poisoned").get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return *v;
+        loop {
+            if let Some(v) = shard.read().expect("mapper shard poisoned").get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return *v;
+            }
+            match self.flights.join(&key, || {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+            }) {
+                Role::Leader(lead) => {
+                    // A racing leader may have published and retired its
+                    // flight between our shard read and our join.
+                    if let Some(v) = shard.read().expect("mapper shard poisoned").get(&key) {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        lead.publish(*v);
+                        return *v;
+                    }
+                    let v = search_seeded(cfg, m, k, n, hint);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    // First insert wins (leaders of retried flights
+                    // agree anyway — the search is pure).
+                    let canonical = *shard
+                        .write()
+                        .expect("mapper shard poisoned")
+                        .entry(key)
+                        .or_insert(v);
+                    lead.publish(canonical);
+                    return canonical;
+                }
+                Role::Waited(Some(v)) => return v,
+                Role::Waited(None) => continue,
+            }
         }
-        let v = search_seeded(cfg, m, k, n, hint);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        *shard
-            .write()
-            .expect("mapper shard poisoned")
-            .entry(key)
-            .or_insert(v)
     }
 
     /// Distinct layer shapes resolved so far (across all shards).
@@ -348,6 +382,13 @@ impl MapperCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
         }
+    }
+
+    /// Calls that blocked on another thread's in-flight search and
+    /// shared its result instead of searching themselves (the STATS
+    /// verb's `mapper_waits`).
+    pub fn coalesced_waits(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
     }
 }
 
@@ -458,6 +499,29 @@ mod tests {
         assert_eq!(a, b);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn herd_at_one_cold_shape_searches_exactly_once() {
+        // The single-flight acceptance invariant, mapper tier: N
+        // concurrent resolvers at one cold key produce exactly one
+        // search (misses == 1); every other call either coalesced onto
+        // the in-flight leader or hit the shard afterward.
+        const HERD: u64 = 16;
+        let cache = MapperCache::new();
+        let cfg = ChipConfig::voltra();
+        let canonical = search(&cfg, 192, 768, 768);
+        std::thread::scope(|s| {
+            for _ in 0..HERD {
+                s.spawn(|| {
+                    assert_eq!(cache.resolve(&cfg, 192, 768, 768), canonical);
+                });
+            }
+        });
+        let st = cache.stats();
+        assert_eq!(st.misses, 1, "herd must search once");
+        assert_eq!(st.hits + st.misses + cache.coalesced_waits(), HERD);
         assert_eq!(cache.len(), 1);
     }
 

@@ -1,0 +1,106 @@
+//! End-to-end test of `voltra search --json` (DESIGN.md §15).
+//!
+//! One CLI invocation over the quick grid: the machine-readable output
+//! must parse through the runtime's own JSON parser, carry the
+//! documented schema, and match the golden snapshot byte-for-byte —
+//! the search scores are pure functions of (config, workload), so the
+//! whole document is deterministic across thread counts and profiles.
+//!
+//! Bless protocol (as `tests/golden_snapshots.rs`): a missing snapshot
+//! is written and the test passes (bootstrap); set `GOLDEN_BLESS=1` to
+//! intentionally regenerate after a reviewed model change.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use voltra::runtime::json::{self, Json};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/search_quick.json")
+}
+
+#[test]
+fn search_quick_json_matches_schema_and_golden() {
+    let out = Command::new(env!("CARGO_BIN_EXE_voltra"))
+        .args(["search", "--grid", "quick", "--json"])
+        .output()
+        .expect("spawn voltra binary");
+    assert!(out.status.success(), "search exit: {out:?}");
+    let text = String::from_utf8(out.stdout).expect("search output must be UTF-8");
+    let doc = json::parse(&text).expect("search --json must parse");
+
+    // Schema: top-level fields.
+    assert_eq!(doc.get("grid").and_then(Json::as_str), Some("quick"));
+    assert_eq!(doc.get("points").and_then(Json::as_usize), Some(6));
+    assert_eq!(
+        doc.get("shipped").and_then(Json::as_str),
+        Some("3d8x8x8/b32/f8/shared"),
+        "the shipped chip must appear as one grid point"
+    );
+    let tile_classes = doc.get("tile_classes").and_then(Json::as_usize).unwrap();
+    let mapper_classes = doc.get("mapper_classes").and_then(Json::as_usize).unwrap();
+    assert!(
+        tile_classes < 6,
+        "structural keying must collapse the quick grid ({tile_classes} classes)"
+    );
+    assert!(mapper_classes < 6, "got {mapper_classes} mapper classes");
+
+    // Schema: per-point records.
+    let results = doc.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), 6);
+    let frontier = doc.get("frontier").and_then(Json::as_arr).unwrap();
+    assert!(!frontier.is_empty(), "a finite grid always has a frontier");
+    let mut shipped_seen = false;
+    for p in results {
+        for key in [
+            "label",
+            "geometry",
+            "banks",
+            "fifo_depth",
+            "memory",
+            "area_mm2",
+            "suite_latency_cycles",
+            "suite_energy_mj",
+            "tops_per_watt",
+            "tops_per_mm2",
+            "pareto",
+            "shipped",
+        ] {
+            assert!(p.get(key).is_some(), "point missing {key}: {p:?}");
+        }
+        assert!(p.get("area_mm2").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(p.get("tops_per_watt").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(
+            p.get("suite_latency_cycles")
+                .and_then(Json::as_usize)
+                .unwrap()
+                > 0
+        );
+        if p.get("shipped") == Some(&Json::Bool(true)) {
+            shipped_seen = true;
+            assert_eq!(
+                p.get("label").and_then(Json::as_str),
+                Some("3d8x8x8/b32/f8/shared")
+            );
+        }
+    }
+    assert!(shipped_seen, "exactly the shipped point carries the flag");
+
+    // Golden comparison: byte-exact, cross-profile (debug blesses on
+    // first run, the release leg then compares — a determinism check).
+    let path = golden_path();
+    let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("create tests/golden");
+        std::fs::write(&path, &text).expect("write golden search snapshot");
+        eprintln!("blessed golden snapshot {}", path.display());
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).expect("read golden search snapshot");
+    assert_eq!(
+        golden, text,
+        "search --json diverged from {}; if the model change is intentional \
+         and reviewed, regenerate with GOLDEN_BLESS=1 cargo test --test search_cli",
+        path.display()
+    );
+}

@@ -1,0 +1,74 @@
+//! Pins the shipped chip as Pareto-optimal within its one-step search
+//! neighborhood (DESIGN.md §15) — the design-point acceptance test of
+//! the co-search: no config reachable by moving a single axis (banks
+//! 16/64, FIFO depth 4/16, 2D array, separated memory) may dominate
+//! the fabricated design on all three score axes simultaneously.
+//!
+//! Each neighbor loses somewhere by construction of the model:
+//! smaller fabrics (16 banks, depth-4 FIFOs) win TOPS/mm² but pay
+//! latency (bank conflicts / the depth-8 knee of `ablation_arch`);
+//! bigger fabrics (64 banks, depth-16 FIFOs) can win latency but pay
+//! area; the 2D array and separated memory pay utilization and DMA
+//! serialization at equal area. This test keeps that argument true as
+//! the model evolves.
+//!
+//! Debug builds score a three-workload subset (the verifier checks
+//! every compiled plan at insert, so the full suite is slow there);
+//! the release leg scores all eight.
+
+use voltra::config::ChipConfig;
+use voltra::search;
+use voltra::tiling::mapper::MapperCache;
+use voltra::tiling::IncrementalMapper;
+use voltra::workloads::{self, Workload};
+use voltra::PlanCache;
+
+fn suite() -> Vec<Workload> {
+    if cfg!(debug_assertions) {
+        ["resnet50", "bert", "llama-prefill"]
+            .iter()
+            .map(|n| workloads::by_name(n).expect("suite workload"))
+            .collect()
+    } else {
+        workloads::evaluation_suite()
+    }
+}
+
+#[test]
+fn no_one_step_neighbor_dominates_the_shipped_config() {
+    let suite = suite();
+    let plans = PlanCache::new();
+    let mappers = MapperCache::new();
+    let mut im = IncrementalMapper::new(&mappers);
+    let shipped = search::score_config(
+        "3d8x8x8/b32/f8/shared",
+        &ChipConfig::voltra(),
+        &suite,
+        &plans,
+        &mut im,
+    );
+    let mut all = vec![shipped];
+    for (label, cfg) in search::one_step_neighbors() {
+        let p = search::score_config(&label, &cfg, &suite, &plans, &mut im);
+        all.push(p);
+    }
+    for n in &all[1..] {
+        assert!(
+            !search::dominates(n, &all[0]),
+            "{} dominates the shipped config: \
+             latency {} vs {} cyc, {:.3} vs {:.3} TOPS/W, {:.3} vs {:.3} TOPS/mm^2",
+            n.label,
+            n.suite_latency_cycles,
+            all[0].suite_latency_cycles,
+            n.tops_per_watt,
+            all[0].tops_per_watt,
+            n.tops_per_mm2,
+            all[0].tops_per_mm2,
+        );
+    }
+    search::mark_pareto(&mut all);
+    assert!(
+        all[0].pareto,
+        "the shipped config must sit on the neighborhood's Pareto frontier"
+    );
+}

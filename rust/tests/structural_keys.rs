@@ -1,0 +1,264 @@
+//! Property tests for structural cache-key soundness (DESIGN.md §15).
+//!
+//! The co-search's cross-config sharing is only legal if the structural
+//! fingerprints are *exactly* as wide as what they guard:
+//!
+//! * configs that differ **only** in non-structural fields must share a
+//!   cache entry AND produce bit-identical results from the guarded
+//!   computation (sharing is sound);
+//! * **any** structural change must produce a distinct key (sharing is
+//!   never wrong).
+//!
+//! Two fingerprints are under test: [`voltra::sim::tile_fingerprint`]
+//! (guards `simulate_tile` memoization — the fields the tile engine
+//! reads) and [`voltra::tiling::mapper::fingerprint`] (guards mapping
+//! search memoization — the fields the search scores with).
+
+use std::sync::Arc;
+
+use voltra::config::{ArrayGeometry, ChipConfig, MappingSearch, MemoryOrg, OperatingPoint};
+use voltra::sim::{simulate_tile, tile_fingerprint, TileSpec};
+use voltra::tiling::mapper;
+use voltra::workloads;
+use voltra::PlanCache;
+
+/// Configs differing from the shipped chip ONLY in fields the tile
+/// engine never reads (planner-side and power-side knobs).
+fn tile_nonstructural_variants() -> Vec<(&'static str, ChipConfig)> {
+    let base = ChipConfig::voltra;
+    let mut out: Vec<(&'static str, ChipConfig)> = Vec::new();
+    let mut c = base();
+    c.psum_fifo_depth = 4;
+    out.push(("psum_fifo_depth", c));
+    let mut c = base();
+    c.dma_bytes_per_cycle = 16;
+    out.push(("dma_bytes_per_cycle", c));
+    let mut c = base();
+    c.dma_burst_latency = 8;
+    out.push(("dma_burst_latency", c));
+    let mut c = base();
+    c.double_buffer = false;
+    out.push(("double_buffer", c));
+    let mut c = base();
+    c.mapping = MappingSearch::SwapOnly;
+    out.push(("mapping", c));
+    let mut c = base();
+    c.operating_point = OperatingPoint::efficiency();
+    out.push(("operating_point", c));
+    out
+}
+
+/// One config per tile-structural axis, each moved off the shipped
+/// value.
+fn tile_structural_variants() -> Vec<(&'static str, ChipConfig)> {
+    let base = ChipConfig::voltra;
+    let mut out: Vec<(&'static str, ChipConfig)> = Vec::new();
+    let mut c = base();
+    c.array = ArrayGeometry::Spatial2D { m: 16, n: 32 };
+    out.push(("array", c));
+    let mut c = base();
+    c.prefetch = false;
+    out.push(("prefetch", c));
+    let mut c = base();
+    c.stream_fifo_depth = 4;
+    out.push(("stream_fifo_depth", c));
+    let mut c = base();
+    c.simd_lanes = 64;
+    out.push(("simd_lanes", c));
+    let mut c = base();
+    c.tmux_psum_output = false;
+    out.push(("tmux_psum_output", c));
+    let mut c = base();
+    c.num_banks = 16;
+    out.push(("num_banks", c));
+    let mut c = base();
+    c.mem_latency = 3;
+    out.push(("mem_latency", c));
+    let mut c = base();
+    c.memory = MemoryOrg::separated_default();
+    out.push(("memory_kind", c));
+    out
+}
+
+fn probe_specs() -> Vec<TileSpec> {
+    let mut specs = vec![
+        TileSpec::simple(128, 256, 64),
+        TileSpec::simple(96, 96, 96),
+        TileSpec::simple(64, 512, 64),
+        TileSpec::simple(1, 1, 1),
+        TileSpec::simple(7, 33, 5), // ragged residues
+    ];
+    let mut edge = TileSpec::simple(128, 512, 64);
+    edge.psum_in = true;
+    edge.spill_out = true;
+    specs.push(edge);
+    specs
+}
+
+#[test]
+fn tile_nonstructural_differences_share_entries_bit_identically() {
+    let base = ChipConfig::voltra();
+    let key = tile_fingerprint(&base);
+    let plans = PlanCache::new();
+    let shared = plans.tile_cache(&base);
+    for (field, cfg) in tile_nonstructural_variants() {
+        assert_eq!(
+            tile_fingerprint(&cfg),
+            key,
+            "{field} is not a tile-engine input and must not change the key"
+        );
+        assert!(
+            Arc::ptr_eq(&shared, &plans.tile_cache(&cfg)),
+            "{field}: same class must share one tile cache instance"
+        );
+        // Soundness of the shared entry: the engine really is blind to
+        // the field, bit for bit, on every probe shape.
+        for spec in probe_specs() {
+            assert_eq!(
+                simulate_tile(&base, &spec),
+                simulate_tile(&cfg, &spec),
+                "{field}: simulate_tile diverged on {spec:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tile_structural_changes_produce_distinct_keys() {
+    let mut all = vec![("shipped", ChipConfig::voltra())];
+    all.extend(tile_structural_variants());
+    for i in 0..all.len() {
+        for j in i + 1..all.len() {
+            assert_ne!(
+                tile_fingerprint(&all[i].1),
+                tile_fingerprint(&all[j].1),
+                "{} vs {}: structural configs must never share a tile key",
+                all[i].0,
+                all[j].0
+            );
+        }
+    }
+    // Separated splits beyond the kind boolean are NOT structural for
+    // the tile engine: the planner already carved tiles to fit, so two
+    // splits simulate identically and deliberately share a class.
+    let mut a = ChipConfig::voltra();
+    a.memory = MemoryOrg::separated_default();
+    let mut b = ChipConfig::voltra();
+    b.memory = MemoryOrg::Separated {
+        input: 48 * 1024,
+        weight: 48 * 1024,
+        output: 24 * 1024,
+        psum: 8 * 1024,
+    };
+    assert_eq!(tile_fingerprint(&a), tile_fingerprint(&b));
+}
+
+#[test]
+fn mapper_nonstructural_differences_share_search_results() {
+    let base = ChipConfig::voltra();
+    let key = mapper::fingerprint(&base);
+    // Fields the mapping search never scores with: streamer/SIMD/latency
+    // knobs and the operating point.
+    let mut variants: Vec<(&'static str, ChipConfig)> = Vec::new();
+    let mut c = base.clone();
+    c.prefetch = false;
+    variants.push(("prefetch", c));
+    let mut c = base.clone();
+    c.stream_fifo_depth = 4;
+    variants.push(("stream_fifo_depth", c));
+    let mut c = base.clone();
+    c.psum_fifo_depth = 4;
+    variants.push(("psum_fifo_depth", c));
+    let mut c = base.clone();
+    c.simd_lanes = 64;
+    variants.push(("simd_lanes", c));
+    let mut c = base.clone();
+    c.mem_latency = 3;
+    variants.push(("mem_latency", c));
+    let mut c = base.clone();
+    c.operating_point = OperatingPoint::efficiency();
+    variants.push(("operating_point", c));
+    // GEMM, GEMV (K-extension fold territory), and a ragged shape.
+    let shapes = [(192u64, 768u64, 768u64), (1, 2048, 512), (7, 33, 5)];
+    for (field, cfg) in variants {
+        assert_eq!(
+            mapper::fingerprint(&cfg),
+            key,
+            "{field} must not change the mapper key"
+        );
+        for (m, k, n) in shapes {
+            assert_eq!(
+                mapper::resolve(&base, m, k, n),
+                mapper::resolve(&cfg, m, k, n),
+                "{field}: mapping search diverged on {m}x{k}x{n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mapper_structural_changes_produce_distinct_keys() {
+    let base = ChipConfig::voltra;
+    let mut all: Vec<(&'static str, ChipConfig)> = vec![("shipped", base())];
+    let mut c = base();
+    c.array = ArrayGeometry::Spatial2D { m: 16, n: 32 };
+    all.push(("array", c));
+    let mut c = base();
+    c.memory = MemoryOrg::separated_default();
+    all.push(("memory", c));
+    let mut c = base();
+    c.num_banks = 16;
+    all.push(("num_banks", c));
+    let mut c = base();
+    c.dma_bytes_per_cycle = 16;
+    all.push(("dma_bytes_per_cycle", c));
+    let mut c = base();
+    c.double_buffer = false;
+    all.push(("double_buffer", c));
+    let mut c = base();
+    c.mapping = MappingSearch::SwapOnly;
+    all.push(("mapping", c));
+    for i in 0..all.len() {
+        for j in i + 1..all.len() {
+            assert_ne!(
+                mapper::fingerprint(&all[i].1),
+                mapper::fingerprint(&all[j].1),
+                "{} vs {}: mapper-structural configs must never share a key",
+                all[i].0,
+                all[j].0
+            );
+        }
+    }
+    // Unlike the tile key, separated SPLITS are mapper-structural
+    // (tiling feasibility depends on the exact partition).
+    let mut a = base();
+    a.memory = MemoryOrg::separated_default();
+    let mut b = base();
+    b.memory = MemoryOrg::Separated {
+        input: 48 * 1024,
+        weight: 48 * 1024,
+        output: 24 * 1024,
+        psum: 8 * 1024,
+    };
+    assert_ne!(mapper::fingerprint(&a), mapper::fingerprint(&b));
+}
+
+/// Sharing must be invisible to results: a plan built through a cache
+/// that already served a different same-class config is bit-identical
+/// to one built in isolation.
+#[test]
+fn cross_config_sharing_never_changes_metrics() {
+    let w = workloads::by_name("lstm").expect("suite workload");
+    let voltra = ChipConfig::voltra();
+    let mut swap = ChipConfig::voltra();
+    swap.mapping = MappingSearch::SwapOnly;
+
+    let isolated = PlanCache::new().run(&voltra, &w);
+    let shared = PlanCache::new();
+    let _warm = shared.run(&swap, &w); // populates the shared tile class
+    let through_shared = shared.run(&voltra, &w);
+    assert_eq!(
+        isolated.metrics, through_shared.metrics,
+        "planning through a pre-warmed shared tile class must not move a cycle"
+    );
+}
