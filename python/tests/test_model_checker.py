@@ -1,0 +1,923 @@
+"""Executable spec for the Rust concurrency model checker.
+
+This is a line-faithful Python port of ``rust/src/check/`` — the
+DFS interleaving scheduler (``sched.rs``) and all five protocol models
+(``flight.rs``, ``plancache.rs``, ``dispatch.rs``, ``pool.rs``,
+``lockorder.rs``) with the full 18-entry mutation catalog. The Rust
+implementation mirrors this file state machine for state machine; the
+assertions below are the same contract ``tests/check_mutations.rs``
+pins natively:
+
+* clean (unmutated) models explore to quiescence with zero findings
+  and zero truncation at the default depth bound of 64;
+* every mutation is caught, and caught with its *pinned* finding id;
+* mutations are inert outside their own protocol.
+
+Run ``python test_model_checker.py`` for a verbose sweep.
+"""
+
+import sys
+
+DEFAULT_DEPTH = 64
+
+# ---------------------------------------------------------------------------
+# sched.rs
+
+
+class Violation:
+    def __init__(self, vid, detail):
+        self.id = vid
+        self.detail = detail
+
+
+class Finding:
+    def __init__(self, protocol, vid, detail, trace):
+        self.protocol = protocol
+        self.id = vid
+        self.detail = detail
+        self.trace = trace
+
+    def __repr__(self):
+        return f"Finding({self.protocol}, {self.id}: {self.detail})"
+
+
+class Exploration:
+    def __init__(self):
+        self.states = 0
+        self.max_depth = 0
+        self.truncated = False
+
+
+def explore(protocol, initial, depth_limit, findings):
+    """Port of ``sched::explore``: DFS with visited-set pruning, the
+    first counterexample per finding id kept."""
+    stats = Exploration()
+    seen = set()
+    path = []
+    reported = set()
+
+    def report(v):
+        if v.id not in reported:
+            reported.add(v.id)
+            findings.append(Finding(protocol, v.id, v.detail, list(path)))
+
+    def dfs(m, depth):
+        fp = m.key()
+        if fp in seen:
+            return
+        seen.add(fp)
+        stats.states += 1
+        stats.max_depth = max(stats.max_depth, depth)
+        v = m.invariant()
+        if v is not None:
+            report(v)
+            return
+        enabled = [t for t in range(m.threads()) if not m.done(t) and m.enabled(t)]
+        if not enabled:
+            if all(m.done(t) for t in range(m.threads())):
+                q = m.at_quiescence()
+                if q is not None:
+                    report(q)
+            else:
+                stuck = ", ".join(f"t{t}" for t in range(m.threads()) if not m.done(t))
+                report(Violation("deadlock", f"no runnable thread; stuck: {stuck}"))
+            return
+        if depth >= depth_limit:
+            stats.truncated = True
+            return
+        for t in enabled:
+            child = m.clone()
+            label = child.step(t)
+            path.append(f"t{t}: {label}")
+            dfs(child, depth + 1)
+            path.pop()
+
+    dfs(initial, 0)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Mutation catalog (check/mod.rs)
+
+MUTATIONS = {
+    # id: (protocol, expected finding)
+    "flight-dropped-notify": ("flight", "deadlock"),
+    "flight-abort-silent": ("flight", "deadlock"),
+    "flight-wait-if": ("flight", "value-canonical"),
+    "flight-missed-abort-retry": ("flight", "value-canonical"),
+    "cache-double-count-miss": ("plancache", "accounting"),
+    "cache-lost-coalesced": ("plancache", "accounting"),
+    "cache-hit-uncounted": ("plancache", "accounting"),
+    "cache-skip-double-check": ("plancache", "plan-once"),
+    "cache-retire-early": ("plancache", "plan-once"),
+    "dispatch-unbounded-queue": ("dispatch", "queue-bound"),
+    "dispatch-silent-drop": ("dispatch", "deadlock"),
+    "dispatch-worker-exit-on-empty": ("dispatch", "deadlock"),
+    "dispatch-numerics-unbounded": ("dispatch", "numerics-bound"),
+    "dispatch-reply-dropped": ("dispatch", "deadlock"),
+    "pool-claim-skip": ("pool", "item-lost"),
+    "pool-racy-claim": ("pool", "claim-once"),
+    "pool-wrong-slot": ("pool", "index-order"),
+    "lock-rank-inversion": ("lockorder", "rank-monotone"),
+}
+
+PROTOCOLS = ["flight", "plancache", "dispatch", "pool", "lockorder"]
+
+
+# ---------------------------------------------------------------------------
+# check/flight.rs
+
+R_READ, R_JOIN, R_LEADERCHECK, R_COMPUTE, R_INSERT, R_RETIRE = range(6)
+R_PUBLISH, R_ABORT_RETIRE, R_ABORT_PUBLISH, R_WAIT, R_DONE = range(6, 11)
+
+
+class FlightCaller:
+    __slots__ = (
+        "pc", "leading", "waiting_on", "value", "result",
+        "spurious_budget", "will_abort", "aborted", "retired_early",
+    )
+
+    def __init__(self, will_abort=False):
+        self.pc = R_READ
+        self.leading = None
+        self.waiting_on = None
+        self.value = None
+        self.result = None
+        self.spurious_budget = 1
+        self.will_abort = will_abort
+        self.aborted = False
+        self.retired_early = False
+
+    def copy(self):
+        c = FlightCaller()
+        for s in self.__slots__:
+            setattr(c, s, getattr(self, s))
+        return c
+
+    def key(self):
+        return tuple(getattr(self, s) for s in self.__slots__)
+
+
+class FlightModel:
+    def __init__(self, mutation=None):
+        self.mutation = mutation
+        self.cache = None
+        self.inflight = None
+        self.slots = []  # (published, notified); published: None | ('v', x) | ('abort',)
+        self.next_value = 1
+        self.planner_runs = 0
+        self.callers = [FlightCaller(True), FlightCaller(), FlightCaller()]
+
+    def clone(self):
+        m = FlightModel(self.mutation)
+        m.cache = self.cache
+        m.inflight = self.inflight
+        m.slots = [tuple(s) for s in self.slots]
+        m.next_value = self.next_value
+        m.planner_runs = self.planner_runs
+        m.callers = [c.copy() for c in self.callers]
+        return m
+
+    def key(self):
+        return (
+            self.cache, self.inflight, tuple(self.slots), self.next_value,
+            self.planner_runs, tuple(c.key() for c in self.callers),
+        )
+
+    def is_mut(self, m):
+        return self.mutation == m
+
+    def threads(self):
+        return len(self.callers)
+
+    def done(self, t):
+        return self.callers[t].pc == R_DONE
+
+    def real_wake(self, g):
+        published, notified = self.slots[g]
+        return published is not None and notified
+
+    def enabled(self, t):
+        c = self.callers[t]
+        if c.pc == R_DONE:
+            return False
+        if c.pc == R_WAIT:
+            return self.real_wake(c.waiting_on) or c.spurious_budget > 0
+        return True
+
+    def consume_wake(self, t, g):
+        published, _ = self.slots[g]
+        c = self.callers[t]
+        c.waiting_on = None
+        if published is not None and published[0] == "v":
+            c.result = published[1]
+            c.pc = R_DONE
+            return f"wake(g{g}) -> value"
+        if published is not None:  # abort sentinel
+            if self.is_mut("flight-missed-abort-retry"):
+                c.pc = R_DONE
+                return f"wake(g{g}) -> abort taken as value"
+            c.pc = R_READ
+            return f"wake(g{g}) -> abort, retry"
+        c.pc = R_DONE
+        return f"wake(g{g}) -> unpublished slot consumed"
+
+    def step(self, t):
+        c = self.callers[t]
+        pc = c.pc
+        if pc == R_READ:
+            if self.cache is not None:
+                c.result = self.cache
+                c.pc = R_DONE
+                return "read-hit"
+            c.pc = R_JOIN
+            return "read-miss"
+        if pc == R_JOIN:
+            if self.inflight is not None:
+                g = self.inflight
+                c.waiting_on = g
+                c.pc = R_WAIT
+                return f"join-follow(g{g})"
+            g = len(self.slots)
+            self.slots.append((None, False))
+            self.inflight = g
+            c.leading = g
+            c.pc = R_LEADERCHECK
+            return f"join-lead(g{g})"
+        if pc == R_LEADERCHECK:
+            if self.cache is not None:
+                c.value = self.cache
+                c.pc = R_RETIRE
+                return "double-check-hit"
+            c.pc = R_COMPUTE
+            return "double-check-miss"
+        if pc == R_COMPUTE:
+            self.planner_runs += 1
+            c.value = self.next_value
+            self.next_value += 1
+            if c.will_abort and not c.aborted:
+                c.pc = R_ABORT_RETIRE
+                return "compute -> panic"
+            c.pc = R_INSERT
+            return "compute"
+        if pc == R_INSERT:
+            if self.cache is None:
+                self.cache = c.value
+            c.value = self.cache
+            c.pc = R_RETIRE
+            return "insert(or_insert)"
+        if pc == R_RETIRE:
+            self.inflight = None
+            c.pc = R_PUBLISH
+            return "retire"
+        if pc == R_PUBLISH:
+            g = c.leading
+            notified = not self.is_mut("flight-dropped-notify")
+            self.slots[g] = (("v", c.value), notified)
+            c.leading = None
+            c.result = c.value
+            c.pc = R_DONE
+            return f"publish(g{g})"
+        if pc == R_ABORT_RETIRE:
+            self.inflight = None
+            c.pc = R_ABORT_PUBLISH
+            return "abort: retire"
+        if pc == R_ABORT_PUBLISH:
+            g = c.leading
+            if not self.is_mut("flight-abort-silent"):
+                self.slots[g] = (("abort",), True)
+            c.leading = None
+            c.aborted = True
+            c.pc = R_DONE
+            return f"abort: publish-none(g{g})"
+        if pc == R_WAIT:
+            g = c.waiting_on
+            if self.real_wake(g):
+                return self.consume_wake(t, g)
+            c.spurious_budget -= 1
+            if self.is_mut("flight-wait-if"):
+                return self.consume_wake(t, g)
+            if self.slots[g][0] is not None:
+                return self.consume_wake(t, g)
+            return f"spurious-wake(g{g}) -> repark"
+        raise AssertionError("done callers are never scheduled")
+
+    def invariant(self):
+        if self.planner_runs > 2:
+            return Violation(
+                "plan-once",
+                f"{self.planner_runs} planner runs for one key (abort allows at most 2)",
+            )
+        return None
+
+    def at_quiescence(self):
+        for i, c in enumerate(self.callers):
+            if c.aborted:
+                continue
+            if c.result is None or c.result != self.cache:
+                return Violation(
+                    "value-canonical",
+                    f"caller {i} finished with {c.result}, store holds {self.cache}",
+                )
+        return None
+
+
+# ---------------------------------------------------------------------------
+# check/plancache.rs (same flight machinery, abort-free, three counters)
+
+P_READ, P_JOIN, P_LEADERCHECK, P_PLAN, P_INSERT, P_RETIRE, P_PUBLISH, P_WAIT, P_DONE = range(9)
+
+
+class PlanCacheModel:
+    def __init__(self, mutation=None):
+        self.mutation = mutation
+        self.shard = None
+        self.inflight = None
+        self.slots = []
+        self.next_value = 1
+        self.planner_runs = 0
+        self.hits = 0
+        self.misses = 0
+        self.coalesced = 0
+        # caller: [pc, leading, waiting_on, value, result, budget, retired_early]
+        self.callers = [[P_READ, None, None, None, None, 1, False] for _ in range(3)]
+
+    def clone(self):
+        m = PlanCacheModel(self.mutation)
+        m.shard = self.shard
+        m.inflight = self.inflight
+        m.slots = [tuple(s) for s in self.slots]
+        m.next_value = self.next_value
+        m.planner_runs = self.planner_runs
+        m.hits, m.misses, m.coalesced = self.hits, self.misses, self.coalesced
+        m.callers = [list(c) for c in self.callers]
+        return m
+
+    def key(self):
+        return (
+            self.shard, self.inflight, tuple(self.slots), self.next_value,
+            self.planner_runs, self.hits, self.misses, self.coalesced,
+            tuple(tuple(c) for c in self.callers),
+        )
+
+    def is_mut(self, m):
+        return self.mutation == m
+
+    def threads(self):
+        return 3
+
+    def done(self, t):
+        return self.callers[t][0] == P_DONE
+
+    def real_wake(self, g):
+        published, notified = self.slots[g]
+        return published is not None and notified
+
+    def enabled(self, t):
+        pc, _, waiting_on, _, _, budget, _ = self.callers[t]
+        if pc == P_DONE:
+            return False
+        if pc == P_WAIT:
+            return self.real_wake(waiting_on) or budget > 0
+        return True
+
+    def step(self, t):
+        c = self.callers[t]
+        pc = c[0]
+        if pc == P_READ:
+            if self.shard is not None:
+                if not self.is_mut("cache-hit-uncounted"):
+                    self.hits += 1
+                c[4] = self.shard
+                c[0] = P_DONE
+                return "shard-hit"
+            c[0] = P_JOIN
+            return "shard-miss"
+        if pc == P_JOIN:
+            if self.inflight is not None:
+                g = self.inflight
+                if not self.is_mut("cache-lost-coalesced"):
+                    self.coalesced += 1
+                c[2] = g
+                c[0] = P_WAIT
+                return f"join-follow(g{g})"
+            g = len(self.slots)
+            self.slots.append((None, False))
+            self.inflight = g
+            c[1] = g
+            c[0] = P_LEADERCHECK
+            return f"join-lead(g{g})"
+        if pc == P_LEADERCHECK:
+            if not self.is_mut("cache-skip-double-check") and self.shard is not None:
+                self.hits += 1
+                if self.is_mut("cache-double-count-miss"):
+                    self.misses += 1
+                c[3] = self.shard
+                c[0] = P_RETIRE
+                return "double-check-hit"
+            c[0] = P_PLAN
+            return "double-check-miss"
+        if pc == P_PLAN:
+            self.planner_runs += 1
+            self.misses += 1
+            c[3] = self.next_value
+            self.next_value += 1
+            if self.is_mut("cache-retire-early"):
+                c[6] = True
+                c[0] = P_RETIRE
+            else:
+                c[0] = P_INSERT
+            return "plan (count miss)"
+        if pc == P_INSERT:
+            if self.shard is None:
+                self.shard = c[3]
+            c[3] = self.shard
+            c[0] = P_PUBLISH if c[6] else P_RETIRE
+            return "insert(or_insert)"
+        if pc == P_RETIRE:
+            self.inflight = None
+            c[0] = P_INSERT if c[6] else P_PUBLISH
+            return "retire"
+        if pc == P_PUBLISH:
+            g = c[1]
+            self.slots[g] = (("v", c[3]), True)
+            c[1] = None
+            c[4] = c[3]
+            c[0] = P_DONE
+            return f"publish(g{g})"
+        if pc == P_WAIT:
+            g = c[2]
+            if not self.real_wake(g):
+                c[5] -= 1
+                if self.slots[g][0] is None:
+                    return f"spurious-wake(g{g}) -> repark"
+            c[2] = None
+            c[4] = self.slots[g][0][1]
+            c[0] = P_DONE
+            return f"wake(g{g}) -> value"
+        raise AssertionError("done callers are never scheduled")
+
+    def invariant(self):
+        return None
+
+    def at_quiescence(self):
+        calls = len(self.callers)
+        total = self.hits + self.misses + self.coalesced
+        if total != calls:
+            return Violation(
+                "accounting",
+                f"hits({self.hits}) + misses({self.misses}) + "
+                f"coalesced({self.coalesced}) = {total} != {calls} calls",
+            )
+        if self.planner_runs > 1:
+            return Violation("plan-once", f"{self.planner_runs} planner runs for one key")
+        for i, c in enumerate(self.callers):
+            if c[4] is None or c[4] != self.shard:
+                return Violation(
+                    "value-canonical",
+                    f"caller {i} finished with {c[4]}, shard holds {self.shard}",
+                )
+        return None
+
+
+# ---------------------------------------------------------------------------
+# check/dispatch.rs
+
+QUEUE_CAP = 1
+NUM_CAP = 1
+CONNS = 2
+WORKERS = 2
+
+SUBMIT, AWAIT_REPLY, FINISHED = range(3)
+W_RECV, W_SENDNUM, W_AWAITNUM, W_EXITED = range(4)
+N_RECV, N_EXITED = range(2)
+PENDING, REJECTED, DONE_ST = range(3)
+
+
+class DispatchModel:
+    def __init__(self, mutation=None):
+        self.mutation = mutation
+        self.queue = []
+        self.senders = CONNS
+        self.workers_alive = WORKERS
+        self.numq = []
+        self.num_done = [False] * CONNS
+        self.status = [PENDING] * CONNS
+        self.conns = [SUBMIT] * CONNS
+        self.workers = [(W_RECV, None)] * WORKERS
+        self.numerics = N_RECV
+
+    def clone(self):
+        m = DispatchModel(self.mutation)
+        m.queue = list(self.queue)
+        m.senders = self.senders
+        m.workers_alive = self.workers_alive
+        m.numq = list(self.numq)
+        m.num_done = list(self.num_done)
+        m.status = list(self.status)
+        m.conns = list(self.conns)
+        m.workers = list(self.workers)
+        m.numerics = self.numerics
+        return m
+
+    def key(self):
+        return (
+            tuple(self.queue), self.senders, self.workers_alive, tuple(self.numq),
+            tuple(self.num_done), tuple(self.status), tuple(self.conns),
+            tuple(self.workers), self.numerics,
+        )
+
+    def is_mut(self, m):
+        return self.mutation == m
+
+    def threads(self):
+        return CONNS + WORKERS + 1
+
+    def done(self, t):
+        if t < CONNS:
+            return self.conns[t] == FINISHED
+        if t < CONNS + WORKERS:
+            return self.workers[t - CONNS][0] == W_EXITED
+        return self.numerics == N_EXITED
+
+    def enabled(self, t):
+        if t < CONNS:
+            pc = self.conns[t]
+            if pc == SUBMIT:
+                return True
+            if pc == AWAIT_REPLY:
+                return self.status[t] == DONE_ST
+            return False
+        if t < CONNS + WORKERS:
+            pc, req = self.workers[t - CONNS]
+            if pc == W_RECV:
+                return (
+                    bool(self.queue)
+                    or self.senders == 0
+                    or self.is_mut("dispatch-worker-exit-on-empty")
+                )
+            if pc == W_SENDNUM:
+                return len(self.numq) < NUM_CAP or self.is_mut("dispatch-numerics-unbounded")
+            if pc == W_AWAITNUM:
+                return self.num_done[req]
+            return False
+        if self.numerics == N_RECV:
+            return bool(self.numq) or self.workers_alive == 0
+        return False
+
+    def step(self, t):
+        if t < CONNS:
+            pc = self.conns[t]
+            if pc == SUBMIT:
+                if len(self.queue) < QUEUE_CAP or self.is_mut("dispatch-unbounded-queue"):
+                    self.queue.append(t)
+                    self.conns[t] = AWAIT_REPLY
+                    return f"submit(r{t}) admitted"
+                if self.is_mut("dispatch-silent-drop"):
+                    self.conns[t] = AWAIT_REPLY
+                    return f"submit(r{t}) dropped silently"
+                self.status[t] = REJECTED
+                self.senders -= 1
+                self.conns[t] = FINISHED
+                return f"submit(r{t}) -> ERR busy"
+            self.senders -= 1
+            self.conns[t] = FINISHED
+            return f"reply(r{t}) received, disconnect"
+        if t < CONNS + WORKERS:
+            w = t - CONNS
+            pc, req = self.workers[w]
+            if pc == W_RECV:
+                if self.queue:
+                    req = self.queue.pop(0)
+                    self.workers[w] = (W_SENDNUM, req)
+                    return f"recv -> r{req}"
+                self.workers_alive -= 1
+                self.workers[w] = (W_EXITED, None)
+                return "recv -> disconnected, exit"
+            if pc == W_SENDNUM:
+                self.numq.append(req)
+                self.workers[w] = (W_AWAITNUM, req)
+                return f"numerics-send(r{req})"
+            if not self.is_mut("dispatch-reply-dropped"):
+                self.status[req] = DONE_ST
+            self.workers[w] = (W_RECV, None)
+            return f"reply(r{req}) sent"
+        if self.numq:
+            req = self.numq.pop(0)
+            self.num_done[req] = True
+            return f"numerics r{req} computed"
+        self.numerics = N_EXITED
+        return "numerics channel closed, exit"
+
+    def invariant(self):
+        if len(self.queue) > QUEUE_CAP:
+            return Violation(
+                "queue-bound",
+                f"{len(self.queue)} queued jobs exceed queue_depth {QUEUE_CAP}",
+            )
+        if len(self.numq) > NUM_CAP:
+            return Violation(
+                "numerics-bound",
+                f"{len(self.numq)} numerics jobs exceed channel cap {NUM_CAP}",
+            )
+        return None
+
+    def at_quiescence(self):
+        for r, st in enumerate(self.status):
+            if st == PENDING:
+                return Violation("request-lost", f"request r{r} neither served nor rejected")
+        if self.queue:
+            return Violation(
+                "drain-incomplete",
+                f"{len(self.queue)} jobs left in the queue after shutdown",
+            )
+        return None
+
+
+# ---------------------------------------------------------------------------
+# check/pool.rs
+
+ITEMS = 3
+POOL_WORKERS = 2
+
+PC_CLAIM, PC_CLAIMSTORE, PC_WRITE, PC_EXITED = range(4)
+
+
+def pool_f(i):
+    return 10 + i
+
+
+class PoolModel:
+    def __init__(self, mutation=None):
+        self.mutation = mutation
+        self.next = 0
+        self.claims = [0] * ITEMS
+        self.slots = [None] * ITEMS
+        self.pcs = [(PC_CLAIM, None)] * POOL_WORKERS
+        self.seq = [0] * POOL_WORKERS
+
+    def clone(self):
+        m = PoolModel(self.mutation)
+        m.next = self.next
+        m.claims = list(self.claims)
+        m.slots = list(self.slots)
+        m.pcs = list(self.pcs)
+        m.seq = list(self.seq)
+        return m
+
+    def key(self):
+        return (self.next, tuple(self.claims), tuple(self.slots), tuple(self.pcs), tuple(self.seq))
+
+    def is_mut(self, m):
+        return self.mutation == m
+
+    def threads(self):
+        return POOL_WORKERS
+
+    def done(self, t):
+        return self.pcs[t][0] == PC_EXITED
+
+    def enabled(self, t):
+        return self.pcs[t][0] != PC_EXITED
+
+    def commit(self, w, i):
+        if i < ITEMS:
+            self.claims[i] += 1
+            self.pcs[w] = (PC_WRITE, i)
+            return f"claim {i}"
+        self.pcs[w] = (PC_EXITED, None)
+        return "claim past end, exit"
+
+    def step(self, t):
+        pc, i = self.pcs[t]
+        if pc == PC_CLAIM:
+            if self.is_mut("pool-racy-claim"):
+                self.pcs[t] = (PC_CLAIMSTORE, self.next)
+                return f"racy load {self.next}"
+            i = self.next
+            self.next += 2 if self.is_mut("pool-claim-skip") else 1
+            return self.commit(t, i)
+        if pc == PC_CLAIMSTORE:
+            self.next = i + 1
+            return self.commit(t, i)
+        if pc == PC_WRITE:
+            target = self.seq[t] if self.is_mut("pool-wrong-slot") else i
+            if target < ITEMS:
+                self.slots[target] = pool_f(i)
+            self.seq[t] += 1
+            self.pcs[t] = (PC_CLAIM, None)
+            return f"write f({i}) -> slot {target}"
+        raise AssertionError("exited workers are never scheduled")
+
+    def invariant(self):
+        for i, c in enumerate(self.claims):
+            if c > 1:
+                return Violation("claim-once", f"item {i} claimed {c} times")
+        return None
+
+    def at_quiescence(self):
+        for i in range(ITEMS):
+            if self.claims[i] == 0 or self.slots[i] is None:
+                return Violation("item-lost", f"item {i} never claimed/completed")
+            if self.slots[i] != pool_f(i):
+                return Violation(
+                    "index-order",
+                    f"slot {i} holds {self.slots[i]}, expected {pool_f(i)}",
+                )
+        return None
+
+
+# ---------------------------------------------------------------------------
+# check/lockorder.rs
+
+PLAN_SHARD, TILE_CLASS_MAP, MAPPER_SHARD, TILE_SHARD = 10, 20, 30, 40
+FLIGHT_MAP, FLIGHT_SLOT, DISPATCH_QUEUE, POOL_SLOT = 50, 60, 70, 80
+
+
+def script_planner():
+    return [
+        ("acq", PLAN_SHARD), ("rel", PLAN_SHARD),
+        ("acq", FLIGHT_MAP), ("rel", FLIGHT_MAP),
+        ("acq", TILE_CLASS_MAP),
+        ("acq", TILE_SHARD), ("rel", TILE_SHARD),
+        ("rel", TILE_CLASS_MAP),
+        ("acq", PLAN_SHARD), ("rel", PLAN_SHARD),
+        ("acq", FLIGHT_MAP), ("rel", FLIGHT_MAP),
+        ("acq", FLIGHT_SLOT), ("rel", FLIGHT_SLOT),
+    ]
+
+
+def script_simulator(inverted):
+    s = [
+        ("acq", TILE_SHARD), ("rel", TILE_SHARD),
+        ("acq", FLIGHT_MAP), ("rel", FLIGHT_MAP),
+    ]
+    if inverted:
+        s += [
+            ("acq", FLIGHT_SLOT), ("acq", FLIGHT_MAP),
+            ("rel", FLIGHT_MAP), ("rel", FLIGHT_SLOT),
+        ]
+    else:
+        s += [("acq", FLIGHT_SLOT), ("rel", FLIGHT_SLOT)]
+    s += [("acq", POOL_SLOT), ("rel", POOL_SLOT)]
+    return s
+
+
+def script_planner_nested():
+    return script_planner() + [
+        ("acq", FLIGHT_MAP), ("acq", FLIGHT_SLOT),
+        ("rel", FLIGHT_SLOT), ("rel", FLIGHT_MAP),
+    ]
+
+
+class LockOrderModel:
+    def __init__(self, mutation=None):
+        inverted = mutation == "lock-rank-inversion"
+        if inverted:
+            self.scripts = [script_planner_nested(), script_simulator(True)]
+        else:
+            self.scripts = [script_planner(), script_simulator(False)]
+        n = len(self.scripts)
+        self.idx = [0] * n
+        self.held = [[] for _ in range(n)]
+        self.owner = {}
+
+    def clone(self):
+        m = LockOrderModel.__new__(LockOrderModel)
+        m.scripts = self.scripts  # immutable per exploration
+        m.idx = list(self.idx)
+        m.held = [list(h) for h in self.held]
+        m.owner = dict(self.owner)
+        return m
+
+    def key(self):
+        return (
+            tuple(self.idx),
+            tuple(tuple(h) for h in self.held),
+            tuple(sorted(self.owner.items())),
+        )
+
+    def threads(self):
+        return len(self.scripts)
+
+    def done(self, t):
+        return self.idx[t] == len(self.scripts[t])
+
+    def enabled(self, t):
+        if self.done(t):
+            return False
+        op, lock = self.scripts[t][self.idx[t]]
+        if op == "acq":
+            return lock not in self.owner
+        return True
+
+    def step(self, t):
+        op, lock = self.scripts[t][self.idx[t]]
+        self.idx[t] += 1
+        if op == "acq":
+            self.owner[lock] = t
+            self.held[t].append(lock)
+            return f"acquire rank {lock}"
+        self.owner.pop(lock, None)
+        if lock in self.held[t]:
+            # remove the latest holding of that rank
+            for pos in range(len(self.held[t]) - 1, -1, -1):
+                if self.held[t][pos] == lock:
+                    del self.held[t][pos]
+                    break
+        return f"release rank {lock}"
+
+    def invariant(self):
+        for t, held in enumerate(self.held):
+            for a, b in zip(held, held[1:]):
+                if a >= b:
+                    return Violation(
+                        "rank-monotone",
+                        f"t{t} acquired rank {b} while holding rank {a} "
+                        "(acquisition order must strictly increase)",
+                    )
+        return None
+
+    def at_quiescence(self):
+        for t, held in enumerate(self.held):
+            if held:
+                return Violation("lock-leak", f"t{t} terminated holding ranks {held}")
+        return None
+
+
+# ---------------------------------------------------------------------------
+# check/mod.rs surface
+
+MODELS = {
+    "flight": FlightModel,
+    "plancache": PlanCacheModel,
+    "dispatch": DispatchModel,
+    "pool": PoolModel,
+    "lockorder": LockOrderModel,
+}
+
+
+def check_protocol(protocol, depth=DEFAULT_DEPTH, mutation=None):
+    findings = []
+    stats = explore(protocol, MODELS[protocol](mutation), depth, findings)
+    return stats, findings
+
+
+# ---------------------------------------------------------------------------
+# Tests (the same contract as rust/tests/check_mutations.rs)
+
+
+def test_clean_models_explore_to_quiescence_with_zero_findings():
+    for protocol in PROTOCOLS:
+        stats, findings = check_protocol(protocol)
+        assert not findings, f"{protocol}: {findings}"
+        assert not stats.truncated, f"{protocol}: truncated"
+        assert stats.states > 1, f"{protocol}: trivial exploration"
+
+
+def test_every_mutation_is_caught_with_its_pinned_finding():
+    for mid, (protocol, expected) in MUTATIONS.items():
+        _, findings = check_protocol(protocol, mutation=mid)
+        ids = [f.id for f in findings]
+        assert expected in ids, f"{mid}: expected {expected}, got {ids}"
+
+
+def test_every_finding_carries_a_counterexample_trace():
+    for mid, (protocol, expected) in MUTATIONS.items():
+        _, findings = check_protocol(protocol, mutation=mid)
+        f = next(f for f in findings if f.id == expected)
+        assert f.trace, f"{mid}: empty trace"
+        for step in f.trace:
+            assert step.startswith("t") and ": " in step, f"{mid}: bad step {step!r}"
+
+
+def test_mutations_are_inert_outside_their_own_protocol():
+    for mid, (home, _) in MUTATIONS.items():
+        for protocol in PROTOCOLS:
+            if protocol == home:
+                continue
+            _, findings = check_protocol(protocol, mutation=mid)
+            assert not findings, f"{mid} leaked into {protocol}: {findings}"
+
+
+def test_rig_meets_its_coverage_floor():
+    assert len(MUTATIONS) >= 10
+    assert len({p for p, _ in MUTATIONS.values()}) >= 4
+
+
+if __name__ == "__main__":
+    sys.setrecursionlimit(100_000)
+    for protocol in PROTOCOLS:
+        stats, findings = check_protocol(protocol)
+        status = "clean" if not findings else f"{len(findings)} finding(s)"
+        print(f"{protocol:<10} {status} ({stats.states} states, depth {stats.max_depth})")
+        assert not findings and not stats.truncated, findings
+    caught = 0
+    for mid, (protocol, expected) in sorted(MUTATIONS.items()):
+        _, findings = check_protocol(protocol, mutation=mid)
+        ids = [f.id for f in findings]
+        ok = expected in ids
+        caught += ok
+        print(f"  {mid:<30} -> {ids} (want {expected}) {'OK' if ok else 'MISSED'}")
+        assert ok, f"{mid}: {ids}"
+    print(f"all {caught}/{len(MUTATIONS)} mutations caught with their pinned findings")

@@ -1,0 +1,247 @@
+//! Protocol model of [`crate::coordinator::dispatch`] + the bounded
+//! numerics channel (DESIGN.md §14): admission control (`ERR busy` at
+//! the full queue, never silent loss), no lost wakeups, and graceful
+//! drain — workers exit only when every submitter is gone AND the
+//! queue is empty, numerics exits only after the workers.
+//!
+//! Threads: two connections (one request each), two pool workers, one
+//! numerics thread. The queue depth is 1 and the numerics channel cap
+//! is 1, so both admission decisions are reachable: a schedule where
+//! both connections submit before any pickup fills the queue (second
+//! submit must reject), and a schedule where both workers hold jobs
+//! fills the numerics channel (second send must block).
+//!
+//! Blocking is modeled as disabledness — a worker at `recv` on an empty
+//! queue with live senders simply has no enabled transition, which is
+//! exactly what lets the scheduler call a lost wakeup what it is: a
+//! deadlock.
+
+use super::sched::{Model, Violation};
+use super::Mutation;
+
+const QUEUE_CAP: usize = 1;
+const NUM_CAP: usize = 1;
+const CONNS: usize = 2;
+const WORKERS: usize = 2;
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq)]
+enum ReqStatus {
+    Pending,
+    Rejected,
+    Done,
+}
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq)]
+enum ConnPc {
+    Submit,
+    AwaitReply,
+    Finished,
+}
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq)]
+enum WorkerPc {
+    Recv,
+    SendNum(u8),
+    AwaitNum(u8),
+    Exited,
+}
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq)]
+enum NumPc {
+    Recv,
+    Exited,
+}
+
+/// See module docs.
+#[derive(Clone, Hash)]
+pub(crate) struct DispatchModel {
+    mutation: Option<Mutation>,
+    queue: Vec<u8>,
+    /// Live `Dispatcher` clones (connections that may still submit).
+    senders: u8,
+    workers_alive: u8,
+    numq: Vec<u8>,
+    num_done: [bool; CONNS],
+    status: [ReqStatus; CONNS],
+    conns: [ConnPc; CONNS],
+    workers: [WorkerPc; WORKERS],
+    numerics: NumPc,
+}
+
+impl DispatchModel {
+    pub(crate) fn new(mutation: Option<Mutation>) -> Self {
+        DispatchModel {
+            mutation,
+            queue: Vec::new(),
+            senders: CONNS as u8,
+            workers_alive: WORKERS as u8,
+            numq: Vec::new(),
+            num_done: [false; CONNS],
+            status: [ReqStatus::Pending; CONNS],
+            conns: [ConnPc::Submit; CONNS],
+            workers: [WorkerPc::Recv; WORKERS],
+            numerics: NumPc::Recv,
+        }
+    }
+
+    fn is(&self, m: Mutation) -> bool {
+        self.mutation == Some(m)
+    }
+}
+
+// Thread layout: 0..CONNS = connections, CONNS..CONNS+WORKERS = pool
+// workers, last = numerics.
+impl Model for DispatchModel {
+    fn threads(&self) -> usize {
+        CONNS + WORKERS + 1
+    }
+
+    fn done(&self, t: usize) -> bool {
+        if t < CONNS {
+            self.conns[t] == ConnPc::Finished
+        } else if t < CONNS + WORKERS {
+            self.workers[t - CONNS] == WorkerPc::Exited
+        } else {
+            self.numerics == NumPc::Exited
+        }
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        if t < CONNS {
+            return match self.conns[t] {
+                ConnPc::Submit => true,
+                // recv() on the reply channel: runnable only once the
+                // worker has sent the response.
+                ConnPc::AwaitReply => self.status[t] == ReqStatus::Done,
+                ConnPc::Finished => false,
+            };
+        }
+        if t < CONNS + WORKERS {
+            return match self.workers[t - CONNS] {
+                // recv() on the job queue: a job, or channel closure.
+                WorkerPc::Recv => {
+                    !self.queue.is_empty()
+                        || self.senders == 0
+                        || self.is(Mutation::DispatchWorkerExitOnEmpty)
+                }
+                // send() on the bounded numerics channel.
+                WorkerPc::SendNum(_) => {
+                    self.numq.len() < NUM_CAP || self.is(Mutation::DispatchNumericsUnbounded)
+                }
+                WorkerPc::AwaitNum(req) => self.num_done[req as usize],
+                WorkerPc::Exited => false,
+            };
+        }
+        match self.numerics {
+            NumPc::Recv => !self.numq.is_empty() || self.workers_alive == 0,
+            NumPc::Exited => false,
+        }
+    }
+
+    fn step(&mut self, t: usize) -> String {
+        if t < CONNS {
+            return match self.conns[t] {
+                ConnPc::Submit => {
+                    if self.queue.len() < QUEUE_CAP || self.is(Mutation::DispatchUnboundedQueue) {
+                        self.queue.push(t as u8);
+                        self.conns[t] = ConnPc::AwaitReply;
+                        format!("submit(r{t}) admitted")
+                    } else if self.is(Mutation::DispatchSilentDrop) {
+                        // Bug: the request vanishes — no queue entry,
+                        // no busy reply. The connection blocks forever.
+                        self.conns[t] = ConnPc::AwaitReply;
+                        format!("submit(r{t}) dropped silently")
+                    } else {
+                        self.status[t] = ReqStatus::Rejected;
+                        self.senders -= 1;
+                        self.conns[t] = ConnPc::Finished;
+                        format!("submit(r{t}) -> ERR busy")
+                    }
+                }
+                ConnPc::AwaitReply => {
+                    self.senders -= 1;
+                    self.conns[t] = ConnPc::Finished;
+                    format!("reply(r{t}) received, disconnect")
+                }
+                ConnPc::Finished => unreachable!("finished connections are never scheduled"),
+            };
+        }
+        if t < CONNS + WORKERS {
+            let w = t - CONNS;
+            return match self.workers[w] {
+                WorkerPc::Recv => {
+                    if !self.queue.is_empty() {
+                        let req = self.queue.remove(0);
+                        self.workers[w] = WorkerPc::SendNum(req);
+                        format!("recv -> r{req}")
+                    } else {
+                        // Channel closed (or the exit-on-empty bug).
+                        self.workers_alive -= 1;
+                        self.workers[w] = WorkerPc::Exited;
+                        "recv -> disconnected, exit".into()
+                    }
+                }
+                WorkerPc::SendNum(req) => {
+                    self.numq.push(req);
+                    self.workers[w] = WorkerPc::AwaitNum(req);
+                    format!("numerics-send(r{req})")
+                }
+                WorkerPc::AwaitNum(req) => {
+                    if !self.is(Mutation::DispatchReplyDropped) {
+                        self.status[req as usize] = ReqStatus::Done;
+                    }
+                    self.workers[w] = WorkerPc::Recv;
+                    format!("reply(r{req}) sent")
+                }
+                WorkerPc::Exited => unreachable!("exited workers are never scheduled"),
+            };
+        }
+        match self.numerics {
+            NumPc::Recv => {
+                if !self.numq.is_empty() {
+                    let req = self.numq.remove(0);
+                    self.num_done[req as usize] = true;
+                    format!("numerics r{req} computed")
+                } else {
+                    self.numerics = NumPc::Exited;
+                    "numerics channel closed, exit".into()
+                }
+            }
+            NumPc::Exited => unreachable!("exited numerics is never scheduled"),
+        }
+    }
+
+    fn invariant(&self) -> Result<(), Violation> {
+        if self.queue.len() > QUEUE_CAP {
+            return Err(Violation::new(
+                "queue-bound",
+                format!("{} queued jobs exceed queue_depth {QUEUE_CAP}", self.queue.len()),
+            ));
+        }
+        if self.numq.len() > NUM_CAP {
+            return Err(Violation::new(
+                "numerics-bound",
+                format!("{} numerics jobs exceed channel cap {NUM_CAP}", self.numq.len()),
+            ));
+        }
+        Ok(())
+    }
+
+    fn at_quiescence(&self) -> Result<(), Violation> {
+        for (r, st) in self.status.iter().enumerate() {
+            if *st == ReqStatus::Pending {
+                return Err(Violation::new(
+                    "request-lost",
+                    format!("request r{r} neither served nor rejected"),
+                ));
+            }
+        }
+        if !self.queue.is_empty() {
+            return Err(Violation::new(
+                "drain-incomplete",
+                format!("{} jobs left in the queue after shutdown", self.queue.len()),
+            ));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,325 @@
+//! Protocol model of [`crate::coordinator::singleflight::FlightGroup`]:
+//! leader/follower/abort-and-retry over one hot key.
+//!
+//! Three callers race one cold key through the exact protocol shape of
+//! the real code — read the memo store, join the flight (lead or
+//! follow), leaders double-check / compute / insert / retire / publish,
+//! followers park on the flight slot behind a predicate loop. Caller 0
+//! is scripted to *abort* its first leadership (the panic-unwind path),
+//! so every exploration also covers the abort-and-retry loop: followers
+//! of a dead leader must wake empty-handed, re-read the store, and
+//! re-join.
+//!
+//! Condvar semantics are modeled adversarially: a notify sets the
+//! generation's `notified` flag (a real wakeup needs it), and every
+//! parked caller holds a spurious-wake budget of 1 — a wakeup the
+//! protocol did not ask for, which a correct predicate loop re-parks
+//! on. The mutations break exactly the things the real code is careful
+//! about: publish without notify, abort without publish, `if` instead
+//! of `while` around the wait, treating an abort as a published value.
+
+use super::sched::{Model, Violation};
+use super::Mutation;
+
+/// What one flight generation's publish slot holds.
+#[derive(Clone, Hash, PartialEq, Eq)]
+struct Slot {
+    /// `None` = unpublished; `Some(Some(v))` = value; `Some(None)` = abort.
+    published: Option<Option<u8>>,
+    /// The leader's notify reached this generation's waiters.
+    notified: bool,
+}
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+enum Pc {
+    ReadCache,
+    Join,
+    LeaderCheck,
+    Compute,
+    Insert,
+    Retire,
+    PublishSlot,
+    AbortRetire,
+    AbortPublish,
+    Wait,
+    Done,
+}
+
+#[derive(Clone, Hash)]
+struct Caller {
+    pc: Pc,
+    /// Generation this caller is leading (set at join-lead).
+    leading: Option<u8>,
+    /// Generation this caller is parked on.
+    waiting_on: Option<u8>,
+    /// Value in hand: the leader's computed/cached value, then the
+    /// published canonical on the way out.
+    value: Option<u8>,
+    result: Option<u8>,
+    /// Remaining adversarial spurious wakeups while parked.
+    spurious_budget: u8,
+    /// Scripted to panic (abort) on its first leadership.
+    will_abort: bool,
+    aborted: bool,
+}
+
+impl Caller {
+    fn new(will_abort: bool) -> Self {
+        Caller {
+            pc: Pc::ReadCache,
+            leading: None,
+            waiting_on: None,
+            value: None,
+            result: None,
+            spurious_budget: 1,
+            will_abort,
+            aborted: false,
+        }
+    }
+}
+
+/// See module docs. One key, three callers, caller 0 aborts its first
+/// leadership.
+#[derive(Clone, Hash)]
+pub(crate) struct FlightModel {
+    mutation: Option<Mutation>,
+    /// The callers' memoization store entry for the key.
+    cache: Option<u8>,
+    /// Generation currently in the in-flight map, if any.
+    inflight: Option<u8>,
+    /// One slot per generation ever started.
+    slots: Vec<Slot>,
+    next_value: u8,
+    planner_runs: u8,
+    callers: Vec<Caller>,
+}
+
+impl FlightModel {
+    pub(crate) fn new(mutation: Option<Mutation>) -> Self {
+        FlightModel {
+            mutation,
+            cache: None,
+            inflight: None,
+            slots: Vec::new(),
+            next_value: 1,
+            planner_runs: 0,
+            callers: vec![Caller::new(true), Caller::new(false), Caller::new(false)],
+        }
+    }
+
+    fn is(&self, m: Mutation) -> bool {
+        self.mutation == Some(m)
+    }
+
+    /// A real (notified) wakeup is available for the caller parked on
+    /// generation `g`.
+    fn real_wake(&self, g: u8) -> bool {
+        let s = &self.slots[g as usize];
+        s.published.is_some() && s.notified
+    }
+
+    /// Leave the wait with the slot's current contents (predicate held,
+    /// or bypassed by the wait-if mutation).
+    fn consume_wake(&mut self, t: usize, g: u8) -> String {
+        let published = self.slots[g as usize].published.clone();
+        let c = &mut self.callers[t];
+        c.waiting_on = None;
+        match published {
+            Some(Some(v)) => {
+                c.result = Some(v);
+                c.pc = Pc::Done;
+                format!("wake(g{g}) -> value")
+            }
+            Some(None) => {
+                if self.is(Mutation::FlightMissedAbortRetry) {
+                    // Bug: treat the abort sentinel as a final answer.
+                    c.pc = Pc::Done;
+                    format!("wake(g{g}) -> abort taken as value")
+                } else {
+                    c.pc = Pc::ReadCache;
+                    format!("wake(g{g}) -> abort, retry")
+                }
+            }
+            None => {
+                // Only reachable via the wait-if mutation: the caller
+                // sailed past an unpublished slot.
+                c.pc = Pc::Done;
+                format!("wake(g{g}) -> unpublished slot consumed")
+            }
+        }
+    }
+}
+
+impl Model for FlightModel {
+    fn threads(&self) -> usize {
+        self.callers.len()
+    }
+
+    fn done(&self, t: usize) -> bool {
+        self.callers[t].pc == Pc::Done
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        let c = &self.callers[t];
+        match c.pc {
+            Pc::Done => false,
+            Pc::Wait => {
+                let g = c.waiting_on.expect("parked caller has a generation");
+                self.real_wake(g) || c.spurious_budget > 0
+            }
+            _ => true,
+        }
+    }
+
+    fn step(&mut self, t: usize) -> String {
+        let pc = self.callers[t].pc;
+        match pc {
+            Pc::ReadCache => {
+                if let Some(v) = self.cache {
+                    self.callers[t].result = Some(v);
+                    self.callers[t].pc = Pc::Done;
+                    "read-hit".into()
+                } else {
+                    self.callers[t].pc = Pc::Join;
+                    "read-miss".into()
+                }
+            }
+            Pc::Join => match self.inflight {
+                Some(g) => {
+                    self.callers[t].waiting_on = Some(g);
+                    self.callers[t].pc = Pc::Wait;
+                    format!("join-follow(g{g})")
+                }
+                None => {
+                    let g = self.slots.len() as u8;
+                    self.slots.push(Slot {
+                        published: None,
+                        notified: false,
+                    });
+                    self.inflight = Some(g);
+                    self.callers[t].leading = Some(g);
+                    self.callers[t].pc = Pc::LeaderCheck;
+                    format!("join-lead(g{g})")
+                }
+            },
+            Pc::LeaderCheck => {
+                if let Some(v) = self.cache {
+                    // Double-check hit: publish the cached value.
+                    self.callers[t].value = Some(v);
+                    self.callers[t].pc = Pc::Retire;
+                    "double-check-hit".into()
+                } else {
+                    self.callers[t].pc = Pc::Compute;
+                    "double-check-miss".into()
+                }
+            }
+            Pc::Compute => {
+                self.planner_runs += 1;
+                let v = self.next_value;
+                self.next_value += 1;
+                self.callers[t].value = Some(v);
+                if self.callers[t].will_abort && !self.callers[t].aborted {
+                    self.callers[t].pc = Pc::AbortRetire;
+                    "compute -> panic".into()
+                } else {
+                    self.callers[t].pc = Pc::Insert;
+                    "compute".into()
+                }
+            }
+            Pc::Insert => {
+                let v = self.callers[t].value.expect("leader computed");
+                let canonical = *self.cache.get_or_insert(v);
+                self.callers[t].value = Some(canonical);
+                self.callers[t].pc = Pc::Retire;
+                "insert(or_insert)".into()
+            }
+            Pc::Retire => {
+                self.inflight = None;
+                self.callers[t].pc = Pc::PublishSlot;
+                "retire".into()
+            }
+            Pc::PublishSlot => {
+                let g = self.callers[t].leading.expect("leader has a generation");
+                let v = self.callers[t].value.expect("leader holds the value");
+                let slot = &mut self.slots[g as usize];
+                slot.published = Some(Some(v));
+                if !self.is(Mutation::FlightDroppedNotify) {
+                    slot.notified = true;
+                }
+                self.callers[t].leading = None;
+                self.callers[t].result = Some(v);
+                self.callers[t].pc = Pc::Done;
+                format!("publish(g{g})")
+            }
+            Pc::AbortRetire => {
+                self.inflight = None;
+                self.callers[t].pc = Pc::AbortPublish;
+                "abort: retire".into()
+            }
+            Pc::AbortPublish => {
+                let g = self.callers[t].leading.expect("leader has a generation");
+                if !self.is(Mutation::FlightAbortSilent) {
+                    let slot = &mut self.slots[g as usize];
+                    slot.published = Some(None);
+                    slot.notified = true;
+                }
+                self.callers[t].leading = None;
+                self.callers[t].aborted = true;
+                self.callers[t].pc = Pc::Done;
+                format!("abort: publish-none(g{g})")
+            }
+            Pc::Wait => {
+                let g = self.callers[t].waiting_on.expect("parked caller");
+                if self.real_wake(g) {
+                    return self.consume_wake(t, g);
+                }
+                // Spurious wakeup (no notify behind it).
+                self.callers[t].spurious_budget -= 1;
+                if self.is(Mutation::FlightWaitIf) {
+                    // Bug: `if` instead of `while` — proceed without
+                    // re-checking the predicate.
+                    return self.consume_wake(t, g);
+                }
+                if self.slots[g as usize].published.is_some() {
+                    // Predicate satisfied under the lock: leave.
+                    return self.consume_wake(t, g);
+                }
+                format!("spurious-wake(g{g}) -> repark")
+            }
+            Pc::Done => unreachable!("done callers are never scheduled"),
+        }
+    }
+
+    fn invariant(&self) -> Result<(), Violation> {
+        // The herd compiles at most twice: the scripted abort plus the
+        // retry's leader.
+        if self.planner_runs > 2 {
+            return Err(Violation::new(
+                "plan-once",
+                format!(
+                    "{} planner runs for one key (abort allows at most 2)",
+                    self.planner_runs
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    fn at_quiescence(&self) -> Result<(), Violation> {
+        for (i, c) in self.callers.iter().enumerate() {
+            if c.aborted {
+                continue; // its panic propagated to its caller
+            }
+            if c.result.is_none() || c.result != self.cache {
+                return Err(Violation::new(
+                    "value-canonical",
+                    format!(
+                        "caller {i} finished with {:?}, store holds {:?}",
+                        c.result, self.cache
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,191 @@
+//! Protocol model of the [`crate::sync`] lock-rank table: two threads
+//! replaying the real call-path acquisition sequences (plan-leader
+//! path with its `TileClassMap -> TileShard` nesting, tile-simulate +
+//! pool path) under mutual exclusion, with the rank-monotonicity rule
+//! checked at every acquisition — the same rule `sync::Mutex` debug-
+//! asserts at runtime, here proved over *all* interleavings instead of
+//! the ones a test happens to hit.
+//!
+//! The rank-inversion mutation models new code that nests
+//! `FlightSlot -> FlightMap` on one thread while another nests them the
+//! sanctioned way round: the monotonicity check fires, and the
+//! exploration also exhibits the AB-BA deadlock the rule exists to
+//! make impossible.
+
+use super::sched::{Model, Violation};
+use super::Mutation;
+use crate::sync::Rank;
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+enum Op {
+    Acq(u8),
+    Rel(u8),
+}
+
+fn r(rank: Rank) -> u8 {
+    rank as u8
+}
+
+/// The plan-leader path: shard probe, flight join, tile-class walk
+/// (the one real nested pair), shard insert, flight retire + publish.
+fn script_planner() -> Vec<Op> {
+    use Op::*;
+    vec![
+        Acq(r(Rank::PlanShard)),
+        Rel(r(Rank::PlanShard)),
+        Acq(r(Rank::FlightMap)),
+        Rel(r(Rank::FlightMap)),
+        Acq(r(Rank::TileClassMap)),
+        Acq(r(Rank::TileShard)), // nested: unique_tiles() under the class map
+        Rel(r(Rank::TileShard)),
+        Rel(r(Rank::TileClassMap)),
+        Acq(r(Rank::PlanShard)),
+        Rel(r(Rank::PlanShard)),
+        Acq(r(Rank::FlightMap)),
+        Rel(r(Rank::FlightMap)),
+        Acq(r(Rank::FlightSlot)),
+        Rel(r(Rank::FlightSlot)),
+    ]
+}
+
+/// The tile-simulate + pool-worker path.
+fn script_simulator(inverted: bool) -> Vec<Op> {
+    use Op::*;
+    let mut s = vec![
+        Acq(r(Rank::TileShard)),
+        Rel(r(Rank::TileShard)),
+        Acq(r(Rank::FlightMap)),
+        Rel(r(Rank::FlightMap)),
+    ];
+    if inverted {
+        // Bug: hold the flight slot while re-entering the flight map.
+        s.extend([
+            Acq(r(Rank::FlightSlot)),
+            Acq(r(Rank::FlightMap)),
+            Rel(r(Rank::FlightMap)),
+            Rel(r(Rank::FlightSlot)),
+        ]);
+    } else {
+        s.extend([
+            Acq(r(Rank::FlightSlot)),
+            Rel(r(Rank::FlightSlot)),
+        ]);
+    }
+    s.push(Acq(r(Rank::PoolSlot)));
+    s.push(Rel(r(Rank::PoolSlot)));
+    s
+}
+
+/// Against the inverted simulator, the planner nests the pair the
+/// sanctioned way round — giving the classic AB-BA shape.
+fn script_planner_nested() -> Vec<Op> {
+    use Op::*;
+    let mut s = script_planner();
+    s.extend([
+        Acq(r(Rank::FlightMap)),
+        Acq(r(Rank::FlightSlot)),
+        Rel(r(Rank::FlightSlot)),
+        Rel(r(Rank::FlightMap)),
+    ]);
+    s
+}
+
+/// See module docs.
+#[derive(Clone, Hash)]
+pub(crate) struct LockOrderModel {
+    scripts: Vec<Vec<Op>>,
+    /// Next op index per thread.
+    idx: Vec<usize>,
+    /// Ranks held per thread, in acquisition order.
+    held: Vec<Vec<u8>>,
+    /// Current owner of each rank's lock (one lock per rank suffices —
+    /// shards of one rank are never nested with each other).
+    owner: Vec<Option<u8>>,
+}
+
+impl LockOrderModel {
+    pub(crate) fn new(mutation: Option<Mutation>) -> Self {
+        let inverted = mutation == Some(Mutation::LockRankInversion);
+        let scripts = if inverted {
+            vec![script_planner_nested(), script_simulator(true)]
+        } else {
+            vec![script_planner(), script_simulator(false)]
+        };
+        let n = scripts.len();
+        LockOrderModel {
+            scripts,
+            idx: vec![0; n],
+            held: vec![Vec::new(); n],
+            owner: vec![None; 256],
+        }
+    }
+}
+
+impl Model for LockOrderModel {
+    fn threads(&self) -> usize {
+        self.scripts.len()
+    }
+
+    fn done(&self, t: usize) -> bool {
+        self.idx[t] == self.scripts[t].len()
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        if self.done(t) {
+            return false;
+        }
+        match self.scripts[t][self.idx[t]] {
+            Op::Acq(l) => self.owner[l as usize].is_none(),
+            Op::Rel(_) => true,
+        }
+    }
+
+    fn step(&mut self, t: usize) -> String {
+        let op = self.scripts[t][self.idx[t]];
+        self.idx[t] += 1;
+        match op {
+            Op::Acq(l) => {
+                self.owner[l as usize] = Some(t as u8);
+                self.held[t].push(l);
+                format!("acquire rank {l}")
+            }
+            Op::Rel(l) => {
+                self.owner[l as usize] = None;
+                if let Some(pos) = self.held[t].iter().rposition(|&h| h == l) {
+                    self.held[t].remove(pos);
+                }
+                format!("release rank {l}")
+            }
+        }
+    }
+
+    fn invariant(&self) -> Result<(), Violation> {
+        for (t, held) in self.held.iter().enumerate() {
+            for w in held.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Violation::new(
+                        "rank-monotone",
+                        format!(
+                            "t{t} acquired rank {} while holding rank {} \
+                             (acquisition order must strictly increase)",
+                            w[1], w[0]
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn at_quiescence(&self) -> Result<(), Violation> {
+        for (t, held) in self.held.iter().enumerate() {
+            if !held.is_empty() {
+                return Err(Violation::new(
+                    "lock-leak",
+                    format!("t{t} terminated holding ranks {:?}", held),
+                ));
+            }
+        }
+        Ok(())
+    }
+}

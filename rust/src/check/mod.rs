@@ -1,0 +1,324 @@
+//! In-tree deterministic-interleaving model checker for the serving and
+//! cache stack's concurrency protocols (DESIGN.md §16).
+//!
+//! Loom-spirit, vendored-crate-free: [`sched`] owns a controlled
+//! scheduler that exhaustively explores the bounded interleavings of an
+//! explicit protocol model, and each submodule is one such model of a
+//! real subsystem:
+//!
+//! | protocol    | models                                               |
+//! |-------------|------------------------------------------------------|
+//! | `flight`    | `FlightGroup` leader/follower/abort-and-retry        |
+//! | `plancache` | `PlanCache` hit/miss/coalesced accounting            |
+//! | `dispatch`  | admission control + bounded numerics channel drain   |
+//! | `pool`      | `scoped_indexed` work-stealing claim loop            |
+//! | `lockorder` | the `sync::Rank` lock-order table over real paths    |
+//!
+//! The models check the *protocols*, not the code — the contract that
+//! keeps them honest is the [`Mutation`] catalog: every entry seeds one
+//! concrete concurrency bug into one model and pins the finding id the
+//! checker must produce (`tests/check_mutations.rs`). A clean tree
+//! explores to quiescence with zero findings; `voltra check` exits 1
+//! otherwise and CI runs both directions.
+
+mod dispatch;
+mod flight;
+mod lockorder;
+mod plancache;
+mod pool;
+mod sched;
+
+pub use sched::{Exploration, Finding, Violation};
+
+use crate::runtime::json::Json;
+
+/// Every protocol `voltra check` knows, in report order.
+pub const PROTOCOLS: &[&str] = &["flight", "plancache", "dispatch", "pool", "lockorder"];
+
+/// Default schedule-depth bound. Generous: every shipped model quiesces
+/// well under it (the CLI reports `truncated` if a future model does
+/// not), while still bounding a runaway exploration.
+pub const DEFAULT_DEPTH: usize = 64;
+
+/// One seeded concurrency bug: which model it corrupts and the finding
+/// id the checker is required to produce for it. The mutation rig
+/// (`tests/check_mutations.rs`) walks [`Mutation::all`] and pins every
+/// entry — this enum is the checker's own regression catalog, exactly
+/// as `plan::verify::Mutation` is the lint verifier's.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Mutation {
+    /// Leader publishes the value but never notifies the condvar.
+    FlightDroppedNotify,
+    /// Aborting leader retires the flight but publishes nothing.
+    FlightAbortSilent,
+    /// `if` instead of `while` around the follower's condvar wait.
+    FlightWaitIf,
+    /// Follower treats the abort sentinel as a final answer (no retry).
+    FlightMissedAbortRetry,
+    /// Double-check hit also bumps the miss counter.
+    CacheDoubleCountMiss,
+    /// Followers joining an in-flight plan are not counted coalesced.
+    CacheLostCoalesced,
+    /// Read-path shard hit is not counted.
+    CacheHitUncounted,
+    /// Leader skips the double-check behind the flight.
+    CacheSkipDoubleCheck,
+    /// Flight retired before the shard insert (re-plan window).
+    CacheRetireEarly,
+    /// Admission check dropped: the queue grows past `queue_depth`.
+    DispatchUnboundedQueue,
+    /// Full-queue submit neither enqueues nor replies `ERR busy`.
+    DispatchSilentDrop,
+    /// Worker exits on an empty queue instead of blocking on recv.
+    DispatchWorkerExitOnEmpty,
+    /// Numerics send skips the channel's capacity bound.
+    DispatchNumericsUnbounded,
+    /// Worker finishes a job but never sends the reply.
+    DispatchReplyDropped,
+    /// Claim loop strides by 2: every other item is skipped.
+    PoolClaimSkip,
+    /// Claim is a torn load+store instead of `fetch_add`.
+    PoolRacyClaim,
+    /// Results land in completion order, not item-index order.
+    PoolWrongSlot,
+    /// New code nests `FlightSlot -> FlightMap` against the rank table.
+    LockRankInversion,
+}
+
+impl Mutation {
+    /// Every mutation, in catalog order.
+    pub fn all() -> &'static [Mutation] {
+        use Mutation::*;
+        &[
+            FlightDroppedNotify,
+            FlightAbortSilent,
+            FlightWaitIf,
+            FlightMissedAbortRetry,
+            CacheDoubleCountMiss,
+            CacheLostCoalesced,
+            CacheHitUncounted,
+            CacheSkipDoubleCheck,
+            CacheRetireEarly,
+            DispatchUnboundedQueue,
+            DispatchSilentDrop,
+            DispatchWorkerExitOnEmpty,
+            DispatchNumericsUnbounded,
+            DispatchReplyDropped,
+            PoolClaimSkip,
+            PoolRacyClaim,
+            PoolWrongSlot,
+            LockRankInversion,
+        ]
+    }
+
+    /// Stable CLI/reporting name.
+    pub fn id(&self) -> &'static str {
+        use Mutation::*;
+        match self {
+            FlightDroppedNotify => "flight-dropped-notify",
+            FlightAbortSilent => "flight-abort-silent",
+            FlightWaitIf => "flight-wait-if",
+            FlightMissedAbortRetry => "flight-missed-abort-retry",
+            CacheDoubleCountMiss => "cache-double-count-miss",
+            CacheLostCoalesced => "cache-lost-coalesced",
+            CacheHitUncounted => "cache-hit-uncounted",
+            CacheSkipDoubleCheck => "cache-skip-double-check",
+            CacheRetireEarly => "cache-retire-early",
+            DispatchUnboundedQueue => "dispatch-unbounded-queue",
+            DispatchSilentDrop => "dispatch-silent-drop",
+            DispatchWorkerExitOnEmpty => "dispatch-worker-exit-on-empty",
+            DispatchNumericsUnbounded => "dispatch-numerics-unbounded",
+            DispatchReplyDropped => "dispatch-reply-dropped",
+            PoolClaimSkip => "pool-claim-skip",
+            PoolRacyClaim => "pool-racy-claim",
+            PoolWrongSlot => "pool-wrong-slot",
+            LockRankInversion => "lock-rank-inversion",
+        }
+    }
+
+    /// The protocol model this mutation corrupts.
+    pub fn protocol(&self) -> &'static str {
+        use Mutation::*;
+        match self {
+            FlightDroppedNotify | FlightAbortSilent | FlightWaitIf | FlightMissedAbortRetry => {
+                "flight"
+            }
+            CacheDoubleCountMiss | CacheLostCoalesced | CacheHitUncounted
+            | CacheSkipDoubleCheck | CacheRetireEarly => "plancache",
+            DispatchUnboundedQueue | DispatchSilentDrop | DispatchWorkerExitOnEmpty
+            | DispatchNumericsUnbounded | DispatchReplyDropped => "dispatch",
+            PoolClaimSkip | PoolRacyClaim | PoolWrongSlot => "pool",
+            LockRankInversion => "lockorder",
+        }
+    }
+
+    /// The finding id the checker is required to produce. Pinned, not
+    /// "any finding": a mutation caught for the wrong reason would let
+    /// the intended invariant rot.
+    pub fn expected_finding(&self) -> &'static str {
+        use Mutation::*;
+        match self {
+            FlightDroppedNotify | FlightAbortSilent => "deadlock",
+            FlightWaitIf | FlightMissedAbortRetry => "value-canonical",
+            CacheDoubleCountMiss | CacheLostCoalesced | CacheHitUncounted => "accounting",
+            CacheSkipDoubleCheck | CacheRetireEarly => "plan-once",
+            DispatchUnboundedQueue => "queue-bound",
+            DispatchSilentDrop | DispatchWorkerExitOnEmpty | DispatchReplyDropped => "deadlock",
+            DispatchNumericsUnbounded => "numerics-bound",
+            PoolClaimSkip => "item-lost",
+            PoolRacyClaim => "claim-once",
+            PoolWrongSlot => "index-order",
+            LockRankInversion => "rank-monotone",
+        }
+    }
+}
+
+/// One protocol's exploration result.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    pub protocol: &'static str,
+    pub states: u64,
+    pub max_depth: usize,
+    pub truncated: bool,
+    pub findings: Vec<Finding>,
+}
+
+/// Explore one protocol (optionally with a seeded mutation — the
+/// mutation must belong to the protocol or it is simply inert). Returns
+/// `None` for an unknown protocol name.
+pub fn check_protocol(protocol: &str, depth: usize, mutation: Option<Mutation>) -> Option<CheckReport> {
+    let mut findings = Vec::new();
+    let ex = match protocol {
+        "flight" => sched::explore("flight", &flight::FlightModel::new(mutation), depth, &mut findings),
+        "plancache" => sched::explore(
+            "plancache",
+            &plancache::PlanCacheModel::new(mutation),
+            depth,
+            &mut findings,
+        ),
+        "dispatch" => sched::explore(
+            "dispatch",
+            &dispatch::DispatchModel::new(mutation),
+            depth,
+            &mut findings,
+        ),
+        "pool" => sched::explore("pool", &pool::PoolModel::new(mutation), depth, &mut findings),
+        "lockorder" => sched::explore(
+            "lockorder",
+            &lockorder::LockOrderModel::new(mutation),
+            depth,
+            &mut findings,
+        ),
+        _ => return None,
+    };
+    Some(CheckReport {
+        protocol: match protocol {
+            "flight" => "flight",
+            "plancache" => "plancache",
+            "dispatch" => "dispatch",
+            "pool" => "pool",
+            _ => "lockorder",
+        },
+        states: ex.states,
+        max_depth: ex.max_depth,
+        truncated: ex.truncated,
+        findings,
+    })
+}
+
+/// Explore every protocol on the clean (unmutated) models.
+pub fn check_all(depth: usize) -> Vec<CheckReport> {
+    PROTOCOLS
+        .iter()
+        .map(|p| check_protocol(p, depth, None).expect("PROTOCOLS entries are known"))
+        .collect()
+}
+
+/// Machine-readable report for `voltra check --json`: same shape family
+/// as `plan::verify::findings_json` — a top-level summary plus one
+/// object per protocol with its findings and counterexample traces.
+pub fn report_json(reports: &[CheckReport]) -> Json {
+    let mut root = std::collections::BTreeMap::new();
+    let total: usize = reports.iter().map(|r| r.findings.len()).sum();
+    root.insert("protocols".into(), Json::Num(reports.len() as f64));
+    root.insert("findings".into(), Json::Num(total as f64));
+    root.insert(
+        "clean".into(),
+        Json::Bool(total == 0 && reports.iter().all(|r| !r.truncated)),
+    );
+    let protos = reports
+        .iter()
+        .map(|r| {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("protocol".into(), Json::Str(r.protocol.into()));
+            o.insert("states".into(), Json::Num(r.states as f64));
+            o.insert("max_depth".into(), Json::Num(r.max_depth as f64));
+            o.insert("truncated".into(), Json::Bool(r.truncated));
+            let findings = r
+                .findings
+                .iter()
+                .map(|f| {
+                    let mut fo = std::collections::BTreeMap::new();
+                    fo.insert("id".into(), Json::Str(f.id.into()));
+                    fo.insert("detail".into(), Json::Str(f.detail.clone()));
+                    fo.insert(
+                        "trace".into(),
+                        Json::Arr(f.trace.iter().map(|s| Json::Str(s.clone())).collect()),
+                    );
+                    Json::Obj(fo)
+                })
+                .collect();
+            o.insert("findings".into(), Json::Arr(findings));
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("by_protocol".into(), Json::Arr(protos));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_tree_has_zero_findings_and_full_coverage() {
+        for report in check_all(DEFAULT_DEPTH) {
+            assert!(
+                report.findings.is_empty(),
+                "{}: {:?}",
+                report.protocol,
+                report.findings
+            );
+            assert!(!report.truncated, "{} truncated", report.protocol);
+            assert!(report.states > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_protocol_is_none() {
+        assert!(check_protocol("warp-drive", DEFAULT_DEPTH, None).is_none());
+    }
+
+    #[test]
+    fn mutation_catalog_is_consistent() {
+        let all = Mutation::all();
+        assert!(all.len() >= 10, "rig floor: >= 10 mutations");
+        let protocols: std::collections::HashSet<_> = all.iter().map(|m| m.protocol()).collect();
+        assert!(protocols.len() >= 4, "rig floor: >= 4 protocols");
+        let ids: std::collections::HashSet<_> = all.iter().map(|m| m.id()).collect();
+        assert_eq!(ids.len(), all.len(), "mutation ids must be unique");
+        for m in all {
+            assert!(PROTOCOLS.contains(&m.protocol()), "{} unknown", m.id());
+        }
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let reports = check_all(DEFAULT_DEPTH);
+        let j = report_json(&reports);
+        let txt = j.render();
+        assert!(txt.contains("\"clean\":true"), "{txt}");
+        assert!(txt.contains("\"by_protocol\""));
+        assert!(txt.contains("\"lockorder\""));
+    }
+}

@@ -1,0 +1,282 @@
+//! Protocol model of [`crate::plan::PlanCache::plan_named`]'s
+//! accounting: `hits + misses + coalesced == resolved calls`, the
+//! thundering herd plans exactly once, and every caller leaves with the
+//! canonical (first-inserted) value — Arc canonicality, modeled as
+//! value identity.
+//!
+//! Same flight machinery as the `flight` model (this cache sits on the
+//! same `FlightGroup`), but abort-free and with the three counters the
+//! serving tier's STATS verb reports. The mutations are bookkeeping
+//! bugs a refactor could plausibly introduce: counting the double-check
+//! hit as a miss too, dropping the coalesced count, forgetting the
+//! read-path hit count, skipping the double-check (herd plans twice),
+//! and retiring the flight before the shard insert (a window where a
+//! second planner runs).
+
+use super::sched::{Model, Violation};
+use super::Mutation;
+
+#[derive(Clone, Hash, PartialEq, Eq)]
+struct Slot {
+    published: Option<u8>,
+    notified: bool,
+}
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq, Debug)]
+enum Pc {
+    ReadShard,
+    Join,
+    LeaderCheck,
+    Plan,
+    Insert,
+    Retire,
+    PublishSlot,
+    Wait,
+    Done,
+}
+
+#[derive(Clone, Hash)]
+struct Caller {
+    pc: Pc,
+    leading: Option<u8>,
+    waiting_on: Option<u8>,
+    value: Option<u8>,
+    result: Option<u8>,
+    spurious_budget: u8,
+    /// The mutated leader retires before inserting; this remembers the
+    /// pending insert across the reordering.
+    retired_early: bool,
+}
+
+impl Caller {
+    fn new() -> Self {
+        Caller {
+            pc: Pc::ReadShard,
+            leading: None,
+            waiting_on: None,
+            value: None,
+            result: None,
+            spurious_budget: 1,
+            retired_early: false,
+        }
+    }
+}
+
+/// See module docs. One key, three callers, no aborts.
+#[derive(Clone, Hash)]
+pub(crate) struct PlanCacheModel {
+    mutation: Option<Mutation>,
+    shard: Option<u8>,
+    inflight: Option<u8>,
+    slots: Vec<Slot>,
+    next_value: u8,
+    planner_runs: u8,
+    hits: u8,
+    misses: u8,
+    coalesced: u8,
+    callers: Vec<Caller>,
+}
+
+impl PlanCacheModel {
+    pub(crate) fn new(mutation: Option<Mutation>) -> Self {
+        PlanCacheModel {
+            mutation,
+            shard: None,
+            inflight: None,
+            slots: Vec::new(),
+            next_value: 1,
+            planner_runs: 0,
+            hits: 0,
+            misses: 0,
+            coalesced: 0,
+            callers: vec![Caller::new(), Caller::new(), Caller::new()],
+        }
+    }
+
+    fn is(&self, m: Mutation) -> bool {
+        self.mutation == Some(m)
+    }
+
+    fn real_wake(&self, g: u8) -> bool {
+        let s = &self.slots[g as usize];
+        s.published.is_some() && s.notified
+    }
+}
+
+impl Model for PlanCacheModel {
+    fn threads(&self) -> usize {
+        self.callers.len()
+    }
+
+    fn done(&self, t: usize) -> bool {
+        self.callers[t].pc == Pc::Done
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        let c = &self.callers[t];
+        match c.pc {
+            Pc::Done => false,
+            Pc::Wait => {
+                let g = c.waiting_on.expect("parked caller has a generation");
+                self.real_wake(g) || c.spurious_budget > 0
+            }
+            _ => true,
+        }
+    }
+
+    fn step(&mut self, t: usize) -> String {
+        let pc = self.callers[t].pc;
+        match pc {
+            Pc::ReadShard => {
+                if let Some(v) = self.shard {
+                    if !self.is(Mutation::CacheHitUncounted) {
+                        self.hits += 1;
+                    }
+                    self.callers[t].result = Some(v);
+                    self.callers[t].pc = Pc::Done;
+                    "shard-hit".into()
+                } else {
+                    self.callers[t].pc = Pc::Join;
+                    "shard-miss".into()
+                }
+            }
+            Pc::Join => match self.inflight {
+                Some(g) => {
+                    if !self.is(Mutation::CacheLostCoalesced) {
+                        self.coalesced += 1;
+                    }
+                    self.callers[t].waiting_on = Some(g);
+                    self.callers[t].pc = Pc::Wait;
+                    format!("join-follow(g{g})")
+                }
+                None => {
+                    let g = self.slots.len() as u8;
+                    self.slots.push(Slot {
+                        published: None,
+                        notified: false,
+                    });
+                    self.inflight = Some(g);
+                    self.callers[t].leading = Some(g);
+                    self.callers[t].pc = Pc::LeaderCheck;
+                    format!("join-lead(g{g})")
+                }
+            },
+            Pc::LeaderCheck => {
+                if !self.is(Mutation::CacheSkipDoubleCheck) {
+                    if let Some(v) = self.shard {
+                        self.hits += 1;
+                        if self.is(Mutation::CacheDoubleCountMiss) {
+                            // Bug: the hit-behind-the-flight path also
+                            // bumps the miss counter.
+                            self.misses += 1;
+                        }
+                        self.callers[t].value = Some(v);
+                        self.callers[t].pc = Pc::Retire;
+                        return "double-check-hit".into();
+                    }
+                }
+                self.callers[t].pc = Pc::Plan;
+                "double-check-miss".into()
+            }
+            Pc::Plan => {
+                self.planner_runs += 1;
+                self.misses += 1;
+                let v = self.next_value;
+                self.next_value += 1;
+                self.callers[t].value = Some(v);
+                if self.is(Mutation::CacheRetireEarly) {
+                    // Bug: publish/retire reordered before the insert.
+                    self.callers[t].retired_early = true;
+                    self.callers[t].pc = Pc::Retire;
+                } else {
+                    self.callers[t].pc = Pc::Insert;
+                }
+                "plan (count miss)".into()
+            }
+            Pc::Insert => {
+                let v = self.callers[t].value.expect("leader planned");
+                let canonical = *self.shard.get_or_insert(v);
+                self.callers[t].value = Some(canonical);
+                self.callers[t].pc = if self.callers[t].retired_early {
+                    Pc::PublishSlot
+                } else {
+                    Pc::Retire
+                };
+                "insert(or_insert)".into()
+            }
+            Pc::Retire => {
+                self.inflight = None;
+                self.callers[t].pc = if self.callers[t].retired_early {
+                    Pc::Insert
+                } else {
+                    Pc::PublishSlot
+                };
+                "retire".into()
+            }
+            Pc::PublishSlot => {
+                let g = self.callers[t].leading.expect("leader has a generation");
+                let v = self.callers[t].value.expect("leader holds the value");
+                let slot = &mut self.slots[g as usize];
+                slot.published = Some(v);
+                slot.notified = true;
+                self.callers[t].leading = None;
+                self.callers[t].result = Some(v);
+                self.callers[t].pc = Pc::Done;
+                format!("publish(g{g})")
+            }
+            Pc::Wait => {
+                let g = self.callers[t].waiting_on.expect("parked caller");
+                if !self.real_wake(g) {
+                    self.callers[t].spurious_budget -= 1;
+                    if self.slots[g as usize].published.is_none() {
+                        return format!("spurious-wake(g{g}) -> repark");
+                    }
+                }
+                let v = self.slots[g as usize]
+                    .published
+                    .expect("left the wait only when published");
+                self.callers[t].waiting_on = None;
+                self.callers[t].result = Some(v);
+                self.callers[t].pc = Pc::Done;
+                format!("wake(g{g}) -> value")
+            }
+            Pc::Done => unreachable!("done callers are never scheduled"),
+        }
+    }
+
+    fn invariant(&self) -> Result<(), Violation> {
+        Ok(())
+    }
+
+    fn at_quiescence(&self) -> Result<(), Violation> {
+        let calls = self.callers.len() as u8;
+        let sum = self.hits + self.misses + self.coalesced;
+        if sum != calls {
+            return Err(Violation::new(
+                "accounting",
+                format!(
+                    "hits({}) + misses({}) + coalesced({}) = {} != {} calls",
+                    self.hits, self.misses, self.coalesced, sum, calls
+                ),
+            ));
+        }
+        if self.planner_runs > 1 {
+            return Err(Violation::new(
+                "plan-once",
+                format!("{} planner runs for one key", self.planner_runs),
+            ));
+        }
+        for (i, c) in self.callers.iter().enumerate() {
+            if c.result.is_none() || c.result != self.shard {
+                return Err(Violation::new(
+                    "value-canonical",
+                    format!(
+                        "caller {i} finished with {:?}, shard holds {:?}",
+                        c.result, self.shard
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+}

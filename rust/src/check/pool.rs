@@ -1,0 +1,153 @@
+//! Protocol model of [`crate::runtime::pool::scoped_indexed`]'s
+//! work-stealing claim loop: two workers racing an atomic index over
+//! three items. The checked contract is the pool's determinism
+//! contract — every index claimed exactly once, every result landing
+//! in its own index's slot — which is what lets callers pin
+//! `parallel == serial` in tests.
+//!
+//! Mutations: a claim stride bug (skips items), a torn
+//! read-modify-write claim (two workers claim the same item — the bug
+//! `fetch_add` exists to prevent), and claim-order slot placement
+//! (results land in the order work finished, not item order).
+
+use super::sched::{Model, Violation};
+use super::Mutation;
+
+const ITEMS: usize = 3;
+const WORKERS: usize = 2;
+
+/// The pure per-item work function: anything injective will do.
+fn f(i: usize) -> u8 {
+    10 + i as u8
+}
+
+#[derive(Clone, Copy, Hash, PartialEq, Eq)]
+enum Pc {
+    Claim,
+    /// Second half of the torn claim: the loaded index is committed.
+    ClaimStore(u8),
+    Write(u8),
+    Exited,
+}
+
+/// See module docs.
+#[derive(Clone, Hash)]
+pub(crate) struct PoolModel {
+    mutation: Option<Mutation>,
+    next: u8,
+    claims: [u8; ITEMS],
+    slots: [Option<u8>; ITEMS],
+    pcs: [Pc; WORKERS],
+    /// Items completed per worker (the wrong-slot mutation writes by
+    /// this sequence number instead of the item index).
+    seq: [u8; WORKERS],
+}
+
+impl PoolModel {
+    pub(crate) fn new(mutation: Option<Mutation>) -> Self {
+        PoolModel {
+            mutation,
+            next: 0,
+            claims: [0; ITEMS],
+            slots: [None; ITEMS],
+            pcs: [Pc::Claim; WORKERS],
+            seq: [0; WORKERS],
+        }
+    }
+
+    fn is(&self, m: Mutation) -> bool {
+        self.mutation == Some(m)
+    }
+
+    fn commit(&mut self, w: usize, i: u8) -> String {
+        if (i as usize) < ITEMS {
+            self.claims[i as usize] += 1;
+            self.pcs[w] = Pc::Write(i);
+            format!("claim {i}")
+        } else {
+            self.pcs[w] = Pc::Exited;
+            "claim past end, exit".into()
+        }
+    }
+}
+
+impl Model for PoolModel {
+    fn threads(&self) -> usize {
+        WORKERS
+    }
+
+    fn done(&self, t: usize) -> bool {
+        self.pcs[t] == Pc::Exited
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        self.pcs[t] != Pc::Exited
+    }
+
+    fn step(&mut self, t: usize) -> String {
+        match self.pcs[t] {
+            Pc::Claim => {
+                if self.is(Mutation::PoolRacyClaim) {
+                    // Bug: load and store as two separate steps — the
+                    // interleaving window `fetch_add` closes.
+                    let i = self.next;
+                    self.pcs[t] = Pc::ClaimStore(i);
+                    return format!("racy load {i}");
+                }
+                let i = self.next;
+                let stride = if self.is(Mutation::PoolClaimSkip) { 2 } else { 1 };
+                self.next += stride;
+                self.commit(t, i)
+            }
+            Pc::ClaimStore(i) => {
+                self.next = i + 1;
+                self.commit(t, i)
+            }
+            Pc::Write(i) => {
+                let target = if self.is(Mutation::PoolWrongSlot) {
+                    // Bug: land results in completion order.
+                    self.seq[t] as usize
+                } else {
+                    i as usize
+                };
+                if target < ITEMS {
+                    self.slots[target] = Some(f(i as usize));
+                }
+                self.seq[t] += 1;
+                self.pcs[t] = Pc::Claim;
+                format!("write f({i}) -> slot {target}")
+            }
+            Pc::Exited => unreachable!("exited workers are never scheduled"),
+        }
+    }
+
+    fn invariant(&self) -> Result<(), Violation> {
+        for (i, &c) in self.claims.iter().enumerate() {
+            if c > 1 {
+                return Err(Violation::new(
+                    "claim-once",
+                    format!("item {i} claimed {c} times"),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn at_quiescence(&self) -> Result<(), Violation> {
+        for i in 0..ITEMS {
+            if self.claims[i] == 0 || self.slots[i].is_none() {
+                return Err(Violation::new(
+                    "item-lost",
+                    format!("item {i} never claimed/completed"),
+                ));
+            }
+            if self.slots[i] != Some(f(i)) {
+                return Err(Violation::new(
+                    "index-order",
+                    format!("slot {i} holds {:?}, expected {:?}", self.slots[i], f(i)),
+                ));
+            }
+        }
+        Ok(())
+    }
+}

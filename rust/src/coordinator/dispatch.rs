@@ -16,9 +16,10 @@
 //! serialized) numerics backend exactly as before the split.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::coordinator::engine::{Engine, NumericsJob, Parsed, WorkerLane};
+use crate::sync::{Mutex, Rank};
 
 /// One admitted request: what to do and where the connection waits.
 struct Job {
@@ -62,7 +63,7 @@ pub(crate) fn start<'scope, 'env>(
     queue_depth: usize,
 ) -> Dispatcher {
     let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
-    let rx = Arc::new(Mutex::new(rx));
+    let rx = Arc::new(Mutex::new(Rank::DispatchQueue, rx));
     for _ in 0..workers.max(1) {
         let rx = Arc::clone(&rx);
         let mut lane = WorkerLane {
@@ -71,7 +72,7 @@ pub(crate) fn start<'scope, 'env>(
         s.spawn(move || loop {
             // The guard drops as soon as a job is claimed: workers
             // serialize on *pickup* only, never on execution.
-            let claimed = rx.lock().expect("dispatch queue poisoned").recv();
+            let claimed = rx.lock().recv();
             let job = match claimed {
                 Ok(j) => j,
                 Err(_) => break,

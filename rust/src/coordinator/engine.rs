@@ -383,7 +383,7 @@ impl Engine<'_> {
             "OK stats served={} gemm={} workload={} lint={} stats={} errors={} busy={} \
              plan_hits={} plan_misses={} plan_waits={} tile_hits={} tile_misses={} \
              tile_waits={} mapper_hits={} mapper_misses={} mapper_waits={} \
-             p50_us={} p99_us={} max_us={}",
+             p50_us={} p99_us={} max_us={} flight_aborts={} rank_depth={}",
             s.served(),
             s.count(Verb::Gemm),
             s.count(Verb::Workload),
@@ -403,6 +403,10 @@ impl Engine<'_> {
             s.percentile_us(50.0),
             s.percentile_us(99.0),
             s.max_us(),
+            // Process-global like the mapper tier: aborted single-flight
+            // leaderships and the deepest lock-rank nesting observed.
+            crate::sync::flight_aborts(),
+            crate::sync::max_rank_depth(),
         )
     }
 }
@@ -599,7 +603,10 @@ mod tests {
         );
         assert!(empty.contains(" mapper_misses="), "{empty}");
         assert!(empty.contains(" mapper_waits="), "{empty}");
-        assert!(empty.ends_with(" p50_us=0 p99_us=0 max_us=0"), "{empty}");
+        // flight_aborts / rank_depth are also process-global (crate::sync
+        // statics), so the tail is shape-checked, not value-pinned.
+        assert!(empty.contains(" p50_us=0 p99_us=0 max_us=0 flight_aborts="), "{empty}");
+        assert!(empty.contains(" rank_depth="), "{empty}");
         // Counters are the server's job (recorded after each response);
         // simulate two served requests and one rejection.
         stats.record(Verb::Workload, 7);
@@ -608,6 +615,6 @@ mod tests {
         let r = engine.handle(&Parsed::Stats, &mut lane);
         assert!(r.starts_with("OK stats served=2 gemm=1 workload=1 "), "{r}");
         assert!(r.contains(" busy=1 "), "{r}");
-        assert!(r.ends_with(" max_us=7"), "{r}");
+        assert!(r.contains(" max_us=7 flight_aborts="), "{r}");
     }
 }

@@ -32,7 +32,8 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+
+use crate::sync::{Rank, RwLock};
 
 use crate::config::ChipConfig;
 use crate::coordinator::singleflight::{FlightGroup, Role};
@@ -137,13 +138,24 @@ const CACHE_SHARDS: usize = 16;
 /// across *different* [`ChipConfig`]s — same contract as [`TileCache`],
 /// enforced by the callers that own the cache (the [`PlanCache`] scopes
 /// one per config fingerprint).
-#[derive(Default)]
 pub struct SharedTileCache {
     tiles: [RwLock<HashMap<TileSpec, TileMetrics>>; CACHE_SHARDS],
     flights: FlightGroup<TileSpec, TileMetrics>,
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
+}
+
+impl Default for SharedTileCache {
+    fn default() -> Self {
+        SharedTileCache {
+            tiles: std::array::from_fn(|_| RwLock::new(Rank::TileShard, HashMap::new())),
+            flights: FlightGroup::default(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
 }
 
 fn shard_of<K: Hash>(key: &K) -> usize {
@@ -160,9 +172,21 @@ impl SharedTileCache {
     /// Memoized tile simulation, callable from any thread. Concurrent
     /// misses on the same spec coalesce onto one simulation.
     pub fn simulate(&self, cfg: &ChipConfig, spec: &TileSpec) -> TileMetrics {
+        self.simulate_with(spec, |s| simulate_tile(cfg, s))
+    }
+
+    /// The single-flight engine behind [`SharedTileCache::simulate`],
+    /// with the computation injectable: production passes the pure
+    /// `simulate_tile`, tests inject a panicking closure to drive the
+    /// abort-and-retry protocol (lock-poisoning policy, DESIGN.md §16).
+    pub(crate) fn simulate_with(
+        &self,
+        spec: &TileSpec,
+        compute: impl Fn(&TileSpec) -> TileMetrics,
+    ) -> TileMetrics {
         loop {
             let shard = &self.tiles[shard_of(spec)];
-            if let Some(m) = shard.read().expect("tile shard poisoned").get(spec) {
+            if let Some(m) = shard.read().get(spec) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return *m;
             }
@@ -172,21 +196,24 @@ impl SharedTileCache {
                 Role::Leader(lead) => {
                     // A racing leader may have published and retired its
                     // flight between our shard read and our join.
-                    if let Some(m) = shard.read().expect("tile shard poisoned").get(spec) {
+                    if let Some(m) = shard.read().get(spec) {
                         self.hits.fetch_add(1, Ordering::Relaxed);
                         lead.publish(*m);
                         return *m;
                     }
                     // Miss: simulate without holding any lock (pure).
-                    let m = simulate_tile(cfg, spec);
+                    // If `compute` unwinds, dropping `lead` aborts the
+                    // flight: followers wake empty-handed and retry —
+                    // one failed caller, never a poisoned cache.
+                    let m = compute(spec);
                     self.misses.fetch_add(1, Ordering::Relaxed);
-                    shard.write().expect("tile shard poisoned").insert(*spec, m);
+                    shard.write().insert(*spec, m);
                     lead.publish(m);
                     return m;
                 }
                 Role::Waited(Some(m)) => return m,
-                // The leader aborted (it cannot here — simulation is
-                // total — but the protocol demands a retry arm).
+                // The leader aborted (panic unwind in `compute`; the
+                // production `simulate_tile` is total): retry.
                 Role::Waited(None) => continue,
             }
         }
@@ -194,10 +221,7 @@ impl SharedTileCache {
 
     /// Distinct tile specs simulated so far (across all shards).
     pub fn len(&self) -> usize {
-        self.tiles
-            .iter()
-            .map(|s| s.read().expect("tile shard poisoned").len())
-            .sum()
+        self.tiles.iter().map(|s| s.read().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -552,6 +576,47 @@ mod tests {
         assert_eq!(
             s.hits + s.misses + cache.coalesced_waits(),
             (8 * specs.len()) as u64
+        );
+    }
+
+    #[test]
+    fn panicking_leader_aborts_and_herd_retries() {
+        // The lock-poisoning policy (DESIGN.md §16) on the tile tier: a
+        // leader that panics mid-compute must abort its flight so every
+        // follower retries — one failed caller, no poison cascade, no
+        // deadlocked herd.
+        use std::sync::atomic::AtomicBool;
+        let cfg = ChipConfig::voltra();
+        let cache = SharedTileCache::new();
+        let spec = TileSpec::simple(32, 64, 32);
+        let panicked = AtomicBool::new(false);
+        let aborts_before = crate::sync::flight_aborts();
+        let mut failed = 0usize;
+        std::thread::scope(|s| {
+            let joins: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        cache.simulate_with(&spec, |sp| {
+                            if !panicked.swap(true, Ordering::SeqCst) {
+                                panic!("injected leader failure");
+                            }
+                            simulate_tile(&cfg, sp)
+                        })
+                    })
+                })
+                .collect();
+            for j in joins {
+                match j.join() {
+                    Ok(m) => assert_eq!(m, simulate_tile(&cfg, &spec)),
+                    Err(_) => failed += 1,
+                }
+            }
+        });
+        assert_eq!(failed, 1, "exactly the injected panic fails its caller");
+        assert_eq!(cache.len(), 1, "survivors still populate the entry once");
+        assert!(
+            crate::sync::flight_aborts() > aborts_before,
+            "the aborted leadership must be counted"
         );
     }
 }

@@ -31,9 +31,10 @@
 //! [`SharedTileCache`]: crate::coordinator::SharedTileCache
 //! [`PlanCache`]: crate::plan::PlanCache
 
+use crate::sync::{Condvar, Mutex, Rank};
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 /// One in-flight computation. The slot holds `None` while the leader
 /// computes, `Some(Some(v))` once published, `Some(None)` if the leader
@@ -46,7 +47,7 @@ struct Flight<V> {
 impl<V> Flight<V> {
     fn new() -> Self {
         Flight {
-            slot: Mutex::new(None),
+            slot: Mutex::new(Rank::FlightSlot, None),
             cv: Condvar::new(),
         }
     }
@@ -60,7 +61,7 @@ pub(crate) struct FlightGroup<K, V> {
 impl<K, V> Default for FlightGroup<K, V> {
     fn default() -> Self {
         FlightGroup {
-            inflight: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(Rank::FlightMap, HashMap::new()),
         }
     }
 }
@@ -91,7 +92,7 @@ impl<K: Eq + Hash + Clone, V: Clone> FlightGroup<K, V> {
     /// it is still computing.
     pub(crate) fn join<F: FnOnce()>(&self, key: &K, on_coalesce: F) -> Role<'_, K, V> {
         let flight = {
-            let mut map = self.inflight.lock().expect("flight map poisoned");
+            let mut map = self.inflight.lock();
             match map.get(key) {
                 Some(f) => Arc::clone(f),
                 None => {
@@ -107,10 +108,12 @@ impl<K: Eq + Hash + Clone, V: Clone> FlightGroup<K, V> {
             }
         };
         on_coalesce();
-        let mut slot = flight.slot.lock().expect("flight slot poisoned");
-        while slot.is_none() {
-            slot = flight.cv.wait(slot).expect("flight slot poisoned");
-        }
+        // Predicate-loop wait: the facade's `wait_while` re-checks the
+        // slot on every wakeup, so spurious wakeups cannot leak an
+        // unpublished flight past this point (checked adversarially by
+        // the `flight` model's wait-if mutation, `crate::check`).
+        let slot = flight.slot.lock();
+        let slot = flight.cv.wait_while(slot, |s| s.is_none());
         Role::Waited((*slot).clone().expect("loop exits only when published"))
     }
 }
@@ -127,15 +130,17 @@ impl<K: Eq + Hash + Clone, V: Clone> Leader<'_, K, V> {
             return;
         }
         self.finished = true;
+        if value.is_none() {
+            // Abort path (unwind or resolve failure): every one of
+            // these sent its followers around the retry loop — surfaced
+            // as `flight_aborts` in STATS and `voltra report`.
+            crate::sync::record_flight_abort();
+        }
         // Retire the flight BEFORE publishing: a caller that arrives
         // after this point must lead a fresh flight (after re-checking
         // its cache), never wait on a completed one.
-        self.group
-            .inflight
-            .lock()
-            .expect("flight map poisoned")
-            .remove(&self.key);
-        *self.flight.slot.lock().expect("flight slot poisoned") = Some(value);
+        self.group.inflight.lock().remove(&self.key);
+        *self.flight.slot.lock() = Some(value);
         self.flight.cv.notify_all();
     }
 }

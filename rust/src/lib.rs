@@ -33,6 +33,15 @@
 //!   each over the full suite through the shared caches with structural
 //!   keying, and emits the TOPS/W vs TOPS/mm² vs latency Pareto
 //!   frontier with the shipped chip as one point.
+//! * [`sync`] — the rank-tagged lock facade (DESIGN.md §16): every
+//!   `Mutex`/`RwLock`/`Condvar` in the crate, tagged with a static
+//!   lock-rank table (deadlock freedom by construction), predicate-loop
+//!   condvar waits only, and a defined poison-recovery policy.
+//! * [`check`] — the deterministic-interleaving model checker
+//!   (DESIGN.md §16, `voltra check`): exhaustively explores bounded
+//!   thread interleavings of explicit models of the single-flight,
+//!   cache-accounting, dispatch-admission, work-stealing-pool and
+//!   lock-order protocols, with counterexample traces on violation.
 
 // Static-analysis posture (DESIGN.md §13): the model is pure safe Rust —
 // any future `unsafe` must arrive as a deliberate, reviewed exception —
@@ -42,6 +51,7 @@
 #![deny(unreachable_pub)]
 
 pub mod arch;
+pub mod check;
 pub mod config;
 pub mod coordinator;
 pub mod metrics;
@@ -50,6 +60,7 @@ pub mod power;
 pub mod runtime;
 pub mod search;
 pub mod sim;
+pub mod sync;
 pub mod tiling;
 pub mod workloads;
 

@@ -31,6 +31,15 @@ COMMANDS:
                                  --workload <name> checks one,
                                  --json prints machine-readable findings,
                                  --selftest corrupts a plan on purpose
+    check                        model-check the serving/cache concurrency
+                                 protocols (DESIGN.md §16): exhaustively
+                                 explore bounded thread interleavings of
+                                 the flight/plancache/dispatch/pool/
+                                 lockorder models; exits 1 on findings.
+                                 --protocol <name> checks one,
+                                 --depth <n> schedule bound (default 64),
+                                 --json machine-readable findings,
+                                 --selftest seeds a known bug on purpose
     sweep                        run all eight networks across a thread
                                  pool sharing one tile cache
     shmoo                        print the Fig. 7a shmoo grid
@@ -260,6 +269,11 @@ fn cmd_report(cfg: &ChipConfig, name: &str) {
         ms.hits,
         ms.misses,
         mc.coalesced_waits()
+    );
+    println!(
+        "concurrency: {} single-flight abort(s), max lock-rank depth {}",
+        voltra::sync::flight_aborts(),
+        voltra::sync::max_rank_depth()
     );
 }
 
@@ -577,6 +591,93 @@ fn lint_selftest(cfg: &ChipConfig) -> ! {
     std::process::exit(1);
 }
 
+/// `voltra check`: exhaustively model-check the concurrency protocols
+/// behind the serving and cache stack (DESIGN.md §16). Stdout is
+/// deterministic (exploration is DFS over a fixed state graph), so the
+/// plumbing is golden-tested in `tests/check_cli.rs`; exit code 1 when
+/// any finding surfaces, 2 on usage errors.
+fn cmd_check(flags: &HashMap<String, String>) {
+    if flags.contains_key("selftest") {
+        check_selftest();
+    }
+    let depth = flags
+        .get("depth")
+        .map(|d| d.parse::<usize>().expect("--depth must be an integer"))
+        .unwrap_or(voltra::check::DEFAULT_DEPTH);
+    let json = flags.contains_key("json");
+    let reports = match flags.get("protocol") {
+        Some(p) => match voltra::check::check_protocol(p, depth, None) {
+            Some(r) => vec![r],
+            None => {
+                eprintln!(
+                    "unknown protocol {p:?} (expected one of: {})",
+                    voltra::check::PROTOCOLS.join(", ")
+                );
+                usage();
+            }
+        },
+        None => voltra::check::check_all(depth),
+    };
+    let total: usize = reports.iter().map(|r| r.findings.len()).sum();
+    if json {
+        println!("{}", voltra::check::report_json(&reports).render());
+    } else {
+        for r in &reports {
+            if r.findings.is_empty() {
+                println!(
+                    "check {:<10} clean ({} states, depth {}{})",
+                    r.protocol,
+                    r.states,
+                    r.max_depth,
+                    if r.truncated { ", TRUNCATED" } else { "" }
+                );
+            } else {
+                println!(
+                    "check {:<10} {} finding(s) ({} states)",
+                    r.protocol,
+                    r.findings.len(),
+                    r.states
+                );
+                for f in &r.findings {
+                    println!("  [{}] {}", f.id, f.detail);
+                    for step in &f.trace {
+                        println!("    {step}");
+                    }
+                }
+            }
+        }
+        println!("check: {} protocol(s), {total} finding(s)", reports.len());
+    }
+    if total > 0 || reports.iter().any(|r| r.truncated) {
+        std::process::exit(1);
+    }
+}
+
+/// `voltra check --selftest`: seed a known concurrency bug (a leader
+/// that publishes without notifying) and prove the checker catches it —
+/// the CLI-level nonzero-exit path, mirrored from `lint --selftest`.
+/// Exits 1 when the seeded bug is caught, 2 if the checker missed it.
+fn check_selftest() -> ! {
+    let m = voltra::check::Mutation::FlightDroppedNotify;
+    let report =
+        voltra::check::check_protocol(m.protocol(), voltra::check::DEFAULT_DEPTH, Some(m))
+            .expect("mutation protocols are known");
+    for f in &report.findings {
+        println!("[{}] {}", f.id, f.detail);
+    }
+    let caught = report.findings.iter().any(|f| f.id == m.expected_finding());
+    if !caught {
+        println!("check selftest: checker MISSED the seeded {} bug", m.id());
+        std::process::exit(2);
+    }
+    println!(
+        "check selftest: checker caught the seeded {} bug ({} finding(s))",
+        m.id(),
+        report.findings.len()
+    );
+    std::process::exit(1);
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
@@ -599,6 +700,7 @@ fn main() {
             let cfg = config_from(&flags);
             cmd_lint(&cfg, &flags);
         }
+        "check" => cmd_check(&flags),
         "sweep" => {
             let cfg = config_from(&flags);
             let threads = flags

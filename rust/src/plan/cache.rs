@@ -31,7 +31,9 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
+
+use crate::sync::{Rank, RwLock};
 
 use crate::config::{ArrayGeometry, ChipConfig, MemoryOrg};
 use crate::coordinator::singleflight::{FlightGroup, Role};
@@ -115,7 +117,6 @@ pub struct PlanCacheStats {
 }
 
 /// Process-wide, thread-safe plan memoization (see module docs).
-#[derive(Default)]
 pub struct PlanCache {
     plans: [RwLock<HashMap<PlanKey, Arc<WorkloadPlan>>>; PLAN_SHARDS],
     /// One tile-simulation cache per *tile-structural* fingerprint
@@ -128,6 +129,19 @@ pub struct PlanCache {
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache {
+            plans: std::array::from_fn(|_| RwLock::new(Rank::PlanShard, HashMap::new())),
+            tiles: RwLock::new(Rank::TileClassMap, HashMap::new()),
+            flights: FlightGroup::default(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
 }
 
 impl PlanCache {
@@ -172,7 +186,7 @@ impl PlanCache {
         // leads at most one flight, so it is taken at most once.
         let mut resolve = Some(resolve);
         loop {
-            if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+            if let Some(p) = shard.read().get(&key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Some(Arc::clone(p));
             }
@@ -182,7 +196,7 @@ impl PlanCache {
                 Role::Leader(lead) => {
                     // A racing leader may have published and retired its
                     // flight between our shard read and our join.
-                    if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+                    if let Some(p) = shard.read().get(&key) {
                         self.hits.fetch_add(1, Ordering::Relaxed);
                         let p = Arc::clone(p);
                         lead.publish(Arc::clone(&p));
@@ -214,7 +228,7 @@ impl PlanCache {
                     // First insert wins: racing planners agree on one
                     // canonical plan.
                     let canonical = {
-                        let mut map = shard.write().expect("plan shard poisoned");
+                        let mut map = shard.write();
                         Arc::clone(map.entry(key.clone()).or_insert(built))
                     };
                     lead.publish(Arc::clone(&canonical));
@@ -250,7 +264,7 @@ impl PlanCache {
         };
         let shard = &self.plans[shard_of(&key)];
         loop {
-            if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+            if let Some(p) = shard.read().get(&key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Arc::clone(p);
             }
@@ -258,7 +272,7 @@ impl PlanCache {
                 self.coalesced.fetch_add(1, Ordering::Relaxed);
             }) {
                 Role::Leader(lead) => {
-                    if let Some(p) = shard.read().expect("plan shard poisoned").get(&key) {
+                    if let Some(p) = shard.read().get(&key) {
                         self.hits.fetch_add(1, Ordering::Relaxed);
                         let p = Arc::clone(p);
                         lead.publish(Arc::clone(&p));
@@ -271,7 +285,7 @@ impl PlanCache {
                     }
                     self.misses.fetch_add(1, Ordering::Relaxed);
                     let canonical = {
-                        let mut map = shard.write().expect("plan shard poisoned");
+                        let mut map = shard.write();
                         Arc::clone(map.entry(key.clone()).or_insert(built))
                     };
                     lead.publish(Arc::clone(&canonical));
@@ -301,24 +315,21 @@ impl PlanCache {
     /// touched — the search's "cold tile cost paid once per class"
     /// telemetry.
     pub fn tile_cache_count(&self) -> usize {
-        self.tiles.read().expect("tile map poisoned").len()
+        self.tiles.read().len()
     }
 
     /// The tile-simulation cache backing one structural fingerprint.
     fn tile_cache_for(&self, fp: u64) -> Arc<SharedTileCache> {
-        if let Some(c) = self.tiles.read().expect("tile map poisoned").get(&fp) {
+        if let Some(c) = self.tiles.read().get(&fp) {
             return Arc::clone(c);
         }
-        let mut map = self.tiles.write().expect("tile map poisoned");
+        let mut map = self.tiles.write();
         Arc::clone(map.entry(fp).or_default())
     }
 
     /// Plans memoized so far (across all shards and fingerprints).
     pub fn len(&self) -> usize {
-        self.plans
-            .iter()
-            .map(|s| s.read().expect("plan shard poisoned").len())
-            .sum()
+        self.plans.iter().map(|s| s.read().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -350,7 +361,7 @@ impl PlanCache {
     /// tile cache (what planning itself memoized).
     pub fn tile_stats(&self) -> CacheStats {
         let mut total = CacheStats::default();
-        for c in self.tiles.read().expect("tile map poisoned").values() {
+        for c in self.tiles.read().values() {
             let s = c.stats();
             total.hits += s.hits;
             total.misses += s.misses;
@@ -360,7 +371,7 @@ impl PlanCache {
 
     /// Distinct tile specs simulated across every fingerprint.
     pub fn unique_tiles(&self) -> usize {
-        let map = self.tiles.read().expect("tile map poisoned");
+        let map = self.tiles.read();
         map.values().map(|c| c.len()).sum()
     }
 }

@@ -20,8 +20,8 @@
 //! `threads` value, which is what lets callers pin parallel == serial
 //! in tests.
 
+use crate::sync::{Mutex, Rank};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Run `work(state, i)` for every `i in 0..n` across up to `threads`
 /// scoped workers, returning results in index order. `init` constructs
@@ -29,9 +29,10 @@ use std::sync::Mutex;
 /// thread). `threads <= 1` (or `n <= 1`) runs inline on the caller's
 /// thread with a single state — no spawn cost on the degenerate path.
 ///
-/// Panics in `work` propagate: the scope joins all workers, and a
-/// poisoned slot (worker panicked mid-item) fails loudly rather than
-/// returning a partial result vector.
+/// Panics in `work` propagate: the scope joins every worker and
+/// re-raises the panic *before* any slot is read, so a panicking
+/// closure can never hang the pool or return a partial result vector
+/// (pinned by `tests/pool_edge.rs`).
 pub fn scoped_indexed<S, T, I, F>(n: usize, threads: usize, init: I, work: F) -> Vec<T>
 where
     T: Send,
@@ -44,7 +45,7 @@ where
         return (0..n).map(|i| work(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(Rank::PoolSlot, None)).collect();
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| {
@@ -55,18 +56,14 @@ where
                         break;
                     }
                     let r = work(&mut state, i);
-                    *slots[i].lock().expect("pool slot poisoned") = Some(r);
+                    *slots[i].lock() = Some(r);
                 }
             });
         }
     });
     slots
         .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("pool slot poisoned")
-                .expect("pool worker skipped an item")
-        })
+        .map(|m| m.into_inner().expect("pool worker skipped an item"))
         .collect()
 }
 

@@ -1,0 +1,425 @@
+//! Rank-tagged synchronization facade (DESIGN.md §16): every lock in
+//! the engine is a [`Mutex`], [`RwLock`] or [`Condvar`] from this
+//! module, never `std::sync` directly (mechanically enforced by
+//! `clippy.toml`'s `disallowed-types`). The facade buys three
+//! correctness properties the raw primitives do not have:
+//!
+//! * **Deadlock freedom by construction.** Every lock carries a
+//!   [`Rank`] from the static lock-rank table below, and debug builds
+//!   assert that each thread acquires ranks in strictly increasing
+//!   order. A system whose every thread acquires locks monotonically
+//!   in one global order cannot build a cyclic wait — the classic
+//!   lock-ordering argument, here checked on every acquisition instead
+//!   of asserted in a comment. The `lockorder` protocol model
+//!   (`crate::check`) explores the same table adversarially.
+//!
+//! * **No bare condition-variable waits.** [`Condvar`] exposes only
+//!   [`Condvar::wait_while`]: the predicate loop is part of the call,
+//!   so a spurious wakeup can never leak past an unmet condition. The
+//!   missed-notify half of the argument is the `flight` protocol model.
+//!
+//! * **A defined lock-poisoning policy.** Every acquisition recovers
+//!   from poison (`PoisonError::into_inner`) instead of propagating a
+//!   panic. This is a deliberate policy, not a shrug: every critical
+//!   section in the engine either only reads, or performs a single
+//!   atomic-shaped mutation (one `insert`, one slot store) — there is
+//!   no partially-applied state a panicking holder could expose. A
+//!   panic inside single-flight leadership is converted by
+//!   [`crate::coordinator::singleflight`]'s abort protocol into
+//!   "followers retry", which is the recovery the serving tier wants —
+//!   one failed request, not a poison cascade that takes the whole
+//!   cache tier down with `.expect("poisoned")`.
+//!
+//! # The lock-rank table
+//!
+//! | rank | lock | holder |
+//! |---|---|---|
+//! | 10 `PlanShard`     | `PlanCache` plan-map shard            | `plan::cache` |
+//! | 20 `TileClassMap`  | `PlanCache` structural tile-class map | `plan::cache` |
+//! | 30 `MapperShard`   | `MapperCache` shard                   | `tiling::mapper` |
+//! | 40 `TileShard`     | `SharedTileCache` shard               | `coordinator` |
+//! | 50 `FlightMap`     | `FlightGroup` in-flight map           | `coordinator::singleflight` |
+//! | 60 `FlightSlot`    | per-flight publish slot (+ condvar)   | `coordinator::singleflight` |
+//! | 70 `DispatchQueue` | dispatch-pool receiver                | `coordinator::dispatch` |
+//! | 80 `PoolSlot`      | scoped-pool result slot               | `runtime::pool` |
+//!
+//! The only *nested* acquisitions in the tree today are
+//! `TileClassMap -> TileShard` (`PlanCache::unique_tiles` walks every
+//! class's cache under the class map) — monotone under the table. New
+//! concurrency code must pick a rank that keeps its nesting monotone
+//! and extend the table + the `lockorder` model (the bless protocol,
+//! DESIGN.md §16).
+//!
+//! # Telemetry
+//!
+//! Two process-wide counters feed the serving tier's `STATS` verb and
+//! the `voltra report` footer: [`flight_aborts`] (single-flight leaders
+//! that died without publishing — every one is a herd that retried) and
+//! [`max_rank_depth`] (the deepest lock nesting any thread has actually
+//! built — the observed ceiling on hold chains; 2 in the tree today).
+
+// The facade is the one sanctioned home of the raw primitives.
+#![allow(clippy::disallowed_types)]
+
+use std::cell::RefCell;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::PoisonError;
+
+/// The static lock-rank table (see module docs). Discriminants are the
+/// ranks; gaps leave room for future tiers without renumbering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Rank {
+    PlanShard = 10,
+    TileClassMap = 20,
+    MapperShard = 30,
+    TileShard = 40,
+    FlightMap = 50,
+    FlightSlot = 60,
+    DispatchQueue = 70,
+    PoolSlot = 80,
+}
+
+impl fmt::Display for Rank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}({})", self, *self as u8)
+    }
+}
+
+thread_local! {
+    /// Ranks this thread currently holds, in acquisition order.
+    static HELD: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Deepest lock nesting observed by any thread since process start.
+static MAX_RANK_DEPTH: AtomicU64 = AtomicU64::new(0);
+
+/// Single-flight leaders that retired without publishing (panic unwind
+/// or resolve failure): each one sent its followers around the
+/// abort-and-retry loop. Bumped by `coordinator::singleflight`.
+static FLIGHT_ABORTS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of aborted single-flight leaderships.
+pub fn flight_aborts() -> u64 {
+    FLIGHT_ABORTS.load(Ordering::Relaxed)
+}
+
+pub(crate) fn record_flight_abort() {
+    FLIGHT_ABORTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Deepest lock-rank nesting any thread has built since process start
+/// (the serving tier's `rank_depth` STATS field).
+pub fn max_rank_depth() -> u64 {
+    MAX_RANK_DEPTH.load(Ordering::Relaxed)
+}
+
+/// Record one acquisition: assert the rank table, track the depth.
+fn acquired(rank: Rank) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(&top) = held.last() {
+            debug_assert!(
+                top < rank as u8,
+                "lock-rank inversion: acquiring {rank} while holding rank {top} \
+                 (acquisition order must be strictly increasing — see the \
+                 rank table in sync/mod.rs)"
+            );
+        }
+        held.push(rank as u8);
+        MAX_RANK_DEPTH.fetch_max(held.len() as u64, Ordering::Relaxed);
+    });
+}
+
+/// Record one release. Guards usually unwind in reverse acquisition
+/// order, but the bookkeeping tolerates any order (drop the latest
+/// holding of that rank).
+fn released(rank: Rank) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&r| r == rank as u8) {
+            held.remove(pos);
+        }
+    });
+}
+
+/// A rank-tagged mutual-exclusion lock (poison-recovering; see the
+/// module docs for the policy).
+pub struct Mutex<T> {
+    rank: Rank,
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(rank: Rank, value: T) -> Self {
+        Mutex {
+            rank,
+            inner: std::sync::Mutex::new(value),
+        }
+    }
+
+    /// Acquire the lock. Asserts the rank table in debug builds and
+    /// recovers from poison (the policy: critical sections never hold
+    /// partially-applied state).
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        acquired(self.rank);
+        MutexGuard {
+            inner: Some(inner),
+            rank: self.rank,
+        }
+    }
+
+    /// Consume the lock, returning its value (poison-recovering).
+    pub fn into_inner(self) -> T {
+        self.inner
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Guard for [`Mutex::lock`]. The `Option` is a facade-internal
+/// implementation detail: [`Condvar::wait_while`] moves the underlying
+/// guard out across the wait without double-counting the rank.
+pub struct MutexGuard<'a, T> {
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    rank: Rank,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard is live")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard is live")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            released(self.rank);
+        }
+    }
+}
+
+/// A rank-tagged condition variable. Deliberately narrower than
+/// `std::sync::Condvar`: there is no bare `wait` — every wait states
+/// its predicate, so spurious wakeups are structurally harmless
+/// (satellite of DESIGN.md §16; the `flight` model checks the
+/// protocol-level half).
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar {
+            inner: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Block while `condition` holds, rechecking on every wakeup. The
+    /// rank stays accounted to this thread for the duration: a blocked
+    /// waiter still *owns* its slot lock between wakeups, and it
+    /// acquires nothing else while parked.
+    pub fn wait_while<'a, T, F>(&self, mut guard: MutexGuard<'a, T>, condition: F) -> MutexGuard<'a, T>
+    where
+        F: FnMut(&mut T) -> bool,
+    {
+        let rank = guard.rank;
+        let inner = guard.inner.take().expect("guard is live");
+        drop(guard); // rank deliberately NOT released (inner is None)
+        let inner = self
+            .inner
+            .wait_while(inner, condition)
+            .unwrap_or_else(PoisonError::into_inner);
+        MutexGuard {
+            inner: Some(inner),
+            rank,
+        }
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+/// A rank-tagged reader-writer lock (poison-recovering). Read and
+/// write acquisitions observe the same rank discipline — a read guard
+/// held across a lower-rank acquisition is just as much an inversion
+/// as a write guard.
+pub struct RwLock<T> {
+    rank: Rank,
+    inner: std::sync::RwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(rank: Rank, value: T) -> Self {
+        RwLock {
+            rank,
+            inner: std::sync::RwLock::new(value),
+        }
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        let inner = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+        acquired(self.rank);
+        RwLockReadGuard {
+            inner,
+            rank: self.rank,
+        }
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        let inner = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+        acquired(self.rank);
+        RwLockWriteGuard {
+            inner,
+            rank: self.rank,
+        }
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    inner: std::sync::RwLockReadGuard<'a, T>,
+    rank: Rank,
+}
+
+impl<T> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        released(self.rank);
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    inner: std::sync::RwLockWriteGuard<'a, T>,
+    rank: Rank,
+}
+
+impl<T> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        released(self.rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn mutex_round_trips_and_tracks_depth() {
+        let m = Mutex::new(Rank::PoolSlot, 41);
+        {
+            let mut g = m.lock();
+            *g += 1;
+        }
+        assert_eq!(m.into_inner(), 42);
+        assert!(max_rank_depth() >= 1);
+    }
+
+    #[test]
+    fn rwlock_readers_share_and_writers_exclude() {
+        let l = RwLock::new(Rank::TileShard, vec![1, 2, 3]);
+        {
+            let a = l.read();
+            let b = l.read();
+            assert_eq!(a.len() + b.len(), 6);
+        }
+        l.write().push(4);
+        assert_eq!(l.read().len(), 4);
+    }
+
+    #[test]
+    fn monotone_nesting_is_accepted() {
+        // The one real nesting in the tree: class map -> tile shard.
+        let outer = RwLock::new(Rank::TileClassMap, ());
+        let inner = RwLock::new(Rank::TileShard, 7);
+        let g = outer.read();
+        assert_eq!(*inner.read(), 7);
+        drop(g);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lock-rank inversion")]
+    fn rank_inversion_is_asserted_in_debug() {
+        let hi = Mutex::new(Rank::FlightSlot, ());
+        let lo = Mutex::new(Rank::FlightMap, ());
+        let _g = hi.lock();
+        let _h = lo.lock(); // 50 after 60: inversion
+    }
+
+    #[test]
+    fn condvar_wait_while_rechecks_the_predicate() {
+        let m = Mutex::new(Rank::FlightSlot, false);
+        let cv = Condvar::new();
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| {
+                let g = m.lock();
+                let g = cv.wait_while(g, |ready| !*ready);
+                *g
+            });
+            // Set under the lock, then notify — the waiter's predicate
+            // loop absorbs any wakeup ordering.
+            *m.lock() = true;
+            cv.notify_all();
+            assert!(waiter.join().unwrap());
+        });
+    }
+
+    #[test]
+    fn poisoned_locks_recover_instead_of_cascading() {
+        static BOOM: AtomicBool = AtomicBool::new(false);
+        let m = Mutex::new(Rank::DispatchQueue, 7u32);
+        let r = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = m.lock();
+                BOOM.store(true, Ordering::SeqCst);
+                panic!("poison the mutex");
+            })
+            .join()
+        });
+        assert!(r.is_err(), "holder must have panicked");
+        assert!(BOOM.load(Ordering::SeqCst));
+        // The policy: later acquirers see the (valid) state, no cascade.
+        assert_eq!(*m.lock(), 7);
+    }
+}

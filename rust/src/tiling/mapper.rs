@@ -45,7 +45,9 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{OnceLock, RwLock};
+use std::sync::OnceLock;
+
+use crate::sync::{Rank, RwLock};
 
 use crate::config::{ArrayGeometry, ChipConfig, MappingSearch, MemoryOrg};
 use crate::coordinator::singleflight::{FlightGroup, Role};
@@ -285,7 +287,6 @@ fn shard_of<K: Hash>(key: &K) -> usize {
 /// else blocks on that search and shares its result, counted in
 /// `coalesced`. The invariant `hits + misses + coalesced == calls`
 /// holds for every interleaving.
-#[derive(Default)]
 pub struct MapperCache {
     shards: [RwLock<HashMap<MapKey, Option<Resolved>>>; MAPPER_SHARDS],
     /// In-flight searches: one searcher per key, everyone else waits.
@@ -293,6 +294,18 @@ pub struct MapperCache {
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
+}
+
+impl Default for MapperCache {
+    fn default() -> Self {
+        MapperCache {
+            shards: std::array::from_fn(|_| RwLock::new(Rank::MapperShard, HashMap::new())),
+            flights: FlightGroup::default(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
 }
 
 impl MapperCache {
@@ -331,7 +344,7 @@ impl MapperCache {
         let key: MapKey = (fingerprint(cfg), m, k, n);
         let shard = &self.shards[shard_of(&key)];
         loop {
-            if let Some(v) = shard.read().expect("mapper shard poisoned").get(&key) {
+            if let Some(v) = shard.read().get(&key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return *v;
             }
@@ -341,7 +354,7 @@ impl MapperCache {
                 Role::Leader(lead) => {
                     // A racing leader may have published and retired its
                     // flight between our shard read and our join.
-                    if let Some(v) = shard.read().expect("mapper shard poisoned").get(&key) {
+                    if let Some(v) = shard.read().get(&key) {
                         self.hits.fetch_add(1, Ordering::Relaxed);
                         lead.publish(*v);
                         return *v;
@@ -350,11 +363,7 @@ impl MapperCache {
                     self.misses.fetch_add(1, Ordering::Relaxed);
                     // First insert wins (leaders of retried flights
                     // agree anyway — the search is pure).
-                    let canonical = *shard
-                        .write()
-                        .expect("mapper shard poisoned")
-                        .entry(key)
-                        .or_insert(v);
+                    let canonical = *shard.write().entry(key).or_insert(v);
                     lead.publish(canonical);
                     return canonical;
                 }
@@ -366,10 +375,7 @@ impl MapperCache {
 
     /// Distinct layer shapes resolved so far (across all shards).
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.read().expect("mapper shard poisoned").len())
-            .sum()
+        self.shards.iter().map(|s| s.read().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -1,0 +1,95 @@
+//! End-to-end plumbing tests for `voltra check` (DESIGN.md §16),
+//! mirroring `tests/lint_cli.rs`: the command's stdout is deterministic
+//! (DFS over a fixed state graph — no timings, no thread scheduling),
+//! so its shape is asserted exactly; `--selftest` proves the
+//! nonzero-exit wiring end to end by seeding a known bug on purpose.
+
+use std::process::{Command, Output};
+
+fn voltra(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_voltra"))
+        .args(args)
+        .output()
+        .expect("spawn voltra binary")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Clean tree: all five protocols explore clean, one line each plus a
+/// summary, exit 0.
+#[test]
+fn check_all_protocols_clean() {
+    let out = voltra(&["check"]);
+    let text = stdout(&out);
+    assert!(out.status.success(), "exit: {out:?}");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 6, "5 protocols + summary:\n{text}");
+    for (line, proto) in lines[..5]
+        .iter()
+        .zip(["flight", "plancache", "dispatch", "pool", "lockorder"])
+    {
+        assert!(line.starts_with(&format!("check {proto}")), "{line}");
+        assert!(line.contains(" clean ("), "{line}");
+        assert!(line.contains(" states, depth "), "{line}");
+        assert!(!line.contains("TRUNCATED"), "{line}");
+    }
+    assert_eq!(lines[5], "check: 5 protocol(s), 0 finding(s)");
+}
+
+/// One-protocol mode explores exactly that protocol.
+#[test]
+fn check_single_protocol() {
+    let out = voltra(&["check", "--protocol", "pool"]);
+    assert!(out.status.success(), "{out:?}");
+    let text = stdout(&out);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "{text}");
+    assert!(lines[0].starts_with("check pool"), "{text}");
+    assert_eq!(lines[1], "check: 1 protocol(s), 0 finding(s)");
+}
+
+/// Machine-readable mode: a clean run reports `"clean":true` with all
+/// five protocols present, and is byte-stable across runs.
+#[test]
+fn check_json_clean_and_deterministic() {
+    let a = voltra(&["check", "--json"]);
+    assert!(a.status.success(), "{a:?}");
+    let text = stdout(&a);
+    assert!(text.contains("\"clean\":true"), "{text}");
+    assert!(text.contains("\"findings\":0"), "{text}");
+    for proto in ["flight", "plancache", "dispatch", "pool", "lockorder"] {
+        assert!(text.contains(&format!("\"protocol\":\"{proto}\"")), "{text}");
+    }
+    let b = voltra(&["check", "--json"]);
+    assert_eq!(text, stdout(&b), "check --json must be deterministic");
+}
+
+/// The nonzero-exit path, end to end: `--selftest` seeds a dropped
+/// notify and must exit 1 having caught it as a deadlock. Exit 2 would
+/// mean the checker MISSED the seeded bug — the rig's worst outcome.
+#[test]
+fn check_selftest_exits_nonzero_having_caught_the_bug() {
+    let out = voltra(&["check", "--selftest"]);
+    assert_eq!(out.status.code(), Some(1), "{out:?}");
+    let text = stdout(&out);
+    assert!(text.contains("[deadlock]"), "{text}");
+    assert!(text.contains("caught the seeded flight-dropped-notify bug"), "{text}");
+}
+
+/// An over-tight depth bound is reported as truncation and exits 1 —
+/// incomplete coverage must never look like a clean run.
+#[test]
+fn check_truncated_exploration_is_not_clean() {
+    let out = voltra(&["check", "--protocol", "flight", "--depth", "3"]);
+    assert_eq!(out.status.code(), Some(1), "{out:?}");
+    assert!(stdout(&out).contains("TRUNCATED"), "{out:?}");
+}
+
+/// Unknown protocols are a usage error (exit 2), not a finding.
+#[test]
+fn check_unknown_protocol_is_a_usage_error() {
+    let out = voltra(&["check", "--protocol", "nope"]);
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+}

@@ -165,6 +165,60 @@ fn thundering_herd_compiles_once_and_coalesces_the_rest() {
 }
 
 #[test]
+fn panicking_flight_leader_aborts_and_the_herd_retries() {
+    // ISSUE 10 satellite (lock poisoning policy, DESIGN.md §16): a
+    // flight leader that panics mid-compile must not poison the cache
+    // for everyone else. The abort guard retires the flight and wakes
+    // the herd empty-handed; exactly one caller observes the panic,
+    // every survivor retries, and a healthy leader compiles the one
+    // canonical plan.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    const HERD: usize = 8;
+    let cfg = ChipConfig::voltra();
+    let plans = Arc::new(PlanCache::new());
+    let panicked = Arc::new(AtomicBool::new(false));
+    let aborts_before = voltra::sync::flight_aborts();
+    let handles: Vec<_> = (0..HERD)
+        .map(|_| {
+            let plans = Arc::clone(&plans);
+            let cfg = cfg.clone();
+            let panicked = Arc::clone(&panicked);
+            std::thread::spawn(move || {
+                plans.plan_named(&cfg, "lstm", || {
+                    // Only flight leaders run resolvers; the first one
+                    // dies before producing anything.
+                    if !panicked.swap(true, Ordering::SeqCst) {
+                        panic!("injected leader failure");
+                    }
+                    voltra::workloads::by_name("lstm")
+                })
+            })
+        })
+        .collect();
+    let mut failed = 0usize;
+    let mut survivors = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok(plan) => survivors.push(plan.expect("lstm resolves")),
+            Err(_) => failed += 1,
+        }
+    }
+    assert_eq!(failed, 1, "exactly the injected panic propagates");
+    assert_eq!(survivors.len(), HERD - 1);
+    for p in &survivors[1..] {
+        assert!(Arc::ptr_eq(&survivors[0], p), "survivors must share the canonical plan");
+    }
+    assert_eq!(plans.len(), 1, "one canonical entry after the retry");
+    assert!(
+        voltra::sync::flight_aborts() > aborts_before,
+        "the aborted leadership must be counted"
+    );
+    // The cache stays fully serviceable: a later caller hits.
+    let w = voltra::workloads::by_name("lstm").unwrap();
+    assert!(Arc::ptr_eq(&survivors[0], &plans.plan(&cfg, &w)));
+}
+
+#[test]
 fn parallel_compiled_plans_are_byte_equal_to_sequential_for_the_suite() {
     // PR 6 tentpole acceptance: fanning layer planning over a scoped
     // pool (what `PlanCache::plan_named` now does on every cold plan)

@@ -1,0 +1,92 @@
+//! Edge-of-envelope tests for [`voltra::runtime::pool::scoped_indexed`]
+//! (ISSUE 10 satellite): zero items, one worker, more workers than
+//! items, and a panicking work closure — the cases where a claim-loop
+//! bug would manifest as a hang, a partial result vector, or a skipped
+//! index rather than a wrong value. The interleaving-level claim
+//! protocol itself is model-checked (`voltra check --protocol pool`);
+//! these pin the real implementation's degenerate paths.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use voltra::runtime::pool::scoped_indexed;
+
+#[test]
+fn zero_items_returns_empty_for_any_thread_count() {
+    for threads in [0, 1, 2, 8] {
+        let calls = AtomicUsize::new(0);
+        let out: Vec<u32> = scoped_indexed(0, threads, || (), |_, _| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            0
+        });
+        assert!(out.is_empty(), "threads={threads}");
+        assert_eq!(calls.load(Ordering::Relaxed), 0, "threads={threads}");
+    }
+}
+
+#[test]
+fn one_worker_visits_every_item_in_order() {
+    // The single-worker path runs inline: claim order IS item order,
+    // observable through a side log, and results stay index-ordered.
+    let log = voltra::sync::Mutex::new(voltra::sync::Rank::PoolSlot, Vec::new());
+    let out = scoped_indexed(5, 1, || (), |_, i| {
+        log.lock().push(i);
+        i * 2
+    });
+    assert_eq!(out, vec![0, 2, 4, 6, 8]);
+    assert_eq!(*log.lock(), vec![0, 1, 2, 3, 4]);
+}
+
+#[test]
+fn more_workers_than_items_completes_every_item_exactly_once() {
+    let claims: [AtomicUsize; 3] = std::array::from_fn(|_| AtomicUsize::new(0));
+    let out = scoped_indexed(3, 16, || (), |_, i| {
+        claims[i].fetch_add(1, Ordering::Relaxed);
+        i + 100
+    });
+    assert_eq!(out, vec![100, 101, 102]);
+    for (i, c) in claims.iter().enumerate() {
+        assert_eq!(c.load(Ordering::Relaxed), 1, "item {i} claimed more than once");
+    }
+}
+
+/// A panicking work closure must propagate the panic to the caller —
+/// never hang the pool, never return a partial vector. Run inside a
+/// watchdog thread so a deadlock regression fails the test instead of
+/// wedging the whole test binary.
+#[test]
+fn panicking_worker_propagates_and_never_deadlocks() {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            scoped_indexed(8, 4, || (), |_, i| {
+                if i == 3 {
+                    panic!("injected worker failure");
+                }
+                i
+            })
+        }));
+        tx.send(result.is_err()).ok();
+    });
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(panicked) => assert!(panicked, "pool swallowed the worker panic"),
+        Err(_) => panic!("pool deadlocked after a worker panic"),
+    }
+}
+
+/// Same for the inline (single-worker) path: the panic surfaces from
+/// the caller's own frame.
+#[test]
+fn panicking_inline_worker_propagates() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        scoped_indexed(4, 1, || (), |_, i| {
+            if i == 2 {
+                panic!("injected inline failure");
+            }
+            i
+        })
+    }));
+    assert!(result.is_err(), "inline pool swallowed the panic");
+}
