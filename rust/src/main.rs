@@ -600,10 +600,16 @@ fn cmd_check(flags: &HashMap<String, String>) {
     if flags.contains_key("selftest") {
         check_selftest();
     }
-    let depth = flags
-        .get("depth")
-        .map(|d| d.parse::<usize>().expect("--depth must be an integer"))
-        .unwrap_or(voltra::check::DEFAULT_DEPTH);
+    let depth = match flags.get("depth") {
+        Some(d) => match d.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("--depth must be an integer, got {d:?}");
+                usage();
+            }
+        },
+        None => voltra::check::DEFAULT_DEPTH,
+    };
     let json = flags.contains_key("json");
     let reports = match flags.get("protocol") {
         Some(p) => match voltra::check::check_protocol(p, depth, None) {
@@ -624,12 +630,16 @@ fn cmd_check(flags: &HashMap<String, String>) {
     } else {
         for r in &reports {
             if r.findings.is_empty() {
+                // A truncated exploration is NOT clean: coverage is
+                // incomplete and the run exits 1, so say so.
+                let (word, suffix) = if r.truncated {
+                    ("incomplete", ", TRUNCATED — raise --depth")
+                } else {
+                    ("clean", "")
+                };
                 println!(
-                    "check {:<10} clean ({} states, depth {}{})",
-                    r.protocol,
-                    r.states,
-                    r.max_depth,
-                    if r.truncated { ", TRUNCATED" } else { "" }
+                    "check {:<10} {word} ({} states, depth {}{suffix})",
+                    r.protocol, r.states, r.max_depth
                 );
             } else {
                 println!(

@@ -10,8 +10,14 @@
 //!   order. A system whose every thread acquires locks monotonically
 //!   in one global order cannot build a cyclic wait — the classic
 //!   lock-ordering argument, here checked on every acquisition instead
-//!   of asserted in a comment. The `lockorder` protocol model
-//!   (`crate::check`) explores the same table adversarially.
+//!   of asserted in a comment. *Strictly* increasing means same-rank
+//!   nesting is banned too — including re-entrant reads of one
+//!   [`RwLock`] on a single thread, which `std::sync::RwLock` itself
+//!   documents may deadlock when a writer is queued between the two
+//!   read acquisitions. Concurrent readers on *distinct* threads are
+//!   of course fine: the rank stack is thread-local. The `lockorder`
+//!   protocol model (`crate::check`) explores the same table
+//!   adversarially.
 //!
 //! * **No bare condition-variable waits.** [`Condvar`] exposes only
 //!   [`Condvar::wait_while`]: the predicate loop is part of the call,
@@ -264,7 +270,13 @@ impl Default for Condvar {
 /// A rank-tagged reader-writer lock (poison-recovering). Read and
 /// write acquisitions observe the same rank discipline — a read guard
 /// held across a lower-rank acquisition is just as much an inversion
-/// as a write guard.
+/// as a write guard, and a *re-entrant* read (two read guards of one
+/// lock held by one thread) is banned outright: `std::sync::RwLock`
+/// documents that a recursive read may deadlock once a writer queues
+/// between the two acquisitions, so the strict `top < rank` assert
+/// deliberately refuses it in debug builds rather than letting it
+/// deadlock rarely in production. Readers on distinct threads share
+/// freely — the rank stack is per-thread.
 pub struct RwLock<T> {
     rank: Rank,
     inner: std::sync::RwLock<T>,
@@ -358,13 +370,30 @@ mod tests {
     #[test]
     fn rwlock_readers_share_and_writers_exclude() {
         let l = RwLock::new(Rank::TileShard, vec![1, 2, 3]);
-        {
+        // Readers share — proven from *distinct* threads: the main
+        // thread holds a read guard while a spawned reader acquires
+        // its own; if reads excluded each other the join would hang.
+        // (Two read guards on ONE thread would be same-rank nesting,
+        // which the rank table bans — see the RwLock docs.)
+        std::thread::scope(|s| {
             let a = l.read();
-            let b = l.read();
-            assert_eq!(a.len() + b.len(), 6);
-        }
+            let b = s.spawn(|| l.read().len());
+            assert_eq!(a.len() + b.join().unwrap(), 6);
+        });
         l.write().push(4);
         assert_eq!(l.read().len(), 4);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lock-rank inversion")]
+    fn same_rank_nesting_is_banned_even_for_reads() {
+        // Re-entrant reads can deadlock against a writer that queues
+        // between the two acquisitions (std::sync::RwLock documents
+        // this), so the table treats them as inversions too.
+        let l = RwLock::new(Rank::TileShard, ());
+        let _a = l.read();
+        let _b = l.read();
     }
 
     #[test]

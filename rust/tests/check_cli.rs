@@ -79,12 +79,16 @@ fn check_selftest_exits_nonzero_having_caught_the_bug() {
 }
 
 /// An over-tight depth bound is reported as truncation and exits 1 —
-/// incomplete coverage must never look like a clean run.
+/// incomplete coverage must never look like a clean run, in the exit
+/// code OR the per-protocol line (it says "incomplete", not "clean").
 #[test]
 fn check_truncated_exploration_is_not_clean() {
     let out = voltra(&["check", "--protocol", "flight", "--depth", "3"]);
     assert_eq!(out.status.code(), Some(1), "{out:?}");
-    assert!(stdout(&out).contains("TRUNCATED"), "{out:?}");
+    let text = stdout(&out);
+    assert!(text.contains("check flight     incomplete ("), "{text}");
+    assert!(text.contains("TRUNCATED"), "{text}");
+    assert!(!text.contains(" clean ("), "{text}");
 }
 
 /// Unknown protocols are a usage error (exit 2), not a finding.
@@ -92,4 +96,14 @@ fn check_truncated_exploration_is_not_clean() {
 fn check_unknown_protocol_is_a_usage_error() {
     let out = voltra(&["check", "--protocol", "nope"]);
     assert_eq!(out.status.code(), Some(2), "{out:?}");
+}
+
+/// A non-integer --depth is a usage error (exit 2), mirroring the
+/// unknown-protocol path — never a panic (exit 101).
+#[test]
+fn check_bad_depth_is_a_usage_error() {
+    let out = voltra(&["check", "--depth", "lots"]);
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("--depth must be an integer"), "{err}");
 }
